@@ -1,0 +1,83 @@
+//! Block/module profiler example — the paper's `script/profile.py` (§A.3)
+//! equivalent:
+//!
+//!     cargo run --release --example block_profile -- \
+//!         [--name opt-2048] [--tuning sparse|lora|full] [--module mha|ffn|both]
+//!
+//! Prints module timings (this testbed) + the analytic memory breakdown
+//! at the paper's workload, mirroring the sample output in Fig. 12.
+
+use anyhow::Result;
+use spt::config::{presets, Mode};
+use spt::coordinator::profile::{profile_block, profile_module};
+use spt::memmodel::{block_peak, BlockWorkload};
+use spt::runtime::Engine;
+use spt::util::{fmt_bytes, fmt_duration};
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> Result<()> {
+    let dir = std::env::var("SPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let name = arg("--name", "opt-2048");
+    let tuning = arg("--tuning", "sparse");
+    let module = arg("--module", "both");
+    let mode = Mode::parse(if tuning == "sparse" { "spt" } else { &tuning })?;
+    let engine = Engine::new(&dir)?;
+
+    println!("# profile: name={name} tuning={tuning} module={module}");
+
+    // Module-level timings (mha/ffn artifacts exist for opt-2048 and
+    // llama-4096 by default).
+    let variants: &[(&str, &str)] = match mode {
+        Mode::Full => &[("mha", "full"), ("ffn", "full")],
+        Mode::Lora => &[("mha", "lora"), ("ffn", "lora")],
+        Mode::Spt => &[("mha", "spt_l8"), ("ffn", "spt_b12")],
+    };
+    for (kind, variant) in variants {
+        if *module != *"both" && *module != **kind {
+            continue;
+        }
+        let art = format!("{kind}_{name}_{variant}");
+        if engine.manifest().get(&art).is_err() {
+            println!("  ({art} not in manifest — module artifacts exist for opt-2048/llama-4096)");
+            continue;
+        }
+        let row = profile_module(&engine, kind, &name, variant, 1, 5)?;
+        println!(
+            "  {:<4} {:<8} fwd+bwd {:<12} ({:.0} tokens/s on this testbed)",
+            kind.to_uppercase(),
+            variant,
+            fmt_duration(row.time.median()),
+            row.tokens_per_sec
+        );
+    }
+
+    // Whole-block timing if present.
+    let block_art = format!("block_step_{name}_{}", mode.as_str());
+    if engine.manifest().get(&block_art).is_ok() {
+        let row = profile_block(&engine, &name, mode, 1, 3)?;
+        println!(
+            "  BLOCK fwd+bwd {:<12} ({:.0} tokens/s)",
+            fmt_duration(row.time.median()),
+            row.tokens_per_sec
+        );
+    }
+
+    // Memory breakdown at the paper's workload (Fig. 12's memory summary).
+    let cfg = presets::block(&name)?;
+    let bd = block_peak(&cfg, mode, &BlockWorkload { batch: 16, seq: 512 });
+    println!("\n# peak memory statistics (analytic, bs 16 x seq 512)");
+    println!("{}", bd.render());
+    println!(
+        "peak {} | trainable params {}",
+        fmt_bytes(bd.peak_bytes()),
+        cfg.trainable_params(mode)
+    );
+    Ok(())
+}

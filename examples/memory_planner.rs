@@ -1,0 +1,78 @@
+//! Memory planner: given a GPU budget, which (mode, sequence length,
+//! batch) configurations fit?  The deployment-facing use of the memory
+//! model behind Table 3's "Max Length" and Fig. 9.
+//!
+//!     cargo run --release --example memory_planner -- \
+//!         [--block opt-2560] [--layers 32] [--budget-gb 24] [--batch 16]
+
+use anyhow::Result;
+use spt::config::{presets, Mode};
+use spt::memmodel::{block_peak, max_seq_under_budget, BlockWorkload};
+use spt::metrics::Table;
+use spt::util::fmt_bytes;
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> Result<()> {
+    let block = arg("--block", "opt-2560");
+    let layers: usize = arg("--layers", "32").parse()?;
+    let budget_gb: f64 = arg("--budget-gb", "24").parse()?;
+    let batch: usize = arg("--batch", "16").parse()?;
+    let vocab: usize = arg("--vocab", "50272").parse()?;
+    let cfg = presets::block(&block)?;
+    let budget = (budget_gb * (1u64 << 30) as f64) as u64;
+
+    println!(
+        "# memory plan: {block} x{layers} layers, batch {batch}, budget {budget_gb} GB\n"
+    );
+    let mut t = Table::new(
+        "Max sequence length before OOM (Table 3 protocol, offloading modeled)",
+        &["System", "Max Length", "x Full"],
+    );
+    let mut full_len = 0usize;
+    for mode in Mode::ALL {
+        let len = max_seq_under_budget(&cfg, mode, batch, layers, vocab, budget, 128);
+        if mode == Mode::Full {
+            full_len = len;
+        }
+        t.row(&[
+            mode.as_str().to_string(),
+            len.to_string(),
+            if full_len > 0 {
+                format!("{:.2}x", len as f64 / full_len as f64)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut t2 = Table::new(
+        "Per-block peak by sequence length",
+        &["Seq", "Full", "LoRA", "SPT"],
+    );
+    for seq in [256usize, 512, 1024, 2048, 4096] {
+        let wl = BlockWorkload { batch, seq };
+        let row: Vec<String> = Mode::ALL
+            .iter()
+            .map(|&m| fmt_bytes(block_peak(&cfg, m, &wl).peak_bytes()))
+            .collect();
+        t2.row(&[seq.to_string(), row[0].clone(), row[1].clone(), row[2].clone()]);
+    }
+    println!("{}", t2.render());
+
+    // What dominates?  Show the SPT breakdown at the budget edge.
+    let spt_len = max_seq_under_budget(&cfg, Mode::Spt, batch, layers, vocab, budget, 128);
+    if spt_len > 0 {
+        println!("# SPT per-block breakdown at its max length ({spt_len})");
+        let bd = block_peak(&cfg, Mode::Spt, &BlockWorkload { batch, seq: spt_len });
+        println!("{}", bd.render());
+    }
+    Ok(())
+}

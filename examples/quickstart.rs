@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT artifacts, validate the goldens, and run a
+//! few SPT fine-tuning steps on the tiny model.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end slice of the system: PJRT engine ->
+//! manifest -> golden validation -> coordinator train loop.
+
+use anyhow::Result;
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::{Trainer, TrainerOptions};
+use spt::runtime::{goldens, Engine};
+
+fn main() -> Result<()> {
+    let dir = std::env::var("SPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = Engine::new(&dir)?;
+    println!("platform: {} | artifacts: {}", engine.platform(), engine.manifest().artifacts.len());
+
+    // 1. Validate the python -> rust numeric round trip.
+    for g in goldens::load_goldens(&dir)? {
+        let diff = goldens::check_artifact(&engine, &g, 1e-3)?;
+        println!("  golden {:<26} max|diff| = {diff:.2e}", g.name);
+    }
+
+    // 2. Fine-tune the tiny model with SPT sparsification for 16 steps.
+    let mut rc = RunConfig::default();
+    rc.model = "spt-tiny".into();
+    rc.mode = Mode::Spt;
+    rc.steps = 16;
+    rc.eval_every = 8;
+    rc.codebook_refresh_every = 10;
+    rc.artifacts_dir = dir;
+    let mut trainer = Trainer::new(&engine, rc, TrainerOptions::default());
+    let report = trainer.train()?;
+    println!(
+        "\ntrained {} steps: loss {:.3} -> {:.3} ({:.0} tokens/s, {} codebook refreshes)",
+        report.steps,
+        report.losses.first().unwrap(),
+        report.losses.last().unwrap(),
+        report.tokens_per_sec,
+        report.refreshes,
+    );
+    for e in &report.evals {
+        println!("  step {:>3}: eval loss {:.3} (ppl {:.1})", e.step, e.eval_loss, e.ppl);
+    }
+    Ok(())
+}

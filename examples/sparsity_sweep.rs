@@ -1,0 +1,66 @@
+//! Sparsity-strength sweep (paper Fig. 10 + §3 trial workflow):
+//! trains short trials in every available mode, sweeps the substrate's
+//! MHA approximation error over L, and prints the trade-off table with a
+//! recommendation.
+//!
+//!     cargo run --release --example sparsity_sweep -- [--model spt-tiny] [--steps 16]
+
+use anyhow::Result;
+use spt::config::RunConfig;
+use spt::coordinator::trial::TrialManager;
+use spt::metrics::Table;
+use spt::runtime::Engine;
+use spt::sparse::{attention::sparse_vs_dense_error, pq, Matrix};
+use spt::util::rng::Rng;
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> Result<()> {
+    // Substrate sweep: L fraction -> attention error (Fig. 10a mechanism).
+    let (n, d) = (256usize, 64usize);
+    let mut rng = Rng::new(21);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let noise = Matrix::randn(n, d, 0.5, &mut rng);
+    let q = Matrix::from_vec(
+        n, d,
+        k.data.iter().zip(&noise.data).map(|(a, b)| 2.0 * a + b).collect(),
+    );
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    let mut cb = pq::Codebooks::random(8, 16, 8, &mut rng);
+    for _ in 0..5 {
+        pq::codebook_update(&k.data, &mut cb, 1.0);
+    }
+    let mut sweep = Table::new(
+        "MHA sparsity sweep (substrate): non-zero portion vs output error",
+        &["portion", "rel. error"],
+    );
+    for den in [1usize, 2, 4, 8, 16] {
+        let err = sparse_vs_dense_error(&q, &k, &v, &cb, (n / den).max(1));
+        sweep.row(&[format!("1/{den}"), format!("{err:.4}")]);
+    }
+    println!("{}", sweep.render());
+
+    // Trial manager over the AOT artifacts (paper §3).
+    let dir = std::env::var("SPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = Engine::new(&dir)?;
+    let mut rc = RunConfig::default();
+    rc.model = arg("--model", "spt-tiny");
+    rc.artifacts_dir = dir;
+    let steps: usize = arg("--steps", "16").parse()?;
+    let tm = TrialManager::new(&engine, rc, steps);
+    let (results, table) = tm.compare_modes()?;
+    println!("{}", table.render());
+    if let Some(best) = TrialManager::recommend(&results, 0.10) {
+        println!(
+            "recommendation: {} — {:.3} s/step at ppl {:.2} (within 10% of best quality)",
+            best.label, best.secs_per_step, best.ppl
+        );
+    }
+    Ok(())
+}

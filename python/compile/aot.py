@@ -1,0 +1,449 @@
+"""AOT compiler: lower every SPT entry point to HLO text + manifest.
+
+This is the single build-time bridge between the Python layers (L1 Pallas
+kernels, L2 JAX model) and the rust coordinator (L3).  It lowers each entry
+point with ``jax.jit(...).lower(...)`` and serializes **HLO text** — not
+``.serialize()`` protos: jax >= 0.5 emits 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``<name>.hlo.txt``    — one per entry point.
+* ``manifest.json``     — for every artifact: input/output names, shapes,
+  dtypes, parameter leaf paths (canonical pytree order), and the static
+  workload dims (batch, seq, L, G', ...) the rust side needs.
+* ``goldens.json``      — sample inputs/outputs for small artifacts, used
+  by rust integration tests to validate the PJRT round trip numerically.
+
+Run ``python -m compile.aot --help`` from ``python/``.  ``make artifacts``
+invokes this with defaults; it is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import pq, routed_ffn, sparse_attn, topl
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def _leaf_paths(tree) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+class Builder:
+    """Accumulates artifacts + manifest + goldens."""
+
+    def __init__(self, out_dir: str, golden: bool):
+        self.out_dir = out_dir
+        self.golden = golden
+        self.manifest: dict = {"artifacts": {}, "generated_unix": int(time.time())}
+        self.goldens: dict = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(
+        self,
+        name: str,
+        fn,
+        example_args: tuple,
+        meta: dict | None = None,
+        input_names: list[str] | None = None,
+        golden: bool = False,
+        donate_argnums: tuple = (),
+    ):
+        """Lower ``fn(*example_args)`` and record it."""
+        t0 = time.time()
+        flat_args, in_tree = jax.tree_util.tree_flatten(example_args)
+        # keep_unused=True: the rust side feeds every leaf in the manifest
+        # signature; jax must not prune unused parameters from the
+        # executable's argument list.
+        jfn = jax.jit(fn, donate_argnums=donate_argnums, keep_unused=True)
+        lowered = jfn.lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_example = jax.eval_shape(fn, *example_args)
+        flat_out, _ = jax.tree_util.tree_flatten(out_example)
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec(a) for a in flat_args],
+            "input_paths": _leaf_paths(example_args),
+            "outputs": [_spec(o) for o in flat_out],
+            "output_paths": _leaf_paths(out_example),
+            "meta": meta or {},
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if input_names:
+            entry["input_names"] = input_names
+        self.manifest["artifacts"][name] = entry
+        if golden and self.golden:
+            # Golden inputs must be NON-TRIVIAL (zeros would validate
+            # nothing): fill floats with seeded gaussians and ints with
+            # values valid for their role (indices < n, codes < E).
+            rng = np.random.default_rng(0xC0FFEE + len(self.goldens))
+            golden_args = []
+            for a in flat_args:
+                if jnp.issubdtype(a.dtype, jnp.floating):
+                    # 0.1 scale keeps GEMM intermediates O(1): golden
+                    # comparisons then sit well inside the cross-backend
+                    # fp-reassociation tolerance.
+                    golden_args.append(
+                        0.1
+                        * jnp.asarray(
+                            rng.standard_normal(a.shape, dtype=np.float32)
+                        )
+                    )
+                else:
+                    hi = max(1, int(min(s for s in a.shape[-1:] or [8])))
+                    # safe upper bound: smallest trailing dim of any float
+                    # input (n for idx, E for codes) — callers can rely on
+                    # index-like ints being < first float input's dim 1.
+                    n_like = flat_args[0].shape[1] if flat_args[0].ndim > 1 else 8
+                    del hi
+                    golden_args.append(
+                        jnp.asarray(
+                            rng.integers(0, max(2, n_like), a.shape),
+                            dtype=a.dtype,
+                        )
+                    )
+            golden_args = jax.tree_util.tree_unflatten(in_tree, golden_args)
+            outs = jax.jit(fn)(*golden_args)
+            flat_gargs, _ = jax.tree_util.tree_flatten(golden_args)
+            flat_outs, _ = jax.tree_util.tree_flatten(outs)
+            self.goldens[name] = {
+                "inputs": [np.asarray(a).flatten().tolist() for a in flat_gargs],
+                "input_specs": [_spec(a) for a in flat_gargs],
+                "outputs": [np.asarray(o).flatten().tolist() for o in flat_outs],
+                "output_specs": [_spec(o) for o in flat_outs],
+            }
+        dt = time.time() - t0
+        print(f"  [aot] {name}: {len(text)//1024} KiB, {dt:.1f}s")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        if self.golden:
+            with open(os.path.join(self.out_dir, "goldens.json"), "w") as f:
+                json.dump(self.goldens, f)
+        n = len(self.manifest["artifacts"])
+        print(f"[aot] wrote {n} artifacts to {self.out_dir}")
+
+
+# ---------------------------------------------------------------------------
+# Entry-point groups
+# ---------------------------------------------------------------------------
+
+
+def add_model_artifacts(b: Builder, model_name: str, batch: int, seq: int):
+    """End-to-end fine-tuning artifacts: init / train_step / eval / refresh."""
+    mc = M.MODEL_CONFIGS[model_name]
+    seq = min(seq, mc.max_seq)
+    for mode in M.MODES:
+        params = jax.eval_shape(
+            lambda: M.init_model_params(jax.random.PRNGKey(0), mc, mode)
+        )
+        tokens = jnp.zeros((batch, seq), jnp.int32)
+        targets = jnp.zeros((batch, seq), jnp.int32)
+        meta = {
+            "kind": "model",
+            "model": model_name,
+            "mode": mode,
+            "batch": batch,
+            "seq": seq,
+            "vocab": mc.vocab_size,
+            "n_layers": mc.n_layers,
+            "d_model": mc.block.d_model,
+            "param_count": mc.param_count(),
+        }
+
+        def init_fn(seed):
+            return M.init_model_params(jax.random.PRNGKey(seed), mc, mode)
+
+        b.add(
+            f"model_init_{model_name}_{mode}",
+            init_fn,
+            (jnp.zeros((), jnp.int32),),
+            meta={**meta, "entry": "init"},
+        )
+
+        step = T.make_train_step(mc, mode)
+        params_c = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params
+        )
+        opt_c = T.init_opt_state(params_c)
+        b.add(
+            f"train_step_{model_name}_{mode}",
+            step,
+            (params_c, opt_c, tokens, targets),
+            meta={**meta, "entry": "train_step"},
+        )
+        ev = T.make_eval_loss(mc, mode)
+        b.add(
+            f"eval_loss_{model_name}_{mode}",
+            ev,
+            (params_c, tokens, targets),
+            meta={**meta, "entry": "eval_loss"},
+        )
+        # MMLU-surrogate scorer: answer slot is at seq-2 (taskgen layout).
+        b.add(
+            f"qa_logits_{model_name}_{mode}",
+            T.make_qa_logits(mc, mode, answer_pos=seq - 2),
+            (params_c, tokens),
+            meta={**meta, "entry": "qa_logits", "answer_pos": seq - 2},
+        )
+        # Chunked train step (K microbatches per dispatch) — §Perf fast path.
+        k_chunk = 8
+        tokens_k = jnp.zeros((k_chunk, batch, seq), jnp.int32)
+        b.add(
+            f"train_chunk{k_chunk}_{model_name}_{mode}",
+            T.make_train_chunk(mc, mode, k_chunk),
+            (params_c, opt_c, tokens_k, tokens_k),
+            meta={**meta, "entry": "train_chunk", "chunk": k_chunk},
+        )
+    # DKM codebook refresh (spt only): whole-model, per-layer, one fwd pass.
+    spt_params = jax.eval_shape(
+        lambda: M.init_model_params(jax.random.PRNGKey(0), mc, "spt")
+    )
+    spt_params_c = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), spt_params
+    )
+    tokens = jnp.zeros((batch, seq), jnp.int32)
+    b.add(
+        f"codebook_refresh_{model_name}",
+        T.make_model_codebook_refresh(mc),
+        (spt_params_c, tokens),
+        meta={
+            "kind": "refresh",
+            "model": model_name,
+            "mode": "spt",
+            "entry": "codebook_refresh",
+        },
+    )
+
+
+def add_block_artifacts(
+    b: Builder, cfg_name: str, batch: int, seq: int, modes=M.MODES
+):
+    """Per-block fwd+bwd step (paper Fig. 8 workload) for each tuning mode."""
+    cfg = M.BLOCK_CONFIGS[cfg_name]
+    x = jnp.zeros((batch, seq, cfg.d_model), jnp.float32)
+    for mode in modes:
+        params = jax.eval_shape(
+            lambda: M.init_block_params(jax.random.PRNGKey(0), cfg, mode)
+        )
+        params_c = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params
+        )
+        meta = {
+            "kind": "block",
+            "config": cfg_name,
+            "mode": mode,
+            "batch": batch,
+            "seq": seq,
+            "d_model": cfg.d_model,
+            "d_head": cfg.d_head,
+            "d_ffn": cfg.d_ffn,
+            "entry": "block_step",
+        }
+        b.add(
+            f"block_step_{cfg_name}_{mode}",
+            T.make_block_fwdbwd(cfg, mode),
+            (params_c, x),
+            meta=meta,
+        )
+
+        def init_fn(seed, _cfg=cfg, _mode=mode):
+            return M.init_block_params(jax.random.PRNGKey(seed), _cfg, _mode)
+
+        b.add(
+            f"block_init_{cfg_name}_{mode}",
+            init_fn,
+            (jnp.zeros((), jnp.int32),),
+            meta={**meta, "entry": "block_init"},
+        )
+
+
+def add_module_artifacts(
+    b: Builder, cfg_name: str, batch: int, seq: int
+):
+    """MHA-only / FFN-only fwd+bwd at several sparsity strengths
+    (paper Tables 1, 4, 5)."""
+    base = M.BLOCK_CONFIGS[cfg_name]
+    x = jnp.zeros((batch, seq, base.d_model), jnp.float32)
+
+    variants: list[tuple[str, M.BlockConfig, str]] = [
+        ("full", base, "full"),
+        ("lora", base, "lora"),
+        # sparse MHA at 1/4 and 1/8 nonzeros; routed FFN at 3/4 and 1/2.
+        ("spt_l4", base.with_sparsity(mha_num=1, mha_den=4), "spt"),
+        ("spt_l8", base.with_sparsity(mha_num=1, mha_den=8), "spt"),
+        ("spt_b34", base.with_sparsity(ffn_num=3, ffn_den=4), "spt"),
+        ("spt_b12", base.with_sparsity(ffn_num=1, ffn_den=2), "spt"),
+    ]
+    for tag, cfg, mode in variants:
+        params = jax.eval_shape(
+            lambda: M.init_block_params(jax.random.PRNGKey(0), cfg, mode)
+        )
+        params_c = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params
+        )
+        meta = {
+            "kind": "module",
+            "config": cfg_name,
+            "mode": mode,
+            "variant": tag,
+            "batch": batch,
+            "seq": seq,
+            "mha_frac": f"{cfg.mha_topl_num}/{cfg.mha_topl_den}",
+            "ffn_frac": f"{cfg.ffn_active_num}/{cfg.ffn_active_den}",
+        }
+        if not tag.startswith("spt_b"):  # MHA variants
+            b.add(
+                f"mha_{cfg_name}_{tag}",
+                T.make_mha_fwdbwd(cfg, mode),
+                (params_c, x),
+                meta={**meta, "entry": "mha_fwdbwd"},
+            )
+        if not tag.startswith("spt_l"):  # FFN variants
+            b.add(
+                f"ffn_{cfg_name}_{tag}",
+                T.make_ffn_fwdbwd(cfg, mode),
+                (params_c, x),
+                meta={**meta, "entry": "ffn_fwdbwd"},
+            )
+
+
+def add_kernel_artifacts(b: Builder, bh: int, n: int, dh: int):
+    """Kernel-level micro artifacts (paper Tables 5, 6)."""
+    m, e, dsub = dh // 8, 16, 8
+    l = max(1, n // 8)
+    q = jnp.zeros((bh, n, dh), jnp.float32)
+    cb = jnp.zeros((m, e, dsub), jnp.float32)
+    codes = jnp.zeros((bh, n, m), jnp.int32)
+    idx = jnp.zeros((bh, n, l), jnp.int32)
+    meta = {"kind": "kernel", "bh": bh, "n": n, "d_head": dh, "L": l, "M": m}
+
+    b.add("kernel_pq_quantize", pq.pq_quantize, (q, cb),
+          meta={**meta, "entry": "pq_quantize"}, golden=True)
+    b.add(
+        "kernel_topl_select",
+        lambda cq, ck: topl.topl_select(cq, ck, l, causal=True),
+        (codes, codes),
+        meta={**meta, "entry": "topl_select"},
+        golden=True,
+    )
+    b.add(
+        "kernel_naive_pq_select",
+        lambda cq, ck, c: topl.naive_pq_select(cq, ck, c, l, causal=True),
+        (codes, codes, cb),
+        meta={**meta, "entry": "naive_pq_select"},
+    )
+    b.add(
+        "kernel_sparse_attention",
+        lambda qq, kk, vv, ii: sparse_attn.sparse_attention(
+            qq, kk, vv, ii, True, None
+        ),
+        (q, q, q, idx),
+        meta={**meta, "entry": "sparse_attention"},
+        golden=True,
+    )
+
+    def dense_attn(qq, kk, vv):
+        s = jnp.einsum("bnd,bmd->bnm", qq, kk) / jnp.sqrt(float(dh))
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        s = jnp.where(mask[None], s, -1e30)
+        return jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(s, axis=-1), vv)
+
+    b.add("kernel_dense_attention", dense_attn, (q, q, q),
+          meta={**meta, "entry": "dense_attention"})
+
+    # FFN kernels at a representative shape.
+    nt, d, dffn, g, ga = bh * n // 4, 512, 2048, 8, 4
+    xt = jnp.zeros((nt, d), jnp.float32)
+    wi = jnp.zeros((d, dffn), jnp.float32)
+    wo = jnp.zeros((dffn, d), jnp.float32)
+    wr = jnp.zeros((d, g), jnp.float32)
+    fmeta = {"kind": "kernel", "nt": nt, "d": d, "d_ffn": dffn, "G": g, "Ga": ga}
+    b.add(
+        "kernel_routed_ffn",
+        lambda x2, a, o, r: routed_ffn.routed_ffn(x2, a, o, r, ga, 1.25)[0],
+        (xt, wi, wo, wr),
+        meta={**fmeta, "entry": "routed_ffn"},
+        golden=True,
+    )
+    b.add(
+        "kernel_dense_ffn",
+        lambda x2, a, o: jax.nn.relu(x2 @ a) @ o,
+        (xt, wi, wo),
+        meta={**fmeta, "entry": "dense_ffn"},
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models", default="spt-tiny,spt-30m",
+        help="comma list from: " + ",".join(M.MODEL_CONFIGS),
+    )
+    ap.add_argument("--model-batch", type=int, default=4)
+    ap.add_argument("--model-seq", type=int, default=128)
+    ap.add_argument(
+        "--blocks",
+        default="opt-1024,opt-2048,opt-2560,llama-2560,llama-4096",
+        help="comma list from: " + ",".join(M.BLOCK_CONFIGS),
+    )
+    ap.add_argument("--block-batch", type=int, default=1)
+    ap.add_argument("--block-seq", type=int, default=128)
+    ap.add_argument(
+        "--module-configs", default="opt-2048,llama-4096",
+        help="configs for MHA/FFN module artifacts (Tables 1/4/5)",
+    )
+    ap.add_argument("--no-goldens", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    b = Builder(args.out, golden=not args.no_goldens)
+    print("[aot] kernel micro artifacts")
+    if not args.skip_kernels:
+        add_kernel_artifacts(b, bh=8, n=128, dh=64)
+    for name in filter(None, args.blocks.split(",")):
+        print(f"[aot] block artifacts: {name}")
+        add_block_artifacts(b, name, args.block_batch, args.block_seq)
+    for name in filter(None, args.module_configs.split(",")):
+        print(f"[aot] module artifacts: {name}")
+        add_module_artifacts(b, name, args.block_batch, args.block_seq)
+    for name in filter(None, args.models.split(",")):
+        print(f"[aot] model artifacts: {name}")
+        add_model_artifacts(b, name, args.model_batch, args.model_seq)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

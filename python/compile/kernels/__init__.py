@@ -1,0 +1,13 @@
+"""SPT L1 kernels: Pallas implementations + pure-jnp reference oracles.
+
+Modules:
+  pq          — fused cdist+argmin product quantization (paper Alg. 2)
+  topl        — integer bucket-sort top-L selection (paper Alg. 3)
+  sparse_attn — SDDMM / sparse softmax / SpMM with custom VJP (paper §5.1)
+  routed_ffn  — router + blocked sparse matrix-vector multiply (paper Alg. 4)
+  ref         — dense jnp oracles for all of the above
+"""
+
+from . import pq, ref, routed_ffn, sparse_attn, topl
+
+__all__ = ["pq", "ref", "routed_ffn", "sparse_attn", "topl"]

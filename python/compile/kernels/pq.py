@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: fused product-quantization (cdist + argmin).
+
+Paper mapping (SPT §5.1, Alg. 2): the CUDA implementation fuses the ``cdist``
+and ``argmin`` operators into one kernel so the ``[seq, num_codewords]``
+distance matrix never hits global memory.  Here the same fusion happens per
+grid step: each (batch, subspace) instance keeps its distance tile entirely
+in VMEM scratch and writes only the ``[n]`` codeword ids back to HBM.
+
+Hardware adaptation (CUDA -> Pallas/TPU): one threadblock per (sequence,
+codebook) becomes one grid step per (batch-head, codebook); warp reductions
+become lane-vectorized ``jnp`` reductions over the E axis (E <= 32, so the
+tile is tiny and lives comfortably in VMEM: n*E*4 bytes ~ 32 KiB at n=512).
+
+All kernels are ``interpret=True``: on this CPU-PJRT image real Mosaic
+lowering cannot execute; interpret mode lowers to plain HLO and runs
+everywhere (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _quantize_kernel(x_ref, cb_ref, codes_ref):
+    """One (batch, subspace) instance: nearest codeword for every vector.
+
+    x_ref:     [1, n, 1, d']  slice of the input for this (b, m)
+    cb_ref:    [1, E, d']     codebook m
+    codes_ref: [1, n, 1]      output codeword ids (int32)
+    """
+    x = x_ref[0, :, 0, :]  # [n, d']
+    cb = cb_ref[0]  # [E, d']
+    # Fused cdist+argmin: distances stay in registers/VMEM.
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; ||x||^2 constant per row, skip.
+    dots = x @ cb.T  # [n, E]
+    c2 = jnp.sum(cb * cb, axis=-1)  # [E]
+    dist = c2[None, :] - 2.0 * dots  # [n, E]
+    codes_ref[0, :, 0] = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pq_quantize(x: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """Quantize batched vectors with PQ.
+
+    Args:
+      x: ``[b, n, d]`` vectors (b = batch * heads).
+      codebooks: ``[M, E, d']`` with ``d = M * d'``.
+
+    Returns:
+      ``[b, n, M]`` int32 codeword ids.
+    """
+    b, n, d = x.shape
+    m, e, dsub = codebooks.shape
+    assert d == m * dsub, f"d={d} != M*d'={m}*{dsub}"
+    xs = x.reshape(b, n, m, dsub)
+    grid = (b, m)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, 1, dsub), lambda bi, mi: (bi, 0, mi, 0)),
+            pl.BlockSpec((1, e, dsub), lambda bi, mi: (mi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, 1), lambda bi, mi: (bi, 0, mi)),
+        out_shape=jax.ShapeDtypeStruct((b, n, m), jnp.int32),
+        interpret=INTERPRET,
+    )(xs, codebooks)
+
+
+def _quantize_error_kernel(x_ref, cb_ref, err_ref):
+    """Like _quantize_kernel but emits the min squared distance (DKM error)."""
+    x = x_ref[0, :, 0, :]
+    cb = cb_ref[0]
+    x2 = jnp.sum(x * x, axis=-1)  # [n]
+    dots = x @ cb.T
+    c2 = jnp.sum(cb * cb, axis=-1)
+    dist = x2[:, None] - 2.0 * dots + c2[None, :]
+    err_ref[0, :, 0] = jnp.min(dist, axis=-1)
+
+
+def pq_quantize_error(x: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """Mean squared quantization error over all vectors/subspaces (scalar)."""
+    b, n, d = x.shape
+    m, e, dsub = codebooks.shape
+    xs = x.reshape(b, n, m, dsub)
+    per = pl.pallas_call(
+        _quantize_error_kernel,
+        grid=(b, m),
+        in_specs=[
+            pl.BlockSpec((1, n, 1, dsub), lambda bi, mi: (bi, 0, mi, 0)),
+            pl.BlockSpec((1, e, dsub), lambda bi, mi: (mi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, 1), lambda bi, mi: (bi, 0, mi)),
+        out_shape=jax.ShapeDtypeStruct((b, n, m), jnp.float32),
+        interpret=INTERPRET,
+    )(xs, codebooks)
+    # err is ||x||^2-2x.c+||c||^2 >= 0 mathematically; clamp fp noise.
+    return jnp.mean(jnp.maximum(per, 0.0)) / dsub
+
+
+def pq_codebook_update(
+    x: jax.Array, codebooks: jax.Array, lr: float = 0.5
+) -> jax.Array:
+    """DKM-style codebook refresh (paper §5.1: run every ~20 mini-batches).
+
+    Plain-jnp segment means — this runs on the *build/trial* path only, the
+    paper likewise amortizes it across mini-batches, so it is not a Pallas
+    hot kernel.
+    """
+    b, n, d = x.shape
+    m, e, dsub = codebooks.shape
+    codes = pq_quantize(x, codebooks).reshape(b * n, m)
+    xs = x.reshape(b * n, m, dsub)
+    onehot = jax.nn.one_hot(codes, e, dtype=x.dtype)  # [bn, M, E]
+    counts = jnp.sum(onehot, axis=0)  # [M, E]
+    sums = jnp.einsum("nme,nmd->med", onehot, xs)
+    means = sums / jnp.maximum(counts, 1.0)[:, :, None]
+    occupied = (counts > 0)[:, :, None]
+    target = jnp.where(occupied, means, codebooks)
+    return codebooks + lr * (target - codebooks)
+
+
+def init_codebooks(
+    key: jax.Array, m: int, e: int, dsub: int, scale: float = 1.0
+) -> jax.Array:
+    """Random-normal codebook init, matched to unit-variance activations."""
+    return jax.random.normal(key, (m, e, dsub), dtype=jnp.float32) * scale

@@ -1,0 +1,285 @@
+"""Pure-jnp reference oracles for every SPT kernel.
+
+These are the correctness ground truth the Pallas kernels (pq.py, topl.py,
+sparse_attn.py, routed_ffn.py) are tested against.  Everything here is plain
+``jax.numpy`` — dense, obvious, and slow; no Pallas, no tricks.
+
+Semantics follow the paper (SPT, Gui et al. 2023):
+
+* PQ quantization (Alg. 2): per-subspace nearest codeword under L2.
+* Integer similarity (Eq. 6): ``s(q, k) = sum_m 1[t_q^m == t_k^m]``.
+* Bucket-sort top-L (Alg. 3): rank keys by ``(-score, key_index)``
+  lexicographically — i.e. higher score first, ties broken by *insertion
+  order*, which for Alg. 3's sequential scan is ascending key index.
+* Sparse attention (§4.1): softmax over only the selected L entries
+  (renormalized so the kept weights sum to 1), optional causal mask.
+* Routed FFN (§4.2): router ``x @ W_R``, activate the top-G' blocks by
+  |score|, gate each active block by a softmax over the *selected* scores,
+  and compute only those blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# PQ quantization
+# ---------------------------------------------------------------------------
+
+
+def pq_quantize(x: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """Quantize ``x`` with product quantization.
+
+    Args:
+      x: ``[n, d]`` vectors to quantize.
+      codebooks: ``[M, E, d']`` codebooks, ``d = M * d'``.
+
+    Returns:
+      ``[n, M]`` int32 codeword indices.
+    """
+    n, d = x.shape
+    m, e, dsub = codebooks.shape
+    assert d == m * dsub, f"d={d} must equal M*d'={m}*{dsub}"
+    xs = x.reshape(n, m, dsub)  # [n, M, d']
+    # [n, M, E] squared L2 distance per subspace.
+    diff = xs[:, :, None, :] - codebooks[None, :, :, :]
+    dist = jnp.sum(diff * diff, axis=-1)
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def pq_quantize_error(x: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """Mean squared quantization error (scalar) — DKM-style codebook signal."""
+    n, d = x.shape
+    m, e, dsub = codebooks.shape
+    codes = pq_quantize(x, codebooks)  # [n, M]
+    xs = x.reshape(n, m, dsub)
+    chosen = jnp.take_along_axis(
+        codebooks[None], codes[:, :, None, None], axis=2
+    )[:, :, 0, :]  # [n, M, d']
+    return jnp.mean((xs - chosen) ** 2)
+
+
+def pq_codebook_update(
+    x: jax.Array, codebooks: jax.Array, lr: float = 0.5
+) -> jax.Array:
+    """One soft k-means (DKM-flavoured) codebook refresh step.
+
+    Moves each codeword toward the mean of the vectors assigned to it.
+    Empty codewords are left untouched.
+    """
+    n, d = x.shape
+    m, e, dsub = codebooks.shape
+    codes = pq_quantize(x, codebooks)  # [n, M]
+    xs = x.reshape(n, m, dsub)
+    onehot = jax.nn.one_hot(codes, e, dtype=x.dtype)  # [n, M, E]
+    counts = jnp.sum(onehot, axis=0)  # [M, E]
+    sums = jnp.einsum("nme,nmd->med", onehot, xs)  # [M, E, d']
+    means = sums / jnp.maximum(counts, 1.0)[:, :, None]
+    occupied = (counts > 0)[:, :, None]
+    target = jnp.where(occupied, means, codebooks)
+    return codebooks + lr * (target - codebooks)
+
+
+# ---------------------------------------------------------------------------
+# Integer similarity + bucket-sort top-L
+# ---------------------------------------------------------------------------
+
+
+def pq_scores(codes_q: jax.Array, codes_k: jax.Array) -> jax.Array:
+    """Integer similarity matrix ``[nq, nk]``: number of matching codewords."""
+    eq = codes_q[:, None, :] == codes_k[None, :, :]  # [nq, nk, M]
+    return jnp.sum(eq.astype(jnp.int32), axis=-1)
+
+
+def topl_select(
+    codes_q: jax.Array,
+    codes_k: jax.Array,
+    l: int,
+    causal: bool = False,
+) -> jax.Array:
+    """Bucket-sort top-L key selection (paper Alg. 3 semantics).
+
+    Keys are ranked by ``(-score, key_index)``; the first L are returned in
+    that order.  With ``causal=True``, key j is only eligible for query i if
+    ``j <= i`` (ineligible keys get score -1 but, to keep the output shape
+    static, may still appear as padding when a query has < L eligible keys —
+    exactly like Alg. 3 reading residual bucket slots; the attention mask
+    downstream re-masks them).
+
+    Returns ``[nq, L]`` int32 key indices.
+    """
+    nq = codes_q.shape[0]
+    nk = codes_k.shape[0]
+    s = pq_scores(codes_q, codes_k)  # [nq, nk]
+    if causal:
+        i = jnp.arange(nq)[:, None]
+        j = jnp.arange(nk)[None, :]
+        s = jnp.where(j <= i, s, -1)
+    # Lexicographic (-score, j): encode as score * nk + (nk - 1 - j); larger
+    # is better.  Scores are small non-negative ints so no overflow.
+    combined = s * nk + (nk - 1 - jnp.arange(nk))[None, :]
+    _, idx = jax.lax.top_k(combined, l)
+    return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Sparse attention (SDDMM -> masked softmax -> SpMM)
+# ---------------------------------------------------------------------------
+
+
+def sddmm(q: jax.Array, k: jax.Array, indices: jax.Array) -> jax.Array:
+    """Sampled dense-dense matmul: ``vals[i, l] = q_i . k_{indices[i, l]}``."""
+    kg = k[indices]  # [n, L, d]
+    return jnp.einsum("nd,nld->nl", q, kg)
+
+
+def sparse_softmax(
+    vals: jax.Array, indices: jax.Array, causal: bool = False
+) -> jax.Array:
+    """Row softmax over the L sampled entries; duplicate/causal-invalid
+    entries are masked out.
+
+    A row's entries are invalid if (a) causal and index > row, or (b) the
+    same key index appeared earlier in the row (top-L padding duplicates).
+    """
+    n, l = vals.shape
+    valid = jnp.ones_like(vals, dtype=bool)
+    if causal:
+        rows = jnp.arange(n)[:, None]
+        valid = valid & (indices <= rows)
+    # Mask duplicate indices within a row (keep the first occurrence).
+    first = indices[:, :, None] == indices[:, None, :]  # [n, L, L]
+    earlier = jnp.tril(jnp.ones((l, l), dtype=bool), k=-1)[None]
+    dup = jnp.any(first & earlier, axis=-1)
+    valid = valid & ~dup
+    neg = jnp.finfo(vals.dtype).min
+    masked = jnp.where(valid, vals, neg)
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    ex = jnp.where(valid, jnp.exp(masked - mx), 0.0)
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    return ex / jnp.maximum(denom, jnp.finfo(vals.dtype).tiny)
+
+
+def spmm(weights: jax.Array, indices: jax.Array, v: jax.Array) -> jax.Array:
+    """Sparse @ dense: ``y_i = sum_l weights[i, l] * v[indices[i, l]]``."""
+    vg = v[indices]  # [n, L, d]
+    return jnp.einsum("nl,nld->nd", weights, vg)
+
+
+def sparse_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    indices: jax.Array,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    """Full sparse-MHA pipeline for one head given the top-L indices."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    vals = sddmm(q * scale, k, indices)
+    w = sparse_softmax(vals, indices, causal=causal)
+    return spmm(w, indices, v)
+
+
+def dense_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = False
+) -> jax.Array:
+    """Vanilla softmax attention — the baseline SPT approximates."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = (q @ k.T) * scale
+    if causal:
+        n = q.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    return w @ v
+
+
+# ---------------------------------------------------------------------------
+# Routed FFN
+# ---------------------------------------------------------------------------
+
+
+def router_topk(scores: jax.Array, g_active: int) -> jax.Array:
+    """Top-G' block selection by |score| -> boolean mask ``[n, G]``."""
+    mag = jnp.abs(scores)
+    _, idx = jax.lax.top_k(mag, g_active)
+    mask = jnp.zeros_like(scores, dtype=bool)
+    return mask.at[jnp.arange(scores.shape[0])[:, None], idx].set(True)
+
+
+def routed_ffn(
+    x: jax.Array,
+    w_i: jax.Array,
+    w_o: jax.Array,
+    w_r: jax.Array,
+    g_active: int,
+    activation: str = "relu",
+) -> tuple[jax.Array, jax.Array]:
+    """Routed FFN reference (paper §4.2, Fig. 6a).
+
+    Args:
+      x: ``[n, d]`` tokens.
+      w_i: ``[d, D]`` inner projection.
+      w_o: ``[D, d]`` outer projection.
+      w_r: ``[d, G]`` router.
+      g_active: number of active blocks G' per token.
+
+    Returns:
+      ``(y, router_scores)`` with y ``[n, d]`` and router_scores ``[n, G]``
+      (pre-activation, used for the load-balancing loss).
+    """
+    n, d = x.shape
+    dd = w_i.shape[1]
+    g = w_r.shape[1]
+    assert dd % g == 0
+    scores = x @ w_r  # [n, G]
+    mask = router_topk(scores, g_active)  # [n, G] bool
+    # Gate: softmax over the selected scores only (renormalized), so the
+    # router receives gradient through the output as well as the LB loss.
+    neg = jnp.finfo(scores.dtype).min
+    gate = jax.nn.softmax(jnp.where(mask, scores, neg), axis=-1)  # [n, G]
+    h = x @ w_i  # [n, D]
+    h = jax.nn.relu(h) if activation == "relu" else jax.nn.gelu(h)
+    # Expand block gate across each block's D/G hidden units.
+    gate_full = jnp.repeat(gate * g_active, dd // g, axis=1)  # [n, D]
+    y = (h * gate_full) @ w_o
+    return y, scores
+
+
+def load_balance_loss(scores: jax.Array, g_active: int) -> jax.Array:
+    """Switch-style load-balancing loss over router scores.
+
+    ``G * sum_g f_g * p_g`` where f_g is the fraction of tokens whose top-G'
+    includes block g and p_g the mean router probability of block g.
+    Minimized when routing is uniform across blocks.
+    """
+    g = scores.shape[1]
+    mask = router_topk(scores, g_active).astype(scores.dtype)
+    f = jnp.mean(mask, axis=0)  # [G]
+    p = jnp.mean(jax.nn.softmax(scores, axis=-1), axis=0)  # [G]
+    return g * jnp.sum(f * p) / g_active
+
+
+def dense_ffn(
+    x: jax.Array, w_i: jax.Array, w_o: jax.Array, activation: str = "relu"
+) -> jax.Array:
+    """Vanilla FFN baseline."""
+    h = x @ w_i
+    h = jax.nn.relu(h) if activation == "relu" else jax.nn.gelu(h)
+    return h @ w_o
+
+
+# ---------------------------------------------------------------------------
+# LoRA
+# ---------------------------------------------------------------------------
+
+
+def lora_linear(
+    x: jax.Array, w: jax.Array, b_lo: jax.Array, c_lo: jax.Array,
+    alpha: float = 1.0,
+) -> jax.Array:
+    """LoRA projection ``x @ (W + alpha * B C)`` (Eq. 5)."""
+    return x @ w + (x @ b_lo) @ (alpha * c_lo)

@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: bucket-sort top-L selection over PQ codes.
+
+Paper mapping (SPT §5.1, Alg. 3): for each query, count matching codewords
+against every key (integer score in ``0..=M``), then select the top-L keys
+with a *bucket sort* over the M+1 possible scores — no floating point
+compare or full sort anywhere.
+
+The CUDA version keeps per-query buckets in shared memory and walks keys
+sequentially.  The TPU/Pallas adaptation vectorizes the same math:
+
+* ``hist[s]``      — per-query histogram of scores (the bucket sizes),
+* ``higher[j]``    — #keys with a strictly larger score (suffix-sum of hist),
+* ``within[j]``    — #earlier keys with an equal score (exclusive running
+                     count per score value, a static M+2-pass loop),
+* ``rank[j] = higher[j] + within[j]`` — the exact slot Alg. 3's retrieval
+  phase would write key j into; keys with ``rank < L`` are scattered into
+  the output at position ``rank``.
+
+This is bit-identical to "sort by (-score, key_index), take first L", which
+is what Alg. 3 computes (keys are inserted in ascending index order and
+buckets are drained from high score to low).
+
+Everything is integer arithmetic, mirroring the paper's claim that avoiding
+float score materialization + sorting is the source of the 4.6x win over
+Naive-PQ (Table 6).  The rust substrate (`rust/src/sparse/topl.rs`) has a
+sequential implementation of the same contract used for cross-validation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _make_topl_kernel(l: int, m: int, causal: bool):
+    def kernel(cq_ref, ck_ref, idx_ref):
+        """One batch-head instance.
+
+        cq_ref: [1, nq, M] query codes     ck_ref: [1, nk, M] key codes
+        idx_ref: [1, nq, L] output top-L key indices (int32)
+        """
+        cq = cq_ref[0]  # [nq, M]
+        ck = ck_ref[0]  # [nk, M]
+        nq = cq.shape[0]
+        nk = ck.shape[0]
+        # Integer similarity (paper Eq. 6): matching-codeword count.
+        eq = cq[:, None, :] == ck[None, :, :]  # [nq, nk, M] bool
+        s = jnp.sum(eq.astype(jnp.int32), axis=-1)  # [nq, nk], 0..M
+        if causal:
+            qi = jax.lax.broadcasted_iota(jnp.int32, (nq, nk), 0)
+            kj = jax.lax.broadcasted_iota(jnp.int32, (nq, nk), 1)
+            s = jnp.where(kj <= qi, s, -1)
+        # --- bucket ranks, all-integer ---
+        # within[j]: exclusive count of earlier keys with the same score.
+        # Static loop over the M+2 possible score values (incl. -1 sentinel).
+        within = jnp.zeros_like(s)
+        higher = jnp.zeros_like(s)
+        for sv in range(-1 if causal else 0, m + 1):
+            is_sv = (s == sv).astype(jnp.int32)  # [nq, nk]
+            run = jnp.cumsum(is_sv, axis=1) - is_sv  # exclusive prefix
+            within = within + is_sv * run
+            if sv < m:
+                # keys strictly above sv contribute to 'higher' of sv-keys
+                cnt_above = jnp.sum(
+                    (s > sv).astype(jnp.int32), axis=1, keepdims=True
+                )
+                higher = higher + is_sv * cnt_above
+        rank = higher + within  # [nq, nk]
+        # Scatter key index j into slot rank[i, j] when rank < L.
+        # (mode="drop": out-of-range ranks — keys outside the top-L — vanish.)
+        out = jnp.zeros((nq, l), dtype=jnp.int32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (nq, nk), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (nq, nk), 1)
+        out = out.at[rows.reshape(-1), rank.reshape(-1)].set(
+            cols.reshape(-1), mode="drop"
+        )
+        idx_ref[0] = out
+
+    return kernel
+
+
+def topl_select(
+    codes_q: jax.Array,
+    codes_k: jax.Array,
+    l: int,
+    causal: bool = False,
+) -> jax.Array:
+    """Select the top-L keys per query by PQ-code similarity.
+
+    Args:
+      codes_q: ``[b, nq, M]`` int32 query codes.
+      codes_k: ``[b, nk, M]`` int32 key codes.
+      l: number of keys to keep per query.
+      causal: restrict key j <= query i (decoder look-ahead mask). Rows with
+        fewer than L eligible keys contain padding slots (index 0); the
+        sparse-softmax downstream re-masks them.
+
+    Returns:
+      ``[b, nq, L]`` int32 indices, ordered by (-score, key index).
+    """
+    b, nq, m = codes_q.shape
+    _, nk, _ = codes_k.shape
+    assert 0 < l <= nk, f"L={l} must be in 1..={nk}"
+    kernel = _make_topl_kernel(l, m, causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, nq, m), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, nk, m), lambda bi: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nq, l), lambda bi: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nq, l), jnp.int32),
+        interpret=INTERPRET,
+    )(codes_q, codes_k)
+
+
+def naive_pq_select(
+    codes_q: jax.Array,
+    codes_k: jax.Array,
+    codebooks: jax.Array,
+    l: int,
+    causal: bool = False,
+) -> jax.Array:
+    """Baseline "Naive-PQ" (paper Table 6): float ADC scores + full sort.
+
+    Looks up the standard PQ asymmetric-distance inner-product table
+    ``c^m[t_q]^T c^m[t_k]`` per codebook, sums float scores, and runs a full
+    top-k over floats.  Same inputs/outputs as :func:`topl_select`; exists to
+    regenerate the Table 6 comparison at the kernel level.
+    """
+    b, nq, m = codes_q.shape
+    _, nk, _ = codes_k.shape
+    e = codebooks.shape[1]
+    # Inner-product lookup tables per codebook: [M, E, E].
+    tables = jnp.einsum("mex,mfx->mef", codebooks, codebooks)
+    # Gather per-pair scores; this materializes float [b, nq, nk] — the
+    # expensive thing the bucket-sort kernel avoids.
+    tq = jax.nn.one_hot(codes_q, e, dtype=jnp.float32)  # [b, nq, M, E]
+    tk = jax.nn.one_hot(codes_k, e, dtype=jnp.float32)  # [b, nk, M, E]
+    qm = jnp.einsum("bqme,mef->bqmf", tq, tables)  # [b, nq, M, E]
+    s = jnp.einsum("bqmf,bkmf->bqk", qm, tk)  # float scores
+    if causal:
+        qi = jnp.arange(nq)[None, :, None]
+        kj = jnp.arange(nk)[None, None, :]
+        s = jnp.where(kj <= qi, s, -jnp.inf)
+    # argsort, not lax.top_k: the latter lowers to a `topk(largest=...)`
+    # instruction the 0.5.1 HLO text parser rejects (see routed_ffn.py).
+    idx = jnp.argsort(-s, axis=-1, stable=True)[..., :l]
+    return idx.astype(jnp.int32)

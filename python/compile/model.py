@@ -1,0 +1,431 @@
+"""L2: SPT Transformer model in JAX — full / LoRA / SPT tuning modes.
+
+This is the paper's "Model Adapter" (§3) expressed functionally: a
+Transformer block (Fig. 1) whose MHA and FFN can be swapped for the sparse
+MHA (§4.1) and routed FFN (§4.2), with LoRA adapters (Eq. 5) inserted on
+every projection.  All hot-spot compute calls the L1 Pallas kernels in
+``compile.kernels``; this module is lowered once by ``aot.py`` to HLO text
+and executed from the rust coordinator — Python is never on the training
+path.
+
+Three tuning modes (matching the paper's baselines):
+
+* ``full`` — dense MHA + dense FFN, every base parameter trainable.
+* ``lora`` — dense MHA + dense FFN, base frozen, LoRA B/C trainable.
+* ``spt``  — LoRA + sparse MHA (PQ top-L) + routed FFN; trainables are the
+  LoRA matrices and the router; PQ codebooks are updated out-of-band by the
+  DKM refresh artifact (paper §5.1: every ~20 mini-batches), not by SGD.
+
+Parameters are nested dicts; ``jax.tree_util`` flattening (sorted keys)
+gives the canonical leaf order recorded in the AOT manifest and consumed by
+``rust/src/runtime``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pq, routed_ffn, sparse_attn, topl
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """One Transformer block configuration (paper Table 2)."""
+
+    name: str
+    d_model: int
+    d_head: int
+    d_ffn: int
+    activation: str = "relu"  # "relu" (OPT) | "gelu" (LLaMA)
+    rotary: bool = False  # rotary position embedding (LLaMA)
+    # --- tuning hyper-parameters ---
+    lora_rank: int = 16  # paper's d_lora default
+    # sparse MHA: keep top (n * mha_topl_num / mha_topl_den) keys per query
+    mha_topl_num: int = 1
+    mha_topl_den: int = 8  # paper default 1/8
+    pq_dsub: int = 8  # codeword dim d' (paper §5.1)
+    pq_codewords: int = 16  # E (paper §5.1)
+    # routed FFN: activate ffn_active_num/ffn_active_den of G groups
+    ffn_groups: int = 8  # G (paper: 4 or 8)
+    ffn_active_num: int = 1
+    ffn_active_den: int = 2  # paper default 1/2
+    ffn_capacity_factor: float = 1.25
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_model % self.d_head == 0
+        return self.d_model // self.d_head
+
+    @property
+    def pq_m(self) -> int:
+        assert self.d_head % self.pq_dsub == 0
+        return self.d_head // self.pq_dsub
+
+    @property
+    def ffn_active(self) -> int:
+        g = self.ffn_groups * self.ffn_active_num // self.ffn_active_den
+        return max(1, g)
+
+    def topl(self, n: int) -> int:
+        return max(1, n * self.mha_topl_num // self.mha_topl_den)
+
+    def with_sparsity(
+        self,
+        mha_num: int | None = None,
+        mha_den: int | None = None,
+        ffn_num: int | None = None,
+        ffn_den: int | None = None,
+    ) -> "BlockConfig":
+        """Derive a config with different sparsity strengths (paper §6.3)."""
+        return dataclasses.replace(
+            self,
+            mha_topl_num=mha_num if mha_num is not None else self.mha_topl_num,
+            mha_topl_den=mha_den if mha_den is not None else self.mha_topl_den,
+            ffn_active_num=ffn_num if ffn_num is not None else self.ffn_active_num,
+            ffn_active_den=ffn_den if ffn_den is not None else self.ffn_active_den,
+        )
+
+
+# Paper Table 2: the five evaluated Transformer block shapes, plus
+# scaled-down shapes for CPU-budget profiling and the e2e model.
+BLOCK_CONFIGS: dict[str, BlockConfig] = {
+    c.name: c
+    for c in [
+        BlockConfig("opt-1024", 1024, 64, 4096, "relu"),
+        BlockConfig("opt-2048", 2048, 64, 8192, "relu"),
+        BlockConfig("opt-2560", 2560, 80, 10240, "relu"),
+        BlockConfig("llama-2560", 2560, 128, 6912, "gelu", rotary=True),
+        BlockConfig("llama-4096", 4096, 128, 11008, "gelu", rotary=True),
+        BlockConfig("gpt-768", 768, 64, 3072, "relu"),
+        BlockConfig("mini-512", 512, 64, 2048, "relu"),
+        BlockConfig("mini-256", 256, 32, 1024, "relu"),
+    ]
+}
+
+MODES = ("full", "lora", "spt")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Full LM: embedding + N blocks + head (for end-to-end fine-tuning)."""
+
+    name: str
+    block: BlockConfig
+    n_layers: int
+    vocab_size: int
+    max_seq: int = 512
+
+    def param_count(self) -> int:
+        b = self.block
+        per_block = 4 * b.d_model * b.d_model + 2 * b.d_model * b.d_ffn
+        return self.n_layers * per_block + 2 * self.vocab_size * b.d_model
+
+
+MODEL_CONFIGS: dict[str, ModelConfig] = {
+    m.name: m
+    for m in [
+        # ~106M parameters: the end-to-end validation model (EXPERIMENTS.md).
+        ModelConfig("spt-100m", BLOCK_CONFIGS["gpt-768"], 12, 16384, 512),
+        # ~34M: budget-friendly e2e default on CPU-PJRT.
+        ModelConfig("spt-30m", BLOCK_CONFIGS["mini-512"], 8, 8192, 256),
+        # ~5M: integration tests / smoke runs.
+        ModelConfig("spt-tiny", BLOCK_CONFIGS["mini-256"], 4, 4096, 128),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+
+
+def init_block_params(key: jax.Array, cfg: BlockConfig, mode: str) -> Params:
+    """Initialize one Transformer block for the given tuning mode."""
+    assert mode in MODES
+    d, dffn, r = cfg.d_model, cfg.d_ffn, cfg.lora_rank
+    ks = iter(jax.random.split(key, 32))
+    p: Params = {
+        "ln1_scale": jnp.ones((d,), jnp.float32),
+        "ln1_bias": jnp.zeros((d,), jnp.float32),
+        "ln2_scale": jnp.ones((d,), jnp.float32),
+        "ln2_bias": jnp.zeros((d,), jnp.float32),
+        "wq": _dense_init(next(ks), d, d),
+        "wk": _dense_init(next(ks), d, d),
+        "wv": _dense_init(next(ks), d, d),
+        "wo": _dense_init(next(ks), d, d),
+        "w_in": _dense_init(next(ks), d, dffn),
+        "b_in": jnp.zeros((dffn,), jnp.float32),
+        "w_out": _dense_init(next(ks), dffn, d),
+        "b_out": jnp.zeros((d,), jnp.float32),
+    }
+    if mode in ("lora", "spt"):
+        # LoRA: B ~ N(0, 1/d_in), C = 0 (delta starts at zero — Eq. 5).
+        for nm, d_in, d_out in [
+            ("q", d, d), ("k", d, d), ("v", d, d), ("o", d, d),
+            ("in", d, dffn), ("out", dffn, d),
+        ]:
+            p[f"lora_{nm}_b"] = _dense_init(next(ks), d_in, r)
+            p[f"lora_{nm}_c"] = jnp.zeros((r, d_out), jnp.float32)
+    if mode == "spt":
+        m, e, dsub = cfg.pq_m, cfg.pq_codewords, cfg.pq_dsub
+        p["pq_q"] = pq.init_codebooks(next(ks), m, e, dsub)
+        p["pq_k"] = pq.init_codebooks(next(ks), m, e, dsub)
+        p["w_router"] = _dense_init(next(ks), d, cfg.ffn_groups)
+    return p
+
+
+def init_model_params(key: jax.Array, mc: ModelConfig, mode: str) -> Params:
+    """Initialize the full LM. Blocks are stacked along a leading layer axis
+    (consumed by ``lax.scan``)."""
+    kemb, khead, kpos, kblocks = jax.random.split(key, 4)
+    blocks = jax.vmap(
+        lambda k: init_block_params(k, mc.block, mode)
+    )(jax.random.split(kblocks, mc.n_layers))
+    return {
+        "embed": _dense_init(kemb, mc.vocab_size, mc.block.d_model, 0.02),
+        "pos": _dense_init(kpos, mc.max_seq, mc.block.d_model, 0.02),
+        "head": _dense_init(khead, mc.block.d_model, mc.vocab_size),
+        "lnf_scale": jnp.ones((mc.block.d_model,), jnp.float32),
+        "lnf_bias": jnp.zeros((mc.block.d_model,), jnp.float32),
+        "blocks": blocks,
+    }
+
+
+def trainable_mask(params: Params, mode: str) -> Params:
+    """Pytree of bools: which leaves the optimizer updates.
+
+    full: everything except PQ codebooks (absent anyway).
+    lora: only lora_* leaves.
+    spt:  lora_* + router; codebooks move via the DKM artifact instead.
+    """
+
+    def mask_entry(path: tuple, _leaf) -> bool:
+        keys = [getattr(q, "key", None) for q in path]
+        name = next(
+            (k for k in keys if isinstance(k, str) and k != "blocks"), ""
+        )
+        if mode == "full":
+            return not name.startswith("pq_") and name != "w_router"
+        if name.startswith("lora_"):
+            return True
+        if mode == "spt" and name == "w_router":
+            return True
+        return False
+
+    return jax.tree_util.tree_map_with_path(mask_entry, params)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * scale + bias
+
+
+def _proj(p: Params, nm: str, x: jax.Array, mode: str) -> jax.Array:
+    """Projection with optional LoRA adapter: x @ (W + B C) (Eq. 5)."""
+    w = {
+        "q": "wq", "k": "wk", "v": "wv", "o": "wo",
+        "in": "w_in", "out": "w_out",
+    }[nm]
+    y = x @ p[w]
+    if mode in ("lora", "spt"):
+        y = y + (x @ p[f"lora_{nm}_b"]) @ p[f"lora_{nm}_c"]
+    return y
+
+
+def _rotary(x: jax.Array) -> jax.Array:
+    """Rotary position embedding over [b, n, d_head] heads-folded input."""
+    bh, n, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (10000 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(n, dtype=jnp.float32)
+    ang = jnp.einsum("n,f->nf", t, freqs)  # [n, half]
+    cos, sin = jnp.cos(ang)[None], jnp.sin(ang)[None]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _select_topl_indices(q, k, cb_q, cb_k, l, causal):
+    """PQ quantization + bucket-sort selection, hidden from autodiff.
+
+    The selection path is pure integer compute (paper: 'both computing and
+    ranking the scores involve only integers') and has no gradient; wrapping
+    it in a custom_vjp keeps jax.grad from trying to linearize the interpret-
+    mode pallas_calls inside.
+    """
+    cq = pq.pq_quantize(q, cb_q)
+    ck = pq.pq_quantize(k, cb_k)
+    return topl.topl_select(cq, ck, l, causal=causal)
+
+
+def _select_fwd(q, k, cb_q, cb_k, l, causal):
+    idx = _select_topl_indices(q, k, cb_q, cb_k, l, causal)
+    return idx, (q, k, cb_q, cb_k)
+
+
+def _select_bwd(l, causal, res, _g):
+    # Pure integer selection: zero cotangents (residuals are DCE'd by XLA).
+    return tuple(jnp.zeros_like(r) for r in res)
+
+
+_select_topl_indices.defvjp(_select_fwd, _select_bwd)
+
+
+def mha(
+    p: Params,
+    x: jax.Array,
+    cfg: BlockConfig,
+    mode: str,
+    causal: bool = True,
+) -> jax.Array:
+    """Multi-head attention; ``spt`` mode runs the sparse pipeline (Alg. 1).
+
+    x: [batch, n, d_model] -> [batch, n, d_model]
+    """
+    bsz, n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(t):  # [b, n, d] -> [b*h, n, dh]
+        return (
+            t.reshape(bsz, n, h, dh)
+            .transpose(0, 2, 1, 3)
+            .reshape(bsz * h, n, dh)
+        )
+
+    q = split(_proj(p, "q", x, mode))
+    k = split(_proj(p, "k", x, mode))
+    v = split(_proj(p, "v", x, mode))
+    if cfg.rotary:
+        q, k = _rotary(q), _rotary(k)
+
+    if mode == "spt":
+        # Alg. 1: quantize -> bucket-sort top-L -> SDDMM/softmax/SpMM.
+        l = cfg.topl(n)
+        idx = _select_topl_indices(q, k, p["pq_q"], p["pq_k"], l, causal)
+        y = sparse_attn.sparse_attention(q, k, v, idx, causal, None)
+    else:
+        scale = 1.0 / math.sqrt(dh)
+        logits = jnp.einsum("bnd,bmd->bnm", q, k) * scale
+        if causal:
+            mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+            logits = jnp.where(mask[None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        y = jnp.einsum("bnm,bmd->bnd", w, v)
+
+    y = (
+        y.reshape(bsz, h, n, dh).transpose(0, 2, 1, 3).reshape(bsz, n, d)
+    )
+    return _proj(p, "o", y, mode)
+
+
+def ffn(
+    p: Params, x: jax.Array, cfg: BlockConfig, mode: str
+) -> tuple[jax.Array, jax.Array | None]:
+    """FFN; ``spt`` mode routes tokens through G' of G blocks (Alg. 4).
+
+    Returns (y, router_scores-or-None); scores feed the LB loss.
+    """
+    bsz, n, d = x.shape
+    if mode == "spt":
+        xt = x.reshape(bsz * n, d)
+        # The BSpMV kernel consumes the *merged* blocked weight (W + BC) so
+        # the routed GEMMs still carry the LoRA adaptation.
+        w_in = p["w_in"] + p["lora_in_b"] @ p["lora_in_c"]
+        w_out = p["w_out"] + p["lora_out_b"] @ p["lora_out_c"]
+        y, scores = routed_ffn.routed_ffn(
+            xt,
+            w_in,
+            w_out,
+            p["w_router"],
+            cfg.ffn_active,
+            capacity_factor=cfg.ffn_capacity_factor,
+        )
+        y = y + p["b_out"]  # output bias applies outside the routed blocks
+        return y.reshape(bsz, n, d), scores
+    h = _proj(p, "in", x, mode) + p["b_in"]
+    h = jax.nn.relu(h) if cfg.activation == "relu" else jax.nn.gelu(h)
+    y = _proj(p, "out", h, mode) + p["b_out"]
+    return y, None
+
+
+def block_forward(
+    p: Params,
+    x: jax.Array,
+    cfg: BlockConfig,
+    mode: str,
+    causal: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Pre-LN Transformer block (Fig. 1). Returns (y, lb_loss)."""
+    a = mha(p, layer_norm(x, p["ln1_scale"], p["ln1_bias"]), cfg, mode, causal)
+    x = x + a
+    f, scores = ffn(p, layer_norm(x, p["ln2_scale"], p["ln2_bias"]), cfg, mode)
+    lb = (
+        routed_ffn.load_balance_loss(scores, cfg.ffn_active)
+        if scores is not None
+        else jnp.zeros((), jnp.float32)
+    )
+    return x + f, lb
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def model_forward(
+    params: Params,
+    tokens: jax.Array,
+    mc: ModelConfig,
+    mode: str,
+) -> tuple[jax.Array, jax.Array]:
+    """tokens [b, n] int32 -> (logits [b, n, V], mean lb loss)."""
+    b, n = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:n][None]
+
+    def body(carry, layer_p):
+        xc, lb = carry
+        xc, lb_i = block_forward(layer_p, xc, mc.block, mode, causal=True)
+        return (xc, lb + lb_i), None
+
+    (x, lb), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    x = layer_norm(x, params["lnf_scale"], params["lnf_bias"])
+    logits = x @ params["head"]
+    return logits, lb / mc.n_layers
+
+
+def lm_loss(
+    params: Params,
+    tokens: jax.Array,
+    targets: jax.Array,
+    mc: ModelConfig,
+    mode: str,
+    lb_weight: float = 0.01,
+) -> jax.Array:
+    """Next-token cross entropy + load-balancing auxiliary (paper §4.2)."""
+    logits, lb = model_forward(params, tokens, mc, mode)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + lb_weight * lb

@@ -1,0 +1,257 @@
+"""L2: training step — loss, gradients, AdamW — lowered to a single HLO.
+
+The whole fine-tuning step (forward, backward through the custom-VJP Pallas
+kernels, masked AdamW update with weight decay) is one jitted function so
+XLA fuses it into one executable; the rust coordinator calls it with
+(params, opt_state, tokens, targets) and receives (loss, params', opt').
+
+Frozen leaves (per ``model.trainable_mask``) keep zero-sized optimizer
+moments is not expressible in a static pytree, so moments exist for every
+leaf but masked leaves are never updated — the masking multiplies the
+update by 0/1, which XLA constant-folds into no-ops for frozen tensors.
+Weight decay is enabled (paper §6.1: "weight decay is enabled for the
+optimizer") and applied only to trainable 2-D matrices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 1e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: Any) -> dict[str, Any]:
+    """AdamW state: first/second moments per leaf + shared step counter."""
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    opt: dict[str, Any],
+    mask: Any,
+    oc: OptConfig,
+) -> tuple[Any, dict[str, Any]]:
+    """Masked AdamW with global-norm clipping."""
+    # Global-norm clip over trainable grads only.
+    sq = jax.tree_util.tree_map(
+        lambda g, t: jnp.sum(g * g) if t else jnp.zeros(()), grads, mask
+    )
+    gnorm = jnp.sqrt(
+        sum(jax.tree_util.tree_leaves(sq)) + 1e-12
+    )
+    scale = jnp.minimum(1.0, oc.grad_clip / gnorm)
+    step = opt["step"] + 1
+    b1c = 1.0 - oc.beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - oc.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, t):
+        if not t:
+            return p, m, v
+        g = g * scale
+        m2 = oc.beta1 * m + (1.0 - oc.beta1) * g
+        v2 = oc.beta2 * v + (1.0 - oc.beta2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + oc.eps)
+        if p.ndim >= 2:  # decay matrices, not vectors/scalars
+            delta = delta + oc.weight_decay * p
+        return p - oc.lr * delta, m2, v2
+
+    out = jax.tree_util.tree_map(
+        upd, params, grads, opt["m"], opt["v"], mask,
+        is_leaf=lambda x: isinstance(x, jax.Array),
+    )
+    new_p = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def make_train_step(mc: M.ModelConfig, mode: str, oc: OptConfig | None = None):
+    """Build the jittable end-to-end fine-tuning step for a model config."""
+    oc = oc or OptConfig()
+
+    def step(params, opt, tokens, targets):
+        mask = M.trainable_mask(params, mode)
+        loss, grads = jax.value_and_grad(M.lm_loss)(
+            params, tokens, targets, mc, mode
+        )
+        # Zero grads of frozen leaves (stop-grad already keeps most at 0,
+        # but e.g. base W receives real grads in lora mode — mask them).
+        grads = jax.tree_util.tree_map(
+            lambda g, t: g if t else jnp.zeros_like(g), grads, mask
+        )
+        new_params, new_opt = adamw_update(params, grads, opt, mask, oc)
+        return loss, new_params, new_opt
+
+    return step
+
+
+def make_train_chunk(
+    mc: M.ModelConfig, mode: str, k: int, oc: OptConfig | None = None
+):
+    """K microbatches per dispatch via lax.scan — the coordinator's fast
+    path: host<->device marshalling of params/optimizer state is amortized
+    over k steps (see EXPERIMENTS.md §Perf)."""
+    oc = oc or OptConfig()
+    step = make_train_step(mc, mode, oc)
+
+    def chunk(params, opt, tokens_k, targets_k):
+        def body(carry, batch):
+            p, o = carry
+            tok, tgt = batch
+            loss, p, o = step(p, o, tok, tgt)
+            return (p, o), loss
+
+        (params, opt), losses = jax.lax.scan(
+            body, (params, opt), (tokens_k, targets_k)
+        )
+        return losses, params, opt
+
+    return chunk
+
+
+def make_qa_logits(mc: M.ModelConfig, mode: str, answer_pos: int,
+                   choice_tokens: tuple[int, ...] = (3, 4, 5, 6)):
+    """Choice-token logits at the answer slot — the MMLU-surrogate scorer
+    (Table 3).  answer_pos is static: the taskgen renders the answer slot
+    at a fixed position."""
+
+    def qa(params, tokens):
+        logits, _ = M.model_forward(params, tokens, mc, mode)
+        at_slot = logits[:, answer_pos, :]  # [B, V]
+        return at_slot[:, jnp.array(choice_tokens)]
+
+    return qa
+
+
+def make_eval_loss(mc: M.ModelConfig, mode: str):
+    """Eval loss (no update) — PPL = exp(loss); paper's Wikitext metric."""
+
+    def ev(params, tokens, targets):
+        return M.lm_loss(params, tokens, targets, mc, mode, lb_weight=0.0)
+
+    return ev
+
+
+def make_block_fwdbwd(cfg: M.BlockConfig, mode: str, lr: float = 1e-3):
+    """Block-level fwd+bwd+SGD for the profiling benches (paper Fig. 8:
+    'time to compute the forward and backward passes for a Transformer
+    block').  Loss is a simple energy so the bwd exercises every kernel."""
+
+    def step(params, x):
+        mask = M.trainable_mask(params, mode)
+
+        def loss_fn(p):
+            y, lb = M.block_forward(p, x, cfg, mode)
+            return jnp.mean(y * y) + 0.01 * lb
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g, t: p - lr * g if t else p, params, grads, mask
+        )
+        return loss, new_params
+
+    return step
+
+
+def make_mha_fwdbwd(cfg: M.BlockConfig, mode: str):
+    """MHA-module-only fwd+bwd (paper Table 1/4 decomposition)."""
+
+    def step(params, x):
+        def loss_fn(p):
+            y = M.mha(p, x, cfg, mode)
+            return jnp.mean(y * y)
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    return step
+
+
+def make_ffn_fwdbwd(cfg: M.BlockConfig, mode: str):
+    """FFN-module-only fwd+bwd (paper Table 1/4 decomposition)."""
+
+    def step(params, x):
+        def loss_fn(p):
+            y, scores = M.ffn(p, x, cfg, mode)
+            loss = jnp.mean(y * y)
+            if scores is not None:
+                from .kernels import routed_ffn as R
+
+                loss = loss + 0.01 * R.load_balance_loss(scores, cfg.ffn_active)
+            return loss
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    return step
+
+
+def make_codebook_refresh(cfg: M.BlockConfig):
+    """DKM codebook refresh over a batch of per-head Q/K vectors
+    (paper §5.1: run every ~20 mini-batches, off the hot step)."""
+    from .kernels import pq
+
+    def refresh(codebooks, vecs):
+        return pq.pq_codebook_update(vecs, codebooks, lr=0.5)
+
+    return refresh
+
+
+def make_model_codebook_refresh(mc: M.ModelConfig, lr: float = 0.5):
+    """Whole-model DKM refresh (spt mode): run a forward pass, and at each
+    layer update that layer's Q/K codebooks against the current per-head
+    projections (paper §5.1: 'codebooks represent centroids of the query
+    and key vectors, which change slowly').
+
+    Inputs: (params, tokens) -> (new_pq_q, new_pq_k) stacked per layer.
+    The coordinator patches these leaves back into its device state.
+    """
+    from .kernels import pq
+
+    cfg = mc.block
+
+    def refresh(params, tokens):
+        b, n = tokens.shape
+        x = params["embed"][tokens] + params["pos"][:n][None]
+        h, dh = cfg.n_heads, cfg.d_head
+
+        def split(t):
+            return (
+                t.reshape(b, n, h, dh)
+                .transpose(0, 2, 1, 3)
+                .reshape(b * h, n, dh)
+            )
+
+        def body(x_c, layer_p):
+            xn = M.layer_norm(x_c, layer_p["ln1_scale"], layer_p["ln1_bias"])
+            q = split(M._proj(layer_p, "q", xn, "spt"))
+            k = split(M._proj(layer_p, "k", xn, "spt"))
+            new_q = pq.pq_codebook_update(q, layer_p["pq_q"], lr=lr)
+            new_k = pq.pq_codebook_update(k, layer_p["pq_k"], lr=lr)
+            x_next, _ = M.block_forward(layer_p, x_c, cfg, "spt", causal=True)
+            return x_next, (new_q, new_k)
+
+        _, (pq_q, pq_k) = jax.lax.scan(body, x, params["blocks"])
+        return pq_q, pq_k
+
+    return refresh

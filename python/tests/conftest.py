@@ -1,0 +1,17 @@
+"""Shared fixtures/helpers for the SPT kernel and model test suite."""
+
+from __future__ import annotations
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _jax_x64_off():
+    # All artifacts are f32 (paper: single-precision experiments).
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+def rngs(seed: int, n: int):
+    return jax.random.split(jax.random.PRNGKey(seed), n)

@@ -1,0 +1,103 @@
+"""PQ quantization kernel vs reference — exact-match + hypothesis sweeps."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pq, ref
+
+SETTINGS = dict(max_examples=4, deadline=None)
+
+
+def _mk(seed, b, n, m, dsub, e):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (b, n, m * dsub), dtype=jnp.float32)
+    cb = pq.init_codebooks(k2, m, e, dsub)
+    return x, cb
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    n=st.sampled_from([8, 17, 64, 128]),
+    m=st.sampled_from([1, 2, 4, 8]),
+    dsub=st.sampled_from([4, 8, 16]),
+    e=st.sampled_from([2, 8, 16, 32]),
+)
+def test_quantize_matches_ref(seed, b, n, m, dsub, e):
+    x, cb = _mk(seed, b, n, m, dsub, e)
+    got = pq.pq_quantize(x, cb)
+    want = jax.vmap(lambda xx: ref.pq_quantize(xx, cb))(x)
+    assert got.shape == (b, n, m)
+    assert got.dtype == jnp.int32
+    assert bool(jnp.all(got == want))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_error_matches_ref(seed):
+    x, cb = _mk(seed, 2, 32, 4, 8, 16)
+    got = pq.pq_quantize_error(x, cb)
+    want = jnp.mean(jax.vmap(lambda xx: ref.pq_quantize_error(xx, cb))(x))
+    assert jnp.allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_codes_in_range():
+    x, cb = _mk(3, 2, 64, 4, 8, 16)
+    codes = pq.pq_quantize(x, cb)
+    assert int(jnp.min(codes)) >= 0
+    assert int(jnp.max(codes)) < 16
+
+
+def test_identical_vectors_get_identical_codes():
+    x, cb = _mk(4, 1, 8, 4, 8, 16)
+    x = x.at[0, 1].set(x[0, 0])
+    codes = pq.pq_quantize(x, cb)
+    assert bool(jnp.all(codes[0, 0] == codes[0, 1]))
+
+
+def test_codeword_vectors_quantize_to_themselves():
+    """A vector equal to codeword j in every subspace must map to j."""
+    m, e, dsub = 4, 8, 8
+    cb = pq.init_codebooks(jax.random.PRNGKey(7), m, e, dsub)
+    for j in (0, 3, e - 1):
+        v = cb[:, j, :].reshape(1, 1, m * dsub)
+        codes = pq.pq_quantize(v, cb)
+        assert bool(jnp.all(codes == j)), (j, codes)
+
+
+def test_codebook_update_reduces_error():
+    x, cb = _mk(5, 2, 128, 4, 8, 16)
+    e0 = float(pq.pq_quantize_error(x, cb))
+    cb2 = pq.pq_codebook_update(x, cb, lr=1.0)
+    e1 = float(pq.pq_quantize_error(x, cb2))
+    assert e1 < e0, (e0, e1)
+
+
+def test_codebook_update_matches_ref():
+    x, cb = _mk(6, 1, 64, 2, 8, 4)
+    got = pq.pq_codebook_update(x, cb, lr=0.5)
+    want = ref.pq_codebook_update(x[0], cb, lr=0.5)
+    assert jnp.allclose(got, want, atol=1e-5)
+
+
+def test_codebook_update_keeps_empty_codewords():
+    """Codewords that attract no vectors must not move."""
+    m, e, dsub = 1, 4, 4
+    cb = jnp.stack(
+        [jnp.array([[0.0] * 4, [10.0] * 4, [100.0] * 4, [1000.0] * 4])]
+    )
+    x = jnp.zeros((1, 16, 4)) + 0.1  # everything maps to codeword 0
+    cb2 = pq.pq_codebook_update(x, cb, lr=1.0)
+    assert jnp.allclose(cb2[0, 1:], cb[0, 1:])
+    assert not jnp.allclose(cb2[0, 0], cb[0, 0])
+
+
+@pytest.mark.parametrize("e", [2, 16, 32])
+def test_error_nonnegative(e):
+    x, cb = _mk(8, 1, 32, 4, 8, e)
+    assert float(pq.pq_quantize_error(x, cb)) >= 0.0

@@ -1,0 +1,154 @@
+"""Routed FFN / BSpMV kernels vs reference: routing, fwd, bwd, capacity."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, routed_ffn
+
+SETTINGS = dict(max_examples=3, deadline=None)
+
+
+def _setup(seed, nt, d, dd, g):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (nt, d), dtype=jnp.float32)
+    wi = jax.random.normal(ks[1], (d, dd), dtype=jnp.float32) * 0.1
+    wo = jax.random.normal(ks[2], (dd, d), dtype=jnp.float32) * 0.1
+    wr = jax.random.normal(ks[3], (d, g), dtype=jnp.float32) * 0.1
+    return x, wi, wo, wr
+
+
+# ---------------------------------------------------------------------------
+# Routing / assignment invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    g=st.sampled_from([2, 4, 8]),
+    ga_frac=st.sampled_from([1, 2]),
+)
+def test_topk_mask_cardinality(seed, g, ga_frac):
+    ga = max(1, g // (2 * ga_frac))
+    x, _, _, wr = _setup(seed, 64, 32, 128, g)
+    scores = routed_ffn.router_scores(x, wr)
+    mask = routed_ffn.route_topk_mask(scores, ga)
+    assert bool(jnp.all(jnp.sum(mask, axis=1) == ga))
+
+
+def test_topk_mask_picks_largest_magnitude():
+    scores = jnp.array([[0.1, -5.0, 2.0, 0.0], [3.0, 1.0, -1.0, -4.0]])
+    mask = routed_ffn.route_topk_mask(scores, 2)
+    assert mask.tolist() == [
+        [False, True, True, False],
+        [True, False, False, True],
+    ]
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), cap=st.sampled_from([4, 8, 16]))
+def test_block_assignment_invariants(seed, cap):
+    x, _, _, wr = _setup(seed, 32, 16, 64, 4)
+    mask = routed_ffn.route_topk_mask(routed_ffn.router_scores(x, wr), 2)
+    tid, valid = routed_ffn.build_block_assignment(mask, cap)
+    tid, valid, mask = np.asarray(tid), np.asarray(valid), np.asarray(mask)
+    for g in range(4):
+        sel = tid[g][valid[g] > 0]
+        # valid slots reference tokens that actually chose this block
+        assert all(mask[t, g] for t in sel)
+        # no token appears twice in a block
+        assert len(set(sel.tolist())) == len(sel)
+        # ascending token order (Alg. 4 iterates tokens in order)
+        assert list(sel) == sorted(sel)
+        # capacity respected; drops only when oversubscribed
+        want = min(int(mask[:, g].sum()), cap)
+        assert len(sel) == want
+
+
+# ---------------------------------------------------------------------------
+# Forward / backward vs reference
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nt=st.sampled_from([16, 64, 96]),
+    d=st.sampled_from([16, 32]),
+    mult=st.sampled_from([2, 4]),
+    g=st.sampled_from([2, 4, 8]),
+)
+def test_forward_matches_ref(seed, nt, d, mult, g):
+    dd = d * mult * g  # divisible by g
+    ga = max(1, g // 2)
+    x, wi, wo, wr = _setup(seed, nt, d, dd, g)
+    # capacity_factor g/ga disables drops -> exact equality with dense ref
+    y, s = routed_ffn.routed_ffn(x, wi, wo, wr, ga, capacity_factor=g / ga)
+    y_ref, s_ref = ref.routed_ffn(x, wi, wo, wr, ga)
+    assert jnp.allclose(s, s_ref, atol=1e-5)
+    assert jnp.allclose(y, y_ref, atol=1e-4), float(jnp.max(jnp.abs(y - y_ref)))
+
+
+def test_grads_match_ref():
+    x, wi, wo, wr = _setup(21, 64, 32, 256, 4)
+    ga = 2
+
+    def loss_kernel(x, wi, wo, wr):
+        y, s = routed_ffn.routed_ffn(x, wi, wo, wr, ga, capacity_factor=2.0)
+        return jnp.sum(y**2) + 0.1 * routed_ffn.load_balance_loss(s, ga)
+
+    def loss_ref(x, wi, wo, wr):
+        y, s = ref.routed_ffn(x, wi, wo, wr, ga)
+        return jnp.sum(y**2) + 0.1 * ref.load_balance_loss(s, ga)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2, 3))(x, wi, wo, wr)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, wi, wo, wr)
+    for a, b, nm in zip(g1, g2, ["x", "wi", "wo", "wr"]):
+        assert jnp.allclose(a, b, atol=5e-3), (nm, float(jnp.max(jnp.abs(a - b))))
+
+
+def test_g_active_equals_g_recovers_scaled_dense_ffn():
+    """With every block active and uniform gate, output == dense FFN."""
+    x, wi, wo, wr = _setup(22, 32, 16, 64, 4)
+    y, _ = routed_ffn.routed_ffn(x, wi, wo, wr * 0.0, 4, capacity_factor=1.0)
+    want = ref.dense_ffn(x, wi, wo)  # gates = softmax(0)*G = 1 each
+    assert jnp.allclose(y, want, atol=1e-4)
+
+
+def test_capacity_drops_zero_contribution():
+    """Tokens over capacity contribute nothing from that block (no NaNs)."""
+    x, wi, wo, wr = _setup(23, 64, 16, 64, 4)
+    y_full, _ = routed_ffn.routed_ffn(x, wi, wo, wr, 2, capacity_factor=2.0)
+    y_tight, _ = routed_ffn.routed_ffn(x, wi, wo, wr, 2, capacity_factor=0.5)
+    assert bool(jnp.all(jnp.isfinite(y_tight)))
+    assert not jnp.allclose(y_full, y_tight)  # drops actually happened
+
+
+def test_load_balance_loss_uniform_is_minimal():
+    """Uniform routing scores the theoretical minimum (== 1.0)."""
+    nt, g, ga = 512, 4, 2
+    key = jax.random.PRNGKey(3)
+    uniform = jax.random.normal(key, (nt, g)) * 1e-4
+    skew = jnp.concatenate(
+        [10 + jax.random.normal(key, (nt, 1)), jax.random.normal(key, (nt, g - 1))],
+        axis=1,
+    )
+    lb_u = float(routed_ffn.load_balance_loss(uniform, ga))
+    lb_s = float(routed_ffn.load_balance_loss(skew, ga))
+    assert lb_u < lb_s
+    assert lb_u == pytest.approx(1.0, rel=0.05)
+
+
+def test_flop_reduction_is_beta():
+    """The BSpMV formulation computes beta = G'/G of the dense FFN FLOPs
+    (capacity slots, incl. padding) — the source of Table 4's speedup."""
+    nt, d, dd, g, ga = 128, 32, 256, 8, 2
+    cap = int(np.ceil(nt * ga / g))
+    blocked_flops = g * (2 * cap * d * (dd // g) * 2)
+    dense_flops = 2 * nt * d * dd * 2
+    assert blocked_flops / dense_flops == pytest.approx(ga / g)

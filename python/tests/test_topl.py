@@ -1,0 +1,169 @@
+"""Bucket-sort top-L kernel vs reference + invariants + Naive-PQ recall."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pq, ref, topl
+
+SETTINGS = dict(max_examples=4, deadline=None)
+
+
+def _codes(seed, b, n, m, e):
+    k = jax.random.PRNGKey(seed)
+    kq, kk = jax.random.split(k)
+    cq = jax.random.randint(kq, (b, n, m), 0, e, dtype=jnp.int32)
+    ck = jax.random.randint(kk, (b, n, m), 0, e, dtype=jnp.int32)
+    return cq, ck
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    n=st.sampled_from([8, 16, 33, 64]),
+    m=st.sampled_from([1, 4, 8]),
+    e=st.sampled_from([2, 4, 16]),
+    lfrac=st.sampled_from([2, 4, 8]),
+    causal=st.booleans(),
+)
+def test_matches_ref(seed, b, n, m, e, lfrac, causal):
+    cq, ck = _codes(seed, b, n, m, e)
+    l = max(1, n // lfrac)
+    got = topl.topl_select(cq, ck, l, causal=causal)
+    want = jax.vmap(
+        lambda a, bb: ref.topl_select(a, bb, l, causal=causal)
+    )(cq, ck)
+    assert bool(jnp.all(got == want))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_indices_unique_and_in_range(seed):
+    cq, ck = _codes(seed, 2, 32, 4, 8)
+    l = 8
+    idx = np.asarray(topl.topl_select(cq, ck, l))
+    assert idx.min() >= 0 and idx.max() < 32
+    for bi in range(idx.shape[0]):
+        for qi in range(idx.shape[1]):
+            assert len(set(idx[bi, qi].tolist())) == l
+
+
+def test_ranked_by_score_descending():
+    """Output order must be non-increasing in PQ score."""
+    cq, ck = _codes(11, 1, 24, 8, 4)
+    l = 12
+    idx = np.asarray(topl.topl_select(cq, ck, l))[0]
+    s = np.asarray(ref.pq_scores(cq[0], ck[0]))
+    for qi in range(24):
+        row = s[qi][idx[qi]]
+        assert all(row[i] >= row[i + 1] for i in range(l - 1)), row
+
+
+def test_selected_dominate_unselected():
+    """Every selected key's score >= every unselected key's score."""
+    cq, ck = _codes(12, 1, 32, 6, 4)
+    l = 8
+    idx = np.asarray(topl.topl_select(cq, ck, l))[0]
+    s = np.asarray(ref.pq_scores(cq[0], ck[0]))
+    for qi in range(32):
+        sel = set(idx[qi].tolist())
+        smin = min(s[qi][j] for j in sel)
+        smax_unsel = max(
+            (s[qi][j] for j in range(32) if j not in sel), default=-1
+        )
+        assert smin >= smax_unsel
+
+
+def test_causal_prefix_rows():
+    """Row i with i+1 < L: all eligible keys (0..i) must be selected."""
+    cq, ck = _codes(13, 1, 16, 4, 4)
+    l = 8
+    idx = np.asarray(topl.topl_select(cq, ck, l, causal=True))[0]
+    for qi in range(l - 1):
+        sel = set(idx[qi].tolist())
+        assert set(range(qi + 1)) <= sel, (qi, sel)
+
+
+def test_identical_codes_select_self_first():
+    """If q's codes equal k_j's codes exactly and uniquely, j ranks first."""
+    m, e = 8, 16
+    cq = jnp.zeros((1, 1, m), dtype=jnp.int32) + 5
+    ck = jnp.ones((1, 16, m), dtype=jnp.int32)
+    ck = ck.at[0, 9].set(5)
+    idx = topl.topl_select(cq, ck, 4)
+    assert int(idx[0, 0, 0]) == 9
+
+
+def test_tie_break_by_key_index():
+    """Equal scores resolve to ascending key index (Alg. 3 insertion order)."""
+    cq = jnp.zeros((1, 2, 4), dtype=jnp.int32)
+    ck = jnp.ones((1, 8, 4), dtype=jnp.int32)  # all keys score 0
+    idx = np.asarray(topl.topl_select(cq, ck, 5))[0]
+    for qi in range(2):
+        assert idx[qi].tolist() == [0, 1, 2, 3, 4]
+
+
+def test_l_equals_n_is_identity_permutation_cover():
+    cq, ck = _codes(14, 1, 16, 4, 4)
+    idx = np.asarray(topl.topl_select(cq, ck, 16))[0]
+    for qi in range(16):
+        assert sorted(idx[qi].tolist()) == list(range(16))
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_naive_pq_same_io_contract(causal):
+    cq, ck = _codes(15, 2, 32, 4, 8)
+    cb = pq.init_codebooks(jax.random.PRNGKey(0), 4, 8, 8)
+    idx = topl.naive_pq_select(cq, ck, cb, 8, causal=causal)
+    assert idx.shape == (2, 32, 8)
+    assert int(jnp.min(idx)) >= 0 and int(jnp.max(idx)) < 32
+
+
+def test_recall_against_exact_mips_clustered():
+    """Paper §4.1: PQ top-L recall vs exact dot-product top-L ~ 90%.
+
+    The mechanism behind the paper's claim: trained attention queries attend
+    to a *cluster* of related keys, and PQ codewords capture cluster
+    structure.  With clustered q/k the integer-score selection must recover
+    nearly all of the true top-L set.  (On isotropic gaussian data — no
+    structure to exploit — match-count ties dominate and recall degrades
+    toward the L/n baseline; see test below.)
+    """
+    ks = jax.random.split(jax.random.PRNGKey(42), 4)
+    n, d, m, e, c = 128, 64, 8, 16, 8
+    centers = jax.random.normal(ks[0], (c, d)) * 2.0
+    assign = jnp.arange(n) % c
+    k_vecs = (centers[assign] + 0.3 * jax.random.normal(ks[1], (n, d)))[None]
+    q_vecs = (centers[assign] + 0.3 * jax.random.normal(ks[2], (n, d)))[None]
+    cb = pq.init_codebooks(ks[3], m, e, d // m)
+    for _ in range(10):  # adapt codebooks to the data (DKM)
+        cb = pq.pq_codebook_update(k_vecs, cb, lr=1.0)
+    l = n // c  # cluster size
+    idx = np.asarray(
+        topl.topl_select(pq.pq_quantize(q_vecs, cb), pq.pq_quantize(k_vecs, cb), l)
+    )[0]
+    exact = np.asarray(jax.lax.top_k(q_vecs[0] @ k_vecs[0].T, l)[1])
+    recall = np.mean([len(set(idx[i]) & set(exact[i])) / l for i in range(n)])
+    assert recall > 0.85, recall
+
+
+def test_recall_beats_random_on_isotropic_data():
+    """Even with no cluster structure, PQ selection beats the L/n baseline."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(42), 3)
+    n, d, m, e, l = 128, 64, 8, 16, 32
+    k_vecs = jax.random.normal(k1, (1, n, d))
+    q_vecs = k_vecs + 0.3 * jax.random.normal(k2, (1, n, d))
+    cb = pq.init_codebooks(k3, m, e, d // m)
+    for _ in range(5):
+        cb = pq.pq_codebook_update(k_vecs, cb, lr=1.0)
+    idx = np.asarray(
+        topl.topl_select(pq.pq_quantize(q_vecs, cb), pq.pq_quantize(k_vecs, cb), l)
+    )[0]
+    exact = np.asarray(jax.lax.top_k(q_vecs[0] @ k_vecs[0].T, l)[1])
+    recall = np.mean([len(set(idx[i]) & set(exact[i])) / l for i in range(n)])
+    assert recall > 1.5 * (l / n), recall  # baseline = L/n = 0.25

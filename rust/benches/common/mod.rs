@@ -1,0 +1,54 @@
+#![allow(dead_code)] // shared across bench binaries; each uses a subset
+//! Shared helpers for the bench binaries (one per paper table/figure).
+
+use std::path::Path;
+
+use spt::metrics::Table;
+use spt::runtime::Engine;
+
+/// Artifacts directory: SPT_ARTIFACTS env or ./artifacts.
+pub fn artifacts_dir() -> String {
+    std::env::var("SPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Open the engine, or explain how to build artifacts and exit 0 (so
+/// `cargo bench` degrades gracefully on a fresh checkout).
+pub fn engine_or_skip(bench: &str) -> Option<Engine> {
+    let dir = artifacts_dir();
+    if !Path::new(&dir).join("manifest.json").exists() {
+        println!("[{bench}] skipped: no artifacts at '{dir}' (run `make artifacts`)");
+        return None;
+    }
+    match Engine::new(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            println!("[{bench}] skipped: {err:#}");
+            None
+        }
+    }
+}
+
+/// Write the rendered table to stdout and bench_out/<name>.{md,csv}.
+pub fn emit(name: &str, table: &Table) {
+    println!("{}", table.render());
+    let dir = Path::new("bench_out");
+    std::fs::create_dir_all(dir).ok();
+    std::fs::write(dir.join(format!("{name}.md")), table.render()).ok();
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv()).ok();
+    println!("[bench] wrote bench_out/{name}.md and .csv\n");
+}
+
+/// Samples/warmup knobs (env-tunable so CI can be quick).
+pub fn samples() -> usize {
+    std::env::var("SPT_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2)
+}
+
+pub fn warmup() -> usize {
+    std::env::var("SPT_BENCH_WARMUP")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}

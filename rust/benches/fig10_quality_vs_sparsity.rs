@@ -1,0 +1,92 @@
+//! Paper Fig. 10: model quality (PPL) vs sparsity strength.
+//!
+//! Two axes, as in the paper:
+//! (a) sparse-MHA non-zero portion (1, 1/2, 1/4, 1/8, 1/16): measured as
+//!     the relative output error of sparse vs dense attention on the
+//!     substrate (the quantity that drives PPL degradation), plus a
+//!     short LM fine-tuning trial per available tuning mode via the
+//!     coordinator for the end-to-end PPL readings.
+//! (b) routed-FFN active portion (1, 3/4, 1/2, 1/4): FLOP fraction and
+//!     capacity-drop rate (balanced routing -> negligible drops at 1/2,
+//!     the paper's "stabilizes at 1/2" point).
+
+mod common;
+
+use spt::config::RunConfig;
+use spt::coordinator::trial::TrialManager;
+use spt::metrics::Table;
+use spt::sparse::attention::sparse_vs_dense_error;
+use spt::sparse::{bspmv, pq, Matrix};
+use spt::util::rng::Rng;
+
+fn main() {
+    // ---- (a) MHA sparsity -> attention approximation error ----
+    let (n, d, m, e) = (256usize, 64usize, 8usize, 16usize);
+    let mut rng = Rng::new(5);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let noise = Matrix::randn(n, d, 0.5, &mut rng);
+    let q = Matrix::from_vec(
+        n,
+        d,
+        k.data.iter().zip(&noise.data).map(|(a, b)| 2.0 * a + b).collect(),
+    );
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    let mut cb = pq::Codebooks::random(m, e, d / m, &mut rng);
+    for _ in 0..5 {
+        pq::codebook_update(&k.data, &mut cb, 1.0);
+    }
+    let mut ta = Table::new(
+        "Fig. 10a — sparse MHA: non-zero portion vs attention output error",
+        &["non-zero portion", "L (of 256)", "relative output error"],
+    );
+    for (label, den) in [("1", 1usize), ("1/2", 2), ("1/4", 4), ("1/8", 8), ("1/16", 16)] {
+        let l = (n / den).max(1);
+        let err = sparse_vs_dense_error(&q, &k, &v, &cb, l);
+        ta.row(&[label.to_string(), l.to_string(), format!("{err:.4}")]);
+    }
+    common::emit("fig10a_mha_error", &ta);
+
+    // ---- (b) FFN sparsity -> FLOPs + drop rate under balanced routing ----
+    let (nt, g) = (4096usize, 8usize);
+    let scores = Matrix::randn(nt, g, 1.0, &mut rng);
+    let mut tb = Table::new(
+        "Fig. 10b — routed FFN: active portion vs FLOP fraction & capacity drops",
+        &["active portion", "G' (of 8)", "FLOP fraction", "drop rate @cap=1.25x"],
+    );
+    for (label, ga) in [("1", 8usize), ("3/4", 6), ("1/2", 4), ("1/4", 2)] {
+        let routing = bspmv::route(&scores, ga);
+        let flops = bspmv::routed_flops(nt, 512, 2048, g, ga) as f64
+            / bspmv::dense_flops(nt, 512, 2048) as f64;
+        // capacity per block = nt*ga/g * 1.25; count over-capacity tokens.
+        let cap = (nt * ga / g) as f64 * 1.25;
+        let mut dropped = 0usize;
+        for gi in 0..g {
+            let load = (0..nt).filter(|&t| routing.mask[t][gi]).count();
+            dropped += load.saturating_sub(cap as usize);
+        }
+        let drop_rate = dropped as f64 / (nt * ga) as f64;
+        tb.row(&[
+            label.to_string(),
+            ga.to_string(),
+            format!("{flops:.3}"),
+            format!("{:.2}%", 100.0 * drop_rate),
+        ]);
+    }
+    common::emit("fig10b_ffn_flops", &tb);
+
+    // ---- end-to-end PPL trials through the coordinator ----
+    if let Some(engine) = common::engine_or_skip("fig10-e2e") {
+        let mut rc = RunConfig::default();
+        rc.model = std::env::var("SPT_FIG10_MODEL").unwrap_or_else(|_| "spt-tiny".into());
+        rc.artifacts_dir = common::artifacts_dir();
+        let steps = std::env::var("SPT_FIG10_STEPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(12);
+        let tm = TrialManager::new(&engine, rc, steps);
+        match tm.compare_modes() {
+            Ok((_, table)) => common::emit("fig10_e2e_trials", &table),
+            Err(e) => println!("[fig10] e2e trials skipped: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Paper Fig. 3: CDF of softmax attention weights — the observation
+//! motivating sparse MHA (top-15% of weights ~ 90% of the mass on
+//! trained models).
+//!
+//! Series are generated from the substrate at several query/key
+//! correlation strengths (trained attention is highly correlated; random
+//! init is not), showing how the skew the paper measured emerges.
+
+mod common;
+
+use spt::metrics::Table;
+use spt::sparse::attention::attention_weight_cdf;
+use spt::sparse::Matrix;
+use spt::util::rng::Rng;
+
+fn main() {
+    let (n, d) = (512usize, 64usize);
+    let mut rng = Rng::new(7);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let mut table = Table::new(
+        "Fig. 3 — CDF of softmax attention weights (n=512, d_head=64)",
+        &["kept fraction", "random init", "corr=1.0", "corr=2.0 (trained-like)"],
+    );
+    let mut series = Vec::new();
+    for corr in [0.0f32, 1.0, 2.0] {
+        let noise = Matrix::randn(n, d, 1.0, &mut rng);
+        let q = Matrix::from_vec(
+            n,
+            d,
+            k.data
+                .iter()
+                .zip(&noise.data)
+                .map(|(a, b)| corr * a + b)
+                .collect(),
+        );
+        series.push(attention_weight_cdf(&q, &k, 20, false));
+    }
+    for i in 0..series[0].len() {
+        table.row(&[
+            format!("{:.2}", series[0][i].0),
+            format!("{:.3}", series[0][i].1),
+            format!("{:.3}", series[1][i].1),
+            format!("{:.3}", series[2][i].1),
+        ]);
+    }
+    common::emit("fig3_attn_cdf", &table);
+
+    // Headline check (paper: top 15% ~ 90% of mass for trained attention).
+    let at15 = series[2]
+        .iter()
+        .find(|(f, _)| *f >= 0.15)
+        .map(|(_, m)| *m)
+        .unwrap_or(0.0);
+    println!(
+        "[fig3] trained-like attention: top-15% of weights carry {:.0}% of the mass (paper: ~90%)",
+        at15 * 100.0
+    );
+}

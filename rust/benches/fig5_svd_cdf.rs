@@ -1,0 +1,53 @@
+//! Paper Fig. 5: CDF of normalized singular values of the FFN inner
+//! projection matrix W_I, the input features X, and the projection output
+//! H = relu(X W_I) — the motivation for *dynamic* (not static) FFN
+//! pruning: W_I is near-full-rank, H is low-rank.
+
+mod common;
+
+use spt::metrics::Table;
+use spt::sparse::svd::singular_value_cdf;
+use spt::sparse::Matrix;
+use spt::util::rng::Rng;
+
+fn main() {
+    // Scaled-down FFN (Jacobi SVD at bench scale); shape, not size, is
+    // what Fig. 5 shows.  d=128, D=512, n=256 tokens.
+    let (n, d, dd) = (256usize, 128usize, 512usize);
+    let mut rng = Rng::new(11);
+    let w_i = Matrix::randn(d, dd, 1.0 / (d as f32).sqrt(), &mut rng);
+    // Token features with low-rank structure (embeddings live near a
+    // subspace — this is what trained feature matrices look like).
+    let basis = Matrix::randn(24, d, 1.0, &mut rng);
+    let coef = Matrix::randn(n, 24, 1.0, &mut rng);
+    let x = coef.matmul(&basis);
+    let h = x.matmul(&w_i).relu();
+
+    let cdf_w = singular_value_cdf(&w_i, 20);
+    let cdf_x = singular_value_cdf(&x, 20);
+    let cdf_h = singular_value_cdf(&h, 20);
+
+    let mut table = Table::new(
+        "Fig. 5 — CDF of normalized singular values (FFN, scaled shape)",
+        &["fraction of singular values", "W_I (weights)", "X (input)", "H = relu(X W_I)"],
+    );
+    for i in 0..cdf_w.len().min(cdf_x.len()).min(cdf_h.len()) {
+        table.row(&[
+            format!("{:.2}", cdf_w[i].0),
+            format!("{:.3}", cdf_w[i].1),
+            format!("{:.3}", cdf_x[i].1),
+            format!("{:.3}", cdf_h[i].1),
+        ]);
+    }
+    common::emit("fig5_svd_cdf", &table);
+
+    let at25 = |cdf: &[(f32, f32)]| {
+        cdf.iter().find(|(f, _)| *f >= 0.25).map(|(_, m)| *m).unwrap_or(0.0)
+    };
+    println!(
+        "[fig5] energy in top-25% singular values: W_I {:.0}% (near-linear => full rank), H {:.0}% (paper: >50% => low rank)",
+        at25(&cdf_w) * 100.0,
+        at25(&cdf_h) * 100.0
+    );
+    assert!(at25(&cdf_h) > at25(&cdf_w), "H must be lower-rank than W_I");
+}

@@ -1,0 +1,56 @@
+//! Paper Fig. 8: fine-tuning throughput (a) and peak memory (b) for the
+//! five Table-2 Transformer blocks under Full / LoRA / SPT.
+//!
+//! Time: measured fwd+bwd of the block artifacts on this testbed
+//! (bs 1, seq 128 — scaled from the paper's bs 16, seq 512 for CPU
+//! budget; relative speedups are shape-driven).  Memory: analytic model
+//! at the paper's workload.  Paper shape: SPT 1.10-2.20x throughput vs
+//! Full (max on llama-4096); 50-73% of Full's memory (min on opt-1024).
+
+mod common;
+
+use spt::config::Mode;
+use spt::coordinator::profile::profile_block;
+use spt::metrics::Table;
+use spt::util::fmt_bytes;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("fig8") else { return };
+    let (w, s) = (common::warmup(), common::samples());
+    let blocks = ["opt-1024", "opt-2048", "opt-2560", "llama-2560", "llama-4096"];
+    let mut table = Table::new(
+        "Fig. 8 — throughput (a) and peak memory (b) per block",
+        &["Block", "Mode", "tokens/s", "speedup vs full", "mem @bs16,seq512", "% of full"],
+    );
+    for cfg in blocks {
+        let mut base_tps = None;
+        let mut base_mem = None;
+        for mode in Mode::ALL {
+            let name = format!("block_step_{cfg}_{}", mode.as_str());
+            if engine.manifest().get(&name).is_err() {
+                println!("[fig8] missing {name}");
+                continue;
+            }
+            let row = profile_block(&engine, cfg, mode, w, s).expect("profile");
+            if mode == Mode::Full {
+                base_tps = Some(row.tokens_per_sec);
+                base_mem = Some(row.model_mem_bytes);
+            }
+            table.row(&[
+                cfg.to_string(),
+                mode.as_str().to_string(),
+                format!("{:.1}", row.tokens_per_sec),
+                base_tps
+                    .map(|b| format!("{:.2}x", row.tokens_per_sec / b))
+                    .unwrap_or_default(),
+                fmt_bytes(row.model_mem_bytes),
+                base_mem
+                    .map(|b| {
+                        format!("{:.0}%", 100.0 * row.model_mem_bytes as f64 / b as f64)
+                    })
+                    .unwrap_or_default(),
+            ]);
+        }
+    }
+    common::emit("fig8_blocks", &table);
+}

@@ -1,0 +1,53 @@
+//! Paper Fig. 9: peak memory vs sequence length (OPT-2048, batch 16).
+//!
+//! Pure memory-model regeneration: dense attention grows quadratically
+//! with n; SPT's gap over LoRA widens with n ("more substantial memory
+//! savings for longer sequences as MHA becomes more predominant").
+//! Also verifies batch size has minimal impact on the *relative* saving
+//! (paper: "MHA operates along the sequence dimension").
+
+mod common;
+
+use spt::config::{presets, Mode};
+use spt::memmodel::{block_peak, BlockWorkload};
+use spt::metrics::Table;
+use spt::util::fmt_bytes;
+
+fn main() {
+    let cfg = presets::block("opt-2048").expect("config");
+    let mut table = Table::new(
+        "Fig. 9 — peak block memory vs sequence length (OPT-2048, batch 16)",
+        &["Seq", "Full", "LoRA", "SPT", "SPT/LoRA"],
+    );
+    for seq in [128usize, 256, 512, 768, 1024, 1536, 2048] {
+        let wl = BlockWorkload { batch: 16, seq };
+        let peaks: Vec<u64> = Mode::ALL
+            .iter()
+            .map(|&m| block_peak(&cfg, m, &wl).peak_bytes())
+            .collect();
+        table.row(&[
+            seq.to_string(),
+            fmt_bytes(peaks[0]),
+            fmt_bytes(peaks[1]),
+            fmt_bytes(peaks[2]),
+            format!("{:.0}%", 100.0 * peaks[2] as f64 / peaks[1] as f64),
+        ]);
+    }
+    common::emit("fig9_memory_vs_seqlen", &table);
+
+    // Batch-size invariance of the relative saving.
+    let mut t2 = Table::new(
+        "Fig. 9 (aux) — SPT/LoRA memory ratio vs batch size (seq 512)",
+        &["Batch", "SPT/LoRA"],
+    );
+    for batch in [1usize, 4, 16, 64] {
+        let wl = BlockWorkload { batch, seq: 512 };
+        let lora = block_peak(&cfg, Mode::Lora, &wl).peak_bytes();
+        let spt = block_peak(&cfg, Mode::Spt, &wl).peak_bytes();
+        t2.row(&[
+            batch.to_string(),
+            format!("{:.1}%", 100.0 * spt as f64 / lora as f64),
+        ]);
+    }
+    common::emit("fig9_batch_invariance", &t2);
+}

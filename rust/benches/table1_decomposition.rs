@@ -1,0 +1,47 @@
+//! Paper Table 1: running time + peak memory decomposition of one
+//! Transformer block (OPT-2048) into MHA and FFN, for Full / LoRA / SPT.
+//!
+//! Time = measured fwd+bwd of the module artifacts on this CPU testbed
+//! (shape comparison: SPT-FFN ~2x faster than LoRA-FFN; SPT-MHA ~ parity).
+//! Memory = analytic model at the paper's workload (bs 16, seq 512);
+//! paper values: Full 3.2/1.3 GB, LoRA 2.6/1.1 GB, SPT 0.9/1.1 GB.
+
+mod common;
+
+use spt::coordinator::profile::profile_module;
+use spt::metrics::Table;
+use spt::util::{fmt_bytes, fmt_duration};
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("table1") else { return };
+    let cfg = "opt-2048";
+    let (w, s) = (common::warmup(), common::samples());
+    let mut table = Table::new(
+        "Table 1 — time & memory decomposition per Transformer block (OPT-2048)",
+        &[
+            "System", "MHA time", "FFN time", "Total time",
+            "MHA mem @bs16,seq512", "FFN mem", "paper MHA/FFN mem",
+        ],
+    );
+    let variants = [
+        ("Full", "full", "full", "3.2 GB / 1.3 GB"),
+        ("LoRA", "lora", "lora", "2.6 GB / 1.1 GB"),
+        ("SPT", "spt_l8", "spt_b12", "0.9 GB / 1.1 GB"),
+    ];
+    for (label, mha_v, ffn_v, paper) in variants {
+        let mha = profile_module(&engine, "mha", cfg, mha_v, w, s)
+            .expect("mha profile");
+        let ffn = profile_module(&engine, "ffn", cfg, ffn_v, w, s)
+            .expect("ffn profile");
+        table.row(&[
+            label.to_string(),
+            fmt_duration(mha.time.median()),
+            fmt_duration(ffn.time.median()),
+            fmt_duration(mha.time.median() + ffn.time.median()),
+            fmt_bytes(mha.model_mem_bytes),
+            fmt_bytes(ffn.model_mem_bytes),
+            paper.to_string(),
+        ]);
+    }
+    common::emit("table1_decomposition", &table);
+}

@@ -1,0 +1,75 @@
+//! Paper Table 3: end-to-end fine-tuning — quality (MMLU surrogate),
+//! max sequence length before OOM, and wall time/speedup, for
+//! Full / LoRA / SPT.
+//!
+//! Paper (OPT-2.7B / LLaMA-2.7B on 4x RTX 3090): SPT 1.39-1.47x over
+//! Full, 2x max length vs Full, ~1 point MMLU drop.  Here: QA surrogate
+//! accuracy + measured step time on the e2e model artifacts, max length
+//! from the memory model at the paper's scale.
+
+mod common;
+
+use spt::config::{presets, Mode, RunConfig};
+use spt::coordinator::{Trainer, TrainerOptions};
+use spt::memmodel;
+use spt::metrics::Table;
+use spt::util::fmt_duration;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("table3") else { return };
+    let model = std::env::var("SPT_TABLE3_MODEL").unwrap_or_else(|_| "spt-tiny".into());
+    let steps: usize = std::env::var("SPT_TABLE3_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+
+    // Max length at the paper's scale (OPT-2.7B-like block, 32 layers,
+    // 24 GB/GPU, DeepSpeed offloading modeled).
+    let paper_cfg = presets::block("opt-2560").expect("cfg");
+    let mut table = Table::new(
+        &format!("Table 3 — end-to-end fine-tuning ({model}, {steps} steps; max-length @opt-2560/32L/24GB)"),
+        &["System", "QA acc (MMLU surrogate)", "Max Length (model)", "Time", "speedup", "paper"],
+    );
+    let paper = [
+        ("full", "27.0 MMLU, 256, 6.7 h (1.00x)"),
+        ("lora", "27.0 MMLU, 512, 5.8 h (1.15x)"),
+        ("spt", "26.1 MMLU, 768, 4.6 h (1.47x)"),
+    ];
+    let mut full_time = None;
+    for mode in Mode::ALL {
+        let name = format!("train_step_{model}_{}", mode.as_str());
+        if engine.manifest().get(&name).is_err() {
+            println!("[table3] missing {name}");
+            continue;
+        }
+        let mut rc = RunConfig::default();
+        rc.model = model.clone();
+        rc.mode = mode;
+        rc.steps = steps;
+        rc.eval_every = 0;
+        rc.artifacts_dir = common::artifacts_dir();
+        let mut trainer = Trainer::new(&engine, rc, TrainerOptions::default());
+        let report = trainer.train_qa().expect("train-qa");
+        if mode == Mode::Full {
+            full_time = Some(report.total_secs);
+        }
+        let max_len = memmodel::max_seq_under_budget(
+            &paper_cfg, mode, 16, 32, 50272, 24u64 << 30, 128,
+        );
+        table.row(&[
+            mode.as_str().to_string(),
+            format!("{:.1}%", report.qa_accuracy.unwrap_or(f32::NAN) * 100.0),
+            max_len.to_string(),
+            fmt_duration(report.total_secs),
+            full_time
+                .map(|f| format!("{:.2}x", f / report.total_secs))
+                .unwrap_or_default(),
+            paper
+                .iter()
+                .find(|(m, _)| *m == mode.as_str())
+                .map(|(_, p)| p.to_string())
+                .unwrap_or_default(),
+        ]);
+    }
+    common::emit("table3_end_to_end", &table);
+}

@@ -1,0 +1,52 @@
+//! Paper Table 4: MHA/FFN running time + peak memory at different
+//! sparsity strengths, for OPT-2048 and LLaMA-4096.
+//!
+//! Paper shape to reproduce: sparse MHA memory drops with stronger
+//! sparsity (1/4 -> 1/8) while its time stays ~LoRA-level; routed FFN
+//! time drops near-theoretically with beta (3/4 -> ~1.3x, 1/2 -> ~2x)
+//! while its memory barely moves.
+
+mod common;
+
+use spt::coordinator::profile::profile_module;
+use spt::metrics::Table;
+use spt::util::{fmt_bytes, fmt_duration};
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("table4") else { return };
+    let (w, s) = (common::warmup(), common::samples());
+    for cfg in ["opt-2048", "llama-4096"] {
+        let mut table = Table::new(
+            &format!("Table 4 — module cost vs sparsity ({cfg})"),
+            &["Module", "Method", "Peak Mem @bs16,seq512", "Duration", "vs lora"],
+        );
+        for (kind, variants) in [
+            ("mha", ["lora", "spt_l4", "spt_l8"].as_slice()),
+            ("ffn", ["lora", "spt_b34", "spt_b12"].as_slice()),
+        ] {
+            let mut lora_time = None;
+            for v in variants {
+                let name = format!("{kind}_{cfg}_{v}");
+                if engine.manifest().get(&name).is_err() {
+                    println!("[table4] missing artifact {name}, skipping row");
+                    continue;
+                }
+                let row = profile_module(&engine, kind, cfg, v, w, s)
+                    .expect("module profile");
+                if *v == "lora" {
+                    lora_time = Some(row.time.median());
+                }
+                table.row(&[
+                    kind.to_uppercase(),
+                    format!("SPT ({v})").replace("SPT (lora)", "LoRA"),
+                    fmt_bytes(row.model_mem_bytes),
+                    fmt_duration(row.time.median()),
+                    lora_time
+                        .map(|t| format!("{:.2}x", t / row.time.median()))
+                        .unwrap_or_default(),
+                ]);
+            }
+        }
+        common::emit(&format!("table4_{}", cfg.replace('-', "_")), &table);
+    }
+}

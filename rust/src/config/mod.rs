@@ -1,0 +1,280 @@
+//! Configuration system: model/block presets (paper Table 2), tuning
+//! modes, sparsity strengths, and run configuration loadable from
+//! TOML-subset files or CLI overrides.
+
+pub mod presets;
+pub mod toml;
+
+use anyhow::{bail, Result};
+
+/// Tuning mode (paper baselines: Full, LoRA, and SPT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Full,
+    Lora,
+    Spt,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "full" => Mode::Full,
+            "lora" => Mode::Lora,
+            "spt" | "sparse" => Mode::Spt,
+            other => bail!("unknown mode '{other}' (full|lora|spt)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Full => "full",
+            Mode::Lora => "lora",
+            Mode::Spt => "spt",
+        }
+    }
+
+    pub const ALL: [Mode; 3] = [Mode::Full, Mode::Lora, Mode::Spt];
+}
+
+/// Sparsity strengths (paper §3: "users trade off efficiency and quality
+/// by setting L and beta").  Expressed as fractions to stay
+/// sequence-length independent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sparsity {
+    /// non-zero attention fraction: L = n * mha_num / mha_den
+    pub mha_num: u32,
+    pub mha_den: u32,
+    /// active parameter fraction: G' = G * ffn_num / ffn_den
+    pub ffn_num: u32,
+    pub ffn_den: u32,
+}
+
+impl Default for Sparsity {
+    fn default() -> Self {
+        // Paper defaults: top-1/8 attention weights, 1/2 FFN parameters.
+        Sparsity { mha_num: 1, mha_den: 8, ffn_num: 1, ffn_den: 2 }
+    }
+}
+
+impl Sparsity {
+    pub fn mha_fraction(&self) -> f64 {
+        self.mha_num as f64 / self.mha_den as f64
+    }
+
+    pub fn ffn_fraction(&self) -> f64 {
+        self.ffn_num as f64 / self.ffn_den as f64
+    }
+
+    pub fn topl(&self, n: usize) -> usize {
+        ((n as u64 * self.mha_num as u64) / self.mha_den as u64).max(1) as usize
+    }
+
+    pub fn active_groups(&self, g: usize) -> usize {
+        ((g as u64 * self.ffn_num as u64) / self.ffn_den as u64).max(1) as usize
+    }
+}
+
+/// One Transformer block shape (paper Table 2 row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub activation: Activation,
+    pub rotary: bool,
+    pub lora_rank: usize,
+    pub pq_dsub: usize,
+    pub pq_codewords: usize,
+    pub ffn_groups: usize,
+    pub sparsity: Sparsity,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Gelu,
+}
+
+impl BlockConfig {
+    pub fn n_heads(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.d_head, 0);
+        self.d_model / self.d_head
+    }
+
+    pub fn pq_m(&self) -> usize {
+        self.d_head / self.pq_dsub
+    }
+
+    /// Base (pre-trained) parameter count of one block.
+    pub fn base_params(&self) -> u64 {
+        // wq,wk,wv,wo + w_in/w_out (+ biases + 2 LN scale/bias pairs)
+        let d = self.d_model as u64;
+        let f = self.d_ffn as u64;
+        4 * d * d + 2 * d * f + f + d + 4 * d
+    }
+
+    /// Trainable LoRA parameter count of one block (modes lora/spt).
+    pub fn lora_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ffn as u64;
+        let r = self.lora_rank as u64;
+        // q, k, v, o: (d r + r d) each; in: d r + r f; out: f r + r d
+        4 * 2 * d * r + (d * r + r * f) + (f * r + r * d)
+    }
+
+    /// SPT extras: router + PQ codebooks (q & k).
+    pub fn spt_params(&self) -> u64 {
+        let router = (self.d_model * self.ffn_groups) as u64;
+        let cb = 2 * (self.pq_m() * self.pq_codewords * self.pq_dsub) as u64;
+        router + cb
+    }
+
+    pub fn trainable_params(&self, mode: Mode) -> u64 {
+        match mode {
+            Mode::Full => self.base_params(),
+            Mode::Lora => self.lora_params(),
+            Mode::Spt => {
+                self.lora_params() + (self.d_model * self.ffn_groups) as u64
+            }
+        }
+    }
+}
+
+/// Full-model configuration (end-to-end fine-tuning).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub block: BlockConfig,
+    pub n_layers: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn param_count(&self) -> u64 {
+        self.n_layers as u64 * self.block.base_params()
+            + 2 * (self.vocab_size * self.block.d_model) as u64
+            + (self.max_seq * self.block.d_model) as u64
+    }
+}
+
+/// A fine-tuning run (what the CLI / TOML configures).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub mode: Mode,
+    pub batch: usize,
+    pub seq: usize,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub codebook_refresh_every: usize, // paper §5.1: every ~20 mini-batches
+    pub seed: u64,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    /// Memory budget (bytes) the OOM search models (paper: 24 GB RTX3090).
+    pub memory_budget: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "spt-tiny".into(),
+            mode: Mode::Spt,
+            batch: 4,
+            seq: 128,
+            steps: 100,
+            eval_every: 25,
+            codebook_refresh_every: 20,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            memory_budget: 24 * (1 << 30),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply a `key = value` override (from TOML or `--set key=value`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = value.to_string(),
+            "mode" => self.mode = Mode::parse(value)?,
+            "batch" => self.batch = value.parse()?,
+            "seq" => self.seq = value.parse()?,
+            "steps" => self.steps = value.parse()?,
+            "eval_every" => self.eval_every = value.parse()?,
+            "codebook_refresh_every" => {
+                self.codebook_refresh_every = value.parse()?
+            }
+            "seed" => self.seed = value.parse()?,
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "out_dir" => self.out_dir = value.to_string(),
+            "memory_budget_gb" => {
+                let gb: f64 = value.parse()?;
+                self.memory_budget = (gb * (1u64 << 30) as f64) as u64;
+            }
+            other => bail!("unknown run config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file, then apply overrides.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let pairs = toml::parse(&text)?;
+        let mut rc = RunConfig::default();
+        for (k, v) in &pairs {
+            // accept both bare keys and [run] section keys
+            let key = k.strip_prefix("run.").unwrap_or(k);
+            rc.set(key, v)?;
+        }
+        Ok(rc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in Mode::ALL {
+            assert_eq!(Mode::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(Mode::parse("sparse").unwrap() == Mode::Spt);
+        assert!(Mode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn sparsity_defaults_match_paper() {
+        let s = Sparsity::default();
+        assert_eq!(s.topl(512), 64); // 512/8
+        assert_eq!(s.active_groups(8), 4); // 8/2
+        assert_eq!(s.mha_fraction(), 0.125);
+        assert_eq!(s.ffn_fraction(), 0.5);
+    }
+
+    #[test]
+    fn param_counts_scale_as_expected() {
+        let b = presets::block("opt-2048").unwrap();
+        // 4 d^2 + 2 d F dominates
+        let want = 4 * 2048u64 * 2048 + 2 * 2048 * 8192;
+        assert!(b.base_params() > want && b.base_params() < want + want / 50);
+        // LoRA params are orders of magnitude smaller.
+        assert!(b.lora_params() < b.base_params() / 20);
+        assert_eq!(b.trainable_params(Mode::Full), b.base_params());
+    }
+
+    #[test]
+    fn runconfig_overrides() {
+        let mut rc = RunConfig::default();
+        rc.set("mode", "full").unwrap();
+        rc.set("batch", "16").unwrap();
+        rc.set("memory_budget_gb", "24").unwrap();
+        assert_eq!(rc.mode, Mode::Full);
+        assert_eq!(rc.batch, 16);
+        assert_eq!(rc.memory_budget, 24 * (1 << 30));
+        assert!(rc.set("bogus", "1").is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Built-in configurations: the paper's Table 2 blocks and the e2e models.
+//! Must stay in sync with `python/compile/model.py` (`BLOCK_CONFIGS`,
+//! `MODEL_CONFIGS`) — artifact names embed these config names.
+
+use anyhow::{bail, Result};
+
+use super::{Activation, BlockConfig, ModelConfig, Sparsity};
+
+fn mk(
+    name: &str,
+    d_model: usize,
+    d_head: usize,
+    d_ffn: usize,
+    activation: Activation,
+    rotary: bool,
+) -> BlockConfig {
+    BlockConfig {
+        name: name.into(),
+        d_model,
+        d_head,
+        d_ffn,
+        activation,
+        rotary,
+        lora_rank: 16,
+        pq_dsub: 8,
+        pq_codewords: 16,
+        ffn_groups: 8,
+        sparsity: Sparsity::default(),
+    }
+}
+
+/// The paper's five Table 2 blocks + scaled-down shapes.
+pub fn blocks() -> Vec<BlockConfig> {
+    vec![
+        mk("opt-1024", 1024, 64, 4096, Activation::Relu, false),
+        mk("opt-2048", 2048, 64, 8192, Activation::Relu, false),
+        mk("opt-2560", 2560, 80, 10240, Activation::Relu, false),
+        mk("llama-2560", 2560, 128, 6912, Activation::Gelu, true),
+        mk("llama-4096", 4096, 128, 11008, Activation::Gelu, true),
+        mk("gpt-768", 768, 64, 3072, Activation::Relu, false),
+        mk("mini-512", 512, 64, 2048, Activation::Relu, false),
+        mk("mini-256", 256, 32, 1024, Activation::Relu, false),
+    ]
+}
+
+pub fn block(name: &str) -> Result<BlockConfig> {
+    blocks()
+        .into_iter()
+        .find(|b| b.name == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown block config '{name}' (have: {})",
+                blocks().iter().map(|b| b.name.clone()).collect::<Vec<_>>().join(", ")
+            )
+        })
+}
+
+/// The five paper-scale blocks only (Table 2 order, for Fig. 8 benches).
+pub fn paper_blocks() -> Vec<BlockConfig> {
+    ["opt-1024", "opt-2048", "opt-2560", "llama-2560", "llama-4096"]
+        .iter()
+        .map(|n| block(n).unwrap())
+        .collect()
+}
+
+/// End-to-end model configs (mirror of python MODEL_CONFIGS).
+pub fn models() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig {
+            name: "spt-100m".into(),
+            block: block("gpt-768").unwrap(),
+            n_layers: 12,
+            vocab_size: 16384,
+            max_seq: 512,
+        },
+        ModelConfig {
+            name: "spt-30m".into(),
+            block: block("mini-512").unwrap(),
+            n_layers: 8,
+            vocab_size: 8192,
+            max_seq: 256,
+        },
+        ModelConfig {
+            name: "spt-tiny".into(),
+            block: block("mini-256").unwrap(),
+            n_layers: 4,
+            vocab_size: 4096,
+            max_seq: 128,
+        },
+    ]
+}
+
+pub fn model(name: &str) -> Result<ModelConfig> {
+    match models().into_iter().find(|m| m.name == name) {
+        Some(m) => Ok(m),
+        None => bail!(
+            "unknown model config '{name}' (have: {})",
+            models().iter().map(|m| m.name.clone()).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_shapes_match_paper() {
+        let rows: Vec<(&str, usize, usize, usize)> = vec![
+            ("opt-1024", 1024, 64, 4096),
+            ("opt-2048", 2048, 64, 8192),
+            ("opt-2560", 2560, 80, 10240),
+            ("llama-2560", 2560, 128, 6912),
+            ("llama-4096", 4096, 128, 11008),
+        ];
+        for (name, dm, dh, df) in rows {
+            let b = block(name).unwrap();
+            assert_eq!((b.d_model, b.d_head, b.d_ffn), (dm, dh, df), "{name}");
+        }
+    }
+
+    #[test]
+    fn paper_blocks_ordered() {
+        let names: Vec<String> =
+            paper_blocks().iter().map(|b| b.name.clone()).collect();
+        assert_eq!(
+            names,
+            ["opt-1024", "opt-2048", "opt-2560", "llama-2560", "llama-4096"]
+        );
+    }
+
+    #[test]
+    fn model_param_counts() {
+        // spt-100m should be ~100M parameters.
+        let m = model("spt-100m").unwrap();
+        let p = m.param_count();
+        assert!((90_000_000..130_000_000).contains(&p), "{p}");
+        let t = model("spt-tiny").unwrap();
+        assert!(t.param_count() < 10_000_000);
+    }
+
+    #[test]
+    fn heads_divide_evenly() {
+        for b in blocks() {
+            assert_eq!(b.d_model % b.d_head, 0, "{}", b.name);
+            assert_eq!(b.d_head % b.pq_dsub, 0, "{}", b.name);
+            assert!(b.n_heads() >= 8 || b.name.starts_with("mini"));
+        }
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        assert!(block("opt-9999").is_err());
+        assert!(model("nope").is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! TOML-subset parser for run configs (no `toml` crate offline).
+//!
+//! Supports: `[section]` headers, `key = value` pairs (strings, numbers,
+//! booleans), `#` comments, and blank lines.  Keys are flattened to
+//! `section.key`.  That covers every config file this project ships;
+//! anything fancier (arrays-of-tables, multiline strings) is rejected
+//! loudly rather than mis-parsed.
+
+use anyhow::{bail, Result};
+
+/// Parse into flattened (key, value) pairs, section-prefixed.
+pub fn parse(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            if name.contains('[') || name.is_empty() {
+                bail!("line {}: unsupported section '{name}'", lineno + 1);
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full_key, value));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<String> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = v.strip_prefix('"') {
+        let Some(s) = inner.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        if s.contains('"') {
+            bail!("embedded quotes unsupported");
+        }
+        return Ok(s.to_string());
+    }
+    if v.starts_with('[') || v.starts_with('{') {
+        bail!("arrays/inline tables unsupported in config files");
+    }
+    // bare scalar: number / bool / datetime — keep the raw token.
+    Ok(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let text = r#"
+# fine-tuning run
+model = "spt-30m"
+
+[run]
+mode = "spt"     # sparse tuning
+batch = 8
+seq = 256
+deterministic = true
+"#;
+        let pairs = parse(text).unwrap();
+        assert_eq!(
+            pairs,
+            vec![
+                ("model".to_string(), "spt-30m".to_string()),
+                ("run.mode".to_string(), "spt".to_string()),
+                ("run.batch".to_string(), "8".to_string()),
+                ("run.seq".to_string(), "256".to_string()),
+                ("run.deterministic".to_string(), "true".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let pairs = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(pairs[0].1, "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[open").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = [1,2]").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse(" = 3").is_err());
+    }
+}

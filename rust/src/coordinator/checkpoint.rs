@@ -1,0 +1,198 @@
+//! Binary checkpointing of training state (no external format crates:
+//! a simple length-prefixed container with a magic header and version).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SPTCKPT1" | u32 n_leaves
+//! per leaf: u8 dtype | u32 ndim | u64 dims... | u64 byte_len | payload
+//! repeated for: params, m, v, then step (i32)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::state::TrainState;
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 8] = b"SPTCKPT1";
+
+fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
+    let (code, bytes): (u8, Vec<u8>) = match t {
+        HostTensor::F32 { data, .. } => {
+            (0, data.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        HostTensor::I32 { data, .. } => {
+            (1, data.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+    };
+    w.write_all(&[code])?;
+    let shape = t.shape();
+    w.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    w.write_all(&(bytes.len() as u64).to_le_bytes())?;
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<HostTensor> {
+    let mut code = [0u8; 1];
+    r.read_exact(&mut code)?;
+    let mut ndim = [0u8; 4];
+    r.read_exact(&mut ndim)?;
+    let ndim = u32::from_le_bytes(ndim) as usize;
+    if ndim > 16 {
+        bail!("corrupt checkpoint: ndim {ndim}");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        let mut d = [0u8; 8];
+        r.read_exact(&mut d)?;
+        shape.push(u64::from_le_bytes(d) as usize);
+    }
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let len = u64::from_le_bytes(len) as usize;
+    let expect: usize = shape.iter().product::<usize>() * 4;
+    if len != expect {
+        bail!("corrupt checkpoint: payload {len} != {expect}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(match code[0] {
+        0 => HostTensor::f32(
+            shape,
+            payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        1 => HostTensor::i32(
+            shape,
+            payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        other => bail!("corrupt checkpoint: dtype code {other}"),
+    })
+}
+
+/// Save a training state (params + optimizer) to disk.
+pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&(state.params.len() as u32).to_le_bytes())?;
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group {
+            write_tensor(&mut w, t)?;
+        }
+    }
+    write_tensor(&mut w, &state.step)?;
+    // Paths footer for leaf lookup after restore.
+    let paths = state.param_paths.join("\n");
+    w.write_all(&(paths.len() as u64).to_le_bytes())?;
+    w.write_all(paths.as_bytes())?;
+    Ok(())
+}
+
+/// Restore a training state from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an SPT checkpoint (bad magic)");
+    }
+    let mut n = [0u8; 4];
+    r.read_exact(&mut n)?;
+    let n = u32::from_le_bytes(n) as usize;
+    if n > 1_000_000 {
+        bail!("corrupt checkpoint: {n} leaves");
+    }
+    fn read_group(r: &mut impl Read, n: usize) -> Result<Vec<HostTensor>> {
+        (0..n).map(|_| read_tensor(r)).collect()
+    }
+    let params = read_group(&mut r, n)?;
+    let m = read_group(&mut r, n)?;
+    let v = read_group(&mut r, n)?;
+    let step = read_tensor(&mut r)?;
+    let mut plen = [0u8; 8];
+    r.read_exact(&mut plen)?;
+    let plen = u64::from_le_bytes(plen) as usize;
+    let mut pbuf = vec![0u8; plen];
+    r.read_exact(&mut pbuf)?;
+    let param_paths = String::from_utf8(pbuf)?
+        .split('\n')
+        .map(str::to_string)
+        .collect();
+    Ok(TrainState { params, m, v, step, param_paths })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> TrainState {
+        TrainState {
+            params: vec![
+                HostTensor::f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 9.0, -7.25]),
+                HostTensor::i32(vec![2], vec![4, -5]),
+            ],
+            m: vec![
+                HostTensor::f32(vec![2, 3], vec![0.1; 6]),
+                HostTensor::i32(vec![2], vec![0, 0]),
+            ],
+            v: vec![
+                HostTensor::f32(vec![2, 3], vec![0.2; 6]),
+                HostTensor::i32(vec![2], vec![0, 0]),
+            ],
+            step: HostTensor::scalar_i32(42),
+            param_paths: vec!["['a']".into(), "['b']".into()],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("spt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.ckpt");
+        let s = state();
+        save(&s, &path).unwrap();
+        let s2 = load(&path).unwrap();
+        assert_eq!(s.params, s2.params);
+        assert_eq!(s.m, s2.m);
+        assert_eq!(s.v, s2.v);
+        assert_eq!(s.step, s2.step);
+        assert_eq!(s.param_paths, s2.param_paths);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("spt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let dir = std::env::temp_dir().join("spt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.ckpt");
+        save(&state(), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the fine-tuning system around the AOT artifacts.
+//!
+//! * [`state`]   — leaf-indexed training state (params / AdamW moments)
+//!   mapped onto artifact signatures.
+//! * [`trainer`] — the training loop: batching, train-step dispatch,
+//!   codebook refresh scheduling (paper §5.1), eval, loss curves.
+//! * [`trial`]   — sparsity trial manager (paper §3: "short training
+//!   trials on some sample data" to pick L and beta).
+//! * [`profile`] — module/block profiler joining measured step time with
+//!   the analytic memory model (Tables 1/4, Fig. 8).
+//! * [`checkpoint`] — binary save/restore of training state.
+
+pub mod checkpoint;
+pub mod profile;
+pub mod state;
+pub mod trainer;
+pub mod trial;
+
+pub use state::TrainState;
+pub use trainer::{TrainReport, Trainer, TrainerOptions};

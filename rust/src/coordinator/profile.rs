@@ -1,0 +1,150 @@
+//! Module/block profiler: measured fwd+bwd wall time (via the PJRT
+//! artifacts) joined with the analytic memory model — the machinery
+//! behind Tables 1 & 4 and Fig. 8.
+//!
+//! Equivalent of the paper's `script/profile.py` (§A.3).
+
+use anyhow::{Context, Result};
+
+use crate::config::{presets, Mode};
+use crate::memmodel::{block_peak, BlockWorkload, Module};
+use crate::metrics::{bench, BenchResult};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Rng;
+
+/// One profiled measurement.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub artifact: String,
+    pub config: String,
+    pub mode: String,
+    pub variant: String,
+    /// Median wall time of one execution (fwd+bwd) on this testbed.
+    pub time: BenchResult,
+    /// Analytic peak memory at the *paper's* workload (bs 16, seq 512).
+    pub model_mem_bytes: u64,
+    /// Tokens processed per second at the measured workload.
+    pub tokens_per_sec: f64,
+}
+
+/// Build random inputs matching an artifact signature.
+pub fn random_inputs(engine: &Engine, name: &str, seed: u64) -> Result<Vec<HostTensor>> {
+    let spec = engine.spec(name)?.clone();
+    let mut rng = Rng::new(seed);
+    spec.inputs
+        .iter()
+        .map(|s| {
+            Ok(match s.dtype {
+                crate::runtime::DType::F32 => {
+                    HostTensor::randn(s.shape.clone(), 0.5, &mut rng)
+                }
+                _ => HostTensor::zeros(s)?,
+            })
+        })
+        .collect()
+}
+
+/// Initialize block params via the block-init artifact, then assemble
+/// step inputs (params..., x).
+pub fn block_step_inputs(
+    engine: &Engine,
+    cfg_name: &str,
+    mode: Mode,
+    seed: u64,
+) -> Result<Vec<HostTensor>> {
+    let init = format!("block_init_{cfg_name}_{}", mode.as_str());
+    let step = format!("block_step_{cfg_name}_{}", mode.as_str());
+    let params = engine.run(&init, &[HostTensor::scalar_i32(seed as i32)])?;
+    let spec = engine.spec(&step)?;
+    let x_spec = spec.inputs.last().context("block step has inputs")?;
+    let mut rng = Rng::new(seed);
+    let mut inputs = params;
+    inputs.push(HostTensor::randn(x_spec.shape.clone(), 1.0, &mut rng));
+    Ok(inputs)
+}
+
+/// Profile one block-step artifact (Fig. 8 measurement).
+pub fn profile_block(
+    engine: &Engine,
+    cfg_name: &str,
+    mode: Mode,
+    warmup: usize,
+    samples: usize,
+) -> Result<ProfileRow> {
+    let name = format!("block_step_{cfg_name}_{}", mode.as_str());
+    let spec = engine.spec(&name)?.clone();
+    let batch = spec.meta_usize("batch").unwrap_or(1);
+    let seq = spec.meta_usize("seq").unwrap_or(128);
+    let inputs = block_step_inputs(engine, cfg_name, mode, 7)?;
+    engine.load(&name)?; // compile outside the timed region
+    let time = bench(&name, warmup, samples, || {
+        engine.run(&name, &inputs).expect("block step");
+    });
+    let cfg = presets::block(cfg_name)?;
+    let mem = block_peak(&cfg, mode, &BlockWorkload { batch: 16, seq: 512 });
+    let tps = (batch * seq) as f64 / time.median();
+    Ok(ProfileRow {
+        artifact: name,
+        config: cfg_name.to_string(),
+        mode: mode.as_str().to_string(),
+        variant: mode.as_str().to_string(),
+        time,
+        model_mem_bytes: mem.peak_bytes(),
+        tokens_per_sec: tps,
+    })
+}
+
+/// Profile a module-level artifact (`mha_*` / `ffn_*`, Tables 1/4/5).
+/// `variant` is e.g. "full", "lora", "spt_l8", "spt_b12".
+pub fn profile_module(
+    engine: &Engine,
+    kind: &str, // "mha" | "ffn"
+    cfg_name: &str,
+    variant: &str,
+    warmup: usize,
+    samples: usize,
+) -> Result<ProfileRow> {
+    let name = format!("{kind}_{cfg_name}_{variant}");
+    let spec = engine.spec(&name)?.clone();
+    let batch = spec.meta_usize("batch").unwrap_or(1);
+    let seq = spec.meta_usize("seq").unwrap_or(128);
+    let inputs = random_inputs(engine, &name, 11)?;
+    engine.load(&name)?;
+    let time = bench(&name, warmup, samples, || {
+        engine.run(&name, &inputs).expect("module step");
+    });
+    // Memory at paper workload, restricted to the module.
+    let mut cfg = presets::block(cfg_name)?;
+    let mode = match variant {
+        "full" => Mode::Full,
+        "lora" => Mode::Lora,
+        _ => Mode::Spt,
+    };
+    // Sparsity variants encode their fraction in the tag.
+    match variant {
+        "spt_l4" => cfg.sparsity.mha_den = 4,
+        "spt_l8" => cfg.sparsity.mha_den = 8,
+        "spt_b34" => {
+            cfg.sparsity.ffn_num = 3;
+            cfg.sparsity.ffn_den = 4;
+        }
+        "spt_b12" => {
+            cfg.sparsity.ffn_num = 1;
+            cfg.sparsity.ffn_den = 2;
+        }
+        _ => {}
+    }
+    let module = if kind == "mha" { Module::Mha } else { Module::Ffn };
+    let mem = block_peak(&cfg, mode, &BlockWorkload { batch: 16, seq: 512 })
+        .module_peak(module);
+    let tps = (batch * seq) as f64 / time.median();
+    Ok(ProfileRow {
+        artifact: name,
+        config: cfg_name.to_string(),
+        mode: mode.as_str().to_string(),
+        variant: variant.to_string(),
+        time,
+        model_mem_bytes: mem,
+        tokens_per_sec: tps,
+    })
+}

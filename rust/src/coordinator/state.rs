@@ -1,0 +1,199 @@
+//! Training state: parameter + optimizer leaves, ordered exactly as the
+//! AOT train-step artifact expects them.
+//!
+//! Leaf order contract (from `aot.py` / jax pytree flattening of
+//! `(params, opt, tokens, targets)` with `opt = {"m", "step", "v"}`):
+//!
+//! ```text
+//! inputs  = [params x P, m x P, step, v x P, tokens, targets]
+//! outputs = [loss, params x P, m x P, step, v x P]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ArtifactSpec, Engine, HostTensor};
+
+/// Host-side training state for one model+mode.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: HostTensor,
+    /// Leaf paths of `params` (from the init artifact), for named lookup.
+    pub param_paths: Vec<String>,
+}
+
+impl TrainState {
+    /// Initialize by executing the `model_init_*` artifact.
+    pub fn init(engine: &Engine, init_artifact: &str, seed: i32) -> Result<Self> {
+        let spec = engine.spec(init_artifact)?.clone();
+        let params = engine.run(init_artifact, &[HostTensor::scalar_i32(seed)])?;
+        let m = params
+            .iter()
+            .map(|p| {
+                HostTensor::zeros(&crate::runtime::TensorSpec {
+                    shape: p.shape().to_vec(),
+                    dtype: p.dtype(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let v = m.clone();
+        Ok(TrainState {
+            params,
+            m,
+            v,
+            step: HostTensor::scalar_i32(0),
+            param_paths: spec.output_paths.clone(),
+        })
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Assemble the input vector for a train-step artifact.
+    pub fn step_inputs(&self, tokens: HostTensor, targets: HostTensor) -> Vec<HostTensor> {
+        let mut v = Vec::with_capacity(3 * self.params.len() + 3);
+        v.extend(self.params.iter().cloned());
+        v.extend(self.m.iter().cloned());
+        v.push(self.step.clone());
+        v.extend(self.v.iter().cloned());
+        v.push(tokens);
+        v.push(targets);
+        v
+    }
+
+    /// Consume a train-step artifact's outputs; returns the loss tensor.
+    pub fn absorb_step_outputs(&mut self, mut out: Vec<HostTensor>) -> Result<HostTensor> {
+        let p = self.params.len();
+        let expect = 1 + 3 * p + 1;
+        if out.len() != expect {
+            bail!("train step returned {} outputs, expected {expect}", out.len());
+        }
+        let loss = out.remove(0);
+        self.params = out.drain(..p).collect();
+        self.m = out.drain(..p).collect();
+        self.step = out.remove(0);
+        self.v = out.drain(..p).collect();
+        debug_assert!(out.is_empty());
+        Ok(loss)
+    }
+
+    /// Validate this state against a train-step artifact signature.
+    pub fn check_against(&self, spec: &ArtifactSpec) -> Result<()> {
+        let p = self.params.len();
+        let want = 3 * p + 3;
+        if spec.inputs.len() != want {
+            bail!(
+                "artifact '{}' has {} inputs; state implies {want}",
+                spec.name,
+                spec.inputs.len()
+            );
+        }
+        for (i, t) in self.params.iter().enumerate() {
+            if !t.matches(&spec.inputs[i]) {
+                bail!("param leaf {i} mismatch vs '{}'", spec.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Indices of parameter leaves whose path contains `needle`
+    /// (e.g. "pq_q" for codebook patching).
+    pub fn find_leaves(&self, needle: &str) -> Vec<usize> {
+        self.param_paths
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.contains(needle))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Replace one parameter leaf (shape-checked).
+    pub fn set_leaf(&mut self, idx: usize, t: HostTensor) -> Result<()> {
+        let old = self
+            .params
+            .get(idx)
+            .context("leaf index out of range")?;
+        if old.shape() != t.shape() || old.dtype() != t.dtype() {
+            bail!(
+                "leaf {idx} shape/dtype mismatch: {:?} vs {:?}",
+                old.shape(),
+                t.shape()
+            );
+        }
+        self.params[idx] = t;
+        Ok(())
+    }
+
+    /// Total bytes held by this state (params + moments).
+    pub fn bytes(&self) -> usize {
+        self.params.iter().map(HostTensor::bytes).sum::<usize>()
+            + self.m.iter().map(HostTensor::bytes).sum::<usize>()
+            + self.v.iter().map(HostTensor::bytes).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DType;
+
+    fn dummy_state(p: usize) -> TrainState {
+        let t = |i: usize| HostTensor::f32(vec![2, 2], vec![i as f32; 4]);
+        TrainState {
+            params: (0..p).map(t).collect(),
+            m: (0..p).map(|_| HostTensor::f32(vec![2, 2], vec![0.0; 4])).collect(),
+            v: (0..p).map(|_| HostTensor::f32(vec![2, 2], vec![0.0; 4])).collect(),
+            step: HostTensor::scalar_i32(0),
+            param_paths: (0..p).map(|i| format!("['blocks']['leaf{i}']")).collect(),
+        }
+    }
+
+    #[test]
+    fn step_io_roundtrip() {
+        let mut s = dummy_state(3);
+        let tokens = HostTensor::i32(vec![1, 4], vec![1, 2, 3, 4]);
+        let inputs = s.step_inputs(tokens.clone(), tokens.clone());
+        assert_eq!(inputs.len(), 3 * 3 + 3);
+        // Fake outputs: loss + bumped state.
+        let mut out = vec![HostTensor::scalar_f32(1.5)];
+        out.extend((0..3).map(|_| HostTensor::f32(vec![2, 2], vec![9.0; 4]))); // params
+        out.extend((0..3).map(|_| HostTensor::f32(vec![2, 2], vec![0.1; 4]))); // m
+        out.push(HostTensor::scalar_i32(1));
+        out.extend((0..3).map(|_| HostTensor::f32(vec![2, 2], vec![0.2; 4]))); // v
+        let loss = s.absorb_step_outputs(out).unwrap();
+        assert_eq!(loss.scalar().unwrap(), 1.5);
+        assert_eq!(s.params[0].as_f32().unwrap()[0], 9.0);
+        assert_eq!(s.step.scalar().unwrap(), 1.0);
+        assert_eq!(s.v[2].as_f32().unwrap()[0], 0.2);
+    }
+
+    #[test]
+    fn absorb_rejects_wrong_arity() {
+        let mut s = dummy_state(2);
+        assert!(s.absorb_step_outputs(vec![HostTensor::scalar_f32(0.0)]).is_err());
+    }
+
+    #[test]
+    fn leaf_lookup_and_patch() {
+        let mut s = dummy_state(4);
+        s.param_paths[2] = "['blocks']['pq_q']".into();
+        let found = s.find_leaves("pq_q");
+        assert_eq!(found, vec![2]);
+        s.set_leaf(2, HostTensor::f32(vec![2, 2], vec![7.0; 4])).unwrap();
+        assert_eq!(s.params[2].as_f32().unwrap()[0], 7.0);
+        // shape mismatch rejected
+        assert!(s.set_leaf(2, HostTensor::f32(vec![4], vec![0.0; 4])).is_err());
+        assert!(s
+            .set_leaf(9, HostTensor::f32(vec![2, 2], vec![0.0; 4]))
+            .is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let s = dummy_state(2);
+        assert_eq!(s.bytes(), 3 * 2 * 16);
+    }
+}

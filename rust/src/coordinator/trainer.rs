@@ -1,0 +1,345 @@
+//! The fine-tuning trainer: the L3 hot loop.
+//!
+//! Drives the AOT train-step executable over synthetic mini-batches,
+//! schedules the DKM codebook refresh (paper §5.1: every ~20 mini-batches,
+//! spt mode only), evaluates held-out loss (PPL) and QA accuracy (the
+//! MMLU surrogate), and records step timing + loss curves.
+//!
+//! Two dispatch paths (see EXPERIMENTS.md §Perf):
+//! * per-step: one `train_step` execution per mini-batch;
+//! * chunked: `train_chunk8` scans 8 microbatches inside one executable,
+//!   amortizing host<->device marshalling of the state.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::state::TrainState;
+use crate::config::{Mode, RunConfig};
+use crate::data::{Batcher, QaTaskGen, SyntheticCorpus};
+use crate::metrics::Counters;
+use crate::runtime::{Engine, HostTensor};
+
+/// Trainer options beyond the run config.
+#[derive(Debug, Clone)]
+pub struct TrainerOptions {
+    /// Use the chunked (scan-of-8) dispatch path when available.
+    pub chunked: bool,
+    /// Held-out eval batches per eval point.
+    pub eval_batches: usize,
+    /// Bigram structure of the synthetic corpus.
+    pub corpus_branch: usize,
+    pub corpus_bigram_p: f64,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            chunked: false,
+            eval_batches: 4,
+            corpus_branch: 4,
+            corpus_bigram_p: 0.85,
+        }
+    }
+}
+
+/// One eval point on the loss curve.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub train_loss: f32,
+    pub eval_loss: f32,
+    pub ppl: f32,
+    pub elapsed_secs: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub model: String,
+    pub mode: Mode,
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub evals: Vec<EvalPoint>,
+    pub total_secs: f64,
+    pub tokens_per_sec: f64,
+    pub qa_accuracy: Option<f32>,
+    pub refreshes: usize,
+}
+
+impl TrainReport {
+    /// Final perplexity (paper's Wikitext metric).
+    pub fn final_ppl(&self) -> f32 {
+        self.evals.last().map(|e| e.ppl).unwrap_or(f32::NAN)
+    }
+
+    /// Loss curve as CSV for EXPERIMENTS.md.
+    pub fn loss_csv(&self) -> String {
+        let mut s = String::from("step,train_loss\n");
+        for (i, l) in self.losses.iter().enumerate() {
+            s.push_str(&format!("{},{}\n", i + 1, l));
+        }
+        s
+    }
+}
+
+/// The trainer itself.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    rc: RunConfig,
+    opts: TrainerOptions,
+    pub counters: Counters,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, rc: RunConfig, opts: TrainerOptions) -> Self {
+        Trainer { engine, rc, opts, counters: Counters::new() }
+    }
+
+    fn artifact(&self, entry: &str) -> String {
+        format!("{entry}_{}_{}", self.rc.model, self.rc.mode.as_str())
+    }
+
+    /// Workload shape (batch, seq) baked into the train-step artifact.
+    fn workload(&self) -> Result<(usize, usize)> {
+        let spec = self.engine.spec(&self.artifact("train_step"))?;
+        let batch = spec.meta_usize("batch").context("meta.batch")?;
+        let seq = spec.meta_usize("seq").context("meta.seq")?;
+        Ok((batch, seq))
+    }
+
+    fn vocab(&self) -> Result<usize> {
+        let spec = self.engine.spec(&self.artifact("train_step"))?;
+        spec.meta_usize("vocab").context("meta.vocab")
+    }
+
+    /// Build the LM batcher over a synthetic corpus pool.
+    fn make_batcher(&self, batch: usize, seq: usize, pool: usize) -> Result<Batcher> {
+        let vocab = self.vocab()?;
+        let mut corpus = SyntheticCorpus::new(
+            vocab,
+            self.opts.corpus_branch,
+            self.opts.corpus_bigram_p,
+            self.rc.seed,
+        );
+        let mut toks = Vec::with_capacity(pool);
+        let mut tgts = Vec::with_capacity(pool);
+        for _ in 0..pool {
+            let (x, y) = corpus.lm_pair(seq);
+            toks.push(x);
+            tgts.push(y);
+        }
+        Ok(Batcher::new(toks, tgts, batch, self.rc.seed ^ 0xBA7C4))
+    }
+
+    /// Run LM fine-tuning for `rc.steps` mini-batches.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let (batch, seq) = self.workload()?;
+        let step_name = self.artifact("train_step");
+        let chunk_name = format!(
+            "train_chunk8_{}_{}", self.rc.model, self.rc.mode.as_str()
+        );
+        let use_chunk = self.opts.chunked
+            && self.engine.manifest().get(&chunk_name).is_ok();
+        let mut state = TrainState::init(
+            self.engine,
+            &self.artifact("model_init"),
+            self.rc.seed as i32,
+        )?;
+        state.check_against(self.engine.spec(&step_name)?)?;
+        let pool = (self.rc.steps * batch).clamp(batch * 4, 4096);
+        let mut batcher = self.make_batcher(batch, seq, pool)?;
+        let mut eval_batcher = self.make_batcher(batch, seq, batch * 8)?;
+
+        let mut losses = Vec::with_capacity(self.rc.steps);
+        let mut evals = Vec::new();
+        let mut refreshes = 0usize;
+        let t0 = Instant::now();
+        let mut step_i = 0usize;
+        while step_i < self.rc.steps {
+            if use_chunk && step_i + 8 <= self.rc.steps {
+                // ---- chunked dispatch: 8 microbatches, one execution ----
+                let mut toks = Vec::with_capacity(8 * batch * seq);
+                let mut tgts = Vec::with_capacity(8 * batch * seq);
+                for _ in 0..8 {
+                    let b = batcher.next();
+                    toks.extend_from_slice(&b.tokens);
+                    tgts.extend_from_slice(&b.targets);
+                }
+                let tk = HostTensor::i32(vec![8, batch, seq], toks);
+                let tg = HostTensor::i32(vec![8, batch, seq], tgts);
+                let inputs = state.step_inputs(tk, tg);
+                let out = self.engine.run(&chunk_name, &inputs)?;
+                let loss_vec = state.absorb_step_outputs(out)?;
+                losses.extend(loss_vec.as_f32()?.iter().copied());
+                step_i += 8;
+            } else {
+                // ---- per-step dispatch ----
+                let b = batcher.next();
+                let tk = HostTensor::i32(vec![batch, seq], b.tokens);
+                let tg = HostTensor::i32(vec![batch, seq], b.targets);
+                let inputs = state.step_inputs(tk, tg);
+                let out = self.engine.run(&step_name, &inputs)?;
+                let loss = state.absorb_step_outputs(out)?.scalar()?;
+                losses.push(loss);
+                step_i += 1;
+            }
+            self.counters.add("steps", 1);
+            self.counters.add("tokens", (batch * seq) as u64);
+
+            // DKM codebook refresh (paper §5.1), spt only.
+            if self.rc.mode == Mode::Spt
+                && self.rc.codebook_refresh_every > 0
+                && step_i % self.rc.codebook_refresh_every == 0
+            {
+                self.refresh_codebooks(&mut state, &mut batcher)?;
+                refreshes += 1;
+            }
+
+            if self.rc.eval_every > 0 && step_i % self.rc.eval_every == 0 {
+                let eval_loss = self.eval_loss(&state, &mut eval_batcher)?;
+                evals.push(EvalPoint {
+                    step: step_i,
+                    train_loss: *losses.last().unwrap(),
+                    eval_loss,
+                    ppl: eval_loss.exp(),
+                    elapsed_secs: t0.elapsed().as_secs_f64(),
+                });
+            }
+        }
+        let total = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            model: self.rc.model.clone(),
+            mode: self.rc.mode,
+            steps: losses.len(),
+            tokens_per_sec: (losses.len() * batch * seq) as f64 / total,
+            losses,
+            evals,
+            total_secs: total,
+            qa_accuracy: None,
+            refreshes,
+        })
+    }
+
+    /// Mean eval loss over held-out batches.
+    pub fn eval_loss(&self, state: &TrainState, batcher: &mut Batcher) -> Result<f32> {
+        let name = self.artifact("eval_loss");
+        let (batch, seq) = self.workload()?;
+        let mut total = 0.0f32;
+        for _ in 0..self.opts.eval_batches {
+            let b = batcher.next();
+            let mut inputs = state.params.clone();
+            inputs.push(HostTensor::i32(vec![batch, seq], b.tokens));
+            inputs.push(HostTensor::i32(vec![batch, seq], b.targets));
+            let out = self.engine.run(&name, &inputs)?;
+            total += out[0].scalar()?;
+        }
+        Ok(total / self.opts.eval_batches as f32)
+    }
+
+    /// Run the whole-model DKM refresh and patch codebook leaves.
+    fn refresh_codebooks(&self, state: &mut TrainState, batcher: &mut Batcher) -> Result<()> {
+        let name = format!("codebook_refresh_{}", self.rc.model);
+        if self.engine.manifest().get(&name).is_err() {
+            return Ok(()); // refresh artifact not built; skip silently
+        }
+        let (batch, seq) = self.workload()?;
+        let b = batcher.next();
+        let mut inputs = state.params.clone();
+        inputs.push(HostTensor::i32(vec![batch, seq], b.tokens));
+        let out = self.engine.run(&name, &inputs)?;
+        if out.len() != 2 {
+            bail!("codebook refresh returned {} outputs", out.len());
+        }
+        let q_leaves = state.find_leaves("pq_q");
+        let k_leaves = state.find_leaves("pq_k");
+        if q_leaves.len() != 1 || k_leaves.len() != 1 {
+            bail!(
+                "expected exactly one stacked pq_q/pq_k leaf, found {}/{}",
+                q_leaves.len(),
+                k_leaves.len()
+            );
+        }
+        state.set_leaf(q_leaves[0], out[0].clone())?;
+        state.set_leaf(k_leaves[0], out[1].clone())?;
+        Ok(())
+    }
+
+    /// QA fine-tune + accuracy eval (Table 3's MMLU surrogate).
+    pub fn train_qa(&mut self) -> Result<TrainReport> {
+        let (batch, seq) = self.workload()?;
+        let vocab = self.vocab()?;
+        let step_name = self.artifact("train_step");
+        let qa_name = self.artifact("qa_logits");
+        let mut state = TrainState::init(
+            self.engine,
+            &self.artifact("model_init"),
+            self.rc.seed as i32,
+        )?;
+        let mut gen = QaTaskGen::new(vocab, 64, self.rc.seed);
+        let mut losses = Vec::with_capacity(self.rc.steps);
+        let t0 = Instant::now();
+        for step_i in 1..=self.rc.steps {
+            let qb = gen.batch(batch, seq);
+            let toks: Vec<i32> =
+                qb.tokens.iter().flatten().map(|&t| t as i32).collect();
+            let tgts: Vec<i32> =
+                qb.targets.iter().flatten().map(|&t| t as i32).collect();
+            let inputs = state.step_inputs(
+                HostTensor::i32(vec![batch, seq], toks),
+                HostTensor::i32(vec![batch, seq], tgts),
+            );
+            let out = self.engine.run(&step_name, &inputs)?;
+            losses.push(state.absorb_step_outputs(out)?.scalar()?);
+            if self.rc.mode == Mode::Spt
+                && self.rc.codebook_refresh_every > 0
+                && step_i % self.rc.codebook_refresh_every == 0
+            {
+                // reuse LM refresh machinery with QA tokens
+                let name = format!("codebook_refresh_{}", self.rc.model);
+                if self.engine.manifest().get(&name).is_ok() {
+                    let qb2 = gen.batch(batch, seq);
+                    let toks2: Vec<i32> =
+                        qb2.tokens.iter().flatten().map(|&t| t as i32).collect();
+                    let mut inputs = state.params.clone();
+                    inputs.push(HostTensor::i32(vec![batch, seq], toks2));
+                    let out = self.engine.run(&name, &inputs)?;
+                    if out.len() == 2 {
+                        let q = state.find_leaves("pq_q");
+                        let k = state.find_leaves("pq_k");
+                        state.set_leaf(q[0], out[0].clone())?;
+                        state.set_leaf(k[0], out[1].clone())?;
+                    }
+                }
+            }
+        }
+        // Held-out accuracy.
+        let mut correct_weighted = 0.0f32;
+        let eval_rounds = 8;
+        for _ in 0..eval_rounds {
+            let qb = gen.batch(batch, seq);
+            let toks: Vec<i32> =
+                qb.tokens.iter().flatten().map(|&t| t as i32).collect();
+            let mut inputs = state.params.clone();
+            inputs.push(HostTensor::i32(vec![batch, seq], toks));
+            let out = self.engine.run(&qa_name, &inputs)?;
+            let logits = out[0].as_f32()?;
+            let rows: Vec<Vec<f32>> = (0..batch)
+                .map(|i| logits[i * 4..(i + 1) * 4].to_vec())
+                .collect();
+            correct_weighted += gen.accuracy(&qb, &rows);
+        }
+        let total = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            model: self.rc.model.clone(),
+            mode: self.rc.mode,
+            steps: losses.len(),
+            tokens_per_sec: (losses.len() * batch * seq) as f64 / total,
+            losses,
+            evals: Vec::new(),
+            total_secs: total,
+            qa_accuracy: Some(correct_weighted / eval_rounds as f32),
+            refreshes: 0,
+        })
+    }
+}

@@ -1,0 +1,134 @@
+//! Sparsity trial manager (paper §3): "To help users determine the
+//! strength of sparsification, SPT allows users to conduct short training
+//! trials on some sample data."
+//!
+//! Runs short fine-tuning trials across a grid of (L-fraction,
+//! beta-fraction) artifacts and ranks them by a quality/efficiency
+//! objective, regenerating the Fig. 10 sweep along the way.
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::metrics::Table;
+use crate::runtime::Engine;
+
+use super::trainer::{Trainer, TrainerOptions};
+
+/// One trial outcome.
+#[derive(Debug, Clone)]
+pub struct TrialResult {
+    pub label: String,
+    pub mode: Mode,
+    pub final_loss: f32,
+    pub ppl: f32,
+    pub secs_per_step: f64,
+    pub tokens_per_sec: f64,
+}
+
+/// Sweep over the tuning modes available in the manifest for one model
+/// (full/lora/spt); per paper Fig. 10 this is how sparsity strength is
+/// chosen before a long run.
+pub struct TrialManager<'e> {
+    engine: &'e Engine,
+    base: RunConfig,
+    pub steps_per_trial: usize,
+}
+
+impl<'e> TrialManager<'e> {
+    pub fn new(engine: &'e Engine, base: RunConfig, steps_per_trial: usize) -> Self {
+        TrialManager { engine, base, steps_per_trial }
+    }
+
+    /// Run one trial in a given mode.
+    pub fn run_trial(&self, mode: Mode) -> Result<TrialResult> {
+        let mut rc = self.base.clone();
+        rc.mode = mode;
+        rc.steps = self.steps_per_trial;
+        rc.eval_every = self.steps_per_trial; // single eval at the end
+        let mut trainer = Trainer::new(self.engine, rc, TrainerOptions::default());
+        let report = trainer.train()?;
+        Ok(TrialResult {
+            label: format!("{}-{}", report.model, mode.as_str()),
+            mode,
+            final_loss: *report.losses.last().unwrap_or(&f32::NAN),
+            ppl: report.final_ppl(),
+            secs_per_step: report.total_secs / report.steps.max(1) as f64,
+            tokens_per_sec: report.tokens_per_sec,
+        })
+    }
+
+    /// Run trials for all modes and render a comparison table.
+    pub fn compare_modes(&self) -> Result<(Vec<TrialResult>, Table)> {
+        let mut results = Vec::new();
+        for mode in Mode::ALL {
+            let name = format!("train_step_{}_{}", self.base.model, mode.as_str());
+            if self.engine.manifest().get(&name).is_err() {
+                continue;
+            }
+            results.push(self.run_trial(mode)?);
+        }
+        let mut table = Table::new(
+            &format!("Sparsity trials — {}", self.base.model),
+            &["System", "Final loss", "PPL", "s/step", "tokens/s"],
+        );
+        for r in &results {
+            table.row(&[
+                r.label.clone(),
+                format!("{:.3}", r.final_loss),
+                format!("{:.2}", r.ppl),
+                format!("{:.3}", r.secs_per_step),
+                format!("{:.0}", r.tokens_per_sec),
+            ]);
+        }
+        Ok((results, table))
+    }
+
+    /// Recommend a mode: fastest among those within `tolerance` relative
+    /// PPL of the best (the paper's efficiency/quality trade-off knob).
+    pub fn recommend(results: &[TrialResult], tolerance: f32) -> Option<&TrialResult> {
+        let best_ppl = results
+            .iter()
+            .map(|r| r.ppl)
+            .fold(f32::INFINITY, f32::min);
+        results
+            .iter()
+            .filter(|r| r.ppl <= best_ppl * (1.0 + tolerance))
+            .min_by(|a, b| a.secs_per_step.total_cmp(&b.secs_per_step))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(label: &str, ppl: f32, sps: f64) -> TrialResult {
+        TrialResult {
+            label: label.into(),
+            mode: Mode::Spt,
+            final_loss: ppl.ln(),
+            ppl,
+            secs_per_step: sps,
+            tokens_per_sec: 1.0 / sps,
+        }
+    }
+
+    #[test]
+    fn recommend_prefers_fast_within_tolerance() {
+        let results = vec![
+            tr("full", 10.0, 1.0),
+            tr("lora", 10.1, 0.8),
+            tr("spt", 10.5, 0.5),
+        ];
+        // 10% tolerance: spt (10.5 <= 11.0) and fastest.
+        let r = TrialManager::recommend(&results, 0.10).unwrap();
+        assert_eq!(r.label, "spt");
+        // 1% tolerance: only full/lora qualify; lora is faster.
+        let r = TrialManager::recommend(&results, 0.01).unwrap();
+        assert_eq!(r.label, "lora");
+    }
+
+    #[test]
+    fn recommend_empty_is_none() {
+        assert!(TrialManager::recommend(&[], 0.1).is_none());
+    }
+}

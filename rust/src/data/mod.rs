@@ -1,0 +1,23 @@
+//! Synthetic data pipeline — the paper's dataset substitutes.
+//!
+//! The paper fine-tunes on MMLU (4-way QA) and Wikitext-103 (next-word
+//! prediction) plus a "Random" generator for micro experiments.  Neither
+//! corpus ships with this reproduction, so we build structured synthetic
+//! equivalents that exercise identical code paths (see DESIGN.md
+//! §Substitutions):
+//!
+//! * [`corpus`]  — a Zipf-unigram + Markov-bigram language over the model
+//!   vocabulary: learnable structure so fine-tuning measurably reduces
+//!   loss/PPL (the Fig. 10 axis), unlike i.i.d. uniform tokens.
+//! * [`taskgen`] — an MMLU-like 4-choice QA task rendered into token
+//!   sequences with an answer slot; accuracy is the MMLU-score surrogate.
+//! * [`batcher`] — deterministic shuffled mini-batching with epoch
+//!   boundaries (every token scheduled exactly once per epoch).
+
+pub mod batcher;
+pub mod corpus;
+pub mod taskgen;
+
+pub use batcher::{Batch, Batcher};
+pub use corpus::SyntheticCorpus;
+pub use taskgen::{QaBatch, QaTaskGen};

@@ -1,0 +1,27 @@
+//! # SPT — Sparse fine-tuning of Transformer language models
+//!
+//! Rust + JAX + Pallas reproduction of *"SPT: Fine-Tuning Transformer-based
+//! Language Models Efficiently with Sparsification"* (Gui et al., 2023).
+//!
+//! Three-layer architecture (Python never on the training path):
+//!
+//! * **L1 (Pallas)** — `python/compile/kernels/`: PQ quantization,
+//!   bucket-sort top-L, sparse attention (SDDMM/softmax/SpMM), routed FFN
+//!   (BSpMV), each with hand-written backward kernels.
+//! * **L2 (JAX)** — `python/compile/model.py` + `train.py`: Transformer
+//!   blocks in full/LoRA/SPT modes, AdamW fine-tuning step, lowered AOT to
+//!   HLO text by `aot.py`.
+//! * **L3 (this crate)** — the fine-tuning coordinator: config system,
+//!   synthetic data pipeline, microbatch trainer, sparsity-trial manager,
+//!   analytic GPU-memory model, a rust-native sparse substrate used for
+//!   baselines/benches, and the harness regenerating every table and
+//!   figure of the paper's evaluation.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memmodel;
+pub mod metrics;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,365 @@
+//! `spt` — the SPT fine-tuning coordinator CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   train      LM fine-tuning run (loss curve, PPL) — paper Fig. 10 axis
+//!   train-qa   QA fine-tuning + accuracy (Table 3 MMLU surrogate)
+//!   trial      short sparsity trials across modes (paper §3)
+//!   profile    module-level time+memory (Tables 1/4)
+//!   blocks     per-block throughput/memory across configs (Fig. 8)
+//!   memplan    memory model: max-length search + seq sweeps (Table 3/Fig. 9)
+//!   goldens    numeric round-trip validation vs python outputs
+//!   artifacts  list the AOT manifest
+//!
+//! Run `spt help` for flags.  Everything reads `artifacts/` produced by
+//! `make artifacts`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use spt::config::{presets, Mode, RunConfig};
+use spt::coordinator::profile as prof;
+use spt::coordinator::trial::TrialManager;
+use spt::coordinator::{Trainer, TrainerOptions};
+use spt::memmodel;
+use spt::metrics::Table;
+use spt::runtime::Engine;
+use spt::util::{fmt_bytes, fmt_duration};
+
+/// Minimal `--key value` / `--flag` argument parser.
+struct Args {
+    cmd: String,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.push(key.to_string());
+            }
+            i += 1;
+        }
+        Ok(Args { cmd, kv, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    fn run_config(&self) -> Result<RunConfig> {
+        let mut rc = match self.get("config") {
+            Some(path) => RunConfig::from_file(path)?,
+            None => RunConfig::default(),
+        };
+        for key in ["model", "mode", "batch", "seq", "steps", "eval_every",
+                    "codebook_refresh_every", "seed", "artifacts_dir",
+                    "out_dir", "memory_budget_gb"] {
+            if let Some(v) = self.get(key) {
+                rc.set(key, v)?;
+            }
+        }
+        Ok(rc)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args, false),
+        "train-qa" => cmd_train(&args, true),
+        "trial" => cmd_trial(&args),
+        "profile" => cmd_profile(&args),
+        "blocks" => cmd_blocks(&args),
+        "memplan" => cmd_memplan(&args),
+        "goldens" => cmd_goldens(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'; see `spt help`"),
+    }
+}
+
+const HELP: &str = "\
+spt — SPT sparse fine-tuning coordinator
+
+USAGE: spt <command> [--key value ...]
+
+COMMANDS
+  train       fine-tune on the synthetic LM corpus; prints loss curve + PPL
+  train-qa    fine-tune + score the 4-choice QA task (MMLU surrogate)
+  trial       short trials across full/lora/spt; recommends a mode
+  profile     time+memory for mha/ffn module artifacts (Tables 1/4)
+  blocks      throughput + peak memory per Table-2 block (Fig. 8)
+  memplan     analytic memory: max-seq search (Table 3), seq sweep (Fig. 9)
+  goldens     validate artifacts against python-computed goldens
+  artifacts   list the AOT manifest
+
+COMMON FLAGS
+  --artifacts_dir DIR   (default: artifacts)
+  --model NAME          spt-tiny | spt-30m | spt-100m
+  --mode MODE           full | lora | spt
+  --steps N  --seed N   --eval_every N  --codebook_refresh_every N
+  --config FILE         TOML run config (keys as above)
+  --chunked             use the scan-of-8 fast dispatch path (train)
+";
+
+fn engine_from(args: &Args) -> Result<Engine> {
+    let dir = args.get_or("artifacts_dir", "artifacts");
+    Engine::new(&dir)
+}
+
+fn cmd_train(args: &Args, qa: bool) -> Result<()> {
+    let rc = args.run_config()?;
+    let engine = engine_from(args)?;
+    let opts = TrainerOptions { chunked: args.has("chunked"), ..Default::default() };
+    println!(
+        "[spt] {} fine-tuning: model={} mode={} steps={} (platform {})",
+        if qa { "QA" } else { "LM" },
+        rc.model,
+        rc.mode.as_str(),
+        rc.steps,
+        engine.platform()
+    );
+    let out_dir = rc.out_dir.clone();
+    let mut trainer = Trainer::new(&engine, rc, opts);
+    let report = if qa { trainer.train_qa()? } else { trainer.train()? };
+    println!(
+        "[spt] {} steps in {} ({:.0} tokens/s), final loss {:.4}",
+        report.steps,
+        fmt_duration(report.total_secs),
+        report.tokens_per_sec,
+        report.losses.last().unwrap_or(&f32::NAN)
+    );
+    for e in &report.evals {
+        println!(
+            "  step {:>5}: train {:.4}  eval {:.4}  ppl {:.2}  [{}]",
+            e.step,
+            e.train_loss,
+            e.eval_loss,
+            e.ppl,
+            fmt_duration(e.elapsed_secs)
+        );
+    }
+    if let Some(acc) = report.qa_accuracy {
+        println!("[spt] QA accuracy (MMLU surrogate): {:.1}%", acc * 100.0);
+    }
+    if report.refreshes > 0 {
+        println!("[spt] DKM codebook refreshes: {}", report.refreshes);
+    }
+    std::fs::create_dir_all(&out_dir).ok();
+    let csv = format!(
+        "{out_dir}/loss_{}_{}.csv",
+        report.model,
+        report.mode.as_str()
+    );
+    std::fs::write(&csv, report.loss_csv())?;
+    println!("[spt] loss curve -> {csv}");
+    Ok(())
+}
+
+fn cmd_trial(args: &Args) -> Result<()> {
+    let rc = args.run_config()?;
+    let engine = engine_from(args)?;
+    let steps = args.usize_or("trial_steps", 16)?;
+    let tm = TrialManager::new(&engine, rc, steps);
+    let (results, table) = tm.compare_modes()?;
+    println!("{}", table.render());
+    if let Some(best) = TrialManager::recommend(&results, 0.10) {
+        println!(
+            "[spt] recommended: {} ({:.3} s/step at ppl {:.2}, within 10% of best)",
+            best.label, best.secs_per_step, best.ppl
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let cfg = args.get_or("block", "opt-2048");
+    let warmup = args.usize_or("warmup", 1)?;
+    let samples = args.usize_or("samples", 5)?;
+    let mut table = Table::new(
+        &format!("Module profile — {cfg} (paper Tables 1/4 shape)"),
+        &["Module", "Method", "Peak Mem (model @bs16,seq512)", "Duration (this testbed)"],
+    );
+    for (kind, variants) in [
+        ("mha", vec!["full", "lora", "spt_l4", "spt_l8"]),
+        ("ffn", vec!["full", "lora", "spt_b34", "spt_b12"]),
+    ] {
+        for v in variants {
+            let name = format!("{kind}_{cfg}_{v}");
+            if engine.manifest().get(&name).is_err() {
+                continue;
+            }
+            let row = prof::profile_module(&engine, kind, &cfg, v, warmup, samples)?;
+            table.row(&[
+                kind.to_uppercase(),
+                v.to_string(),
+                fmt_bytes(row.model_mem_bytes),
+                row.time.summary(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_blocks(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let warmup = args.usize_or("warmup", 1)?;
+    let samples = args.usize_or("samples", 3)?;
+    let blocks = args.get_or(
+        "blocks",
+        "opt-1024,opt-2048,opt-2560,llama-2560,llama-4096",
+    );
+    let mut table = Table::new(
+        "Per-block fine-tuning throughput & peak memory (Fig. 8 shape)",
+        &["Block", "Mode", "tokens/s", "vs full", "Peak Mem @bs16,seq512", "vs full"],
+    );
+    for cfg_name in blocks.split(',').filter(|s| !s.is_empty()) {
+        let mut base_tps = None;
+        let mut base_mem = None;
+        for mode in Mode::ALL {
+            let name = format!("block_step_{cfg_name}_{}", mode.as_str());
+            if engine.manifest().get(&name).is_err() {
+                continue;
+            }
+            let row = prof::profile_block(&engine, cfg_name, mode, warmup, samples)?;
+            if mode == Mode::Full {
+                base_tps = Some(row.tokens_per_sec);
+                base_mem = Some(row.model_mem_bytes);
+            }
+            table.row(&[
+                cfg_name.to_string(),
+                mode.as_str().to_string(),
+                format!("{:.0}", row.tokens_per_sec),
+                base_tps
+                    .map(|b| format!("{:.2}x", row.tokens_per_sec / b))
+                    .unwrap_or_default(),
+                fmt_bytes(row.model_mem_bytes),
+                base_mem
+                    .map(|b| format!("{:.0}%", 100.0 * row.model_mem_bytes as f64 / b as f64))
+                    .unwrap_or_default(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_memplan(args: &Args) -> Result<()> {
+    let cfg_name = args.get_or("block", "opt-2560");
+    let cfg = presets::block(&cfg_name)?;
+    let batch = args.usize_or("batch", 16)?;
+    let layers = args.usize_or("layers", 32)?;
+    let vocab = args.usize_or("vocab", 50272)?;
+    let budget_gb: f64 = args.get_or("budget-gb", "24").parse()?;
+    let budget = (budget_gb * (1u64 << 30) as f64) as u64;
+
+    let mut t1 = Table::new(
+        &format!(
+            "Max sequence length before OOM — {cfg_name}, {layers} layers, {budget_gb} GB (Table 3 protocol)"
+        ),
+        &["System", "Max Length"],
+    );
+    for mode in Mode::ALL {
+        let len = memmodel::max_seq_under_budget(&cfg, mode, batch, layers, vocab, budget, 128);
+        t1.row(&[mode.as_str().to_string(), len.to_string()]);
+    }
+    println!("{}", t1.render());
+
+    let mut t2 = Table::new(
+        &format!(
+            "Peak block memory vs sequence length — {cfg_name}, batch {batch} (Fig. 9 series)"
+        ),
+        &["Seq", "Full", "LoRA", "SPT"],
+    );
+    for seq in [128usize, 256, 512, 1024, 2048] {
+        let wl = memmodel::BlockWorkload { batch, seq };
+        let cells: Vec<String> = Mode::ALL
+            .iter()
+            .map(|&m| fmt_bytes(memmodel::block_peak(&cfg, m, &wl).peak_bytes()))
+            .collect();
+        t2.row(&[seq.to_string(), cells[0].clone(), cells[1].clone(), cells[2].clone()]);
+    }
+    println!("{}", t2.render());
+
+    if args.has("breakdown") {
+        for mode in Mode::ALL {
+            let wl = memmodel::BlockWorkload { batch, seq: 512 };
+            println!("--- {} breakdown (bs {batch}, seq 512) ---", mode.as_str());
+            println!("{}", memmodel::block_peak(&cfg, mode, &wl).render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_goldens(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts_dir", "artifacts");
+    let engine = engine_from(args)?;
+    let goldens = spt::runtime::goldens::load_goldens(&dir)?;
+    let mut worst = 0.0f32;
+    for g in &goldens {
+        let diff = spt::runtime::goldens::check_artifact(&engine, g, 1e-3)?;
+        println!("  {:<28} max|diff| = {diff:.2e}", g.name);
+        worst = worst.max(diff);
+    }
+    println!("[spt] {} goldens OK (worst {worst:.2e})", goldens.len());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let mut table = Table::new("AOT artifacts", &["Name", "Inputs", "Outputs", "In bytes", "Kind"]);
+    for (name, spec) in &engine.manifest().artifacts {
+        table.row(&[
+            name.clone(),
+            spec.inputs.len().to_string(),
+            spec.outputs.len().to_string(),
+            fmt_bytes(spec.input_bytes() as u64),
+            spec.meta_str("kind").unwrap_or("?").to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,314 @@
+//! Per-block tensor accounting: every tensor a fwd+bwd training step of
+//! one Transformer block materializes, by module / phase / mode.
+//!
+//! Assumptions (standard eager-framework accounting, documented per line):
+//! * f32 everywhere (paper §6.1: single precision);
+//! * backward needs the forward's saved activation set plus, transiently,
+//!   the gradient of the largest activation (double-buffered);
+//! * AdamW holds two moments per *trainable* parameter;
+//! * attention softmax output is saved for backward (PyTorch semantics);
+//! * sparse attention stores values (f32) + indices (i32) for nL entries
+//!   plus per-head PQ codes (int32 [n, M]);
+//! * routed FFN saves the activated fraction beta of the hidden
+//!   activation plus router scores / assignment indices.
+
+use crate::config::{BlockConfig, Mode};
+
+/// Workload shape for one block step.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockWorkload {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Which module a tensor belongs to (Table 1 / Table 4 split).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Module {
+    Mha,
+    Ffn,
+    Shared,
+}
+
+/// Memory phase of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Base + adapter weights (live whole step).
+    Weights,
+    /// Gradients of trainable weights (live bwd..update).
+    Gradients,
+    /// AdamW moments (live whole run).
+    Optimizer,
+    /// Saved-for-backward activations (live fwd..bwd).
+    SavedActivation,
+    /// Transient workspace (peak contribution = max over ops).
+    Transient,
+}
+
+/// One accounted tensor.
+#[derive(Debug, Clone)]
+pub struct TensorAcct {
+    pub name: &'static str,
+    pub module: Module,
+    pub phase: Phase,
+    pub bytes: u64,
+}
+
+/// Full accounting for one block step.
+#[derive(Debug, Clone)]
+pub struct MemBreakdown {
+    pub tensors: Vec<TensorAcct>,
+}
+
+impl MemBreakdown {
+    pub fn persistent_bytes(&self) -> u64 {
+        self.sum(|t| {
+            matches!(t.phase, Phase::Weights | Phase::Gradients | Phase::Optimizer)
+        })
+    }
+
+    pub fn saved_activation_bytes(&self) -> u64 {
+        self.sum(|t| t.phase == Phase::SavedActivation)
+    }
+
+    /// Transient peak = the largest single workspace tensor (ops execute
+    /// serially; XLA reuses buffers between them).
+    pub fn transient_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.phase == Phase::Transient)
+            .map(|t| t.bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Peak memory of the block step.
+    pub fn peak_bytes(&self) -> u64 {
+        self.persistent_bytes() + self.saved_activation_bytes() + self.transient_bytes()
+    }
+
+    /// Peak restricted to one module (+ shared weights excluded) — the
+    /// Table 1 / Table 4 per-module columns.
+    pub fn module_peak(&self, module: Module) -> u64 {
+        let persist = self.sum(|t| {
+            t.module == module
+                && matches!(
+                    t.phase,
+                    Phase::Weights | Phase::Gradients | Phase::Optimizer
+                )
+        });
+        let saved = self.sum(|t| {
+            t.module == module && t.phase == Phase::SavedActivation
+        });
+        let transient = self
+            .tensors
+            .iter()
+            .filter(|t| t.module == module && t.phase == Phase::Transient)
+            .map(|t| t.bytes)
+            .max()
+            .unwrap_or(0);
+        persist + saved + transient
+    }
+
+    fn sum(&self, f: impl Fn(&TensorAcct) -> bool) -> u64 {
+        self.tensors.iter().filter(|t| f(t)).map(|t| t.bytes).sum()
+    }
+}
+
+const F32: u64 = 4;
+const I32: u64 = 4;
+
+/// Account one Transformer block training step (fwd+bwd+update).
+pub fn block_peak(cfg: &BlockConfig, mode: Mode, wl: &BlockWorkload) -> MemBreakdown {
+    let mut t: Vec<TensorAcct> = Vec::new();
+    let b = wl.batch as u64;
+    let n = wl.seq as u64;
+    let d = cfg.d_model as u64;
+    let h = cfg.n_heads() as u64;
+    let _dh = cfg.d_head as u64;
+    let f = cfg.d_ffn as u64;
+    let r = cfg.lora_rank as u64;
+    let tok = b * n;
+
+    let push = |t: &mut Vec<TensorAcct>, name, module, phase, bytes| {
+        t.push(TensorAcct { name, module, phase, bytes });
+    };
+
+    // ---------------- weights / grads / optimizer ----------------
+    let w_mha = 4 * d * d * F32;
+    let w_ffn = (2 * d * f + f + d) * F32;
+    push(&mut t, "w_mha(qkvo)", Module::Mha, Phase::Weights, w_mha);
+    push(&mut t, "w_ffn(in,out)", Module::Ffn, Phase::Weights, w_ffn);
+    push(&mut t, "ln_params", Module::Shared, Phase::Weights, 4 * d * F32);
+    match mode {
+        Mode::Full => {
+            push(&mut t, "grad_mha", Module::Mha, Phase::Gradients, w_mha);
+            push(&mut t, "grad_ffn", Module::Ffn, Phase::Gradients, w_ffn);
+            push(&mut t, "adamw_mha", Module::Mha, Phase::Optimizer, 2 * w_mha);
+            push(&mut t, "adamw_ffn", Module::Ffn, Phase::Optimizer, 2 * w_ffn);
+        }
+        Mode::Lora | Mode::Spt => {
+            let lora_mha = 4 * (d * r + r * d) * F32;
+            let lora_ffn = (d * r + r * f + f * r + r * d) * F32;
+            push(&mut t, "w_lora_mha", Module::Mha, Phase::Weights, lora_mha);
+            push(&mut t, "w_lora_ffn", Module::Ffn, Phase::Weights, lora_ffn);
+            push(&mut t, "grad_lora_mha", Module::Mha, Phase::Gradients, lora_mha);
+            push(&mut t, "grad_lora_ffn", Module::Ffn, Phase::Gradients, lora_ffn);
+            push(&mut t, "adamw_lora_mha", Module::Mha, Phase::Optimizer, 2 * lora_mha);
+            push(&mut t, "adamw_lora_ffn", Module::Ffn, Phase::Optimizer, 2 * lora_ffn);
+            if mode == Mode::Spt {
+                let router = d * cfg.ffn_groups as u64 * F32;
+                let cb = 2 * (cfg.pq_m() * cfg.pq_codewords * cfg.pq_dsub) as u64 * F32;
+                push(&mut t, "w_router", Module::Ffn, Phase::Weights, router);
+                push(&mut t, "grad_router", Module::Ffn, Phase::Gradients, router);
+                push(&mut t, "adamw_router", Module::Ffn, Phase::Optimizer, 2 * router);
+                push(&mut t, "pq_codebooks", Module::Mha, Phase::Weights, cb);
+            }
+        }
+    }
+
+    // ---------------- MHA activations ----------------
+    // input + q,k,v + attention output + o-proj output, saved for bwd.
+    push(&mut t, "mha_x", Module::Mha, Phase::SavedActivation, tok * d * F32);
+    push(&mut t, "mha_qkv", Module::Mha, Phase::SavedActivation, 3 * tok * d * F32);
+    push(&mut t, "mha_attn_out", Module::Mha, Phase::SavedActivation, tok * d * F32);
+    if mode != Mode::Full {
+        // LoRA intermediates x@B ([tok, r] per projection q,k,v,o).
+        push(&mut t, "mha_lora_mid", Module::Mha, Phase::SavedActivation, 4 * tok * r * F32);
+    }
+    match mode {
+        Mode::Full | Mode::Lora => {
+            // Dense attention: softmax output saved [B, H, n, n]; its
+            // gradient is the transient peak in backward (paper Table 1:
+            // MHA dominates peak memory).
+            let attn = b * h * n * n * F32;
+            push(&mut t, "attn_weights(nxn)", Module::Mha, Phase::SavedActivation, attn);
+            push(&mut t, "d_attn_weights", Module::Mha, Phase::Transient, 2 * attn);
+        }
+        Mode::Spt => {
+            // Sparse attention (paper §4.1): values+indices for nL entries
+            // per head + PQ codes; gradient transient is O(nL) too.
+            let l = cfg.sparsity.topl(wl.seq) as u64;
+            let m = cfg.pq_m() as u64;
+            let vals = b * h * n * l * F32;
+            let idx = b * h * n * l * I32;
+            let codes = 2 * b * h * n * m * I32;
+            push(&mut t, "attn_vals(nxL)", Module::Mha, Phase::SavedActivation, vals);
+            push(&mut t, "attn_idx(nxL)", Module::Mha, Phase::SavedActivation, idx);
+            push(&mut t, "pq_codes", Module::Mha, Phase::SavedActivation, codes);
+            push(&mut t, "d_attn_vals", Module::Mha, Phase::Transient, 2 * vals);
+            // bucket scratch lives in on-chip memory (shared mem / VMEM);
+            // it never reaches HBM accounting (paper §5.1).
+        }
+    }
+
+    // ---------------- FFN activations ----------------
+    push(&mut t, "ffn_x", Module::Ffn, Phase::SavedActivation, tok * d * F32);
+    match mode {
+        Mode::Full | Mode::Lora => {
+            let hid = tok * f * F32;
+            push(&mut t, "ffn_hidden", Module::Ffn, Phase::SavedActivation, hid);
+            push(&mut t, "d_ffn_hidden", Module::Ffn, Phase::Transient, 2 * hid);
+            if mode == Mode::Lora {
+                push(&mut t, "ffn_lora_mid", Module::Ffn, Phase::SavedActivation, 2 * tok * r * F32);
+            }
+        }
+        Mode::Spt => {
+            // Routed FFN: only the activated beta fraction of the hidden
+            // activation is materialized (capacity slots), plus routing
+            // metadata.  Paper Table 4: FFN memory drops less than MHA
+            // ("the sizes of the input, output, and weight tensors remain
+            // unchanged").
+            let g = cfg.ffn_groups as u64;
+            let ga = cfg.sparsity.active_groups(cfg.ffn_groups) as u64;
+            let hid_active = tok * f * ga * F32 / g;
+            push(&mut t, "ffn_hidden_routed", Module::Ffn, Phase::SavedActivation, hid_active);
+            push(&mut t, "d_ffn_hidden_routed", Module::Ffn, Phase::Transient, 2 * hid_active);
+            push(&mut t, "router_scores", Module::Ffn, Phase::SavedActivation, tok * g * F32);
+            push(&mut t, "block_assignment", Module::Ffn, Phase::SavedActivation, tok * ga * I32);
+            push(&mut t, "ffn_lora_mid", Module::Ffn, Phase::SavedActivation, 2 * tok * r * F32);
+        }
+    }
+    // Residual stream + LN activations (shared).
+    push(&mut t, "residual+ln", Module::Shared, Phase::SavedActivation, 3 * tok * d * F32);
+
+    MemBreakdown { tensors: t }
+}
+
+/// Convenience: peak bytes for one module only (Table 1/4 columns).
+pub fn module_peak(cfg: &BlockConfig, mode: Mode, wl: &BlockWorkload, module: Module) -> u64 {
+    block_peak(cfg, mode, wl).module_peak(module)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn wl() -> BlockWorkload {
+        BlockWorkload { batch: 16, seq: 512 }
+    }
+
+    #[test]
+    fn table1_shape_mha_dominates_dense_ffn_dominates_nothing() {
+        // Paper Table 1 (OPT-2048, bs16, seq512): MHA >> FFN in peak memory
+        // for Full/LoRA; SPT shrinks MHA by >2x.
+        let cfg = presets::block("opt-2048").unwrap();
+        let full = block_peak(&cfg, Mode::Full, &wl());
+        let lora = block_peak(&cfg, Mode::Lora, &wl());
+        let spt = block_peak(&cfg, Mode::Spt, &wl());
+        assert!(full.module_peak(Module::Mha) > full.module_peak(Module::Ffn));
+        assert!(lora.module_peak(Module::Mha) > lora.module_peak(Module::Ffn));
+        let ratio = lora.module_peak(Module::Mha) as f64
+            / spt.module_peak(Module::Mha) as f64;
+        assert!(ratio > 2.0, "MHA LoRA/SPT ratio {ratio}");
+    }
+
+    #[test]
+    fn table4_sparse_mha_memory_shrinks_with_l() {
+        let cfg = presets::block("opt-2048").unwrap();
+        let mut c14 = cfg.clone();
+        c14.sparsity.mha_num = 1;
+        c14.sparsity.mha_den = 4;
+        let mut c18 = cfg.clone();
+        c18.sparsity.mha_den = 8;
+        let m14 = module_peak(&c14, Mode::Spt, &wl(), Module::Mha);
+        let m18 = module_peak(&c18, Mode::Spt, &wl(), Module::Mha);
+        assert!(m18 < m14);
+    }
+
+    #[test]
+    fn ffn_memory_reduction_is_modest() {
+        // Paper: "peak memory reduction brought by routed FFN is less
+        // significant" — FFN SPT/LoRA stays within [0.5, 1.0].
+        let cfg = presets::block("opt-2048").unwrap();
+        let lora = module_peak(&cfg, Mode::Lora, &wl(), Module::Ffn);
+        let spt = module_peak(&cfg, Mode::Spt, &wl(), Module::Ffn);
+        let ratio = spt as f64 / lora as f64;
+        assert!(ratio > 0.4 && ratio < 1.0, "{ratio}");
+    }
+
+    #[test]
+    fn activations_dominate_params_at_batch16() {
+        // Paper §6.2 Discussions: at bs 16 x seq 512, activations (not
+        // parameters) dominate, which is why LoRA's memory win is limited.
+        let cfg = presets::block("opt-2048").unwrap();
+        let lora = block_peak(&cfg, Mode::Lora, &wl());
+        assert!(lora.saved_activation_bytes() > lora.persistent_bytes());
+    }
+
+    #[test]
+    fn breakdown_sums_are_consistent() {
+        let cfg = presets::block("opt-1024").unwrap();
+        for mode in Mode::ALL {
+            let bd = block_peak(&cfg, mode, &wl());
+            let by_module: u64 = [Module::Mha, Module::Ffn, Module::Shared]
+                .into_iter()
+                .map(|m| bd.module_peak(m))
+                .sum();
+            // module peaks overlap on transient maxima; total peak must be
+            // <= the sum but >= each individual module.
+            assert!(bd.peak_bytes() <= by_module + bd.transient_bytes() * 2);
+            assert!(bd.peak_bytes() >= bd.module_peak(Module::Mha));
+        }
+    }
+}

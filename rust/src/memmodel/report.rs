@@ -1,0 +1,66 @@
+//! Human-readable memory reports (feeds the bench harness tables).
+
+use super::block::{MemBreakdown, Module, Phase};
+use crate::util::fmt_bytes;
+
+impl MemBreakdown {
+    /// Multi-line report grouped by phase, largest first.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (phase, label) in [
+            (Phase::Weights, "weights"),
+            (Phase::Gradients, "gradients"),
+            (Phase::Optimizer, "optimizer"),
+            (Phase::SavedActivation, "saved activations"),
+            (Phase::Transient, "transient (max)"),
+        ] {
+            let mut rows: Vec<_> = self
+                .tensors
+                .iter()
+                .filter(|t| t.phase == phase)
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            rows.sort_by(|a, b| b.bytes.cmp(&a.bytes));
+            let total: u64 = rows.iter().map(|t| t.bytes).sum();
+            out.push_str(&format!("  {label} ({}):\n", fmt_bytes(total)));
+            for t in rows {
+                out.push_str(&format!(
+                    "    {:<24} {:>12}  [{}]\n",
+                    t.name,
+                    fmt_bytes(t.bytes),
+                    match t.module {
+                        Module::Mha => "mha",
+                        Module::Ffn => "ffn",
+                        Module::Shared => "shared",
+                    }
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "  peak = {} (persistent {} + saved {} + transient {})\n",
+            fmt_bytes(self.peak_bytes()),
+            fmt_bytes(self.persistent_bytes()),
+            fmt_bytes(self.saved_activation_bytes()),
+            fmt_bytes(self.transient_bytes()),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{presets, Mode};
+    use crate::memmodel::block::{block_peak, BlockWorkload};
+
+    #[test]
+    fn render_contains_key_tensors() {
+        let cfg = presets::block("opt-2048").unwrap();
+        let bd = block_peak(&cfg, Mode::Spt, &BlockWorkload { batch: 16, seq: 512 });
+        let s = bd.render();
+        assert!(s.contains("attn_vals(nxL)"));
+        assert!(s.contains("peak = "));
+        assert!(s.contains("saved activations"));
+    }
+}

@@ -1,0 +1,50 @@
+//! Metrics: wall-clock timers with robust statistics, counters, and the
+//! table renderer used by every bench target (no `criterion` offline —
+//! this module is the measurement harness).
+
+pub mod table;
+pub mod timer;
+
+pub use table::Table;
+pub use timer::{bench, BenchResult, Stopwatch};
+
+/// Simple monotonically increasing counters keyed by name.
+#[derive(Debug, Default)]
+pub struct Counters {
+    map: std::collections::BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &str, v: u64) {
+        *self.map.entry(key.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.map.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.add("steps", 1);
+        c.add("steps", 2);
+        c.add("tokens", 512);
+        assert_eq!(c.get("steps"), 3);
+        assert_eq!(c.get("tokens"), 512);
+        assert_eq!(c.get("missing"), 0);
+        assert_eq!(c.iter().count(), 2);
+    }
+}

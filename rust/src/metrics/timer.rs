@@ -1,0 +1,139 @@
+//! Benchmark timing: warmup + N samples + robust statistics.
+//! Criterion-lite, built for this repo's offline registry.
+
+use std::time::Instant;
+
+/// Statistics over one benchmarked operation.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        match s.len() {
+            0 => 0.0,
+            n if n % 2 == 1 => s[n / 2],
+            n => 0.5 * (s[n / 2 - 1] + s[n / 2]),
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    /// "12.3 ms ± 0.4" style summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ± {}",
+            crate::util::fmt_duration(self.median()),
+            crate::util::fmt_duration(self.stddev())
+        )
+    }
+}
+
+/// Run `f` with `warmup` discarded iterations then `samples` timed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples: out }
+}
+
+/// Accumulating stopwatch for phase breakdowns (Table 5-style).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    phases: std::collections::BTreeMap<String, (u64, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time one closure under a phase label.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let e = self.phases.entry(phase.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        out
+    }
+
+    /// (phase, calls, total seconds) sorted by total descending.
+    pub fn breakdown(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<_> = self
+            .phases
+            .iter()
+            .map(|(k, &(c, s))| (k.clone(), c, s))
+            .collect();
+        v.sort_by(|a, b| b.2.total_cmp(&a.2));
+        v
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.values().map(|&(_, s)| s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 10);
+        assert!(r.mean() >= 0.0);
+        assert!(r.min() <= r.median());
+        assert!(r.median() <= r.mean() + r.stddev() + 1e-9);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        let r = BenchResult { name: "x".into(), samples: vec![3.0, 1.0, 2.0] };
+        assert_eq!(r.median(), 2.0);
+        let r2 = BenchResult { name: "x".into(), samples: vec![4.0, 1.0, 2.0, 3.0] };
+        assert_eq!(r2.median(), 2.5);
+    }
+
+    #[test]
+    fn stopwatch_breakdown_ordering() {
+        let mut sw = Stopwatch::new();
+        sw.time("fast", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        sw.time("slow", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        sw.time("slow", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        let bd = sw.breakdown();
+        assert_eq!(bd[0].0, "slow");
+        assert_eq!(bd[0].1, 2);
+        assert!(sw.total() > 0.009);
+    }
+}

@@ -1,0 +1,260 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! from the coordinator's hot path.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (jax >= 0.5 protos have 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Two execution surfaces:
+//! * [`Engine::run`] — literals in, host tensors out.  Convenient; copies
+//!   every operand host<->device per call.
+//! * [`Engine::run_buffers`] / [`DeviceState`] — device buffers stay
+//!   resident across steps (params/optimizer state in a training loop);
+//!   only tokens/targets are uploaded per step and only the loss scalar is
+//!   fetched.  This is the fast path the trainer uses.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// Cumulative per-artifact execution statistics (Table 5's kernel
+/// breakdown is assembled from these).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// The PJRT engine: one CPU client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifact directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let exe = std::sync::Arc::new(exe);
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .compile_secs += dt;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Validate inputs against the manifest signature.
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !t.matches(s) {
+                bail!(
+                    "artifact '{}' input {} ({}): expected {:?} {:?}, got {:?} {:?}",
+                    spec.name,
+                    i,
+                    spec.input_paths.get(i).map(String::as_str).unwrap_or("?"),
+                    s.dtype,
+                    s.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors (checked against the manifest signature).
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        self.check_inputs(&spec, inputs)?;
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = Self::collect_outputs(&result)?;
+        self.record(name, t0.elapsed().as_secs_f64());
+        if out.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}': manifest declares {} outputs, runtime produced {}",
+                spec.outputs.len(),
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute with device-resident buffers; returns output buffers
+    /// without copying them to the host.
+    pub fn run_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let mut result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        self.record(name, t0.elapsed().as_secs_f64());
+        if result.len() != 1 {
+            bail!("expected single-replica execution");
+        }
+        Ok(result.remove(0))
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let lit = t.to_literal()?;
+        self.client
+            .buffer_from_host_literal(None, &lit)
+            .context("buffer_from_host_literal")
+    }
+
+    /// Download a device buffer (decomposing the jax 1-tuple convention is
+    /// the caller's job via `collect_outputs` when using `run`).
+    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync()?;
+        HostTensor::from_literal(&lit)
+    }
+
+    fn collect_outputs(
+        result: &[Vec<xla::PjRtBuffer>],
+    ) -> Result<Vec<HostTensor>> {
+        if result.len() != 1 {
+            bail!("expected single replica, got {}", result.len());
+        }
+        let bufs = &result[0];
+        // aot.py lowers with return_tuple=True: one tuple buffer that
+        // to_literal_sync materializes as a tuple literal.
+        if bufs.len() == 1 {
+            let mut lit = bufs[0].to_literal_sync()?;
+            let shape = lit.shape()?;
+            if matches!(shape, xla::Shape::Tuple(_)) {
+                let parts = lit.decompose_tuple()?;
+                return parts
+                    .iter()
+                    .map(HostTensor::from_literal)
+                    .collect::<Result<_>>();
+            }
+            return Ok(vec![HostTensor::from_literal(&lit)?]);
+        }
+        bufs.iter()
+            .map(|b| self_download(b))
+            .collect::<Result<_>>()
+    }
+
+    fn record(&self, name: &str, secs: f64) {
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += secs;
+    }
+
+    /// Snapshot of per-artifact execution stats.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
+        v
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.lock().unwrap().clear();
+    }
+}
+
+fn self_download(buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+    let lit = buf.to_literal_sync()?;
+    HostTensor::from_literal(&lit)
+}
+
+/// Device-resident training state: params + optimizer buffers that stay on
+/// the device between steps (the fast path).
+pub struct DeviceState {
+    pub buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl DeviceState {
+    pub fn from_host(engine: &Engine, tensors: &[HostTensor]) -> Result<Self> {
+        let buffers = tensors
+            .iter()
+            .map(|t| engine.upload(t))
+            .collect::<Result<_>>()?;
+        Ok(DeviceState { buffers })
+    }
+
+    pub fn to_host(&self, engine: &Engine) -> Result<Vec<HostTensor>> {
+        self.buffers.iter().map(|b| engine.download(b)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+}

@@ -1,0 +1,101 @@
+//! Goldens: numeric validation of the python -> HLO -> rust round trip.
+//!
+//! `aot.py --goldens` stores sample inputs/outputs for the kernel-level
+//! artifacts; [`check_artifact`] replays the inputs through the PJRT engine
+//! and compares against the python-computed outputs.  This is the
+//! cross-language equivalent of the paper's Fig. 11 unit tests.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::Engine;
+use super::manifest::{DType, TensorSpec};
+use super::tensor::HostTensor;
+use crate::util::json::{parse, Json};
+
+/// One golden case: concrete inputs and expected outputs.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub name: String,
+    pub inputs: Vec<HostTensor>,
+    pub outputs: Vec<HostTensor>,
+}
+
+fn tensor_from_json(spec_j: &Json, data_j: &Json) -> Result<HostTensor> {
+    let shape: Vec<usize> = spec_j
+        .get("shape")
+        .as_arr()
+        .context("golden shape")?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(0))
+        .collect();
+    let dtype = DType::parse(spec_j.get("dtype").as_str().context("golden dtype")?)?;
+    let spec = TensorSpec { shape: shape.clone(), dtype };
+    let flat = data_j.as_arr().context("golden data")?;
+    if flat.len() != spec.elements() {
+        bail!("golden data len {} != {}", flat.len(), spec.elements());
+    }
+    Ok(match dtype {
+        DType::F32 => HostTensor::f32(
+            shape,
+            flat.iter().map(|x| x.as_f64().unwrap_or(0.0) as f32).collect(),
+        ),
+        DType::I32 | DType::U32 | DType::Bool => HostTensor::i32(
+            shape,
+            flat.iter().map(|x| x.as_i64().unwrap_or(0) as i32).collect(),
+        ),
+    })
+}
+
+/// Load all goldens from `artifacts/goldens.json`.
+pub fn load_goldens(dir: impl AsRef<Path>) -> Result<Vec<Golden>> {
+    let path = dir.as_ref().join("goldens.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?}"))?;
+    let root = parse(&text).map_err(|e| anyhow::anyhow!("goldens: {e}"))?;
+    let obj = root.as_obj().context("goldens root")?;
+    let mut out = Vec::new();
+    for (name, j) in obj {
+        let ispecs = j.get("input_specs").as_arr().context("input_specs")?;
+        let idata = j.get("inputs").as_arr().context("inputs")?;
+        let ospecs = j.get("output_specs").as_arr().context("output_specs")?;
+        let odata = j.get("outputs").as_arr().context("outputs")?;
+        let inputs = ispecs
+            .iter()
+            .zip(idata)
+            .map(|(s, d)| tensor_from_json(s, d))
+            .collect::<Result<_>>()?;
+        let outputs = ospecs
+            .iter()
+            .zip(odata)
+            .map(|(s, d)| tensor_from_json(s, d))
+            .collect::<Result<_>>()?;
+        out.push(Golden { name: name.clone(), inputs, outputs });
+    }
+    Ok(out)
+}
+
+/// Replay one golden through the engine; returns max |diff| across outputs.
+pub fn check_artifact(engine: &Engine, golden: &Golden, atol: f32) -> Result<f32> {
+    let got = engine.run(&golden.name, &golden.inputs)?;
+    if got.len() != golden.outputs.len() {
+        bail!(
+            "golden '{}': expected {} outputs, got {}",
+            golden.name,
+            golden.outputs.len(),
+            got.len()
+        );
+    }
+    let mut max_diff = 0.0f32;
+    for (g, want) in got.iter().zip(&golden.outputs) {
+        // Mixed tolerance: GEMM reduction order differs across XLA
+        // backends; excess = |a-b| - rtol*|want| must stay under atol.
+        let d = want.max_tol_excess(g, 1e-4)?;
+        max_diff = max_diff.max(d);
+    }
+    if max_diff > atol {
+        bail!("golden '{}': tolerance excess {} > atol {}", golden.name, max_diff, atol);
+    }
+    Ok(max_diff)
+}

@@ -1,0 +1,231 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! lowers every entry point to HLO text) and the rust execution engine.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor in an artifact signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    Bool,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            "bool" => DType::Bool,
+            other => bail!("unsupported dtype in manifest: {other}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::Bool => 1,
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("spec.shape missing")?
+            .iter()
+            .map(|x| x.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.get("dtype").as_str().context("spec.dtype")?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub input_paths: Vec<String>,
+    pub outputs: Vec<TensorSpec>,
+    pub output_paths: Vec<String>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Metadata lookup helpers.
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).as_str()
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).as_usize()
+    }
+
+    /// Total bytes across inputs (used by the memory model for I/O
+    /// accounting and by the engine for buffer budgeting).
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(TensorSpec::bytes).sum()
+    }
+
+    pub fn output_bytes(&self) -> usize {
+        self.outputs.iter().map(TensorSpec::bytes).sum()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = crate::util::json::parse(text)
+            .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        let obj = root
+            .get("artifacts")
+            .as_obj()
+            .context("manifest.artifacts missing")?;
+        for (name, j) in obj {
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(j.get("file").as_str().context("file")?),
+                inputs: j
+                    .get("inputs")
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                input_paths: str_list(j.get("input_paths")),
+                outputs: j
+                    .get("outputs")
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                output_paths: str_list(j.get("output_paths")),
+                meta: j.get("meta").clone(),
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// All artifacts whose metadata matches every (key, value) pair.
+    pub fn find_by_meta(&self, pairs: &[(&str, &str)]) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| {
+                pairs.iter().all(|(k, v)| a.meta_str(k) == Some(*v))
+            })
+            .collect()
+    }
+}
+
+fn str_list(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|v| {
+            v.iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "foo": {
+          "file": "foo.hlo.txt",
+          "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+          "input_paths": ["[0]"],
+          "outputs": [{"shape": [], "dtype": "int32"}],
+          "output_paths": ["[0]"],
+          "meta": {"kind": "kernel", "batch": 4}
+        }
+      },
+      "generated_unix": 0
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.get("foo").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(a.inputs[0].bytes(), 24);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.meta_usize("batch"), Some(4));
+        assert_eq!(a.file, PathBuf::from("/tmp/a/foo.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("bar").is_err());
+    }
+
+    #[test]
+    fn find_by_meta_filters() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.find_by_meta(&[("kind", "kernel")]).len(), 1);
+        assert_eq!(m.find_by_meta(&[("kind", "block")]).len(), 0);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::Bool.size_bytes(), 1);
+        assert!(DType::parse("float64").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 runtime: PJRT client wrapper that loads and executes the AOT
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! * [`manifest`] — parsed `artifacts/manifest.json` (signatures + metadata)
+//! * [`tensor`]   — host tensors + literal marshalling
+//! * [`engine`]   — compile cache + execution (literal and buffer paths)
+//! * [`goldens`]  — numeric round-trip validation against python outputs
+
+pub mod engine;
+pub mod goldens;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{DeviceState, Engine, ExecStats};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use tensor::HostTensor;

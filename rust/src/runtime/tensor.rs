@@ -1,0 +1,232 @@
+//! Host tensors + literal marshalling between the coordinator and PJRT.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+use crate::util::rng::Rng;
+
+/// A host-side tensor: the coordinator's working representation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros(spec: &TensorSpec) -> Result<Self> {
+        let n = spec.elements();
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: vec![0.0; n] },
+            DType::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: vec![0; n] },
+            other => bail!("zeros: unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![x] }
+    }
+
+    /// Standard-normal tensor (scaled) — for synthetic workloads.
+    pub fn randn(shape: Vec<usize>, scale: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * scale).collect();
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar extraction (0-d or 1-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            HostTensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            _ => bail!("not a scalar (shape {:?})", self.shape()),
+        }
+    }
+
+    /// Check this tensor matches a manifest spec.
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape() == spec.shape.as_slice() && self.dtype() == spec.dtype
+    }
+
+    /// Convert to an XLA literal for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        };
+        lit.reshape(&dims).context("literal reshape")
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            xla::ElementType::Pred => {
+                // Bools: widen to i32 via an XLA-side convert (the crate
+                // refuses to read Pred buffers as u8 directly).
+                let as_i32 = lit.convert(xla::PrimitiveType::S32)?;
+                Ok(HostTensor::I32 { shape: dims, data: as_i32.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Max of |a-b| - rtol*|b| (0 when within mixed tolerance everywhere).
+    /// Different XLA backends reassociate GEMM reductions, so float
+    /// comparisons need a relative term; integer tensors compare exactly.
+    pub fn max_tol_excess(&self, other: &HostTensor, rtol: f32) -> Result<f32> {
+        match (self, other) {
+            (HostTensor::F32 { data: a, .. }, HostTensor::F32 { data: b, .. }) => {
+                if a.len() != b.len() {
+                    anyhow::bail!("length mismatch {} vs {}", a.len(), b.len());
+                }
+                Ok(a.iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs() - rtol * x.abs())
+                    .fold(0.0f32, f32::max))
+            }
+            _ => self.max_abs_diff(other),
+        }
+    }
+
+    /// Max |a - b| against another tensor (goldens comparison).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        match (self, other) {
+            (HostTensor::F32 { data: a, .. }, HostTensor::F32 { data: b, .. }) => {
+                if a.len() != b.len() {
+                    bail!("length mismatch {} vs {}", a.len(), b.len());
+                }
+                Ok(a.iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max))
+            }
+            (HostTensor::I32 { data: a, .. }, HostTensor::I32 { data: b, .. }) => {
+                if a.len() != b.len() {
+                    bail!("length mismatch {} vs {}", a.len(), b.len());
+                }
+                Ok(a.iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs() as f32)
+                    .fold(0.0f32, f32::max))
+            }
+            _ => bail!("dtype mismatch"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn zeros_shapes() {
+        let t = HostTensor::zeros(&spec(&[2, 3], DType::F32)).unwrap();
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.bytes(), 24);
+        assert!(t.matches(&spec(&[2, 3], DType::F32)));
+        assert!(!t.matches(&spec(&[3, 2], DType::F32)));
+        assert!(!t.matches(&spec(&[2, 3], DType::I32)));
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert_eq!(HostTensor::scalar_i32(-3).scalar().unwrap(), -3.0);
+        assert!(HostTensor::f32(vec![2], vec![1.0, 2.0]).scalar().is_err());
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a = HostTensor::randn(vec![4, 4], 1.0, &mut r1);
+        let b = HostTensor::randn(vec![4, 4], 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn diff_computation() {
+        let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::f32(vec![3], vec![1.5, 2.0, 2.0]);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+        let c = HostTensor::i32(vec![1], vec![5]);
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![3], vec![-1, 0, 7]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,191 @@
+//! End-to-end attention pipelines over the substrate (dense baseline and
+//! sparse MHA), plus the attention-weight CDF measurement behind Fig. 3.
+
+use super::csr::Csr;
+use super::matrix::Matrix;
+use super::pq::{self, Codebooks};
+use super::topl;
+
+/// Vanilla dense attention for one head: `softmax(Q K^T / sqrt(d)) V`.
+pub fn dense_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul(&k.transpose()).map(|x| x * scale);
+    if causal {
+        for i in 0..logits.rows {
+            for j in (i + 1)..logits.cols {
+                *logits.at_mut(i, j) = -1e30;
+            }
+        }
+    }
+    logits.softmax_rows().matmul(v)
+}
+
+/// Full sparse MHA for one head (paper Alg. 1): PQ quantize -> bucket-sort
+/// top-L -> SDDMM -> softmax -> SpMM.  Returns (output, attention CSR).
+pub fn sparse_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    cb: &Codebooks,
+    l: usize,
+    causal: bool,
+) -> (Matrix, Csr) {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let cq = pq::quantize(&q.data, cb);
+    let ck = pq::quantize(&k.data, cb);
+    let idx = topl::select(&cq, &ck, l, causal);
+    let mut a = Csr::from_topl(&idx, k.rows);
+    let q_scaled = q.map(|x| x * scale);
+    a.sddmm(&q_scaled, k);
+    // Causal re-mask: padding slots may reference future keys.
+    if causal {
+        for r in 0..a.rows {
+            for p in a.row_range(r) {
+                if a.indices[p] as usize > r {
+                    a.values[p] = -1e30;
+                }
+            }
+        }
+    }
+    a.softmax_rows();
+    let y = a.spmm(v);
+    (y, a)
+}
+
+/// CDF of sorted softmax attention weights, averaged over queries
+/// (regenerates paper Fig. 3).  Returns `points` (fraction-kept, mass).
+pub fn attention_weight_cdf(
+    q: &Matrix,
+    k: &Matrix,
+    points: usize,
+    causal: bool,
+) -> Vec<(f32, f32)> {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul(&k.transpose()).map(|x| x * scale);
+    if causal {
+        for i in 0..logits.rows {
+            for j in (i + 1)..logits.cols {
+                *logits.at_mut(i, j) = -1e30;
+            }
+        }
+    }
+    let w = logits.softmax_rows();
+    let n = w.cols;
+    // Average sorted-descending weight profile across rows.
+    let mut profile = vec![0.0f64; n];
+    for r in 0..w.rows {
+        let mut row: Vec<f32> = w.row(r).to_vec();
+        row.sort_by(|a, b| b.total_cmp(a));
+        for (p, x) in profile.iter_mut().zip(&row) {
+            *p += *x as f64;
+        }
+    }
+    for p in profile.iter_mut() {
+        *p /= w.rows as f64;
+    }
+    // Cumulative mass at `points` evenly spaced kept-fractions.
+    let mut cdf = Vec::with_capacity(points);
+    let mut acc = 0.0f64;
+    let mut next_point = 1;
+    for (i, p) in profile.iter().enumerate() {
+        acc += p;
+        let frac = (i + 1) as f32 / n as f32;
+        if frac >= next_point as f32 / points as f32 {
+            cdf.push((frac, acc as f32));
+            next_point += 1;
+        }
+    }
+    cdf
+}
+
+/// Relative approximation error of sparse vs dense attention output
+/// (the quality knob behind Fig. 10's MHA axis).
+pub fn sparse_vs_dense_error(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    cb: &Codebooks,
+    l: usize,
+) -> f32 {
+    let (ys, _) = sparse_attention(q, k, v, cb, l, false);
+    let yd = dense_attention(q, k, v, false);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in ys.data.iter().zip(&yd.data) {
+        num += ((a - b) * (a - b)) as f64;
+        den += (b * b) as f64;
+    }
+    (num.sqrt() / den.sqrt().max(1e-30)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn correlated_qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let noise = Matrix::randn(n, d, 0.4, &mut rng);
+        let q = Matrix::from_vec(
+            n,
+            d,
+            k.data.iter().zip(&noise.data).map(|(a, b)| 2.0 * a + b).collect(),
+        );
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn l_equals_n_matches_dense() {
+        let (q, k, v) = correlated_qkv(24, 16, 0);
+        let mut rng = Rng::new(9);
+        let cb = Codebooks::random(2, 4, 8, &mut rng);
+        let (ys, _) = sparse_attention(&q, &k, &v, &cb, 24, false);
+        let yd = dense_attention(&q, &k, &v, false);
+        assert!(ys.max_abs_diff(&yd) < 1e-4, "{}", ys.max_abs_diff(&yd));
+    }
+
+    #[test]
+    fn sparse_error_decreases_with_l() {
+        let (q, k, v) = correlated_qkv(64, 32, 1);
+        let mut rng = Rng::new(10);
+        let mut cb = Codebooks::random(4, 8, 8, &mut rng);
+        for _ in 0..5 {
+            pq::codebook_update(&k.data, &mut cb, 1.0);
+        }
+        let e8 = sparse_vs_dense_error(&q, &k, &v, &cb, 8);
+        let e32 = sparse_vs_dense_error(&q, &k, &v, &cb, 32);
+        let e64 = sparse_vs_dense_error(&q, &k, &v, &cb, 64);
+        assert!(e64 < 1e-4, "L=n must be exact, got {e64}");
+        assert!(e32 <= e8 + 1e-5, "{e32} > {e8}");
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_skewed_for_correlated_data() {
+        let (q, k, _) = correlated_qkv(128, 64, 2);
+        let cdf = attention_weight_cdf(&q, &k, 20, false);
+        for w in cdf.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-6);
+        }
+        // Fig. 3 shape: top 15% of weights carry most of the mass.
+        let at15 = cdf
+            .iter()
+            .find(|(f, _)| *f >= 0.15)
+            .map(|(_, m)| *m)
+            .unwrap();
+        assert!(at15 > 0.5, "mass at 15% = {at15}");
+        let last = cdf.last().unwrap().1;
+        assert!((last - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn causal_attention_ignores_future() {
+        let (q, k, v) = correlated_qkv(16, 8, 3);
+        let y = dense_attention(&q, &k, &v, true);
+        // Row 0 attends only to key 0 -> output equals v[0].
+        for c in 0..8 {
+            assert!((y.at(0, c) - v.at(0, c)).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! BSpMV — blocked sparse matrix-vector multiply (paper §5.2, Alg. 4).
+//!
+//! The routed FFN's execution strategy: iterate over weight blocks, gather
+//! the tokens that activated each block, run dense GEMMs, scatter results
+//! back.  This is the rust-native twin of
+//! `python/compile/kernels/routed_ffn.py` (which uses the static-capacity
+//! TPU formulation); here shapes are dynamic, as in the paper's CUDA code.
+
+use super::matrix::Matrix;
+
+/// Router output for a token batch.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    /// `[nt][G]` activation mask.
+    pub mask: Vec<Vec<bool>>,
+    /// `[nt][G]` gate value (softmax over selected scores * G').
+    pub gate: Vec<Vec<f32>>,
+    pub g: usize,
+    pub g_active: usize,
+}
+
+/// Compute routing from router scores (top-G' by |score|, gated by a
+/// softmax over the selected scores — matches the L1 kernel semantics).
+pub fn route(scores: &Matrix, g_active: usize) -> Routing {
+    let nt = scores.rows;
+    let g = scores.cols;
+    assert!(g_active >= 1 && g_active <= g);
+    let mut mask = vec![vec![false; g]; nt];
+    let mut gate = vec![vec![0.0f32; g]; nt];
+    for t in 0..nt {
+        let row = scores.row(t);
+        // top-G' by |score|, ties by lower index.
+        let mut order: Vec<usize> = (0..g).collect();
+        order.sort_by(|&a, &b| {
+            row[b].abs().total_cmp(&row[a].abs()).then(a.cmp(&b))
+        });
+        let sel = &order[..g_active];
+        let mx = sel.iter().map(|&j| row[j]).fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &j in sel {
+            denom += (row[j] - mx).exp();
+        }
+        for &j in sel {
+            mask[t][j] = true;
+            gate[t][j] = (row[j] - mx).exp() / denom.max(1e-30) * g_active as f32;
+        }
+    }
+    Routing { mask, gate, g, g_active }
+}
+
+/// Routed FFN via BSpMV (paper Alg. 4).
+///
+/// `w_i`: `[d, D]` split into G column blocks; `w_o`: `[D, d]` split into G
+/// row blocks.  For each block g: gather tokens with `mask[t][g]`, compute
+/// `relu(X_g W_I[g]) * gate` then `@ W_O[g]`, scatter-add into Y.
+pub fn routed_ffn(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing) -> Matrix {
+    let nt = x.rows;
+    let d = x.cols;
+    let dd = w_i.cols;
+    let g = routing.g;
+    assert_eq!(dd % g, 0);
+    let dg = dd / g;
+    let mut y = Matrix::zeros(nt, d);
+    for gi in 0..g {
+        // Select tokens (Alg. 4 lines 2-3) — the paper's index_get.
+        let tokens: Vec<usize> =
+            (0..nt).filter(|&t| routing.mask[t][gi]).collect();
+        if tokens.is_empty() {
+            continue;
+        }
+        // Gather X_g.
+        let mut xg = Matrix::zeros(tokens.len(), d);
+        for (r, &t) in tokens.iter().enumerate() {
+            xg.row_mut(r).copy_from_slice(x.row(t));
+        }
+        // Block of W_I: columns [gi*dg, (gi+1)*dg).
+        let mut wi_g = Matrix::zeros(d, dg);
+        for r in 0..d {
+            wi_g.row_mut(r)
+                .copy_from_slice(&w_i.row(r)[gi * dg..(gi + 1) * dg]);
+        }
+        // Inner projection + ReLU (line 4), gated.
+        let mut h = xg.matmul(&wi_g).relu();
+        for (r, &t) in tokens.iter().enumerate() {
+            let gate = routing.gate[t][gi];
+            for v in h.row_mut(r) {
+                *v *= gate;
+            }
+        }
+        // Block of W_O: rows [gi*dg, (gi+1)*dg).
+        let wo_g = Matrix::from_vec(
+            dg,
+            d,
+            w_o.data[gi * dg * d..(gi + 1) * dg * d].to_vec(),
+        );
+        // Outer projection + scatter (line 5) — the paper's index_put.
+        let yg = h.matmul(&wo_g);
+        for (r, &t) in tokens.iter().enumerate() {
+            for (o, &v) in y.row_mut(t).iter_mut().zip(yg.row(r)) {
+                *o += v;
+            }
+        }
+    }
+    y
+}
+
+/// Dense FFN baseline with the same gating (what BSpMV must equal).
+pub fn dense_gated_ffn(
+    x: &Matrix,
+    w_i: &Matrix,
+    w_o: &Matrix,
+    routing: &Routing,
+) -> Matrix {
+    let dd = w_i.cols;
+    let g = routing.g;
+    let dg = dd / g;
+    let h = x.matmul(w_i).relu();
+    let mut hg = h;
+    for t in 0..x.rows {
+        for gi in 0..g {
+            let gate = routing.gate[t][gi];
+            for c in gi * dg..(gi + 1) * dg {
+                *hg.at_mut(t, c) *= gate;
+            }
+        }
+    }
+    hg.matmul(w_o)
+}
+
+/// FLOPs of the routed FFN (forward) — `beta` of the dense cost.
+pub fn routed_flops(nt: usize, d: usize, dd: usize, g: usize, g_active: usize) -> u64 {
+    // per active (token, block): 2*d*dg + 2*dg*d
+    let dg = (dd / g) as u64;
+    (nt as u64) * (g_active as u64) * 4 * (d as u64) * dg
+}
+
+/// FLOPs of the dense FFN (forward).
+pub fn dense_flops(nt: usize, d: usize, dd: usize) -> u64 {
+    4 * (nt as u64) * (d as u64) * (dd as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bspmv_equals_dense_gated_ffn() {
+        check(25, |g| {
+            let nt = g.usize_in(1, 32);
+            let d = g.usize_in(1, 12);
+            let gg = *g.pick(&[2usize, 4, 8]);
+            let dg = g.usize_in(1, 6);
+            let dd = gg * dg;
+            let ga = g.usize_in(1, gg);
+            let mut rng = g.rng().fork();
+            let x = Matrix::randn(nt, d, 1.0, &mut rng);
+            let wi = Matrix::randn(d, dd, 0.3, &mut rng);
+            let wo = Matrix::randn(dd, d, 0.3, &mut rng);
+            let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+            let routing = route(&scores, ga);
+            let y1 = routed_ffn(&x, &wi, &wo, &routing);
+            let y2 = dense_gated_ffn(&x, &wi, &wo, &routing);
+            prop_assert(
+                y1.max_abs_diff(&y2) < 1e-4,
+                format!("diff {}", y1.max_abs_diff(&y2)),
+            )
+        });
+    }
+
+    #[test]
+    fn routing_selects_exactly_g_active() {
+        check(25, |g| {
+            let nt = g.usize_in(1, 64);
+            let gg = *g.pick(&[4usize, 8]);
+            let ga = g.usize_in(1, gg);
+            let mut rng = g.rng().fork();
+            let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+            let r = route(&scores, ga);
+            for t in 0..nt {
+                let cnt = r.mask[t].iter().filter(|&&b| b).count();
+                prop_assert(cnt == ga, format!("token {t}: {cnt} != {ga}"))?;
+                let gate_sum: f32 = r.gate[t].iter().sum();
+                prop_assert(
+                    (gate_sum - ga as f32).abs() < 1e-4,
+                    format!("gate sum {gate_sum}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_blocks_active_with_zero_router_is_plain_ffn() {
+        let mut rng = Rng::new(3);
+        let (nt, d, dd, g) = (8, 4, 16, 4);
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, dd, 0.3, &mut rng);
+        let wo = Matrix::randn(dd, d, 0.3, &mut rng);
+        let scores = Matrix::zeros(nt, g);
+        let routing = route(&scores, g);
+        let y = routed_ffn(&x, &wi, &wo, &routing);
+        let want = x.matmul(&wi).relu().matmul(&wo);
+        assert!(y.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn flops_ratio_is_beta() {
+        let r = routed_flops(512, 2048, 8192, 8, 4) as f64
+            / dense_flops(512, 2048, 8192) as f64;
+        assert!((r - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,103 @@
+//! BSR-mask alternative for the routed FFN (paper §5.2 + Table 6).
+//!
+//! The rejected design the paper compares against: materialize a per-token
+//! block mask over the weight matrix and run masked dense computation.
+//! The paper reports this OOMs at [16, 512] tokens (masks ~200 GB expanded
+//! to weight shape); we reproduce the *accounting* exactly and provide a
+//! runnable small-scale implementation for the Table 6 bench.
+
+use super::bspmv::Routing;
+use super::matrix::Matrix;
+
+/// Bytes needed for expanded per-token weight masks — the quantity that
+/// explodes (paper: "the BSR masks take up 200GB").
+///
+/// Each token needs its own masked copy/mask of W_I (d x D) and W_O (D x d)
+/// at elementwise granularity for the naive masked-GEMM formulation.
+pub fn expanded_mask_bytes(nt: usize, d: usize, dd: usize) -> u64 {
+    2 * (nt as u64) * (d as u64) * (dd as u64) * 4
+}
+
+/// Bytes for the compressed BSR block-index representation itself,
+/// O(nt * n_blocks) (paper §5.2: "BSR requires O(n B) space").
+pub fn bsr_index_bytes(nt: usize, g: usize) -> u64 {
+    (nt as u64) * (g as u64) * 4 + (nt as u64 + 1) * 4
+}
+
+/// Masked-dense routed FFN: per token, zero out the non-activated weight
+/// blocks and run the dense math.  Numerically identical to BSpMV; used
+/// only at small scale to demonstrate the cost asymmetry.
+pub fn routed_ffn_bsr(
+    x: &Matrix,
+    w_i: &Matrix,
+    w_o: &Matrix,
+    routing: &Routing,
+) -> Matrix {
+    let nt = x.rows;
+    let d = x.cols;
+    let dd = w_i.cols;
+    let g = routing.g;
+    let dg = dd / g;
+    let mut y = Matrix::zeros(nt, d);
+    // Per token: build masked weight copies (the wasteful step), multiply.
+    for t in 0..nt {
+        let mut wi_t = w_i.clone(); // the per-token duplication the paper
+        let mut wo_t = w_o.clone(); // calls "a high overhead"
+        for gi in 0..g {
+            let gate = routing.gate[t][gi];
+            for r in 0..d {
+                for c in gi * dg..(gi + 1) * dg {
+                    *wi_t.at_mut(r, c) *= if routing.mask[t][gi] { 1.0 } else { 0.0 };
+                }
+            }
+            for r in gi * dg..(gi + 1) * dg {
+                for c in 0..d {
+                    // fold the gate into W_O so h*gate@W_O == h@(gate*W_O)
+                    *wo_t.at_mut(r, c) *= gate;
+                }
+            }
+        }
+        let xrow = Matrix::from_vec(1, d, x.row(t).to_vec());
+        let yrow = xrow.matmul(&wi_t).relu().matmul(&wo_t);
+        y.row_mut(t).copy_from_slice(yrow.row(0));
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::bspmv;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bsr_matches_bspmv_numerically() {
+        let mut rng = Rng::new(1);
+        let (nt, d, dd, g, ga) = (6, 4, 8, 4, 2);
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, dd, 0.4, &mut rng);
+        let wo = Matrix::randn(dd, d, 0.4, &mut rng);
+        let scores = Matrix::randn(nt, g, 1.0, &mut rng);
+        let routing = bspmv::route(&scores, ga);
+        let y_bsr = routed_ffn_bsr(&x, &wi, &wo, &routing);
+        let y_bspmv = bspmv::routed_ffn(&x, &wi, &wo, &routing);
+        assert!(
+            y_bsr.max_abs_diff(&y_bspmv) < 1e-4,
+            "{}",
+            y_bsr.max_abs_diff(&y_bspmv)
+        );
+    }
+
+    #[test]
+    fn paper_scale_mask_bytes_explode() {
+        // Paper's failing configuration: tokens [16, 512], OPT-2048 FFN.
+        let nt = 16 * 512;
+        let bytes = expanded_mask_bytes(nt, 2048, 8192);
+        // ~1.1 TB at elementwise f32 duplication; the paper quotes 200GB
+        // for its (coarser, block-level) variant — either way far beyond
+        // a 24 GB GPU.  Assert the order of magnitude.
+        assert!(bytes > 200_000_000_000, "{bytes}");
+        // Whereas the BSR *index* alone is tiny, and BSpMV needs no masks.
+        assert!(bsr_index_bytes(nt, 8) < 1_000_000);
+    }
+}

@@ -1,0 +1,28 @@
+//! Rust-native sparse substrate: the paper's algorithms implemented
+//! directly in rust.
+//!
+//! Two purposes:
+//!
+//! 1. **Baselines & alternatives** — Table 6 compares the bucket-sort
+//!    top-L against "Naive-PQ" (float scores + full sort) and BSpMV against
+//!    the BSR masking approach; those comparisons are regenerated here at
+//!    native speed, independent of the XLA runtime.
+//! 2. **Cross-validation** — the same contracts as the L1 Pallas kernels
+//!    (`python/compile/kernels/`), checked against each other through the
+//!    goldens round trip and through property tests, so a bug in either
+//!    implementation surfaces as a disagreement.
+//!
+//! Modules mirror the paper's §4–§5 structure.
+
+pub mod attention;
+pub mod bspmv;
+pub mod bsr;
+pub mod csr;
+pub mod matrix;
+pub mod naive_pq;
+pub mod pq;
+pub mod svd;
+pub mod topl;
+
+pub use csr::Csr;
+pub use matrix::Matrix;

@@ -1,0 +1,151 @@
+//! "Naive-PQ" baseline (paper Table 6): the standard PQ practice —
+//! asymmetric-distance float score tables + full float sort for top-L.
+//!
+//! The paper shows the bucket-sort implementation is ~4.6x faster because
+//! it never materializes or sorts floating-point scores.  This module
+//! exists so `benches/table6_alternatives.rs` can regenerate that
+//! comparison at native speed.
+
+use super::pq::Codebooks;
+
+/// Precomputed inner-product lookup tables: `tables[m][e1][e2] =
+/// c^m[e1] . c^m[e2]` — the "inner product table for each codebook".
+pub struct ScoreTables {
+    pub m: usize,
+    pub e: usize,
+    data: Vec<f32>, // [m * e * e]
+}
+
+impl ScoreTables {
+    pub fn build(cb: &Codebooks) -> Self {
+        let mut data = vec![0.0f32; cb.m * cb.e * cb.e];
+        for mi in 0..cb.m {
+            for e1 in 0..cb.e {
+                let c1 = cb.codeword(mi, e1);
+                for e2 in 0..cb.e {
+                    let c2 = cb.codeword(mi, e2);
+                    let dot: f32 = c1.iter().zip(c2).map(|(a, b)| a * b).sum();
+                    data[(mi * cb.e + e1) * cb.e + e2] = dot;
+                }
+            }
+        }
+        ScoreTables { m: cb.m, e: cb.e, data }
+    }
+
+    #[inline]
+    pub fn score(&self, codes_q: &[u8], codes_k: &[u8]) -> f32 {
+        let mut s = 0.0;
+        for mi in 0..self.m {
+            s += self.data
+                [(mi * self.e + codes_q[mi] as usize) * self.e + codes_k[mi] as usize];
+        }
+        s
+    }
+}
+
+/// Top-L by float ADC score + full sort (the expensive baseline).
+pub fn select(
+    codes_q: &[Vec<u8>],
+    codes_k: &[Vec<u8>],
+    tables: &ScoreTables,
+    l: usize,
+    causal: bool,
+) -> Vec<Vec<u32>> {
+    let nk = codes_k.len();
+    codes_q
+        .iter()
+        .enumerate()
+        .map(|(i, cq)| {
+            // Materialize all float scores (the memory cost Table 6 shows).
+            let mut scored: Vec<(f32, u32)> = (0..nk)
+                .map(|j| {
+                    let s = if causal && j > i {
+                        f32::NEG_INFINITY
+                    } else {
+                        tables.score(cq, &codes_k[j])
+                    };
+                    (s, j as u32)
+                })
+                .collect();
+            // Full float sort (the time cost Table 6 shows).
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            scored.into_iter().take(l).map(|(_, j)| j).collect()
+        })
+        .collect()
+}
+
+/// Bytes transiently needed per query row (scores + indices) — reported in
+/// the Table 6 bench as the memory overhead vs bucket sort.
+pub fn scratch_bytes_per_query(nk: usize) -> usize {
+    nk * (4 + 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pq;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tables_match_direct_dot() {
+        let mut rng = Rng::new(1);
+        let cb = Codebooks::random(3, 4, 8, &mut rng);
+        let t = ScoreTables::build(&cb);
+        let cq = vec![1u8, 3, 0];
+        let ck = vec![2u8, 3, 1];
+        let mut want = 0.0f32;
+        for mi in 0..3 {
+            let a = cb.codeword(mi, cq[mi] as usize);
+            let b = cb.codeword(mi, ck[mi] as usize);
+            want += a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        }
+        assert!((t.score(&cq, &ck) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn identical_codes_score_highest_for_adapted_codebooks() {
+        // After codebook adaptation on well-separated clusters, a key with
+        // the same codes as the query should land in the top-L.
+        let mut rng = Rng::new(2);
+        let mut cb = Codebooks::random(2, 4, 4, &mut rng);
+        let x = rng.normal_vec(128 * cb.d());
+        pq::codebook_update(&x, &mut cb, 1.0);
+        let codes = pq::quantize(&x[..16 * cb.d()], &cb);
+        let t = ScoreTables::build(&cb);
+        let sel = select(&codes, &codes, &t, 4, false);
+        // Each query's own row shares all codes -> must be selected unless
+        // 4+ other keys tie-beat it; allow majority.
+        let hits = sel
+            .iter()
+            .enumerate()
+            .filter(|(i, row)| row.contains(&(*i as u32)))
+            .count();
+        assert!(hits >= 10, "self-hits {hits}/16");
+    }
+
+    #[test]
+    fn prop_output_contract_matches_bucket_sort_shape() {
+        check(30, |g| {
+            let n = g.usize_in(2, 32);
+            let l = g.usize_in(1, n);
+            let m = g.usize_in(1, 6);
+            let e = g.usize_in(2, 8);
+            let mut rng = g.rng().fork();
+            let cb = Codebooks::random(m, e, 2, &mut rng);
+            let x = rng.normal_vec(n * cb.d());
+            let codes = pq::quantize(&x, &cb);
+            let t = ScoreTables::build(&cb);
+            let sel = select(&codes, &codes, &t, l, g.bool());
+            prop_assert(sel.len() == n, "rows")?;
+            prop_assert(
+                sel.iter().all(|r| r.len() == l),
+                "row length",
+            )?;
+            prop_assert(
+                sel.iter().flatten().all(|&j| (j as usize) < n),
+                "range",
+            )
+        });
+    }
+}

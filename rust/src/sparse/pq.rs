@@ -1,0 +1,209 @@
+//! Product quantization (paper §4.1, Alg. 2) — rust-native substrate.
+//!
+//! Mirrors `python/compile/kernels/pq.py`: per-subspace nearest codeword
+//! under squared L2, plus a k-means-style (DKM-flavoured) codebook refresh.
+
+use crate::util::rng::Rng;
+
+/// PQ codebooks: `m` subspaces × `e` codewords × `dsub` dims.
+#[derive(Debug, Clone)]
+pub struct Codebooks {
+    pub m: usize,
+    pub e: usize,
+    pub dsub: usize,
+    /// `[m * e * dsub]`, codeword (mi, ei) at `((mi * e) + ei) * dsub ..`.
+    pub data: Vec<f32>,
+}
+
+impl Codebooks {
+    pub fn random(m: usize, e: usize, dsub: usize, rng: &mut Rng) -> Self {
+        let data = rng.normal_vec(m * e * dsub);
+        Codebooks { m, e, dsub, data }
+    }
+
+    #[inline]
+    pub fn codeword(&self, mi: usize, ei: usize) -> &[f32] {
+        let off = (mi * self.e + ei) * self.dsub;
+        &self.data[off..off + self.dsub]
+    }
+
+    pub fn d(&self) -> usize {
+        self.m * self.dsub
+    }
+}
+
+/// Quantize `n` vectors of dim `m * dsub` -> codeword ids `[n][m]` (u8:
+/// E <= 256 always; the paper uses 16).
+pub fn quantize(x: &[f32], cb: &Codebooks) -> Vec<Vec<u8>> {
+    let d = cb.d();
+    assert_eq!(x.len() % d, 0, "input not a multiple of d");
+    let n = x.len() / d;
+    let mut codes = vec![vec![0u8; cb.m]; n];
+    for (i, code_row) in codes.iter_mut().enumerate() {
+        let v = &x[i * d..(i + 1) * d];
+        for mi in 0..cb.m {
+            let sub = &v[mi * cb.dsub..(mi + 1) * cb.dsub];
+            let mut best = f32::INFINITY;
+            let mut best_e = 0usize;
+            for ei in 0..cb.e {
+                let cw = cb.codeword(mi, ei);
+                let mut dist = 0.0;
+                for (a, b) in sub.iter().zip(cw) {
+                    let diff = a - b;
+                    dist += diff * diff;
+                }
+                if dist < best {
+                    best = dist;
+                    best_e = ei;
+                }
+            }
+            code_row[mi] = best_e as u8;
+        }
+    }
+    codes
+}
+
+/// Mean squared quantization error (per dimension) — the DKM signal.
+pub fn quantize_error(x: &[f32], cb: &Codebooks) -> f32 {
+    let d = cb.d();
+    let n = x.len() / d;
+    if n == 0 {
+        return 0.0;
+    }
+    let codes = quantize(x, cb);
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let v = &x[i * d..(i + 1) * d];
+        for mi in 0..cb.m {
+            let sub = &v[mi * cb.dsub..(mi + 1) * cb.dsub];
+            let cw = cb.codeword(mi, codes[i][mi] as usize);
+            for (a, b) in sub.iter().zip(cw) {
+                total += ((a - b) * (a - b)) as f64;
+            }
+        }
+    }
+    (total / (n * cb.m * cb.dsub) as f64) as f32
+}
+
+/// One k-means refresh step: move each codeword toward the mean of its
+/// assigned sub-vectors (paper §5.1: run every ~20 mini-batches).
+pub fn codebook_update(x: &[f32], cb: &mut Codebooks, lr: f32) {
+    let d = cb.d();
+    let n = x.len() / d;
+    let codes = quantize(x, cb);
+    let mut sums = vec![0.0f32; cb.m * cb.e * cb.dsub];
+    let mut counts = vec![0u32; cb.m * cb.e];
+    for i in 0..n {
+        let v = &x[i * d..(i + 1) * d];
+        for mi in 0..cb.m {
+            let ei = codes[i][mi] as usize;
+            counts[mi * cb.e + ei] += 1;
+            let off = (mi * cb.e + ei) * cb.dsub;
+            for (k, val) in v[mi * cb.dsub..(mi + 1) * cb.dsub].iter().enumerate() {
+                sums[off + k] += val;
+            }
+        }
+    }
+    for mi in 0..cb.m {
+        for ei in 0..cb.e {
+            let cnt = counts[mi * cb.e + ei];
+            if cnt == 0 {
+                continue; // empty codewords stay put
+            }
+            let off = (mi * cb.e + ei) * cb.dsub;
+            for k in 0..cb.dsub {
+                let mean = sums[off + k] / cnt as f32;
+                cb.data[off + k] += lr * (mean - cb.data[off + k]);
+            }
+        }
+    }
+}
+
+/// Integer similarity (paper Eq. 6): number of matching codewords.
+#[inline]
+pub fn match_score(a: &[u8], b: &[u8]) -> u32 {
+    a.iter().zip(b).map(|(x, y)| (x == y) as u32).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn codeword_quantizes_to_itself() {
+        let mut rng = Rng::new(1);
+        let cb = Codebooks::random(4, 8, 8, &mut rng);
+        // Build a vector equal to codeword 3 in every subspace.
+        let mut v = Vec::new();
+        for mi in 0..4 {
+            v.extend_from_slice(cb.codeword(mi, 3));
+        }
+        let codes = quantize(&v, &cb);
+        assert_eq!(codes[0], vec![3u8; 4]);
+        assert!(quantize_error(&v, &cb) < 1e-10);
+    }
+
+    #[test]
+    fn update_reduces_error() {
+        let mut rng = Rng::new(2);
+        let mut cb = Codebooks::random(2, 4, 4, &mut rng);
+        let x = rng.normal_vec(64 * cb.d());
+        let e0 = quantize_error(&x, &cb);
+        for _ in 0..5 {
+            codebook_update(&x, &mut cb, 1.0);
+        }
+        let e1 = quantize_error(&x, &cb);
+        assert!(e1 < e0, "{e1} !< {e0}");
+    }
+
+    #[test]
+    fn match_score_counts() {
+        assert_eq!(match_score(&[1, 2, 3], &[1, 5, 3]), 2);
+        assert_eq!(match_score(&[0; 8], &[0; 8]), 8);
+        assert_eq!(match_score(&[1, 2], &[3, 4]), 0);
+    }
+
+    #[test]
+    fn prop_codes_in_range_and_deterministic() {
+        check(30, |g| {
+            let m = g.usize_in(1, 8);
+            let e = g.usize_in(2, 16);
+            let dsub = g.usize_in(1, 8);
+            let n = g.usize_in(1, 32);
+            let mut rng = g.rng().fork();
+            let cb = Codebooks::random(m, e, dsub, &mut rng);
+            let x = rng.normal_vec(n * cb.d());
+            let c1 = quantize(&x, &cb);
+            let c2 = quantize(&x, &cb);
+            prop_assert(c1 == c2, "non-deterministic")?;
+            prop_assert(
+                c1.iter().all(|row| row.iter().all(|&c| (c as usize) < e)),
+                "code out of range",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_empty_codewords_stay_fixed() {
+        check(20, |g| {
+            let mut rng = g.rng().fork();
+            let mut cb = Codebooks::random(1, 4, 2, &mut rng);
+            // Data glued to codeword 0's location: far codewords never chosen.
+            let far: Vec<f32> = cb.codeword(0, 0).to_vec();
+            let x: Vec<f32> = (0..16).flat_map(|_| far.clone()).collect();
+            let before = cb.data.clone();
+            let codes = quantize(&x, &cb);
+            let used = codes[0][0] as usize;
+            codebook_update(&x, &mut cb, 1.0);
+            for ei in 0..4 {
+                let off = ei * 2;
+                let same = cb.data[off..off + 2] == before[off..off + 2];
+                if ei != used {
+                    prop_assert(same, format!("unused codeword {ei} moved"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,171 @@
+//! Singular values via one-sided Jacobi — substrate for Fig. 5.
+//!
+//! The paper motivates the routed FFN (dynamic pruning) with the CDF of
+//! singular values of the FFN projection matrix vs. its output features:
+//! W_I is near-full-rank (static pruning would hurt) while H = relu(X W_I)
+//! is low-rank (dynamic, input-aware sparsity is cheap).  We need singular
+//! values of matrices up to a few thousand columns; one-sided Jacobi is
+//! simple, accurate, and fast enough at bench scale.
+
+use super::matrix::Matrix;
+
+/// Singular values of `a` (descending).  One-sided Jacobi on columns;
+/// converges quadratically, `sweeps` capped for bench-scale inputs.
+pub fn singular_values(a: &Matrix, max_sweeps: usize) -> Vec<f32> {
+    // Work on the thinner orientation: svd(A) == svd(A^T).
+    let work = if a.rows < a.cols { a.transpose() } else { a.clone() };
+    let m = work.rows;
+    let n = work.cols;
+    // Column-major copy for cache-friendly column ops.
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|c| (0..m).map(|r| work.at(r, c) as f64).collect())
+        .collect();
+    let eps = 1e-10;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) inner product.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let vp = cols[p][i];
+                    let vq = cols[q][i];
+                    cols[p][i] = c * vp - s * vq;
+                    cols[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    let mut sv: Vec<f32> = cols
+        .iter()
+        .map(|col| {
+            (col.iter().map(|x| x * x).sum::<f64>()).sqrt() as f32
+        })
+        .collect();
+    sv.sort_by(|a, b| b.total_cmp(a));
+    sv
+}
+
+/// Normalized cumulative singular-value CDF at `points` fractions —
+/// the exact series Fig. 5 plots.
+pub fn singular_value_cdf(a: &Matrix, points: usize) -> Vec<(f32, f32)> {
+    let sv = singular_values(a, 30);
+    let total: f64 = sv.iter().map(|&x| x as f64).sum();
+    let n = sv.len();
+    let mut out = Vec::with_capacity(points);
+    let mut acc = 0.0f64;
+    let mut next = 1;
+    for (i, &s) in sv.iter().enumerate() {
+        acc += s as f64;
+        let frac = (i + 1) as f32 / n as f32;
+        if frac >= next as f32 / points as f32 {
+            out.push((frac, (acc / total.max(1e-30)) as f32));
+            next += 1;
+        }
+    }
+    out
+}
+
+/// Effective rank: #singular values needed to reach `energy` of the total.
+pub fn effective_rank(a: &Matrix, energy: f32) -> usize {
+    let sv = singular_values(a, 30);
+    let total: f64 = sv.iter().map(|&x| x as f64).sum();
+    let mut acc = 0.0f64;
+    for (i, &s) in sv.iter().enumerate() {
+        acc += s as f64;
+        if acc >= energy as f64 * total {
+            return i + 1;
+        }
+    }
+    sv.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix_recovers_diagonal() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, v) in [5.0f32, 3.0, 2.0, 1.0].into_iter().enumerate() {
+            *a.at_mut(i, i) = v;
+        }
+        let sv = singular_values(&a, 20);
+        for (got, want) in sv.iter().zip([5.0, 3.0, 2.0, 1.0]) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rank_one_matrix_has_one_singular_value() {
+        let mut rng = Rng::new(1);
+        let u = rng.normal_vec(16);
+        let v = rng.normal_vec(8);
+        let mut a = Matrix::zeros(16, 8);
+        for r in 0..16 {
+            for c in 0..8 {
+                *a.at_mut(r, c) = u[r] * v[c];
+            }
+        }
+        let sv = singular_values(&a, 20);
+        assert!(sv[0] > 1e-3);
+        assert!(sv[1] < 1e-4 * sv[0], "sv1={} sv0={}", sv[1], sv[0]);
+        assert_eq!(effective_rank(&a, 0.99), 1);
+    }
+
+    #[test]
+    fn frobenius_norm_preserved() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(12, 7, 1.0, &mut rng);
+        let sv = singular_values(&a, 30);
+        let fro2: f32 = sv.iter().map(|x| x * x).sum();
+        let want = a.fro_norm().powi(2);
+        assert!((fro2 - want).abs() / want < 1e-3);
+    }
+
+    #[test]
+    fn random_gaussian_is_high_rank_lowrank_product_is_not() {
+        // The Fig. 5 contrast in miniature: W ~ N(0,1) has near-linear
+        // singular CDF; H = relu(X W) after projection is skewed.
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(48, 48, 1.0, &mut rng);
+        let rank_w = effective_rank(&w, 0.5);
+        // Low-rank-ish: product through a narrow bottleneck.
+        let a = Matrix::randn(48, 8, 1.0, &mut rng);
+        let b = Matrix::randn(8, 48, 1.0, &mut rng);
+        let low = a.matmul(&b);
+        let rank_low = effective_rank(&low, 0.5);
+        assert!(
+            rank_low < rank_w,
+            "low-rank {rank_low} !< gaussian {rank_w}"
+        );
+    }
+
+    #[test]
+    fn cdf_monotone_ending_at_one() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let cdf = singular_value_cdf(&a, 10);
+        for w in cdf.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-6);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,203 @@
+//! Bucket-sort top-L selection (paper §5.1, Alg. 3) — the faithful
+//! sequential implementation.
+//!
+//! This is exactly the algorithm the paper runs per GPU thread: M+1 (or
+//! M+2 with the causal sentinel) buckets of capacity L, keys inserted in
+//! index order, retrieval from the highest bucket down.  The Pallas kernel
+//! (`python/compile/kernels/topl.py`) computes the same ranks vectorized;
+//! the two are cross-checked in the proptests below and through the
+//! goldens round trip.
+
+use super::pq::match_score;
+
+/// Select the top-L keys for one query (paper Alg. 3, single thread).
+///
+/// `codes_q`: M codeword ids of the query; `codes_k`: per-key codeword ids.
+/// Returns exactly `l` key indices ordered by (-score, key index).
+pub fn select_one(
+    codes_q: &[u8],
+    codes_k: &[Vec<u8>],
+    l: usize,
+    causal_limit: Option<usize>,
+) -> Vec<u32> {
+    let m = codes_q.len();
+    let nk = codes_k.len();
+    assert!(l >= 1 && l <= nk);
+    // Buckets[s] holds keys with score s; capacity L each (Alg. 3 line 2).
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); m + 2];
+    // Assign phase (lines 3-8): keys scanned in ascending index order.
+    for (j, ck) in codes_k.iter().enumerate() {
+        let s = match causal_limit {
+            Some(limit) if j > limit => 0, // sentinel bucket 0 analog
+            _ => (match_score(codes_q, ck) + 1) as usize,
+        };
+        let b = &mut buckets[s];
+        if b.len() < l {
+            b.push(j as u32);
+        }
+        // Overflow: drop (paper Alg. 3 line 7 instead overwrites the last
+        // slot to bound shared memory; keeping the *first* L of a bucket is
+        // the same memory bound but preserves the exact
+        // (-score, key-index) ranking, matching the Pallas kernel and the
+        // sort reference bit-for-bit — required for cross-validation).
+    }
+    // Retrieve phase (lines 9-16): drain buckets from high score to low.
+    let mut out = Vec::with_capacity(l);
+    for b in buckets.iter().rev() {
+        for &j in b {
+            if out.len() == l {
+                return out;
+            }
+            out.push(j);
+        }
+    }
+    // Under-full rows (causal prefix): pad with unseen smallest indices so
+    // the output shape is static, mirroring the kernel's padding slots.
+    let mut j = 0u32;
+    while out.len() < l {
+        if !out.contains(&j) {
+            out.push(j);
+        }
+        j += 1;
+    }
+    out
+}
+
+/// Batched selection for all queries of one head.
+pub fn select(
+    codes_q: &[Vec<u8>],
+    codes_k: &[Vec<u8>],
+    l: usize,
+    causal: bool,
+) -> Vec<Vec<u32>> {
+    codes_q
+        .iter()
+        .enumerate()
+        .map(|(i, cq)| {
+            select_one(cq, codes_k, l, causal.then_some(i))
+        })
+        .collect()
+}
+
+/// Reference ranking ("sort by (-score, index), take L") used to verify the
+/// bucket implementation in tests.
+pub fn select_by_sort(
+    codes_q: &[u8],
+    codes_k: &[Vec<u8>],
+    l: usize,
+    causal_limit: Option<usize>,
+) -> Vec<u32> {
+    let mut scored: Vec<(i64, u32)> = codes_k
+        .iter()
+        .enumerate()
+        .map(|(j, ck)| {
+            let s = match causal_limit {
+                Some(limit) if j > limit => -1,
+                _ => match_score(codes_q, ck) as i64,
+            };
+            (s, j as u32)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.into_iter().take(l).map(|(_, j)| j).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    fn random_codes(g: &mut crate::util::proptest::Gen, n: usize, m: usize, e: usize) -> Vec<Vec<u8>> {
+        (0..n)
+            .map(|_| (0..m).map(|_| g.usize_in(0, e - 1) as u8).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_sort_reference_non_causal() {
+        check(100, |g| {
+            let n = g.usize_in(2, 64);
+            let m = g.usize_in(1, 8);
+            let e = g.usize_in(2, 8);
+            let l = g.usize_in(1, n);
+            let cq = random_codes(g, 1, m, e);
+            let ck = random_codes(g, n, m, e);
+            let got = select_one(&cq[0], &ck, l, None);
+            let want = select_by_sort(&cq[0], &ck, l, None);
+            prop_assert(got == want, format!("got {got:?} want {want:?}"))
+        });
+    }
+
+    #[test]
+    fn causal_never_selects_future_when_enough_history() {
+        check(50, |g| {
+            let n = g.usize_in(8, 48);
+            let cq = random_codes(g, n, 4, 4);
+            let ck = random_codes(g, n, 4, 4);
+            let l = g.usize_in(1, 4);
+            let sel = select(&cq, &ck, l, true);
+            for (i, row) in sel.iter().enumerate() {
+                if i + 1 >= l {
+                    // enough eligible keys: all selections must be <= i
+                    for &j in row {
+                        prop_assert(
+                            (j as usize) <= i,
+                            format!("row {i} selected future key {j}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn output_is_unique_and_in_range() {
+        check(50, |g| {
+            let n = g.usize_in(2, 40);
+            let l = g.usize_in(1, n);
+            let cq = random_codes(g, 1, 6, 3);
+            let ck = random_codes(g, n, 6, 3);
+            let got = select_one(&cq[0], &ck, l, None);
+            prop_assert(got.len() == l, "wrong length")?;
+            let mut sorted = got.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            prop_assert(sorted.len() == l, "duplicates")?;
+            prop_assert(
+                got.iter().all(|&j| (j as usize) < n),
+                "out of range",
+            )
+        });
+    }
+
+    #[test]
+    fn exact_match_ranks_first() {
+        let cq = vec![3u8, 1, 4, 1];
+        let mut ck = vec![vec![0u8, 0, 0, 0]; 10];
+        ck[7] = cq.clone();
+        let got = select_one(&cq, &ck, 3, None);
+        assert_eq!(got[0], 7);
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        let cq = vec![0u8; 4];
+        let ck = vec![vec![1u8; 4]; 6]; // all score 0
+        assert_eq!(select_one(&cq, &ck, 4, None), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn causal_prefix_padding_is_well_formed() {
+        let cq = vec![vec![0u8; 4]; 4];
+        let ck = vec![vec![0u8; 4]; 4];
+        let sel = select(&cq, &ck, 3, true);
+        // Row 0 has one eligible key; padding must still give 3 unique ids.
+        assert_eq!(sel[0].len(), 3);
+        let mut s = sel[0].clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 3);
+        assert_eq!(sel[0][0], 0); // the eligible key leads
+    }
+}

@@ -1,0 +1,58 @@
+//! Shared substrates: JSON, PRNG, property-testing harness, small helpers.
+//!
+//! The offline crate registry for this build ships only the `xla` crate and
+//! its dependencies, so the usual ecosystem crates (serde, rand, proptest,
+//! clap, criterion) are reimplemented here at the scale this project needs.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Human-readable byte count (Table/figure reports).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.2} GB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.0} MB", b / (K * K))
+    } else if b >= K {
+        format!("{:.0} KB", b / K)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.1} h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.1} ms", secs * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2 KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3 MB");
+        assert_eq!(fmt_bytes(5_368_709_120), "5.00 GB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.0531), "53.1 ms");
+        assert_eq!(fmt_duration(2.5), "2.50 s");
+        assert_eq!(fmt_duration(90.0), "1.5 min");
+        assert_eq!(fmt_duration(6.7 * 3600.0), "6.7 h");
+    }
+}

@@ -1,0 +1,126 @@
+//! Tiny property-testing harness (no `proptest` crate offline).
+//!
+//! A property is a closure over a [`Gen`]; the harness runs it for N random
+//! cases with distinct seeds and, on failure, retries with the failing seed
+//! reported so the case is reproducible:
+//!
+//! ```ignore
+//! check(100, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let xs = g.vec_f32(n);
+//!     prop_assert(xs.len() == n, "length preserved")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+
+    pub fn vec_usize(&mut self, n: usize, below: usize) -> Vec<usize> {
+        (0..n).map(|_| self.rng.below(below)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Result of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`; panics with the failing seed.
+pub fn check<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    // Base seed is stable per test binary run unless overridden, so CI is
+    // reproducible; set SPT_PROPTEST_SEED to explore.
+    let base = std::env::var("SPT_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with SPT_PROPTEST_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |g| {
+            let n = g.usize_in(1, 32);
+            prop_assert(g.vec_f32(n).len() == n, "len")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        check(10, |g| {
+            prop_assert(g.usize_in(0, 10) > 100, "impossible")
+        });
+    }
+
+    #[test]
+    fn generator_ranges() {
+        check(100, |g| {
+            let x = g.i64_in(-5, 5);
+            prop_assert((-5..=5).contains(&x), format!("{x} out of range"))?;
+            let f = g.f32_in(1.0, 2.0);
+            prop_assert((1.0..=2.0).contains(&f), format!("{f} out of range"))
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Runtime integration: the python -> HLO-text -> PJRT -> rust round trip.
+//!
+//! Requires `make artifacts` (skips politely otherwise so a fresh clone
+//! can still run `cargo test`).
+
+use spt::runtime::{goldens, Engine, HostTensor};
+
+fn engine() -> Option<Engine> {
+    let dir = std::env::var("SPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir} (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&dir).expect("engine"))
+}
+
+#[test]
+fn goldens_match_python_outputs() {
+    let Some(engine) = engine() else { return };
+    let dir = std::env::var("SPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let goldens = goldens::load_goldens(&dir).expect("goldens.json");
+    assert!(!goldens.is_empty(), "no goldens recorded");
+    for g in &goldens {
+        let diff = goldens::check_artifact(&engine, g, 1e-3)
+            .unwrap_or_else(|e| panic!("golden {}: {e:#}", g.name));
+        // integer kernels must be exact
+        if g.name.contains("topl") || g.name.contains("pq_quantize") {
+            assert_eq!(diff, 0.0, "{} not exact", g.name);
+        }
+    }
+}
+
+#[test]
+fn every_artifact_parses_and_compiles() {
+    let Some(engine) = engine() else { return };
+    // Compiling everything is expensive; sample one artifact per `kind`.
+    let mut by_kind: std::collections::BTreeMap<String, String> = Default::default();
+    for (name, spec) in &engine.manifest().artifacts {
+        let kind = spec.meta_str("kind").unwrap_or("?").to_string();
+        by_kind.entry(kind).or_insert_with(|| name.clone());
+    }
+    assert!(by_kind.len() >= 4, "expected several artifact kinds: {by_kind:?}");
+    for (kind, name) in &by_kind {
+        engine
+            .load(name)
+            .unwrap_or_else(|e| panic!("kind {kind}: artifact {name}: {e:#}"));
+    }
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let Some(engine) = engine() else { return };
+    let name = "model_init_spt-tiny_spt";
+    if engine.manifest().get(name).is_err() {
+        return;
+    }
+    let a = engine.run(name, &[HostTensor::scalar_i32(7)]).unwrap();
+    let b = engine.run(name, &[HostTensor::scalar_i32(7)]).unwrap();
+    let c = engine.run(name, &[HostTensor::scalar_i32(8)]).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.max_abs_diff(y).unwrap(), 0.0);
+    }
+    let any_diff = a
+        .iter()
+        .zip(&c)
+        .any(|(x, y)| x.max_abs_diff(y).map(|d| d > 0.0).unwrap_or(true));
+    assert!(any_diff, "different seeds produced identical params");
+}
+
+#[test]
+fn signature_validation_rejects_bad_inputs() {
+    let Some(engine) = engine() else { return };
+    let name = "kernel_dense_ffn";
+    if engine.manifest().get(name).is_err() {
+        return;
+    }
+    // Wrong arity.
+    assert!(engine.run(name, &[]).is_err());
+    // Wrong shape.
+    let spec = engine.spec(name).unwrap().clone();
+    let mut inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::zeros(s).unwrap())
+        .collect();
+    inputs[0] = HostTensor::f32(vec![1], vec![0.0]);
+    assert!(engine.run(name, &inputs).is_err());
+}
+
+#[test]
+fn block_step_runs_for_all_modes() {
+    let Some(engine) = engine() else { return };
+    // Use the smallest block present in the manifest.
+    for cfg in ["mini-256", "opt-1024"] {
+        let mut ran = false;
+        for mode in ["full", "lora", "spt"] {
+            let name = format!("block_step_{cfg}_{mode}");
+            if engine.manifest().get(&name).is_err() {
+                continue;
+            }
+            let inputs =
+                spt::coordinator::profile::block_step_inputs(&engine, cfg, spt::config::Mode::parse(mode).unwrap(), 3)
+                    .expect("inputs");
+            let out = engine.run(&name, &inputs).expect(&name);
+            let loss = out[0].scalar().expect("loss scalar");
+            assert!(loss.is_finite(), "{name}: loss {loss}");
+            ran = true;
+        }
+        if ran {
+            return; // one config is enough for CI cost
+        }
+    }
+}
+
+#[test]
+fn sparse_attention_artifact_matches_rust_substrate() {
+    // Cross-layer validation: the XLA sparse-attention kernel and the
+    // rust-native substrate must agree on the same inputs.
+    let Some(engine) = engine() else { return };
+    let name = "kernel_sparse_attention";
+    if engine.manifest().get(name).is_err() {
+        return;
+    }
+    let spec = engine.spec(name).unwrap().clone();
+    let (bh, n, d) = (
+        spec.inputs[0].shape[0],
+        spec.inputs[0].shape[1],
+        spec.inputs[0].shape[2],
+    );
+    let l = spec.inputs[3].shape[2];
+    let mut rng = spt::util::rng::Rng::new(99);
+    let q = HostTensor::randn(vec![bh, n, d], 1.0, &mut rng);
+    let k = HostTensor::randn(vec![bh, n, d], 1.0, &mut rng);
+    let v = HostTensor::randn(vec![bh, n, d], 1.0, &mut rng);
+    // causal-valid indices: idx[i][j] <= i (use topl on random codes)
+    let mut idx_data = Vec::with_capacity(bh * n * l);
+    for _ in 0..bh {
+        for i in 0..n {
+            for j in 0..l {
+                idx_data.push((j.min(i)) as i32);
+            }
+        }
+    }
+    let idx = HostTensor::i32(vec![bh, n, l], idx_data.clone());
+    let out = engine.run(name, &[q.clone(), k.clone(), v.clone(), idx]).unwrap();
+    let y = out[0].as_f32().unwrap();
+
+    // rust substrate, head 0 (artifact is causal=True)
+    use spt::sparse::{Csr, Matrix};
+    let qm = Matrix::from_vec(n, d, q.as_f32().unwrap()[..n * d].to_vec());
+    let km = Matrix::from_vec(n, d, k.as_f32().unwrap()[..n * d].to_vec());
+    let vm = Matrix::from_vec(n, d, v.as_f32().unwrap()[..n * d].to_vec());
+    let topl_rows: Vec<Vec<u32>> = (0..n)
+        .map(|i| {
+            // dedup within a row as the kernel's softmax masks duplicates;
+            // keep first occurrence only
+            let mut seen = std::collections::HashSet::new();
+            (0..l)
+                .filter_map(|j| {
+                    let key = idx_data[i * l + j] as u32;
+                    seen.insert(key).then_some(key)
+                })
+                .collect()
+        })
+        .collect();
+    let mut a = Csr::from_topl(&topl_rows, n);
+    let scale = 1.0 / (d as f32).sqrt();
+    let qs = qm.map(|x| x * scale);
+    a.sddmm(&qs, &km);
+    a.softmax_rows();
+    let y_rust = a.spmm(&vm);
+    let mut max_diff = 0.0f32;
+    for i in 0..n {
+        for c in 0..d {
+            max_diff = max_diff.max((y[i * d + c] - y_rust.at(i, c)).abs());
+        }
+    }
+    assert!(max_diff < 1e-3, "xla vs rust substrate diff {max_diff}");
+}

@@ -1,0 +1,174 @@
+//! Cross-module property tests over the rust-native substrate:
+//! the paper's algorithmic invariants, checked end to end.
+
+use spt::sparse::{attention, bspmv, csr::Csr, naive_pq, pq, topl, Matrix};
+use spt::util::proptest::{check, prop_assert};
+
+#[test]
+fn bucket_sort_agrees_with_naive_pq_on_match_counts() {
+    // When ADC tables degenerate to the indicator metric (orthonormal
+    // equal-norm codewords), bucket sort and Naive-PQ rank identically.
+    // With general codebooks we instead check the *contract*: both return
+    // L unique in-range keys and bucket sort's ranking is exactly
+    // (-match_score, index).
+    check(40, |g| {
+        let n = g.usize_in(4, 48);
+        let m = g.usize_in(1, 6);
+        let e = g.usize_in(2, 8);
+        let l = g.usize_in(1, n);
+        let mut rng = g.rng().fork();
+        let cb = pq::Codebooks::random(m, e, 4, &mut rng);
+        let x = rng.normal_vec(n * cb.d());
+        let y = rng.normal_vec(n * cb.d());
+        let cq = pq::quantize(&y, &cb);
+        let ck = pq::quantize(&x, &cb);
+        let bucket = topl::select(&cq, &ck, l, false);
+        let tables = naive_pq::ScoreTables::build(&cb);
+        let naive = naive_pq::select(&cq, &ck, &tables, l, false);
+        for (b_row, n_row) in bucket.iter().zip(&naive) {
+            prop_assert(b_row.len() == l && n_row.len() == l, "arity")?;
+            let uniq: std::collections::HashSet<_> = b_row.iter().collect();
+            prop_assert(uniq.len() == l, "bucket dup")?;
+        }
+        // ranking invariant for bucket sort
+        for (qi, row) in bucket.iter().enumerate() {
+            let score =
+                |j: u32| pq::match_score(&cq[qi], &ck[j as usize]) as i64;
+            for w in row.windows(2) {
+                let (a, b) = (score(w[0]), score(w[1]));
+                prop_assert(
+                    a > b || (a == b && w[0] < w[1]),
+                    format!("row {qi}: order violated {w:?} ({a} vs {b})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_sparse_mha_pipeline_error_shrinks_with_l() {
+    check(10, |g| {
+        let n = 64usize;
+        let d = 32usize;
+        let mut rng = g.rng().fork();
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let noise = Matrix::randn(n, d, 0.5, &mut rng);
+        let q = Matrix::from_vec(
+            n,
+            d,
+            k.data.iter().zip(&noise.data).map(|(a, b)| 2.0 * a + b).collect(),
+        );
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let mut cb = pq::Codebooks::random(4, 8, 8, &mut rng);
+        for _ in 0..4 {
+            pq::codebook_update(&k.data, &mut cb, 1.0);
+        }
+        let e_small = attention::sparse_vs_dense_error(&q, &k, &v, &cb, n / 8);
+        let e_full = attention::sparse_vs_dense_error(&q, &k, &v, &cb, n);
+        prop_assert(e_full < 1e-4, format!("L=n not exact: {e_full}"))?;
+        prop_assert(
+            e_full <= e_small + 1e-5,
+            format!("error not monotone: {e_full} vs {e_small}"),
+        )
+    });
+}
+
+#[test]
+fn csr_attention_row_stochastic() {
+    check(25, |g| {
+        let n = g.usize_in(2, 32);
+        let d = g.usize_in(1, 16);
+        let l = g.usize_in(1, n);
+        let mut rng = g.rng().fork();
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let idx: Vec<Vec<u32>> = (0..n)
+            .map(|_| {
+                let mut ids: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut ids);
+                ids.truncate(l);
+                ids
+            })
+            .collect();
+        let mut a = Csr::from_topl(&idx, n);
+        a.validate().map_err(|e| e.to_string())?;
+        a.sddmm(&q, &k);
+        a.softmax_rows();
+        for r in 0..n {
+            let sum: f32 = a.values[a.row_range(r)].iter().sum();
+            prop_assert((sum - 1.0).abs() < 1e-4, format!("row {r} sum {sum}"))?;
+            prop_assert(
+                a.values[a.row_range(r)].iter().all(|&w| (0.0..=1.0001).contains(&w)),
+                "weight out of [0,1]",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn routed_ffn_conservation_and_equivalence() {
+    // Every (token, active-block) pair is computed exactly once: BSpMV
+    // output equals the dense gated reference, and zeroing a token's gate
+    // removes exactly its contribution.
+    check(20, |g| {
+        let nt = g.usize_in(2, 24);
+        let d = g.usize_in(2, 8);
+        let gg = *g.pick(&[2usize, 4]);
+        let dg = g.usize_in(1, 4);
+        let ga = g.usize_in(1, gg);
+        let mut rng = g.rng().fork();
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, gg * dg, 0.3, &mut rng);
+        let wo = Matrix::randn(gg * dg, d, 0.3, &mut rng);
+        let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+        let mut routing = bspmv::route(&scores, ga);
+        let y = bspmv::routed_ffn(&x, &wi, &wo, &routing);
+        let want = bspmv::dense_gated_ffn(&x, &wi, &wo, &routing);
+        prop_assert(
+            y.max_abs_diff(&want) < 1e-4,
+            format!("diff {}", y.max_abs_diff(&want)),
+        )?;
+        // Zero token 0's gates -> its output row becomes exactly zero.
+        for gi in 0..gg {
+            routing.gate[0][gi] = 0.0;
+        }
+        let y2 = bspmv::routed_ffn(&x, &wi, &wo, &routing);
+        prop_assert(
+            y2.row(0).iter().all(|&v| v == 0.0),
+            "gated-out token still contributed",
+        )?;
+        // Other rows unchanged.
+        for r in 1..nt {
+            for c in 0..d {
+                if (y.at(r, c) - y2.at(r, c)).abs() > 1e-5 {
+                    return Err(format!("row {r} changed"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pq_error_never_increases_under_updates() {
+    check(15, |g| {
+        let mut rng = g.rng().fork();
+        let m = g.usize_in(1, 4);
+        let e = g.usize_in(2, 8);
+        let mut cb = pq::Codebooks::random(m, e, 4, &mut rng);
+        let x = rng.normal_vec(96 * cb.d());
+        let mut prev = pq::quantize_error(&x, &cb);
+        for _ in 0..4 {
+            pq::codebook_update(&x, &mut cb, 1.0);
+            let now = pq::quantize_error(&x, &cb);
+            prop_assert(
+                now <= prev + 1e-5,
+                format!("error increased {prev} -> {now}"),
+            )?;
+            prev = now;
+        }
+        Ok(())
+    });
+}
