@@ -4,7 +4,13 @@
 use std::path::Path;
 
 use spt::metrics::Table;
+#[cfg(feature = "xla")]
 use spt::runtime::Engine;
+use spt::sparse::bspmv::{self, Routing};
+use spt::sparse::mha::MultiHeadSparseAttention;
+use spt::sparse::pq::{self, Codebooks};
+use spt::sparse::Matrix;
+use spt::util::rng::Rng;
 
 /// Artifacts directory: SPT_ARTIFACTS env or ./artifacts.
 pub fn artifacts_dir() -> String {
@@ -13,6 +19,7 @@ pub fn artifacts_dir() -> String {
 
 /// Open the engine, or explain how to build artifacts and exit 0 (so
 /// `cargo bench` degrades gracefully on a fresh checkout).
+#[cfg(feature = "xla")]
 pub fn engine_or_skip(bench: &str) -> Option<Engine> {
     let dir = artifacts_dir();
     if !Path::new(&dir).join("manifest.json").exists() {
@@ -26,6 +33,139 @@ pub fn engine_or_skip(bench: &str) -> Option<Engine> {
             None
         }
     }
+}
+
+/// Deterministic H-head sparse-MHA + routed-FFN workload for the
+/// engine-free thread-scaling sections of the table benches.
+pub struct NativeWorkload {
+    pub mha: MultiHeadSparseAttention,
+    pub q: Vec<Matrix>,
+    pub k: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    pub x: Matrix,
+    pub wi: Matrix,
+    pub wo: Matrix,
+    pub routing: Routing,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn native_workload(
+    heads: usize,
+    n: usize,
+    d: usize,
+    l: usize,
+    nt: usize,
+    dff: usize,
+    g: usize,
+    ga: usize,
+) -> NativeWorkload {
+    let (m, e) = (8usize.min(d), 16usize);
+    assert_eq!(d % m, 0, "d must split into {m} subspaces");
+    let mut rng = Rng::new(0x5127);
+    let mut codebooks = Vec::new();
+    let (mut q, mut k, mut v) = (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..heads {
+        let mut cb = Codebooks::random(m, e, d / m, &mut rng);
+        let kh = Matrix::randn(n, d, 1.0, &mut rng);
+        let noise = Matrix::randn(n, d, 0.5, &mut rng);
+        // Correlated Q/K so top-L selection is realistic (trained-like).
+        let qh = Matrix::from_vec(
+            n,
+            d,
+            kh.data
+                .iter()
+                .zip(&noise.data)
+                .map(|(a, b)| 2.0 * a + b)
+                .collect(),
+        );
+        for _ in 0..2 {
+            pq::codebook_update(&kh.data, &mut cb, 1.0);
+        }
+        codebooks.push(cb);
+        q.push(qh);
+        k.push(kh);
+        v.push(Matrix::randn(n, d, 1.0, &mut rng));
+    }
+    let x = Matrix::randn(nt, d, 1.0, &mut rng);
+    let wi = Matrix::randn(d, dff, 0.2, &mut rng);
+    let wo = Matrix::randn(dff, d, 0.2, &mut rng);
+    let routing = bspmv::route(&Matrix::randn(nt, g, 1.0, &mut rng), ga);
+    NativeWorkload {
+        mha: MultiHeadSparseAttention::new(codebooks, l, true),
+        q,
+        k,
+        v,
+        x,
+        wi,
+        wo,
+        routing,
+    }
+}
+
+/// Thread counts for the scaling column: 1, 2, 4, 8 capped at the
+/// machine's rayon default, which is always included.
+pub fn thread_counts() -> Vec<usize> {
+    let max = rayon_default_threads();
+    let mut ts: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t <= max)
+        .collect();
+    if !ts.contains(&max) {
+        ts.push(max);
+    }
+    ts
+}
+
+fn rayon_default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Build a dedicated rayon pool of `t` threads.
+pub fn pool(t: usize) -> rayon::ThreadPool {
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(t)
+        .build()
+        .expect("thread pool")
+}
+
+/// The shared thread-scaling measurement: the sequential reference
+/// (per-head pipeline + sequential routed FFN) as the 1.00x row, then
+/// the rayon paths on dedicated pools per [`thread_counts`] entry.
+/// Emits a [Threads | MHA+FFN median | Speedup vs sequential] table.
+pub fn emit_thread_scaling(wl: &NativeWorkload, title: &str, emit_name: &str) {
+    let (w, s) = (warmup().max(1), samples().max(3));
+    let seq = spt::metrics::bench("seq", w, s, || {
+        std::hint::black_box(wl.mha.forward_seq(&wl.q, &wl.k, &wl.v));
+        std::hint::black_box(bspmv::routed_ffn(&wl.x, &wl.wi, &wl.wo, &wl.routing));
+    });
+    let mut table = Table::new(
+        title,
+        &["Threads", "MHA+FFN median", "Speedup vs sequential"],
+    );
+    table.row(&[
+        "seq (reference)".into(),
+        spt::util::fmt_duration(seq.median()),
+        "1.00x".into(),
+    ]);
+    for t in thread_counts() {
+        let p = pool(t);
+        let r = spt::metrics::bench(&format!("par_t{t}"), w, s, || {
+            p.install(|| {
+                std::hint::black_box(wl.mha.forward(&wl.q, &wl.k, &wl.v));
+                std::hint::black_box(spt::sparse::mha::routed_ffn_par(
+                    &wl.x, &wl.wi, &wl.wo, &wl.routing,
+                ));
+            });
+        });
+        table.row(&[
+            t.to_string(),
+            spt::util::fmt_duration(r.median()),
+            format!("{:.2}x", seq.median() / r.median()),
+        ]);
+    }
+    emit(emit_name, &table);
 }
 
 /// Write the rendered table to stdout and bench_out/<name>.{md,csv}.

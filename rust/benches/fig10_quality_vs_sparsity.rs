@@ -12,7 +12,9 @@
 
 mod common;
 
+#[cfg(feature = "xla")]
 use spt::config::RunConfig;
+#[cfg(feature = "xla")]
 use spt::coordinator::trial::TrialManager;
 use spt::metrics::Table;
 use spt::sparse::attention::sparse_vs_dense_error;
@@ -75,6 +77,12 @@ fn main() {
     common::emit("fig10b_ffn_flops", &tb);
 
     // ---- end-to-end PPL trials through the coordinator ----
+    #[cfg(feature = "xla")]
+    e2e_trials();
+}
+
+#[cfg(feature = "xla")]
+fn e2e_trials() {
     if let Some(engine) = common::engine_or_skip("fig10-e2e") {
         let mut rc = RunConfig::default();
         rc.model = std::env::var("SPT_FIG10_MODEL").unwrap_or_else(|_| "spt-tiny".into());

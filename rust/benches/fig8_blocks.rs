@@ -9,11 +9,21 @@
 
 mod common;
 
+#[cfg(feature = "xla")]
 use spt::config::Mode;
+#[cfg(feature = "xla")]
 use spt::coordinator::profile::profile_block;
+#[cfg(feature = "xla")]
 use spt::metrics::Table;
+#[cfg(feature = "xla")]
 use spt::util::fmt_bytes;
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    println!("[fig8] skipped: artifact profiling needs `--features xla`");
+}
+
+#[cfg(feature = "xla")]
 fn main() {
     let Some(engine) = common::engine_or_skip("fig8") else { return };
     let (w, s) = (common::warmup(), common::samples());

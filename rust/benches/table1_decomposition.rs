@@ -8,10 +8,19 @@
 
 mod common;
 
+#[cfg(feature = "xla")]
 use spt::coordinator::profile::profile_module;
+#[cfg(feature = "xla")]
 use spt::metrics::Table;
+#[cfg(feature = "xla")]
 use spt::util::{fmt_bytes, fmt_duration};
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    println!("[table1] skipped: artifact profiling needs `--features xla`");
+}
+
+#[cfg(feature = "xla")]
 fn main() {
     let Some(engine) = common::engine_or_skip("table1") else { return };
     let cfg = "opt-2048";

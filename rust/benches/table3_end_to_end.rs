@@ -3,19 +3,80 @@
 //! Full / LoRA / SPT.
 //!
 //! Paper (OPT-2.7B / LLaMA-2.7B on 4x RTX 3090): SPT 1.39-1.47x over
-//! Full, 2x max length vs Full, ~1 point MMLU drop.  Here: QA surrogate
-//! accuracy + measured step time on the e2e model artifacts, max length
-//! from the memory model at the paper's scale.
+//! Full, 2x max length vs Full, ~1 point MMLU drop.
+//!
+//! Default build (no artifacts needed): the analytic max-length table at
+//! the paper's scale, plus the substrate end-to-end block forward
+//! (multi-head sparse attention + routed FFN) with a thread-scaling
+//! column against the sequential reference path.  With `--features xla`
+//! the original artifact-driven training comparison also runs.
 
 mod common;
 
-use spt::config::{presets, Mode, RunConfig};
-use spt::coordinator::{Trainer, TrainerOptions};
+use spt::config::{presets, Mode};
 use spt::memmodel;
 use spt::metrics::Table;
+#[cfg(feature = "xla")]
 use spt::util::fmt_duration;
 
 fn main() {
+    max_length_table();
+    thread_scaling_table();
+    #[cfg(feature = "xla")]
+    engine_table();
+}
+
+/// Max length at the paper's scale (OPT-2.7B-like block, 32 layers,
+/// 24 GB/GPU, DeepSpeed offloading modeled) — engine-free.
+fn max_length_table() {
+    let paper_cfg = presets::block("opt-2560").expect("cfg");
+    let mut table = Table::new(
+        "Table 3a — max sequence length before OOM (opt-2560, 32L, 24 GB)",
+        &["System", "Max Length (model)", "paper"],
+    );
+    let paper = [("full", "256"), ("lora", "512"), ("spt", "768")];
+    for mode in Mode::ALL {
+        let max_len = memmodel::max_seq_under_budget(
+            &paper_cfg,
+            mode,
+            16,
+            32,
+            50272,
+            24u64 << 30,
+            128,
+        );
+        table.row(&[
+            mode.as_str().to_string(),
+            max_len.to_string(),
+            paper
+                .iter()
+                .find(|(m, _)| *m == mode.as_str())
+                .map(|(_, p)| p.to_string())
+                .unwrap_or_default(),
+        ]);
+    }
+    common::emit("table3_max_length", &table);
+}
+
+/// Substrate end-to-end forward (H-head sparse MHA + routed FFN): the
+/// sequential reference vs the rayon path across thread counts.
+fn thread_scaling_table() {
+    let wl = common::native_workload(8, 384, 64, 96, 1024, 2048, 8, 4);
+    common::emit_thread_scaling(
+        &wl,
+        "Table 3b — substrate e2e forward thread scaling \
+         (8 heads, n=384, L=96 + routed FFN beta=1/2)",
+        "table3_thread_scaling",
+    );
+}
+
+/// The original artifact-driven end-to-end comparison (QA surrogate
+/// accuracy + measured step time), behind the `xla` feature.
+#[cfg(feature = "xla")]
+fn engine_table() {
+    use spt::config::RunConfig;
+    use spt::coordinator::{Trainer, TrainerOptions};
+
     let Some(engine) = common::engine_or_skip("table3") else { return };
     let model = std::env::var("SPT_TABLE3_MODEL").unwrap_or_else(|_| "spt-tiny".into());
     let steps: usize = std::env::var("SPT_TABLE3_STEPS")
@@ -23,8 +84,6 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(24);
 
-    // Max length at the paper's scale (OPT-2.7B-like block, 32 layers,
-    // 24 GB/GPU, DeepSpeed offloading modeled).
     let paper_cfg = presets::block("opt-2560").expect("cfg");
     let mut table = Table::new(
         &format!("Table 3 — end-to-end fine-tuning ({model}, {steps} steps; max-length @opt-2560/32L/24GB)"),

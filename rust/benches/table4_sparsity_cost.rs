@@ -5,14 +5,121 @@
 //! sparsity (1/4 -> 1/8) while its time stays ~LoRA-level; routed FFN
 //! time drops near-theoretically with beta (3/4 -> ~1.3x, 1/2 -> ~2x)
 //! while its memory barely moves.
+//!
+//! Default build: module cost vs sparsity measured on the rust-native
+//! substrate (8-head workload), with 1-thread and all-thread columns so
+//! the cost of each sparsity strength is visible under the parallel
+//! path too.  With `--features xla` the original artifact-based module
+//! profile also runs.
 
 mod common;
 
-use spt::coordinator::profile::profile_module;
-use spt::metrics::Table;
+use spt::metrics::{bench, Table};
+use spt::sparse::{bspmv, mha, Matrix};
 use spt::util::{fmt_bytes, fmt_duration};
 
 fn main() {
+    native_table();
+    #[cfg(feature = "xla")]
+    engine_table();
+}
+
+fn native_table() {
+    let (w, s) = (common::warmup().max(1), common::samples().max(3));
+    let (heads, n, d) = (8usize, 256usize, 64usize);
+    let (nt, dff, g) = (512usize, 1024usize, 8usize);
+    let threads = *common::thread_counts().last().unwrap();
+    let pool1 = common::pool(1);
+    let pool_n = common::pool(threads);
+
+    let tn_header = format!("Time ({threads} threads)");
+    let mut table = Table::new(
+        &format!(
+            "Table 4 — module cost vs sparsity on the substrate \
+             ({heads} heads, n={n}, d={d}; FFN nt={nt}, D={dff}, G={g})"
+        ),
+        &[
+            "Module",
+            "Method",
+            "Time (1 thread)",
+            tn_header.as_str(),
+            "Speedup",
+            "Memory / FLOPs",
+        ],
+    );
+
+    // ---- MHA rows: L = n (dense-equivalent), n/4, n/8 ----
+    // One workload; only the sparsity strength varies between rows.
+    let mut wl = common::native_workload(heads, n, d, n, nt, dff, g, g / 2);
+    for (label, den) in [("spt_l1 (L=n)", 1usize), ("spt_l4", 4), ("spt_l8", 8)] {
+        let l = (n / den).max(1);
+        wl.mha.l = l;
+        let t1 = bench(&format!("mha_{den}_t1"), w, s, || {
+            pool1.install(|| {
+                std::hint::black_box(wl.mha.forward(&wl.q, &wl.k, &wl.v));
+            });
+        });
+        let tn = bench(&format!("mha_{den}_tn"), w, s, || {
+            pool_n.install(|| {
+                std::hint::black_box(wl.mha.forward(&wl.q, &wl.k, &wl.v));
+            });
+        });
+        // Attention memory: the CSR the sparse pipeline materializes per
+        // head (the paper's O(nL): indptr + L indices + L values per row)
+        // vs the dense n^2 map.
+        let csr_bytes = (n + 1) * 4 + n * l * 4 + n * l * 4;
+        let mem = format!(
+            "{} ({} dense)",
+            fmt_bytes((csr_bytes * heads) as u64),
+            fmt_bytes((n * n * 4 * heads) as u64)
+        );
+        table.row(&[
+            "MHA".into(),
+            label.to_string(),
+            fmt_duration(t1.median()),
+            fmt_duration(tn.median()),
+            format!("{:.2}x", t1.median() / tn.median()),
+            mem,
+        ]);
+    }
+
+    // ---- FFN rows: beta = 1, 3/4, 1/2 ----
+    let mut rng = spt::util::rng::Rng::new(0x44);
+    let x = Matrix::randn(nt, d, 1.0, &mut rng);
+    let wi = Matrix::randn(d, dff, 0.2, &mut rng);
+    let wo = Matrix::randn(dff, d, 0.2, &mut rng);
+    let scores = Matrix::randn(nt, g, 1.0, &mut rng);
+    for (label, ga) in [("spt_b1 (dense)", g), ("spt_b34", 3 * g / 4), ("spt_b12", g / 2)] {
+        let routing = bspmv::route(&scores, ga);
+        let t1 = bench(&format!("ffn_{ga}_t1"), w, s, || {
+            pool1.install(|| {
+                std::hint::black_box(mha::routed_ffn_par(&x, &wi, &wo, &routing));
+            });
+        });
+        let tn = bench(&format!("ffn_{ga}_tn"), w, s, || {
+            pool_n.install(|| {
+                std::hint::black_box(mha::routed_ffn_par(&x, &wi, &wo, &routing));
+            });
+        });
+        let frac = bspmv::routed_flops(nt, d, dff, g, ga) as f64
+            / bspmv::dense_flops(nt, d, dff) as f64;
+        table.row(&[
+            "FFN".into(),
+            label.to_string(),
+            fmt_duration(t1.median()),
+            fmt_duration(tn.median()),
+            format!("{:.2}x", t1.median() / tn.median()),
+            format!("{frac:.2} of dense FLOPs"),
+        ]);
+    }
+    common::emit("table4_substrate", &table);
+}
+
+/// The original artifact-based module profile, behind the `xla` feature.
+#[cfg(feature = "xla")]
+fn engine_table() {
+    use spt::coordinator::profile::profile_module;
+
     let Some(engine) = common::engine_or_skip("table4") else { return };
     let (w, s) = (common::warmup(), common::samples());
     for cfg in ["opt-2048", "llama-4096"] {

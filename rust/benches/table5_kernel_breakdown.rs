@@ -2,20 +2,149 @@
 //! FFN vs their dense counterparts (forward pass).
 //!
 //! The paper breaks CUDA kernels (sgemm / cusparse::sddmm / csrmm /
-//! pq_lookup / index ops).  Here each *artifact* is one fused XLA
-//! executable per kernel stage (pq_quantize, topl_select, sparse
-//! attention pipeline, routed/dense FFN), timed through the engine; the
-//! shape to reproduce is the *ratio* structure: selection overhead small,
-//! routed FFN ~= beta x dense FFN, sparse attention ~ dense at these
-//! sizes (paper: sparse ops trade FLOPs for irregular access).
+//! pq_lookup / index ops).  The default build measures the rust-native
+//! substrate: each pipeline stage timed standalone (the ratio structure
+//! to reproduce: selection overhead small, routed FFN ~= beta x dense
+//! FFN), plus a thread-scaling table for the rayon multi-head path
+//! against the sequential reference.  With `--features xla` the
+//! artifact-based breakdown through PJRT also runs.
 
 mod common;
 
-use spt::coordinator::profile::random_inputs;
 use spt::metrics::{bench, Table};
+use spt::sparse::{attention, bspmv, naive_pq, pq, topl, Matrix};
 use spt::util::fmt_duration;
+use spt::util::rng::Rng;
 
 fn main() {
+    native_kernels();
+    thread_scaling();
+    #[cfg(feature = "xla")]
+    xla_kernels();
+}
+
+fn native_kernels() {
+    let (w, s) = (common::warmup().max(1), common::samples().max(3));
+    let mut rng = Rng::new(17);
+    let (n, d, m, e) = (256usize, 64usize, 8usize, 16usize);
+    let l = n / 4;
+    let mut cb = pq::Codebooks::random(m, e, d / m, &mut rng);
+    let q = Matrix::randn(n, d, 1.0, &mut rng);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    for _ in 0..3 {
+        pq::codebook_update(&k.data, &mut cb, 1.0);
+    }
+    let cq = pq::quantize(&q.data, &cb);
+    let ck = pq::quantize(&k.data, &cb);
+    let tables = naive_pq::ScoreTables::build(&cb);
+    let (nt, dff, gg, ga) = (256usize, 1024usize, 8usize, 4usize);
+    let x = Matrix::randn(nt, d, 1.0, &mut rng);
+    let wi = Matrix::randn(d, dff, 0.2, &mut rng);
+    let wo = Matrix::randn(dff, d, 0.2, &mut rng);
+    let routing = bspmv::route(&Matrix::randn(nt, gg, 1.0, &mut rng), ga);
+
+    let results: Vec<(&str, spt::metrics::BenchResult)> = vec![
+        (
+            "pq_lookup (quantize)",
+            bench("quantize", w, s, || {
+                std::hint::black_box(pq::quantize(&q.data, &cb));
+            }),
+        ),
+        (
+            "bucket-sort top-L",
+            bench("topl", w, s, || {
+                std::hint::black_box(topl::select(&cq, &ck, l, false));
+            }),
+        ),
+        (
+            "naive-PQ select",
+            bench("naive_pq", w, s, || {
+                std::hint::black_box(naive_pq::select(&cq, &ck, &tables, l, false));
+            }),
+        ),
+        (
+            "sparse attn (sddmm+softmax+spmm)",
+            bench("sparse_attn", w, s, || {
+                std::hint::black_box(attention::sparse_attention(
+                    &q, &k, &v, &cb, l, false,
+                ));
+            }),
+        ),
+        (
+            "dense attention",
+            bench("dense_attn", w, s, || {
+                std::hint::black_box(attention::dense_attention(&q, &k, &v, false));
+            }),
+        ),
+        (
+            "routed FFN (BSpMV)",
+            bench("routed_ffn", w, s, || {
+                std::hint::black_box(bspmv::routed_ffn(&x, &wi, &wo, &routing));
+            }),
+        ),
+        (
+            "dense FFN",
+            bench("dense_ffn", w, s, || {
+                std::hint::black_box(bspmv::dense_gated_ffn(&x, &wi, &wo, &routing));
+            }),
+        ),
+    ];
+
+    let get = |nm: &str| {
+        results
+            .iter()
+            .find(|(lbl, _)| *lbl == nm)
+            .map(|(_, r)| r.median())
+    };
+    let mut table = Table::new(
+        &format!(
+            "Table 5 — kernel-level forward-time breakdown on the substrate \
+             (n={n}, d={d}, L={l}; FFN nt={nt}, D={dff}, beta=1/2)"
+        ),
+        &["Kernel", "Median", "Calls/s", "Notes"],
+    );
+    for (label, r) in &results {
+        let note = match *label {
+            "routed FFN (BSpMV)" => get("dense FFN")
+                .map(|dn| format!("{:.2}x vs dense (beta=1/2 => ~2x ideal)", dn / r.median()))
+                .unwrap_or_default(),
+            "bucket-sort top-L" => get("naive-PQ select")
+                .map(|nv| format!("{:.2}x vs naive-PQ", nv / r.median()))
+                .unwrap_or_default(),
+            "sparse attn (sddmm+softmax+spmm)" => get("dense attention")
+                .map(|dn| {
+                    format!("{:.2}x vs dense (memory, not speed, is the goal)", dn / r.median())
+                })
+                .unwrap_or_default(),
+            _ => String::new(),
+        };
+        table.row(&[
+            label.to_string(),
+            fmt_duration(r.median()),
+            format!("{:.1}", 1.0 / r.median()),
+            note,
+        ]);
+    }
+    common::emit("table5_kernel_breakdown", &table);
+}
+
+/// Multi-head path across thread counts vs the sequential reference.
+fn thread_scaling() {
+    let wl = common::native_workload(8, 256, 64, 64, 512, 1024, 8, 4);
+    common::emit_thread_scaling(
+        &wl,
+        "Table 5b — multi-head substrate thread scaling \
+         (8 heads, n=256, L=64 + routed FFN beta=1/2)",
+        "table5_thread_scaling",
+    );
+}
+
+/// The original artifact-based breakdown through PJRT.
+#[cfg(feature = "xla")]
+fn xla_kernels() {
+    use spt::coordinator::profile::random_inputs;
+
     let Some(engine) = common::engine_or_skip("table5") else { return };
     let (w, s) = (common::warmup(), common::samples());
     let kernels = [
@@ -28,7 +157,7 @@ fn main() {
         ("dense FFN", "kernel_dense_ffn"),
     ];
     let mut table = Table::new(
-        "Table 5 — kernel-level forward-time breakdown (this testbed)",
+        "Table 5 (XLA artifacts) — kernel forward-time breakdown",
         &["Kernel", "Median", "Calls/s", "Notes"],
     );
     let mut results = Vec::new();
@@ -71,7 +200,7 @@ fn main() {
             note,
         ]);
     }
-    common::emit("table5_kernel_breakdown", &table);
+    common::emit("table5_xla_kernel_breakdown", &table);
 
     // Engine-level cumulative stats (the "profiler output" analog).
     let mut stats = Table::new(

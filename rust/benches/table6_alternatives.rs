@@ -11,6 +11,7 @@
 
 mod common;
 
+#[cfg(feature = "xla")]
 use spt::coordinator::profile::random_inputs;
 use spt::metrics::{bench, Table};
 use spt::sparse::{bspmv, bsr, naive_pq, pq, topl, Matrix};
@@ -93,6 +94,12 @@ fn main() {
     common::emit("table6b_bsr", &tb);
 
     // ---------------- XLA-kernel cross-check (if artifacts exist) -------
+    #[cfg(feature = "xla")]
+    xla_selection(w, s);
+}
+
+#[cfg(feature = "xla")]
+fn xla_selection(w: usize, s: usize) {
     if let Some(engine) = common::engine_or_skip("table6-xla") {
         let mut tx = Table::new(
             "Table 6 (XLA artifacts) — selection kernels through PJRT",

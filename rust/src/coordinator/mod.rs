@@ -10,11 +10,22 @@
 //!   the analytic memory model (Tables 1/4, Fig. 8).
 //! * [`checkpoint`] — binary save/restore of training state.
 
+//! All submodules execute AOT artifacts through the PJRT engine, so the
+//! whole coordinator is gated on the `xla` feature; the engine-free
+//! analytics live in `memmodel` and `sparse`.
+
+#[cfg(feature = "xla")]
 pub mod checkpoint;
+#[cfg(feature = "xla")]
 pub mod profile;
+#[cfg(feature = "xla")]
 pub mod state;
+#[cfg(feature = "xla")]
 pub mod trainer;
+#[cfg(feature = "xla")]
 pub mod trial;
 
+#[cfg(feature = "xla")]
 pub use state::TrainState;
+#[cfg(feature = "xla")]
 pub use trainer::{TrainReport, Trainer, TrainerOptions};

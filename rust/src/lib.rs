@@ -16,12 +16,19 @@
 //!   analytic GPU-memory model, a rust-native sparse substrate used for
 //!   baselines/benches, and the harness regenerating every table and
 //!   figure of the paper's evaluation.
+//!
+//! The PJRT execution path ([`runtime`] and the artifact-driven parts of
+//! [`coordinator`]) is behind the off-by-default `xla` cargo feature: the
+//! default build needs no PJRT toolchain and still provides the full
+//! sparse substrate (including the parallel multi-head layer in
+//! [`sparse::mha`]), memory model, data pipeline, and benches.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod memmodel;
 pub mod metrics;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sparse;
 pub mod util;

@@ -17,14 +17,22 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use spt::config::{presets, Mode, RunConfig};
+use spt::config::{presets, Mode};
+#[cfg(feature = "xla")]
+use spt::config::RunConfig;
+#[cfg(feature = "xla")]
 use spt::coordinator::profile as prof;
+#[cfg(feature = "xla")]
 use spt::coordinator::trial::TrialManager;
+#[cfg(feature = "xla")]
 use spt::coordinator::{Trainer, TrainerOptions};
 use spt::memmodel;
 use spt::metrics::Table;
+#[cfg(feature = "xla")]
 use spt::runtime::Engine;
-use spt::util::{fmt_bytes, fmt_duration};
+use spt::util::fmt_bytes;
+#[cfg(feature = "xla")]
+use spt::util::fmt_duration;
 
 /// Minimal `--key value` / `--flag` argument parser.
 struct Args {
@@ -76,6 +84,7 @@ impl Args {
         self.flags.iter().any(|f| f == flag)
     }
 
+    #[cfg(feature = "xla")]
     fn run_config(&self) -> Result<RunConfig> {
         let mut rc = match self.get("config") {
             Some(path) => RunConfig::from_file(path)?,
@@ -103,14 +112,28 @@ fn main() {
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.cmd.as_str() {
+        #[cfg(feature = "xla")]
         "train" => cmd_train(&args, false),
+        #[cfg(feature = "xla")]
         "train-qa" => cmd_train(&args, true),
+        #[cfg(feature = "xla")]
         "trial" => cmd_trial(&args),
+        #[cfg(feature = "xla")]
         "profile" => cmd_profile(&args),
+        #[cfg(feature = "xla")]
         "blocks" => cmd_blocks(&args),
         "memplan" => cmd_memplan(&args),
+        #[cfg(feature = "xla")]
         "goldens" => cmd_goldens(&args),
+        #[cfg(feature = "xla")]
         "artifacts" => cmd_artifacts(&args),
+        #[cfg(not(feature = "xla"))]
+        "train" | "train-qa" | "trial" | "profile" | "blocks" | "goldens"
+        | "artifacts" => bail!(
+            "'{}' executes AOT artifacts through PJRT; rebuild with \
+             `--features xla` (requires the xla bindings crate, see README)",
+            args.cmd
+        ),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -141,13 +164,18 @@ COMMON FLAGS
   --steps N  --seed N   --eval_every N  --codebook_refresh_every N
   --config FILE         TOML run config (keys as above)
   --chunked             use the scan-of-8 fast dispatch path (train)
+
+NOTE  every command except `memplan` and `help` executes AOT artifacts
+      through PJRT and needs a build with `--features xla`.
 ";
 
+#[cfg(feature = "xla")]
 fn engine_from(args: &Args) -> Result<Engine> {
     let dir = args.get_or("artifacts_dir", "artifacts");
     Engine::new(&dir)
 }
 
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args, qa: bool) -> Result<()> {
     let rc = args.run_config()?;
     let engine = engine_from(args)?;
@@ -197,6 +225,7 @@ fn cmd_train(args: &Args, qa: bool) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_trial(args: &Args) -> Result<()> {
     let rc = args.run_config()?;
     let engine = engine_from(args)?;
@@ -213,6 +242,7 @@ fn cmd_trial(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_profile(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     let cfg = args.get_or("block", "opt-2048");
@@ -244,6 +274,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_blocks(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     let warmup = args.usize_or("warmup", 1)?;
@@ -334,6 +365,7 @@ fn cmd_memplan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_goldens(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts_dir", "artifacts");
     let engine = engine_from(args)?;
@@ -348,6 +380,7 @@ fn cmd_goldens(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     let mut table = Table::new("AOT artifacts", &["Name", "Inputs", "Outputs", "In bytes", "Kind"]);

@@ -53,13 +53,15 @@ pub fn sparse_attention(
 }
 
 /// CDF of sorted softmax attention weights, averaged over queries
-/// (regenerates paper Fig. 3).  Returns `points` (fraction-kept, mass).
+/// (regenerates paper Fig. 3).  Returns exactly `points` entries of
+/// (fraction-kept, mass); the last is (1.0, total mass).
 pub fn attention_weight_cdf(
     q: &Matrix,
     k: &Matrix,
     points: usize,
     causal: bool,
 ) -> Vec<(f32, f32)> {
+    assert!(points >= 1, "need at least one CDF point");
     let scale = 1.0 / (q.cols as f32).sqrt();
     let mut logits = q.matmul(&k.transpose()).map(|x| x * scale);
     if causal {
@@ -83,17 +85,28 @@ pub fn attention_weight_cdf(
     for p in profile.iter_mut() {
         *p /= w.rows as f64;
     }
-    // Cumulative mass at `points` evenly spaced kept-fractions.
+    // Cumulative mass at `points` evenly spaced kept-fractions.  One
+    // column can cross several thresholds (always when `points > n`), so
+    // emit with a while-loop rather than once per column; the final entry
+    // is pinned to exactly (1.0, total mass).
     let mut cdf = Vec::with_capacity(points);
     let mut acc = 0.0f64;
-    let mut next_point = 1;
+    let mut next_point = 1usize;
     for (i, p) in profile.iter().enumerate() {
         acc += p;
         let frac = (i + 1) as f32 / n as f32;
-        if frac >= next_point as f32 / points as f32 {
+        while next_point <= points && frac >= next_point as f32 / points as f32 {
             cdf.push((frac, acc as f32));
             next_point += 1;
         }
+    }
+    // Float rounding can leave trailing thresholds unemitted; they all sit
+    // at the full kept-fraction.
+    while cdf.len() < points {
+        cdf.push((1.0, acc as f32));
+    }
+    if let Some(last) = cdf.last_mut() {
+        *last = (1.0, acc as f32);
     }
     cdf
 }
@@ -177,6 +190,29 @@ mod tests {
         assert!(at15 > 0.5, "mass at 15% = {at15}");
         let last = cdf.last().unwrap().1;
         assert!((last - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cdf_has_exactly_points_entries_even_when_points_exceed_n() {
+        // Regression: the old emit loop advanced at most one threshold per
+        // column, so points > n (or multi-threshold crossings) returned
+        // fewer than `points` entries.
+        let (q, k, _) = correlated_qkv(4, 8, 5);
+        for points in [1usize, 2, 3, 4, 5, 7, 10, 33] {
+            let cdf = attention_weight_cdf(&q, &k, points, false);
+            assert_eq!(cdf.len(), points, "points={points}");
+            let (f, mass) = *cdf.last().unwrap();
+            assert_eq!(f, 1.0, "points={points}: last fraction {f}");
+            assert!((mass - 1.0).abs() < 1e-3, "points={points}: mass {mass}");
+            for w in cdf.windows(2) {
+                assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1 - 1e-6);
+            }
+        }
+        // Larger n, causal, points >> n.
+        let (q, k, _) = correlated_qkv(16, 8, 6);
+        let cdf = attention_weight_cdf(&q, &k, 50, true);
+        assert_eq!(cdf.len(), 50);
+        assert_eq!(cdf.last().unwrap().0, 1.0);
     }
 
     #[test]

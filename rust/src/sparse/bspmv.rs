@@ -48,6 +48,56 @@ pub fn route(scores: &Matrix, g_active: usize) -> Routing {
     Routing { mask, gate, g, g_active }
 }
 
+/// One block's contribution (paper Alg. 4 lines 2-5): the activated
+/// token list and their output rows `relu(X_g W_I[g]) * gate @ W_O[g]`,
+/// or `None` when no token activated the block.  Shared by the
+/// sequential [`routed_ffn`] and the parallel
+/// [`crate::sparse::mha::routed_ffn_par`], so the two execution paths
+/// stay bit-identical by construction.
+pub fn block_partial(
+    gi: usize,
+    x: &Matrix,
+    w_i: &Matrix,
+    w_o: &Matrix,
+    routing: &Routing,
+) -> Option<(Vec<usize>, Matrix)> {
+    let nt = x.rows;
+    let d = x.cols;
+    let dg = w_i.cols / routing.g;
+    // Select tokens (Alg. 4 lines 2-3) — the paper's index_get.
+    let tokens: Vec<usize> = (0..nt).filter(|&t| routing.mask[t][gi]).collect();
+    if tokens.is_empty() {
+        return None;
+    }
+    // Gather X_g.
+    let mut xg = Matrix::zeros(tokens.len(), d);
+    for (r, &t) in tokens.iter().enumerate() {
+        xg.row_mut(r).copy_from_slice(x.row(t));
+    }
+    // Block of W_I: columns [gi*dg, (gi+1)*dg).
+    let mut wi_g = Matrix::zeros(d, dg);
+    for r in 0..d {
+        wi_g.row_mut(r)
+            .copy_from_slice(&w_i.row(r)[gi * dg..(gi + 1) * dg]);
+    }
+    // Inner projection + ReLU (line 4), gated.
+    let mut h = xg.matmul(&wi_g).relu();
+    for (r, &t) in tokens.iter().enumerate() {
+        let gate = routing.gate[t][gi];
+        for v in h.row_mut(r) {
+            *v *= gate;
+        }
+    }
+    // Block of W_O: rows [gi*dg, (gi+1)*dg).
+    let wo_g = Matrix::from_vec(
+        dg,
+        d,
+        w_o.data[gi * dg * d..(gi + 1) * dg * d].to_vec(),
+    );
+    // Outer projection (line 5); the caller scatters — paper's index_put.
+    Some((tokens, h.matmul(&wo_g)))
+}
+
 /// Routed FFN via BSpMV (paper Alg. 4).
 ///
 /// `w_i`: `[d, D]` split into G column blocks; `w_o`: `[D, d]` split into G
@@ -56,48 +106,14 @@ pub fn route(scores: &Matrix, g_active: usize) -> Routing {
 pub fn routed_ffn(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing) -> Matrix {
     let nt = x.rows;
     let d = x.cols;
-    let dd = w_i.cols;
-    let g = routing.g;
-    assert_eq!(dd % g, 0);
-    let dg = dd / g;
+    assert_eq!(w_i.cols % routing.g, 0);
     let mut y = Matrix::zeros(nt, d);
-    for gi in 0..g {
-        // Select tokens (Alg. 4 lines 2-3) — the paper's index_get.
-        let tokens: Vec<usize> =
-            (0..nt).filter(|&t| routing.mask[t][gi]).collect();
-        if tokens.is_empty() {
-            continue;
-        }
-        // Gather X_g.
-        let mut xg = Matrix::zeros(tokens.len(), d);
-        for (r, &t) in tokens.iter().enumerate() {
-            xg.row_mut(r).copy_from_slice(x.row(t));
-        }
-        // Block of W_I: columns [gi*dg, (gi+1)*dg).
-        let mut wi_g = Matrix::zeros(d, dg);
-        for r in 0..d {
-            wi_g.row_mut(r)
-                .copy_from_slice(&w_i.row(r)[gi * dg..(gi + 1) * dg]);
-        }
-        // Inner projection + ReLU (line 4), gated.
-        let mut h = xg.matmul(&wi_g).relu();
-        for (r, &t) in tokens.iter().enumerate() {
-            let gate = routing.gate[t][gi];
-            for v in h.row_mut(r) {
-                *v *= gate;
-            }
-        }
-        // Block of W_O: rows [gi*dg, (gi+1)*dg).
-        let wo_g = Matrix::from_vec(
-            dg,
-            d,
-            w_o.data[gi * dg * d..(gi + 1) * dg * d].to_vec(),
-        );
-        // Outer projection + scatter (line 5) — the paper's index_put.
-        let yg = h.matmul(&wo_g);
-        for (r, &t) in tokens.iter().enumerate() {
-            for (o, &v) in y.row_mut(t).iter_mut().zip(yg.row(r)) {
-                *o += v;
+    for gi in 0..routing.g {
+        if let Some((tokens, yg)) = block_partial(gi, x, w_i, w_o, routing) {
+            for (r, &t) in tokens.iter().enumerate() {
+                for (o, &v) in y.row_mut(t).iter_mut().zip(yg.row(r)) {
+                    *o += v;
+                }
             }
         }
     }

@@ -1,0 +1,156 @@
+//! Flat contiguous storage for PQ codes and top-L selections.
+//!
+//! `pq::quantize`, `topl::select`, and `naive_pq::select` used to return
+//! `Vec<Vec<_>>` — one heap allocation per query row, which made the
+//! batched multi-head path allocation-bound and hostile to parallel
+//! chunking.  [`Codes`] and [`TopL`] hold the same data row-major in a
+//! single buffer, so per-(head × query-chunk) workers slice disjoint
+//! windows without locks or per-row allocation, and the whole structure
+//! moves through caches as one contiguous block.
+
+/// PQ codeword ids for `n` vectors × `m` subspaces, row-major.
+/// `u8` suffices: E <= 256 always (the paper uses E = 16).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Codes {
+    pub n: usize,
+    pub m: usize,
+    /// `[n * m]`, row `i` at `i * m .. (i + 1) * m`.
+    pub data: Vec<u8>,
+}
+
+impl Codes {
+    pub fn zeros(n: usize, m: usize) -> Self {
+        assert!(m >= 1, "need at least one subspace");
+        Codes { n, m, data: vec![0u8; n * m] }
+    }
+
+    /// Build from per-row code vectors (tests / interop).
+    pub fn from_rows(rows: &[Vec<u8>]) -> Self {
+        assert!(!rows.is_empty(), "no rows");
+        let m = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * m);
+        for r in rows {
+            assert_eq!(r.len(), m, "ragged code rows");
+            data.extend_from_slice(r);
+        }
+        Codes { n: rows.len(), m, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [u8] {
+        &mut self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    /// Iterate rows as slices.
+    pub fn rows(&self) -> std::slice::ChunksExact<'_, u8> {
+        self.data.chunks_exact(self.m)
+    }
+
+    /// Back to nested rows (tests / interop only).
+    pub fn to_rows(&self) -> Vec<Vec<u8>> {
+        self.rows().map(<[u8]>::to_vec).collect()
+    }
+
+    /// Stored bytes (the paper's O(nM) code memory).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Top-L key selections for `n` queries, row-major: exactly `l` unique
+/// key indices per query, ordered by (-score, key index).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopL {
+    pub n: usize,
+    pub l: usize,
+    /// `[n * l]`, row `i` at `i * l .. (i + 1) * l`.
+    pub data: Vec<u32>,
+}
+
+impl TopL {
+    pub fn zeros(n: usize, l: usize) -> Self {
+        assert!(l >= 1, "need at least one selection per query");
+        TopL { n, l, data: vec![0u32; n * l] }
+    }
+
+    /// Build from per-row index vectors (tests / interop).
+    pub fn from_rows(rows: &[Vec<u32>]) -> Self {
+        assert!(!rows.is_empty(), "no rows");
+        let l = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * l);
+        for r in rows {
+            assert_eq!(r.len(), l, "ragged selection rows");
+            data.extend_from_slice(r);
+        }
+        TopL { n: rows.len(), l, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.data[i * self.l..(i + 1) * self.l]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [u32] {
+        &mut self.data[i * self.l..(i + 1) * self.l]
+    }
+
+    /// Iterate rows as slices.
+    pub fn rows(&self) -> std::slice::ChunksExact<'_, u32> {
+        self.data.chunks_exact(self.l)
+    }
+
+    /// Back to nested rows (tests / interop only).
+    pub fn to_rows(&self) -> Vec<Vec<u32>> {
+        self.rows().map(<[u32]>::to_vec).collect()
+    }
+
+    /// Stored bytes (the paper's O(nL) index memory).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_round_trip_rows() {
+        let rows = vec![vec![1u8, 2, 3], vec![4, 5, 6]];
+        let c = Codes::from_rows(&rows);
+        assert_eq!((c.n, c.m), (2, 3));
+        assert_eq!(c.row(1), &[4, 5, 6]);
+        assert_eq!(c.to_rows(), rows);
+        assert_eq!(c.rows().count(), 2);
+        assert_eq!(c.bytes(), 6);
+    }
+
+    #[test]
+    fn codes_row_mut_writes_in_place() {
+        let mut c = Codes::zeros(3, 2);
+        c.row_mut(2).copy_from_slice(&[7, 9]);
+        assert_eq!(c.data, vec![0, 0, 0, 0, 7, 9]);
+    }
+
+    #[test]
+    fn topl_round_trip_rows() {
+        let rows = vec![vec![3u32, 0], vec![1, 2], vec![2, 1]];
+        let t = TopL::from_rows(&rows);
+        assert_eq!((t.n, t.l), (3, 2));
+        assert_eq!(t.row(0), &[3, 0]);
+        assert_eq!(t.to_rows(), rows);
+        assert_eq!(t.bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn topl_rejects_ragged_rows() {
+        TopL::from_rows(&[vec![0u32], vec![1, 2]]);
+    }
+}

@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use super::codes::TopL;
 use super::matrix::Matrix;
 
 /// Compressed sparse row matrix.
@@ -20,10 +21,26 @@ pub struct Csr {
 }
 
 impl Csr {
-    /// Build from the top-L selection output: one index row per query
+    /// Build from the top-L selection output: exactly L entries per query
     /// (paper: "constructed directly from the output of the previous
-    /// top-L selection step").
-    pub fn from_topl(indices: &[Vec<u32>], cols: usize) -> Self {
+    /// top-L selection step"), so `indptr` is the implicit
+    /// `[0, L, 2L, ...]` and the index buffer is reused as-is.
+    pub fn from_topl(sel: &TopL, cols: usize) -> Self {
+        let rows = sel.n;
+        let l = sel.l;
+        let indptr = (0..=rows).map(|r| (r * l) as u32).collect();
+        Csr {
+            rows,
+            cols,
+            indptr,
+            indices: sel.data.clone(),
+            values: vec![0.0; rows * l],
+        }
+    }
+
+    /// Build from per-row index lists (general, possibly ragged — the
+    /// tests exercise ragged rows through this constructor).
+    pub fn from_rows(indices: &[Vec<u32>], cols: usize) -> Self {
         let rows = indices.len();
         let mut indptr = Vec::with_capacity(rows + 1);
         let mut flat = Vec::new();
@@ -157,11 +174,23 @@ mod tests {
 
     #[test]
     fn from_topl_builds_regular_indptr() {
-        let idx = vec![vec![1, 2], vec![0, 3], vec![2, 1]];
+        let idx = TopL::from_rows(&[vec![1, 2], vec![0, 3], vec![2, 1]]);
         let m = Csr::from_topl(&idx, 4);
         m.validate().unwrap();
         assert_eq!(m.indptr, vec![0, 2, 4, 6]); // [0, L, 2L, ...] (Fig. 7)
         assert_eq!(m.nnz(), 6);
+        // Agrees with the general ragged constructor.
+        let m2 = Csr::from_rows(&idx.to_rows(), 4);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn from_rows_accepts_ragged_rows() {
+        let idx = vec![vec![0u32, 2], vec![1], vec![]];
+        let m = Csr::from_rows(&idx, 3);
+        m.validate().unwrap();
+        assert_eq!(m.indptr, vec![0, 2, 3, 3]);
+        assert_eq!(m.nnz(), 3);
     }
 
     #[test]
@@ -175,7 +204,7 @@ mod tests {
             let k = Matrix::randn(n, d, 1.0, &mut rng);
             let v = Matrix::randn(n, d, 1.0, &mut rng);
             let idx = random_topl(&mut rng, n, l);
-            let mut a = Csr::from_topl(&idx, n);
+            let mut a = Csr::from_rows(&idx, n);
             a.sddmm(&q, &k);
             a.softmax_rows();
             let y = a.spmm(&v);
@@ -206,7 +235,7 @@ mod tests {
     #[test]
     fn spmm_identity_weights_gathers_rows() {
         let idx = vec![vec![2u32], vec![0], vec![1]];
-        let mut a = Csr::from_topl(&idx, 3);
+        let mut a = Csr::from_rows(&idx, 3);
         a.values = vec![1.0, 1.0, 1.0];
         let v = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
         let y = a.spmm(&v);
@@ -216,10 +245,10 @@ mod tests {
     #[test]
     fn validate_catches_corruption() {
         let idx = vec![vec![1u32], vec![0]];
-        let mut a = Csr::from_topl(&idx, 2);
+        let mut a = Csr::from_rows(&idx, 2);
         a.indices[0] = 9;
         assert!(a.validate().is_err());
-        let mut b = Csr::from_topl(&idx, 2);
+        let mut b = Csr::from_rows(&idx, 2);
         b.indptr[1] = 7;
         assert!(b.validate().is_err());
     }
@@ -228,9 +257,13 @@ mod tests {
     fn memory_is_o_nl_not_n2(){
         let n = 512;
         let l = 64;
-        let idx: Vec<Vec<u32>> = (0..n).map(|i| {
-            (0..l as u32).map(|j| (i as u32 + j) % n as u32).collect()
-        }).collect();
+        let idx = TopL::from_rows(
+            &(0..n)
+                .map(|i| {
+                    (0..l as u32).map(|j| (i as u32 + j) % n as u32).collect()
+                })
+                .collect::<Vec<Vec<u32>>>(),
+        );
         let a = Csr::from_topl(&idx, n);
         let dense_bytes = n * n * 4;
         // paper: nL values + nL indices + (n+1) ptr << n^2

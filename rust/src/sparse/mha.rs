@@ -1,0 +1,328 @@
+//! Batched multi-head execution layer over the sparse substrate.
+//!
+//! The single-head pipelines in [`super::attention`] and
+//! [`super::bspmv`] stay the *sequential cross-validation reference*;
+//! this module runs H heads with rayon parallelism over
+//! (head × query-chunk) and fans the routed FFN out over its weight
+//! blocks.  Both parallel paths reproduce the sequential results
+//! bit-for-bit: every per-row floating-point reduction happens in the
+//! same operation order as the reference — only *across* rows/blocks is
+//! the work distributed — so the property tests can assert equality at
+//! tight tolerance without chasing reassociation noise.
+
+use rayon::prelude::*;
+
+use super::bspmv::{self, Routing};
+use super::matrix::Matrix;
+use super::pq::{self, Codebooks};
+use super::topl;
+
+/// Default number of query rows per parallel work item.  Small enough to
+/// load-balance H × (n / chunk) tasks across the pool, large enough that
+/// the per-task scratch allocation amortizes.
+pub const DEFAULT_QUERY_CHUNK: usize = 32;
+
+/// Multi-head sparse attention: per-head PQ codebooks and per-head
+/// Q/K/V, shared sparsity strength `l` and causality.
+#[derive(Debug, Clone)]
+pub struct MultiHeadSparseAttention {
+    /// One codebook per head (heads are quantized independently).
+    pub codebooks: Vec<Codebooks>,
+    /// Keys kept per query (paper's L).
+    pub l: usize,
+    pub causal: bool,
+    /// Query rows per parallel task; tune for cache vs scheduling.
+    pub query_chunk: usize,
+}
+
+impl MultiHeadSparseAttention {
+    pub fn new(codebooks: Vec<Codebooks>, l: usize, causal: bool) -> Self {
+        assert!(!codebooks.is_empty(), "need at least one head");
+        assert!(l >= 1);
+        MultiHeadSparseAttention {
+            codebooks,
+            l,
+            causal,
+            query_chunk: DEFAULT_QUERY_CHUNK,
+        }
+    }
+
+    pub fn heads(&self) -> usize {
+        self.codebooks.len()
+    }
+
+    fn check(&self, q: &[Matrix], k: &[Matrix], v: &[Matrix]) {
+        let hh = self.heads();
+        assert_eq!(q.len(), hh, "q head count");
+        assert_eq!(k.len(), hh, "k head count");
+        assert_eq!(v.len(), hh, "v head count");
+        for h in 0..hh {
+            assert_eq!(q[h].cols, k[h].cols, "head {h}: q/k dims differ");
+            assert_eq!(k[h].rows, v[h].rows, "head {h}: k/v rows differ");
+            assert_eq!(
+                q[h].cols,
+                self.codebooks[h].d(),
+                "head {h}: codebook dim mismatch"
+            );
+            assert!(
+                self.l <= k[h].rows,
+                "head {h}: L={} exceeds {} keys",
+                self.l,
+                k[h].rows
+            );
+        }
+    }
+
+    /// Sequential reference: the single-head pipeline, head by head.
+    /// The parallel [`Self::forward`] must match this bit-for-bit.
+    pub fn forward_seq(&self, q: &[Matrix], k: &[Matrix], v: &[Matrix]) -> Vec<Matrix> {
+        self.check(q, k, v);
+        (0..self.heads())
+            .map(|h| {
+                super::attention::sparse_attention(
+                    &q[h],
+                    &k[h],
+                    &v[h],
+                    &self.codebooks[h],
+                    self.l,
+                    self.causal,
+                )
+                .0
+            })
+            .collect()
+    }
+
+    /// Parallel path: rayon over heads and, within each head, over
+    /// query-row chunks of the output buffer (disjoint `&mut` windows, no
+    /// locks).  Nested rayon scopes compose by work-stealing, so the
+    /// effective fan-out is H × ceil(n / query_chunk) tasks.
+    pub fn forward(&self, q: &[Matrix], k: &[Matrix], v: &[Matrix]) -> Vec<Matrix> {
+        self.check(q, k, v);
+        (0..self.heads())
+            .into_par_iter()
+            .map(|h| self.forward_head(&q[h], &k[h], &v[h], &self.codebooks[h]))
+            .collect()
+    }
+
+    /// One head of the parallel path.  Per chunk, each query row runs the
+    /// full pipeline (PQ quantize -> bucket-sort top-L -> SDDMM ->
+    /// softmax -> SpMM) in exactly the reference operation order.
+    fn forward_head(&self, q: &Matrix, k: &Matrix, v: &Matrix, cb: &Codebooks) -> Matrix {
+        let scale = 1.0 / (q.cols as f32).sqrt();
+        let l = self.l;
+        let causal = self.causal;
+        let d_out = v.cols;
+        // Key codes are shared by every chunk: quantize once per head.
+        let ck = pq::quantize(&k.data, cb);
+        let mut out = Matrix::zeros(q.rows, d_out);
+        let chunk = self.query_chunk.max(1);
+        out.data
+            .par_chunks_mut(chunk * d_out)
+            .enumerate()
+            .for_each(|(ci, out_chunk)| {
+                let row0 = ci * chunk;
+                let rows = out_chunk.len() / d_out;
+                // Per-task scratch, reused across the chunk's rows.
+                let mut qcodes = vec![0u8; cb.m];
+                let mut sel = vec![0u32; l];
+                let mut vals = vec![0.0f32; l];
+                let mut qs = vec![0.0f32; q.cols];
+                let mut buckets = topl::BucketScratch::default();
+                for r in 0..rows {
+                    let qi = row0 + r;
+                    let qrow = q.row(qi);
+                    // PQ quantize the query (integer path — exact).
+                    pq::quantize_row(qrow, cb, &mut qcodes);
+                    // Bucket-sort top-L against the key codes.
+                    topl::select_into(
+                        &qcodes,
+                        &ck,
+                        l,
+                        causal.then_some(qi),
+                        &mut sel,
+                        &mut buckets,
+                    );
+                    // SDDMM on the scaled query, reference op order.
+                    for (s, &x) in qs.iter_mut().zip(qrow) {
+                        *s = x * scale;
+                    }
+                    for (val, &j) in vals.iter_mut().zip(sel.iter()) {
+                        let krow = k.row(j as usize);
+                        *val = qs.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    }
+                    // Causal re-mask: padding slots may reference future
+                    // keys (same as the sequential pipeline).
+                    if causal {
+                        for (val, &j) in vals.iter_mut().zip(sel.iter()) {
+                            if j as usize > qi {
+                                *val = -1e30;
+                            }
+                        }
+                    }
+                    // Row softmax, same order as `Csr::softmax_rows`.
+                    let mx = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0;
+                    for x in vals.iter_mut() {
+                        *x = (*x - mx).exp();
+                        sum += *x;
+                    }
+                    for x in vals.iter_mut() {
+                        *x /= sum.max(1e-30);
+                    }
+                    // SpMM row, same order as `Csr::spmm`.
+                    let orow = &mut out_chunk[r * d_out..(r + 1) * d_out];
+                    for (p, &j) in sel.iter().enumerate() {
+                        let w = vals[p];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vrow = v.row(j as usize);
+                        for (o, &x) in orow.iter_mut().zip(vrow) {
+                            *o += w * x;
+                        }
+                    }
+                }
+            });
+        out
+    }
+}
+
+/// Parallel routed FFN (paper Alg. 4, block-parallel): fan out over the
+/// G weight blocks — each task runs the shared
+/// [`bspmv::block_partial`] kernel (gather + two block GEMMs, the
+/// per-thread partial output) — then reduce the partials into `Y` in
+/// ascending block order.  Same per-block ops and same scatter-add
+/// order as the sequential [`bspmv::routed_ffn`], so the result is
+/// bit-identical and deterministic regardless of thread schedule.
+pub fn routed_ffn_par(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing) -> Matrix {
+    let nt = x.rows;
+    let d = x.cols;
+    assert_eq!(w_i.cols % routing.g, 0);
+    // Fan out: one task per block.
+    let partials: Vec<Option<(Vec<usize>, Matrix)>> = (0..routing.g)
+        .into_par_iter()
+        .map(|gi| bspmv::block_partial(gi, x, w_i, w_o, routing))
+        .collect();
+    // Reduce: scatter-add partials in block order (cheap: O(active · d)).
+    let mut y = Matrix::zeros(nt, d);
+    for (tokens, yg) in partials.into_iter().flatten() {
+        for (r, &t) in tokens.iter().enumerate() {
+            for (o, &v) in y.row_mut(t).iter_mut().zip(yg.row(r)) {
+                *o += v;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{attention, bspmv};
+    use crate::util::rng::Rng;
+
+    fn head_workload(
+        hh: usize,
+        n: usize,
+        m: usize,
+        dsub: usize,
+        seed: u64,
+    ) -> (Vec<Codebooks>, Vec<Matrix>, Vec<Matrix>, Vec<Matrix>) {
+        let d = m * dsub;
+        let mut rng = Rng::new(seed);
+        let mut cbs = Vec::new();
+        let (mut qs, mut ks, mut vs) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..hh {
+            let mut cb = Codebooks::random(m, 8, dsub, &mut rng);
+            let k = Matrix::randn(n, d, 1.0, &mut rng);
+            let noise = Matrix::randn(n, d, 0.4, &mut rng);
+            let q = Matrix::from_vec(
+                n,
+                d,
+                k.data
+                    .iter()
+                    .zip(&noise.data)
+                    .map(|(a, b)| 2.0 * a + b)
+                    .collect(),
+            );
+            pq::codebook_update(&k.data, &mut cb, 1.0);
+            cbs.push(cb);
+            qs.push(q);
+            ks.push(k);
+            vs.push(Matrix::randn(n, d, 1.0, &mut rng));
+        }
+        (cbs, qs, ks, vs)
+    }
+
+    #[test]
+    fn parallel_matches_sequential_reference() {
+        for (causal, seed) in [(false, 1u64), (true, 2)] {
+            let (cbs, q, k, v) = head_workload(3, 29, 4, 4, seed);
+            let mha = MultiHeadSparseAttention::new(cbs, 7, causal);
+            let par = mha.forward(&q, &k, &v);
+            let seq = mha.forward_seq(&q, &k, &v);
+            assert_eq!(par.len(), seq.len());
+            for h in 0..par.len() {
+                let diff = par[h].max_abs_diff(&seq[h]);
+                assert!(diff < 1e-7, "causal={causal} head {h}: diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_result() {
+        let (cbs, q, k, v) = head_workload(2, 17, 2, 4, 3);
+        let mut mha = MultiHeadSparseAttention::new(cbs, 5, true);
+        mha.query_chunk = 1;
+        let a = mha.forward(&q, &k, &v);
+        mha.query_chunk = 7;
+        let b = mha.forward(&q, &k, &v);
+        mha.query_chunk = 10_000; // single chunk per head
+        let c = mha.forward(&q, &k, &v);
+        for h in 0..a.len() {
+            assert_eq!(a[h], b[h], "head {h} chunk 1 vs 7");
+            assert_eq!(b[h], c[h], "head {h} chunk 7 vs max");
+        }
+    }
+
+    #[test]
+    fn single_head_matches_attention_module() {
+        let (cbs, q, k, v) = head_workload(1, 24, 2, 8, 4);
+        let (want, _) =
+            attention::sparse_attention(&q[0], &k[0], &v[0], &cbs[0], 6, false);
+        let mha = MultiHeadSparseAttention::new(cbs, 6, false);
+        let got = mha.forward(&q, &k, &v);
+        assert!(got[0].max_abs_diff(&want) < 1e-7);
+    }
+
+    #[test]
+    fn routed_ffn_par_matches_sequential() {
+        let mut rng = Rng::new(5);
+        let (nt, d, gg, dg, ga) = (33, 6, 4, 3, 2);
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, gg * dg, 0.3, &mut rng);
+        let wo = Matrix::randn(gg * dg, d, 0.3, &mut rng);
+        let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+        let routing = bspmv::route(&scores, ga);
+        let par = routed_ffn_par(&x, &wi, &wo, &routing);
+        let seq = bspmv::routed_ffn(&x, &wi, &wo, &routing);
+        assert!(par.max_abs_diff(&seq) < 1e-7, "{}", par.max_abs_diff(&seq));
+    }
+
+    #[test]
+    fn dedicated_pool_gives_same_answer() {
+        // The parallel path must be schedule-independent: a 1-thread pool
+        // and the default pool produce identical bits.
+        let (cbs, q, k, v) = head_workload(2, 21, 2, 4, 6);
+        let mha = MultiHeadSparseAttention::new(cbs, 4, false);
+        let default_pool = mha.forward(&q, &k, &v);
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(1)
+            .build()
+            .expect("pool");
+        let single = pool.install(|| mha.forward(&q, &k, &v));
+        for h in 0..default_pool.len() {
+            assert_eq!(default_pool[h], single[h], "head {h}");
+        }
+    }
+}

@@ -12,17 +12,25 @@
 //!    goldens round trip and through property tests, so a bug in either
 //!    implementation surfaces as a disagreement.
 //!
-//! Modules mirror the paper's §4–§5 structure.
+//! Modules mirror the paper's §4–§5 structure.  Codes and top-L
+//! selections live in flat contiguous buffers ([`codes`]), and [`mha`]
+//! layers a rayon-parallel multi-head path (head × query-chunk fan-out,
+//! block-parallel routed FFN) over the sequential single-head pipelines,
+//! which remain the cross-validation reference.
 
 pub mod attention;
 pub mod bspmv;
 pub mod bsr;
+pub mod codes;
 pub mod csr;
 pub mod matrix;
+pub mod mha;
 pub mod naive_pq;
 pub mod pq;
 pub mod svd;
 pub mod topl;
 
+pub use codes::{Codes, TopL};
 pub use csr::Csr;
 pub use matrix::Matrix;
+pub use mha::MultiHeadSparseAttention;

@@ -6,6 +6,7 @@
 //! exists so `benches/table6_alternatives.rs` can regenerate that
 //! comparison at native speed.
 
+use super::codes::{Codes, TopL};
 use super::pq::Codebooks;
 
 /// Precomputed inner-product lookup tables: `tables[m][e1][e2] =
@@ -45,33 +46,35 @@ impl ScoreTables {
 
 /// Top-L by float ADC score + full sort (the expensive baseline).
 pub fn select(
-    codes_q: &[Vec<u8>],
-    codes_k: &[Vec<u8>],
+    codes_q: &Codes,
+    codes_k: &Codes,
     tables: &ScoreTables,
     l: usize,
     causal: bool,
-) -> Vec<Vec<u32>> {
-    let nk = codes_k.len();
-    codes_q
-        .iter()
-        .enumerate()
-        .map(|(i, cq)| {
-            // Materialize all float scores (the memory cost Table 6 shows).
-            let mut scored: Vec<(f32, u32)> = (0..nk)
-                .map(|j| {
-                    let s = if causal && j > i {
-                        f32::NEG_INFINITY
-                    } else {
-                        tables.score(cq, &codes_k[j])
-                    };
-                    (s, j as u32)
-                })
-                .collect();
-            // Full float sort (the time cost Table 6 shows).
-            scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-            scored.into_iter().take(l).map(|(_, j)| j).collect()
-        })
-        .collect()
+) -> TopL {
+    let nk = codes_k.n;
+    assert!(l >= 1 && l <= nk);
+    let mut out = TopL::zeros(codes_q.n, l);
+    for (i, row) in out.data.chunks_exact_mut(l).enumerate() {
+        let cq = codes_q.row(i);
+        // Materialize all float scores (the memory cost Table 6 shows).
+        let mut scored: Vec<(f32, u32)> = (0..nk)
+            .map(|j| {
+                let s = if causal && j > i {
+                    f32::NEG_INFINITY
+                } else {
+                    tables.score(cq, codes_k.row(j))
+                };
+                (s, j as u32)
+            })
+            .collect();
+        // Full float sort (the time cost Table 6 shows).
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (slot, (_, j)) in row.iter_mut().zip(scored.into_iter().take(l)) {
+            *slot = j;
+        }
+    }
+    out
 }
 
 /// Bytes transiently needed per query row (scores + indices) — reported in
@@ -117,7 +120,7 @@ mod tests {
         // Each query's own row shares all codes -> must be selected unless
         // 4+ other keys tie-beat it; allow majority.
         let hits = sel
-            .iter()
+            .rows()
             .enumerate()
             .filter(|(i, row)| row.contains(&(*i as u32)))
             .count();
@@ -137,13 +140,10 @@ mod tests {
             let codes = pq::quantize(&x, &cb);
             let t = ScoreTables::build(&cb);
             let sel = select(&codes, &codes, &t, l, g.bool());
-            prop_assert(sel.len() == n, "rows")?;
+            prop_assert(sel.n == n, "rows")?;
+            prop_assert(sel.l == l && sel.data.len() == n * l, "row length")?;
             prop_assert(
-                sel.iter().all(|r| r.len() == l),
-                "row length",
-            )?;
-            prop_assert(
-                sel.iter().flatten().all(|&j| (j as usize) < n),
+                sel.data.iter().all(|&j| (j as usize) < n),
                 "range",
             )
         });

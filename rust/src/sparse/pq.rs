@@ -3,6 +3,7 @@
 //! Mirrors `python/compile/kernels/pq.py`: per-subspace nearest codeword
 //! under squared L2, plus a k-means-style (DKM-flavoured) codebook refresh.
 
+use super::codes::Codes;
 use crate::util::rng::Rng;
 
 /// PQ codebooks: `m` subspaces × `e` codewords × `dsub` dims.
@@ -32,35 +33,41 @@ impl Codebooks {
     }
 }
 
-/// Quantize `n` vectors of dim `m * dsub` -> codeword ids `[n][m]` (u8:
-/// E <= 256 always; the paper uses 16).
-pub fn quantize(x: &[f32], cb: &Codebooks) -> Vec<Vec<u8>> {
+/// Quantize `n` vectors of dim `m * dsub` into a flat [`Codes`] matrix.
+pub fn quantize(x: &[f32], cb: &Codebooks) -> Codes {
     let d = cb.d();
     assert_eq!(x.len() % d, 0, "input not a multiple of d");
     let n = x.len() / d;
-    let mut codes = vec![vec![0u8; cb.m]; n];
-    for (i, code_row) in codes.iter_mut().enumerate() {
-        let v = &x[i * d..(i + 1) * d];
-        for mi in 0..cb.m {
-            let sub = &v[mi * cb.dsub..(mi + 1) * cb.dsub];
-            let mut best = f32::INFINITY;
-            let mut best_e = 0usize;
-            for ei in 0..cb.e {
-                let cw = cb.codeword(mi, ei);
-                let mut dist = 0.0;
-                for (a, b) in sub.iter().zip(cw) {
-                    let diff = a - b;
-                    dist += diff * diff;
-                }
-                if dist < best {
-                    best = dist;
-                    best_e = ei;
-                }
-            }
-            code_row[mi] = best_e as u8;
-        }
+    let mut codes = Codes::zeros(n, cb.m);
+    for (i, code_row) in codes.data.chunks_exact_mut(cb.m).enumerate() {
+        quantize_row(&x[i * d..(i + 1) * d], cb, code_row);
     }
     codes
+}
+
+/// Quantize one vector into a preallocated `m`-wide code row — the unit
+/// of work the parallel multi-head path dispatches per query.
+pub fn quantize_row(v: &[f32], cb: &Codebooks, out: &mut [u8]) {
+    debug_assert_eq!(v.len(), cb.d());
+    debug_assert_eq!(out.len(), cb.m);
+    for mi in 0..cb.m {
+        let sub = &v[mi * cb.dsub..(mi + 1) * cb.dsub];
+        let mut best = f32::INFINITY;
+        let mut best_e = 0usize;
+        for ei in 0..cb.e {
+            let cw = cb.codeword(mi, ei);
+            let mut dist = 0.0;
+            for (a, b) in sub.iter().zip(cw) {
+                let diff = a - b;
+                dist += diff * diff;
+            }
+            if dist < best {
+                best = dist;
+                best_e = ei;
+            }
+        }
+        out[mi] = best_e as u8;
+    }
 }
 
 /// Mean squared quantization error (per dimension) — the DKM signal.
@@ -76,7 +83,7 @@ pub fn quantize_error(x: &[f32], cb: &Codebooks) -> f32 {
         let v = &x[i * d..(i + 1) * d];
         for mi in 0..cb.m {
             let sub = &v[mi * cb.dsub..(mi + 1) * cb.dsub];
-            let cw = cb.codeword(mi, codes[i][mi] as usize);
+            let cw = cb.codeword(mi, codes.row(i)[mi] as usize);
             for (a, b) in sub.iter().zip(cw) {
                 total += ((a - b) * (a - b)) as f64;
             }
@@ -96,7 +103,7 @@ pub fn codebook_update(x: &[f32], cb: &mut Codebooks, lr: f32) {
     for i in 0..n {
         let v = &x[i * d..(i + 1) * d];
         for mi in 0..cb.m {
-            let ei = codes[i][mi] as usize;
+            let ei = codes.row(i)[mi] as usize;
             counts[mi * cb.e + ei] += 1;
             let off = (mi * cb.e + ei) * cb.dsub;
             for (k, val) in v[mi * cb.dsub..(mi + 1) * cb.dsub].iter().enumerate() {
@@ -140,7 +147,7 @@ mod tests {
             v.extend_from_slice(cb.codeword(mi, 3));
         }
         let codes = quantize(&v, &cb);
-        assert_eq!(codes[0], vec![3u8; 4]);
+        assert_eq!(codes.row(0), &[3u8; 4]);
         assert!(quantize_error(&v, &cb) < 1e-10);
     }
 
@@ -177,8 +184,9 @@ mod tests {
             let c1 = quantize(&x, &cb);
             let c2 = quantize(&x, &cb);
             prop_assert(c1 == c2, "non-deterministic")?;
+            prop_assert((c1.n, c1.m) == (n, m), "wrong code shape")?;
             prop_assert(
-                c1.iter().all(|row| row.iter().all(|&c| (c as usize) < e)),
+                c1.data.iter().all(|&c| (c as usize) < e),
                 "code out of range",
             )
         });
@@ -194,7 +202,7 @@ mod tests {
             let x: Vec<f32> = (0..16).flat_map(|_| far.clone()).collect();
             let before = cb.data.clone();
             let codes = quantize(&x, &cb);
-            let used = codes[0][0] as usize;
+            let used = codes.row(0)[0] as usize;
             codebook_update(&x, &mut cb, 1.0);
             for ei in 0..4 {
                 let off = ei * 2;

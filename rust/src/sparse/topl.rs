@@ -7,33 +7,59 @@
 //! (`python/compile/kernels/topl.py`) computes the same ranks vectorized;
 //! the two are cross-checked in the proptests below and through the
 //! goldens round trip.
+//!
+//! Codes and selections use the flat [`Codes`]/[`TopL`] buffers so the
+//! batched multi-head path (`sparse::mha`) can hand disjoint row windows
+//! to parallel workers; [`select_into`] is the per-query kernel those
+//! workers call directly.
 
+use super::codes::{Codes, TopL};
 use super::pq::match_score;
 
-/// Select the top-L keys for one query (paper Alg. 3, single thread).
+/// Reusable bucket storage for the assign/retrieve phases: flat
+/// (M+2) × L slot matrix plus per-bucket fill counts.  One scratch per
+/// worker amortizes the allocation across every query row it processes
+/// (the old per-query `vec![Vec::new(); m + 2]` dominated the hot path).
+#[derive(Debug, Default, Clone)]
+pub struct BucketScratch {
+    /// `[(m + 2) * l]`, bucket `s` occupies `s * l .. (s + 1) * l`.
+    slots: Vec<u32>,
+    /// `[m + 2]` entries used per bucket.
+    counts: Vec<u32>,
+}
+
+/// Select the top-L keys for one query into a preallocated `l`-slot row
+/// (paper Alg. 3, single thread), using caller-owned bucket scratch.
 ///
-/// `codes_q`: M codeword ids of the query; `codes_k`: per-key codeword ids.
-/// Returns exactly `l` key indices ordered by (-score, key index).
-pub fn select_one(
+/// `codes_q`: M codeword ids of the query; `codes_k`: per-key codeword
+/// ids.  Writes exactly `l` key indices ordered by (-score, key index).
+pub fn select_into(
     codes_q: &[u8],
-    codes_k: &[Vec<u8>],
+    codes_k: &Codes,
     l: usize,
     causal_limit: Option<usize>,
-) -> Vec<u32> {
+    out: &mut [u32],
+    scratch: &mut BucketScratch,
+) {
     let m = codes_q.len();
-    let nk = codes_k.len();
+    let nk = codes_k.n;
     assert!(l >= 1 && l <= nk);
+    assert_eq!(out.len(), l);
     // Buckets[s] holds keys with score s; capacity L each (Alg. 3 line 2).
-    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); m + 2];
+    let nb = m + 2;
+    scratch.slots.resize(nb * l, 0);
+    scratch.counts.clear();
+    scratch.counts.resize(nb, 0);
     // Assign phase (lines 3-8): keys scanned in ascending index order.
-    for (j, ck) in codes_k.iter().enumerate() {
+    for (j, ck) in codes_k.rows().enumerate() {
         let s = match causal_limit {
             Some(limit) if j > limit => 0, // sentinel bucket 0 analog
             _ => (match_score(codes_q, ck) + 1) as usize,
         };
-        let b = &mut buckets[s];
-        if b.len() < l {
-            b.push(j as u32);
+        let c = scratch.counts[s] as usize;
+        if c < l {
+            scratch.slots[s * l + c] = j as u32;
+            scratch.counts[s] = (c + 1) as u32;
         }
         // Overflow: drop (paper Alg. 3 line 7 instead overwrites the last
         // slot to bound shared memory; keeping the *first* L of a bucket is
@@ -42,53 +68,62 @@ pub fn select_one(
         // sort reference bit-for-bit — required for cross-validation).
     }
     // Retrieve phase (lines 9-16): drain buckets from high score to low.
-    let mut out = Vec::with_capacity(l);
-    for b in buckets.iter().rev() {
-        for &j in b {
-            if out.len() == l {
-                return out;
+    let mut filled = 0usize;
+    'drain: for s in (0..nb).rev() {
+        let cnt = scratch.counts[s] as usize;
+        for p in 0..cnt {
+            if filled == l {
+                break 'drain;
             }
-            out.push(j);
+            out[filled] = scratch.slots[s * l + p];
+            filled += 1;
         }
     }
     // Under-full rows (causal prefix): pad with unseen smallest indices so
     // the output shape is static, mirroring the kernel's padding slots.
     let mut j = 0u32;
-    while out.len() < l {
-        if !out.contains(&j) {
-            out.push(j);
+    while filled < l {
+        if !out[..filled].contains(&j) {
+            out[filled] = j;
+            filled += 1;
         }
         j += 1;
     }
+}
+
+/// Single-query convenience wrapper over [`select_into`].
+pub fn select_one(
+    codes_q: &[u8],
+    codes_k: &Codes,
+    l: usize,
+    causal_limit: Option<usize>,
+) -> Vec<u32> {
+    let mut out = vec![0u32; l];
+    let mut scratch = BucketScratch::default();
+    select_into(codes_q, codes_k, l, causal_limit, &mut out, &mut scratch);
     out
 }
 
-/// Batched selection for all queries of one head.
-pub fn select(
-    codes_q: &[Vec<u8>],
-    codes_k: &[Vec<u8>],
-    l: usize,
-    causal: bool,
-) -> Vec<Vec<u32>> {
-    codes_q
-        .iter()
-        .enumerate()
-        .map(|(i, cq)| {
-            select_one(cq, codes_k, l, causal.then_some(i))
-        })
-        .collect()
+/// Batched selection for all queries of one head (one shared scratch).
+pub fn select(codes_q: &Codes, codes_k: &Codes, l: usize, causal: bool) -> TopL {
+    let mut out = TopL::zeros(codes_q.n, l);
+    let mut scratch = BucketScratch::default();
+    for (i, row) in out.data.chunks_exact_mut(l).enumerate() {
+        select_into(codes_q.row(i), codes_k, l, causal.then_some(i), row, &mut scratch);
+    }
+    out
 }
 
 /// Reference ranking ("sort by (-score, index), take L") used to verify the
 /// bucket implementation in tests.
 pub fn select_by_sort(
     codes_q: &[u8],
-    codes_k: &[Vec<u8>],
+    codes_k: &Codes,
     l: usize,
     causal_limit: Option<usize>,
 ) -> Vec<u32> {
     let mut scored: Vec<(i64, u32)> = codes_k
-        .iter()
+        .rows()
         .enumerate()
         .map(|(j, ck)| {
             let s = match causal_limit {
@@ -107,10 +142,17 @@ mod tests {
     use super::*;
     use crate::util::proptest::{check, prop_assert};
 
-    fn random_codes(g: &mut crate::util::proptest::Gen, n: usize, m: usize, e: usize) -> Vec<Vec<u8>> {
-        (0..n)
-            .map(|_| (0..m).map(|_| g.usize_in(0, e - 1) as u8).collect())
-            .collect()
+    fn random_codes(
+        g: &mut crate::util::proptest::Gen,
+        n: usize,
+        m: usize,
+        e: usize,
+    ) -> Codes {
+        let mut c = Codes::zeros(n, m);
+        for x in c.data.iter_mut() {
+            *x = g.usize_in(0, e - 1) as u8;
+        }
+        c
     }
 
     #[test]
@@ -122,8 +164,8 @@ mod tests {
             let l = g.usize_in(1, n);
             let cq = random_codes(g, 1, m, e);
             let ck = random_codes(g, n, m, e);
-            let got = select_one(&cq[0], &ck, l, None);
-            let want = select_by_sort(&cq[0], &ck, l, None);
+            let got = select_one(cq.row(0), &ck, l, None);
+            let want = select_by_sort(cq.row(0), &ck, l, None);
             prop_assert(got == want, format!("got {got:?} want {want:?}"))
         });
     }
@@ -136,7 +178,7 @@ mod tests {
             let ck = random_codes(g, n, 4, 4);
             let l = g.usize_in(1, 4);
             let sel = select(&cq, &ck, l, true);
-            for (i, row) in sel.iter().enumerate() {
+            for (i, row) in sel.rows().enumerate() {
                 if i + 1 >= l {
                     // enough eligible keys: all selections must be <= i
                     for &j in row {
@@ -158,7 +200,7 @@ mod tests {
             let l = g.usize_in(1, n);
             let cq = random_codes(g, 1, 6, 3);
             let ck = random_codes(g, n, 6, 3);
-            let got = select_one(&cq[0], &ck, l, None);
+            let got = select_one(cq.row(0), &ck, l, None);
             prop_assert(got.len() == l, "wrong length")?;
             let mut sorted = got.clone();
             sorted.sort_unstable();
@@ -174,8 +216,9 @@ mod tests {
     #[test]
     fn exact_match_ranks_first() {
         let cq = vec![3u8, 1, 4, 1];
-        let mut ck = vec![vec![0u8, 0, 0, 0]; 10];
-        ck[7] = cq.clone();
+        let mut rows = vec![vec![0u8, 0, 0, 0]; 10];
+        rows[7] = cq.clone();
+        let ck = Codes::from_rows(&rows);
         let got = select_one(&cq, &ck, 3, None);
         assert_eq!(got[0], 7);
     }
@@ -183,21 +226,41 @@ mod tests {
     #[test]
     fn ties_break_by_index() {
         let cq = vec![0u8; 4];
-        let ck = vec![vec![1u8; 4]; 6]; // all score 0
+        let ck = Codes::from_rows(&vec![vec![1u8; 4]; 6]); // all score 0
         assert_eq!(select_one(&cq, &ck, 4, None), vec![0, 1, 2, 3]);
     }
 
     #[test]
     fn causal_prefix_padding_is_well_formed() {
-        let cq = vec![vec![0u8; 4]; 4];
-        let ck = vec![vec![0u8; 4]; 4];
+        let cq = Codes::zeros(4, 4);
+        let ck = Codes::zeros(4, 4);
         let sel = select(&cq, &ck, 3, true);
         // Row 0 has one eligible key; padding must still give 3 unique ids.
-        assert_eq!(sel[0].len(), 3);
-        let mut s = sel[0].clone();
+        assert_eq!(sel.row(0).len(), 3);
+        let mut s = sel.row(0).to_vec();
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), 3);
-        assert_eq!(sel[0][0], 0); // the eligible key leads
+        assert_eq!(sel.row(0)[0], 0); // the eligible key leads
+    }
+
+    #[test]
+    fn batched_select_matches_per_row_kernel() {
+        check(30, |g| {
+            let n = g.usize_in(2, 24);
+            let l = g.usize_in(1, n);
+            let causal = g.bool();
+            let cq = random_codes(g, n, 4, 4);
+            let ck = random_codes(g, n, 4, 4);
+            let batched = select(&cq, &ck, l, causal);
+            for i in 0..n {
+                let one = select_one(cq.row(i), &ck, l, causal.then_some(i));
+                prop_assert(
+                    batched.row(i) == one.as_slice(),
+                    format!("row {i}: {:?} != {:?}", batched.row(i), one),
+                )?;
+            }
+            Ok(())
+        });
     }
 }

@@ -1,7 +1,8 @@
 //! Runtime integration: the python -> HLO-text -> PJRT -> rust round trip.
 //!
 //! Requires `make artifacts` (skips politely otherwise so a fresh clone
-//! can still run `cargo test`).
+//! can still run `cargo test`) and a build with `--features xla`.
+#![cfg(feature = "xla")]
 
 use spt::runtime::{goldens, Engine, HostTensor};
 
@@ -163,7 +164,7 @@ fn sparse_attention_artifact_matches_rust_substrate() {
                 .collect()
         })
         .collect();
-    let mut a = Csr::from_topl(&topl_rows, n);
+    let mut a = Csr::from_rows(&topl_rows, n);
     let scale = 1.0 / (d as f32).sqrt();
     let qs = qm.map(|x| x * scale);
     a.sddmm(&qs, &km);

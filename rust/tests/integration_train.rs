@@ -1,5 +1,6 @@
 //! Coordinator integration: full fine-tuning loops over the AOT
-//! artifacts (spt-tiny), checkpoints, trials.
+//! artifacts (spt-tiny), checkpoints, trials.  Needs `--features xla`.
+#![cfg(feature = "xla")]
 
 use spt::config::{Mode, RunConfig};
 use spt::coordinator::{checkpoint, TrainState, Trainer, TrainerOptions};

@@ -1,0 +1,124 @@
+//! Property tests for the parallel multi-head layer (`sparse::mha`):
+//! the rayon path must reproduce the sequential single-head reference
+//! for random (H, n, d, L, causal) configurations, at any chunking.
+
+use spt::sparse::mha::{routed_ffn_par, MultiHeadSparseAttention};
+use spt::sparse::pq::{self, Codebooks};
+use spt::sparse::{attention, bspmv, Matrix};
+use spt::util::proptest::{check, prop_assert};
+
+#[test]
+fn parallel_mha_matches_sequential_for_random_configs() {
+    check(20, |g| {
+        let hh = g.usize_in(1, 4);
+        let m = g.usize_in(1, 4);
+        let dsub = g.usize_in(1, 4);
+        let d = m * dsub;
+        let n = g.usize_in(2, 40);
+        let l = g.usize_in(1, n);
+        let causal = g.bool();
+        let chunk = g.usize_in(1, 12);
+        let mut rng = g.rng().fork();
+
+        let mut cbs = Vec::new();
+        let (mut q, mut k, mut v) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..hh {
+            let mut cb = Codebooks::random(m, g.usize_in(2, 8), dsub, &mut rng);
+            let kh = Matrix::randn(n, d, 1.0, &mut rng);
+            let noise = Matrix::randn(n, d, 0.5, &mut rng);
+            let qh = Matrix::from_vec(
+                n,
+                d,
+                kh.data
+                    .iter()
+                    .zip(&noise.data)
+                    .map(|(a, b)| 2.0 * a + b)
+                    .collect(),
+            );
+            pq::codebook_update(&kh.data, &mut cb, 1.0);
+            cbs.push(cb);
+            q.push(qh);
+            k.push(kh);
+            v.push(Matrix::randn(n, d, 1.0, &mut rng));
+        }
+        let mut mha = MultiHeadSparseAttention::new(cbs, l, causal);
+        mha.query_chunk = chunk;
+        let par = mha.forward(&q, &k, &v);
+        let seq = mha.forward_seq(&q, &k, &v);
+        prop_assert(par.len() == hh && seq.len() == hh, "head count")?;
+        for h in 0..hh {
+            let diff = par[h].max_abs_diff(&seq[h]);
+            prop_assert(
+                diff < 1e-5,
+                format!(
+                    "H={hh} n={n} d={d} L={l} causal={causal} chunk={chunk} \
+                     head {h}: diff {diff}"
+                ),
+            )?;
+        }
+        // The sequential reference itself must match the single-head
+        // attention module (guards against reference drift).
+        let (want, _) =
+            attention::sparse_attention(&q[0], &k[0], &v[0], &mha.codebooks[0], l, causal);
+        prop_assert(
+            seq[0].max_abs_diff(&want) < 1e-7,
+            "forward_seq drifted from sparse_attention",
+        )
+    });
+}
+
+#[test]
+fn parallel_routed_ffn_matches_sequential_for_random_configs() {
+    check(25, |g| {
+        let nt = g.usize_in(1, 48);
+        let d = g.usize_in(1, 10);
+        let gg = *g.pick(&[2usize, 4, 8]);
+        let dg = g.usize_in(1, 6);
+        let ga = g.usize_in(1, gg);
+        let mut rng = g.rng().fork();
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, gg * dg, 0.3, &mut rng);
+        let wo = Matrix::randn(gg * dg, d, 0.3, &mut rng);
+        let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+        let routing = bspmv::route(&scores, ga);
+        let par = routed_ffn_par(&x, &wi, &wo, &routing);
+        let seq = bspmv::routed_ffn(&x, &wi, &wo, &routing);
+        let diff = par.max_abs_diff(&seq);
+        prop_assert(
+            diff < 1e-5,
+            format!("nt={nt} d={d} G={gg} G'={ga}: diff {diff}"),
+        )
+    });
+}
+
+#[test]
+fn parallel_path_is_deterministic_across_pool_sizes() {
+    check(6, |g| {
+        let mut rng = g.rng().fork();
+        let n = g.usize_in(8, 24);
+        let mut cb = Codebooks::random(2, 4, 4, &mut rng);
+        let k = Matrix::randn(n, 8, 1.0, &mut rng);
+        let q = Matrix::randn(n, 8, 1.0, &mut rng);
+        let v = Matrix::randn(n, 8, 1.0, &mut rng);
+        pq::codebook_update(&k.data, &mut cb, 1.0);
+        let mha = MultiHeadSparseAttention::new(vec![cb; 2], n / 2, true);
+        let qs = vec![q.clone(), q];
+        let ks = vec![k.clone(), k];
+        let vs = vec![v.clone(), v];
+        let base = mha.forward(&qs, &ks, &vs);
+        for t in [1usize, 3] {
+            let pool = rayon::ThreadPoolBuilder::new()
+                .num_threads(t)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let got = pool.install(|| mha.forward(&qs, &ks, &vs));
+            for h in 0..base.len() {
+                prop_assert(
+                    got[h] == base[h],
+                    format!("{t}-thread pool changed head {h}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}

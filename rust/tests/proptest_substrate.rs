@@ -25,15 +25,16 @@ fn bucket_sort_agrees_with_naive_pq_on_match_counts() {
         let bucket = topl::select(&cq, &ck, l, false);
         let tables = naive_pq::ScoreTables::build(&cb);
         let naive = naive_pq::select(&cq, &ck, &tables, l, false);
-        for (b_row, n_row) in bucket.iter().zip(&naive) {
-            prop_assert(b_row.len() == l && n_row.len() == l, "arity")?;
+        prop_assert(bucket.l == l && naive.l == l, "arity")?;
+        prop_assert(bucket.n == n && naive.n == n, "rows")?;
+        for b_row in bucket.rows() {
             let uniq: std::collections::HashSet<_> = b_row.iter().collect();
             prop_assert(uniq.len() == l, "bucket dup")?;
         }
         // ranking invariant for bucket sort
-        for (qi, row) in bucket.iter().enumerate() {
+        for (qi, row) in bucket.rows().enumerate() {
             let score =
-                |j: u32| pq::match_score(&cq[qi], &ck[j as usize]) as i64;
+                |j: u32| pq::match_score(cq.row(qi), ck.row(j as usize)) as i64;
             for w in row.windows(2) {
                 let (a, b) = (score(w[0]), score(w[1]));
                 prop_assert(
@@ -91,7 +92,7 @@ fn csr_attention_row_stochastic() {
                 ids
             })
             .collect();
-        let mut a = Csr::from_topl(&idx, n);
+        let mut a = Csr::from_rows(&idx, n);
         a.validate().map_err(|e| e.to_string())?;
         a.sddmm(&q, &k);
         a.softmax_rows();
