@@ -16,6 +16,8 @@ mod common;
 use spt::config::RunConfig;
 #[cfg(feature = "xla")]
 use spt::coordinator::trial::TrialManager;
+#[cfg(feature = "xla")]
+use spt::coordinator::PjrtBackend;
 use spt::metrics::Table;
 use spt::sparse::attention::sparse_vs_dense_error;
 use spt::sparse::{bspmv, pq, Matrix};
@@ -91,7 +93,8 @@ fn e2e_trials() {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(12);
-        let tm = TrialManager::new(&engine, rc, steps);
+        let backend = PjrtBackend::new(&engine);
+        let tm = TrialManager::new(&backend, rc, steps);
         match tm.compare_modes() {
             Ok((_, table)) => common::emit("fig10_e2e_trials", &table),
             Err(e) => println!("[fig10] e2e trials skipped: {e:#}"),

@@ -6,22 +6,26 @@
 //! Full, 2x max length vs Full, ~1 point MMLU drop.
 //!
 //! Default build (no artifacts needed): the analytic max-length table at
-//! the paper's scale, plus the substrate end-to-end block forward
+//! the paper's scale, the substrate end-to-end block forward
 //! (multi-head sparse attention + routed FFN) with a thread-scaling
-//! column against the sequential reference path.  With `--features xla`
+//! column against the sequential reference path, and the native-backend
+//! fine-tune step (forward + backward + AdamW) across full/LoRA/SPT
+//! modes with the same thread-scaling treatment.  With `--features xla`
 //! the original artifact-driven training comparison also runs.
 
 mod common;
 
-use spt::config::{presets, Mode};
+use spt::config::{presets, Mode, RunConfig};
+use spt::coordinator::{Backend, NativeBackend};
+use spt::data::SyntheticCorpus;
 use spt::memmodel;
 use spt::metrics::Table;
-#[cfg(feature = "xla")]
 use spt::util::fmt_duration;
 
 fn main() {
     max_length_table();
     thread_scaling_table();
+    fine_tune_step_table();
     #[cfg(feature = "xla")]
     engine_table();
 }
@@ -70,14 +74,86 @@ fn thread_scaling_table() {
     );
 }
 
+/// Native-backend fine-tune step (fwd + bwd + AdamW) per mode, with the
+/// thread-scaling treatment: dedicated rayon pools sized per
+/// [`common::thread_counts`], one step per sample.
+fn fine_tune_step_table() {
+    // spt-nano keeps this fast under `cargo test` (which executes the
+    // harness=false bench binaries); set SPT_TABLE3_NATIVE_MODEL=spt-tiny
+    // for a measurement at the paper-surrogate scale.
+    let model = std::env::var("SPT_TABLE3_NATIVE_MODEL")
+        .unwrap_or_else(|_| "spt-nano".into());
+    let backend = NativeBackend::new();
+    let (w, s) = (common::warmup().max(1), common::samples().max(2));
+    let mut table = Table::new(
+        &format!(
+            "Table 3c — native fine-tune step, {model} (full vs LoRA vs SPT, s/step)"
+        ),
+        &["Threads", "full", "lora", "spt", "spt vs full"],
+    );
+    for t in common::thread_counts() {
+        let pool = common::pool(t);
+        let mut cells = vec![t.to_string()];
+        let mut full_median = None;
+        let mut spt_median = None;
+        for mode in Mode::ALL {
+            let rc = RunConfig {
+                model: model.clone(),
+                mode,
+                eval_every: 0,
+                codebook_refresh_every: 0,
+                ..RunConfig::default()
+            };
+            let (batch, seq) = backend.workload(&rc).expect("workload");
+            let vocab = backend.vocab(&rc).expect("vocab");
+            let mut corpus = SyntheticCorpus::new(vocab, 4, 0.85, 0);
+            let mut tokens = Vec::with_capacity(batch * seq);
+            let mut targets = Vec::with_capacity(batch * seq);
+            for _ in 0..batch {
+                let (x, y) = corpus.lm_pair(seq);
+                tokens.extend(x.iter().map(|&v| v as i32));
+                targets.extend(y.iter().map(|&v| v as i32));
+            }
+            let mut state = backend.init_state(&rc).expect("init");
+            let r = spt::metrics::bench(
+                &format!("step_{}_{t}", mode.as_str()),
+                w,
+                s,
+                || {
+                    pool.install(|| {
+                        std::hint::black_box(
+                            backend
+                                .train_step(&rc, &mut state, &tokens, &targets)
+                                .expect("train step"),
+                        );
+                    });
+                },
+            );
+            if mode == Mode::Full {
+                full_median = Some(r.median());
+            }
+            if mode == Mode::Spt {
+                spt_median = Some(r.median());
+            }
+            cells.push(fmt_duration(r.median()));
+        }
+        cells.push(match (full_median, spt_median) {
+            (Some(f), Some(sp)) => format!("{:.2}x", f / sp),
+            _ => String::new(),
+        });
+        table.row(&cells);
+    }
+    common::emit("table3_native_step", &table);
+}
+
 /// The original artifact-driven end-to-end comparison (QA surrogate
 /// accuracy + measured step time), behind the `xla` feature.
 #[cfg(feature = "xla")]
 fn engine_table() {
-    use spt::config::RunConfig;
-    use spt::coordinator::{Trainer, TrainerOptions};
+    use spt::coordinator::{PjrtBackend, Trainer, TrainerOptions};
 
     let Some(engine) = common::engine_or_skip("table3") else { return };
+    let backend = PjrtBackend::new(&engine);
     let model = std::env::var("SPT_TABLE3_MODEL").unwrap_or_else(|_| "spt-tiny".into());
     let steps: usize = std::env::var("SPT_TABLE3_STEPS")
         .ok()
@@ -101,13 +177,15 @@ fn engine_table() {
             println!("[table3] missing {name}");
             continue;
         }
-        let mut rc = RunConfig::default();
-        rc.model = model.clone();
-        rc.mode = mode;
-        rc.steps = steps;
-        rc.eval_every = 0;
-        rc.artifacts_dir = common::artifacts_dir();
-        let mut trainer = Trainer::new(&engine, rc, TrainerOptions::default());
+        let rc = RunConfig {
+            model: model.clone(),
+            mode,
+            steps,
+            eval_every: 0,
+            artifacts_dir: common::artifacts_dir(),
+            ..RunConfig::default()
+        };
+        let mut trainer = Trainer::new(&backend, rc, TrainerOptions::default());
         let report = trainer.train_qa().expect("train-qa");
         if mode == Mode::Full {
             full_time = Some(report.total_secs);

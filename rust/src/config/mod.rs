@@ -169,6 +169,8 @@ pub struct RunConfig {
     pub steps: usize,
     pub eval_every: usize,
     pub codebook_refresh_every: usize, // paper §5.1: every ~20 mini-batches
+    /// AdamW learning rate (native backend; PJRT artifacts bake their own).
+    pub lr: f64,
     pub seed: u64,
     pub artifacts_dir: String,
     pub out_dir: String,
@@ -186,6 +188,7 @@ impl Default for RunConfig {
             steps: 100,
             eval_every: 25,
             codebook_refresh_every: 20,
+            lr: 1e-3,
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "runs".into(),
@@ -207,6 +210,7 @@ impl RunConfig {
             "codebook_refresh_every" => {
                 self.codebook_refresh_every = value.parse()?
             }
+            "lr" => self.lr = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "out_dir" => self.out_dir = value.to_string(),

@@ -40,6 +40,7 @@ pub fn blocks() -> Vec<BlockConfig> {
         mk("gpt-768", 768, 64, 3072, Activation::Relu, false),
         mk("mini-512", 512, 64, 2048, Activation::Relu, false),
         mk("mini-256", 256, 32, 1024, Activation::Relu, false),
+        mk("mini-64", 64, 16, 256, Activation::Relu, false),
     ]
 }
 
@@ -86,6 +87,16 @@ pub fn models() -> Vec<ModelConfig> {
             n_layers: 4,
             vocab_size: 4096,
             max_seq: 128,
+        },
+        // Test-scale config for the native backend's fast paths (tests,
+        // doc examples); small enough that a full fwd+bwd step is
+        // milliseconds on one core.
+        ModelConfig {
+            name: "spt-nano".into(),
+            block: block("mini-64").unwrap(),
+            n_layers: 1,
+            vocab_size: 512,
+            max_seq: 64,
         },
     ]
 }

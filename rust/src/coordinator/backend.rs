@@ -1,0 +1,281 @@
+//! The execution seam of the coordinator: a [`Backend`] provides model
+//! init, the forward/backward train step, eval, and the SPT codebook
+//! refresh; the trainer, trial manager, and checkpoints are generic over
+//! it.
+//!
+//! Two implementations:
+//!
+//! * [`crate::coordinator::NativeBackend`] — always available; trains a
+//!   transformer block end-to-end on the rust sparse substrate (forward
+//!   *and* backward, AdamW applied host-side via
+//!   [`super::state::adamw_update`]).
+//! * [`PjrtBackend`] (`xla` feature) — the original artifact path: every
+//!   hook dispatches a pre-lowered HLO executable through the PJRT
+//!   engine, with the AdamW math baked into the train-step artifact.
+
+use anyhow::Result;
+#[cfg(feature = "xla")]
+use anyhow::{bail, Context};
+
+use super::state::TrainState;
+use crate::config::{Mode, RunConfig};
+#[cfg(feature = "xla")]
+use crate::runtime::Engine;
+#[cfg(feature = "xla")]
+use crate::runtime::HostTensor;
+
+/// A training backend: everything the coordinator needs to fine-tune one
+/// model+mode, behind a uniform seam.
+///
+/// Token buffers are flat row-major `[batch * seq]` i32, matching the
+/// artifact calling convention and [`crate::data::Batch`].
+pub trait Backend {
+    /// Short identifier ("native", "pjrt") for logs and tables.
+    fn name(&self) -> &'static str;
+
+    /// Human-readable execution platform.
+    fn platform(&self) -> String;
+
+    /// Whether this backend can train `rc.model` in `mode` (the PJRT
+    /// backend checks the artifact manifest; native is always able).
+    fn has_mode(&self, rc: &RunConfig, mode: Mode) -> bool;
+
+    /// Workload shape `(batch, seq)` of one train step.
+    fn workload(&self, rc: &RunConfig) -> Result<(usize, usize)>;
+
+    /// Vocabulary size of the model.
+    fn vocab(&self, rc: &RunConfig) -> Result<usize>;
+
+    /// Fresh training state (params + zero AdamW moments, step 0).
+    fn init_state(&self, rc: &RunConfig) -> Result<TrainState>;
+
+    /// One optimization step (forward, backward, AdamW); returns the
+    /// mini-batch loss.
+    fn train_step(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f32>;
+
+    /// Whether the scan-of-8 chunked dispatch is available.
+    fn supports_chunked(&self, _rc: &RunConfig) -> bool {
+        false
+    }
+
+    /// Eight optimization steps in one dispatch (tokens/targets are
+    /// `[8 * batch * seq]`); returns the eight losses.
+    fn train_chunk8(
+        &self,
+        _rc: &RunConfig,
+        _state: &mut TrainState,
+        _tokens: &[i32],
+        _targets: &[i32],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("chunked dispatch is not supported by this backend")
+    }
+
+    /// Mean loss of one held-out batch (no state update).
+    fn eval_loss(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f32>;
+
+    /// `[batch][4]` logits of the QA choice tokens at each item's answer
+    /// slot (the MMLU-surrogate readout).
+    fn qa_choice_logits(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+        answer_pos: &[usize],
+        answer_tokens: &[u32; 4],
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// DKM codebook refresh (paper §5.1), spt mode only.  Returns true
+    /// if a refresh actually ran.
+    fn refresh_codebooks(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+    ) -> Result<bool>;
+}
+
+/// The artifact-driven PJRT backend (the pre-refactor coordinator path).
+#[cfg(feature = "xla")]
+pub struct PjrtBackend<'e> {
+    engine: &'e Engine,
+}
+
+#[cfg(feature = "xla")]
+impl<'e> PjrtBackend<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        PjrtBackend { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    fn artifact(rc: &RunConfig, entry: &str) -> String {
+        format!("{entry}_{}_{}", rc.model, rc.mode.as_str())
+    }
+
+    fn step_spec(&self, rc: &RunConfig) -> Result<&crate::runtime::ArtifactSpec> {
+        self.engine.spec(&Self::artifact(rc, "train_step"))
+    }
+
+    /// Run the whole-model DKM refresh artifact and patch codebook
+    /// leaves; `Ok(false)` when the artifact was not built.
+    fn run_refresh(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+    ) -> Result<bool> {
+        let name = format!("codebook_refresh_{}", rc.model);
+        if self.engine.manifest().get(&name).is_err() {
+            return Ok(false); // refresh artifact not built; skip silently
+        }
+        let (batch, seq) = self.workload(rc)?;
+        let mut inputs = state.params.clone();
+        inputs.push(HostTensor::i32(vec![batch, seq], tokens.to_vec()));
+        let out = self.engine.run(&name, &inputs)?;
+        if out.len() != 2 {
+            bail!("codebook refresh returned {} outputs", out.len());
+        }
+        let q_leaves = state.find_leaves("pq_q");
+        let k_leaves = state.find_leaves("pq_k");
+        if q_leaves.len() != 1 || k_leaves.len() != 1 {
+            bail!(
+                "expected exactly one stacked pq_q/pq_k leaf, found {}/{}",
+                q_leaves.len(),
+                k_leaves.len()
+            );
+        }
+        state.set_leaf(q_leaves[0], out[0].clone())?;
+        state.set_leaf(k_leaves[0], out[1].clone())?;
+        Ok(true)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Backend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn has_mode(&self, rc: &RunConfig, mode: Mode) -> bool {
+        let name = format!("train_step_{}_{}", rc.model, mode.as_str());
+        self.engine.manifest().get(&name).is_ok()
+    }
+
+    fn workload(&self, rc: &RunConfig) -> Result<(usize, usize)> {
+        let spec = self.step_spec(rc)?;
+        let batch = spec.meta_usize("batch").context("meta.batch")?;
+        let seq = spec.meta_usize("seq").context("meta.seq")?;
+        Ok((batch, seq))
+    }
+
+    fn vocab(&self, rc: &RunConfig) -> Result<usize> {
+        self.step_spec(rc)?.meta_usize("vocab").context("meta.vocab")
+    }
+
+    fn init_state(&self, rc: &RunConfig) -> Result<TrainState> {
+        let state = TrainState::init(
+            self.engine,
+            &Self::artifact(rc, "model_init"),
+            rc.seed as i32,
+        )?;
+        state.check_against(self.step_spec(rc)?)?;
+        Ok(state)
+    }
+
+    fn train_step(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f32> {
+        let (batch, seq) = self.workload(rc)?;
+        let tk = HostTensor::i32(vec![batch, seq], tokens.to_vec());
+        let tg = HostTensor::i32(vec![batch, seq], targets.to_vec());
+        let inputs = state.step_inputs(tk, tg);
+        let out = self.engine.run(&Self::artifact(rc, "train_step"), &inputs)?;
+        state.absorb_step_outputs(out)?.scalar()
+    }
+
+    fn supports_chunked(&self, rc: &RunConfig) -> bool {
+        let name = format!("train_chunk8_{}_{}", rc.model, rc.mode.as_str());
+        self.engine.manifest().get(&name).is_ok()
+    }
+
+    fn train_chunk8(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (batch, seq) = self.workload(rc)?;
+        let name = format!("train_chunk8_{}_{}", rc.model, rc.mode.as_str());
+        let tk = HostTensor::i32(vec![8, batch, seq], tokens.to_vec());
+        let tg = HostTensor::i32(vec![8, batch, seq], targets.to_vec());
+        let inputs = state.step_inputs(tk, tg);
+        let out = self.engine.run(&name, &inputs)?;
+        let losses = state.absorb_step_outputs(out)?;
+        Ok(losses.as_f32()?.to_vec())
+    }
+
+    fn eval_loss(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f32> {
+        let (batch, seq) = self.workload(rc)?;
+        let mut inputs = state.params.clone();
+        inputs.push(HostTensor::i32(vec![batch, seq], tokens.to_vec()));
+        inputs.push(HostTensor::i32(vec![batch, seq], targets.to_vec()));
+        let out = self.engine.run(&Self::artifact(rc, "eval_loss"), &inputs)?;
+        out[0].scalar()
+    }
+
+    fn qa_choice_logits(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+        _answer_pos: &[usize],
+        _answer_tokens: &[u32; 4],
+    ) -> Result<Vec<Vec<f32>>> {
+        // The qa_logits artifact reads the answer slot itself and returns
+        // the four choice-token logits per item.
+        let (batch, seq) = self.workload(rc)?;
+        let mut inputs = state.params.clone();
+        inputs.push(HostTensor::i32(vec![batch, seq], tokens.to_vec()));
+        let out = self.engine.run(&Self::artifact(rc, "qa_logits"), &inputs)?;
+        let logits = out[0].as_f32()?;
+        Ok((0..batch).map(|i| logits[i * 4..(i + 1) * 4].to_vec()).collect())
+    }
+
+    fn refresh_codebooks(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+    ) -> Result<bool> {
+        self.run_refresh(rc, state, tokens)
+    }
+}

@@ -1,31 +1,37 @@
-//! L3 coordinator: the fine-tuning system around the AOT artifacts.
+//! L3 coordinator: the backend-agnostic fine-tuning system.
 //!
+//! * [`backend`] — the [`Backend`] trait (init, train step, eval, QA
+//!   readout, codebook refresh) plus the `xla`-gated PJRT
+//!   implementation.  The trainer, trial manager, and checkpoints are
+//!   generic over it.
+//! * [`native`]  — [`NativeBackend`]: end-to-end training on the rust
+//!   sparse substrate (forward + backward + host-side AdamW), always
+//!   available — no PJRT toolchain or AOT artifacts needed.
 //! * [`state`]   — leaf-indexed training state (params / AdamW moments)
-//!   mapped onto artifact signatures.
+//!   shared by both backends, plus the AdamW update itself.
 //! * [`trainer`] — the training loop: batching, train-step dispatch,
-//!   codebook refresh scheduling (paper §5.1), eval, loss curves.
+//!   codebook refresh scheduling (paper §5.1), eval, loss curves,
+//!   bit-identical checkpoint resume.
 //! * [`trial`]   — sparsity trial manager (paper §3: "short training
 //!   trials on some sample data" to pick L and beta).
 //! * [`profile`] — module/block profiler joining measured step time with
-//!   the analytic memory model (Tables 1/4, Fig. 8).
-//! * [`checkpoint`] — binary save/restore of training state.
+//!   the analytic memory model (Tables 1/4, Fig. 8); artifact-driven, so
+//!   still behind the `xla` feature.
+//! * [`checkpoint`] — binary save/restore of training state (works with
+//!   any backend's state).
 
-//! All submodules execute AOT artifacts through the PJRT engine, so the
-//! whole coordinator is gated on the `xla` feature; the engine-free
-//! analytics live in `memmodel` and `sparse`.
-
-#[cfg(feature = "xla")]
+pub mod backend;
 pub mod checkpoint;
+pub mod native;
 #[cfg(feature = "xla")]
 pub mod profile;
-#[cfg(feature = "xla")]
 pub mod state;
-#[cfg(feature = "xla")]
 pub mod trainer;
-#[cfg(feature = "xla")]
 pub mod trial;
 
+pub use backend::Backend;
 #[cfg(feature = "xla")]
-pub use state::TrainState;
-#[cfg(feature = "xla")]
+pub use backend::PjrtBackend;
+pub use native::NativeBackend;
+pub use state::{AdamW, TrainState};
 pub use trainer::{TrainReport, Trainer, TrainerOptions};

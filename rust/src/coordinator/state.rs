@@ -1,17 +1,68 @@
-//! Training state: parameter + optimizer leaves, ordered exactly as the
-//! AOT train-step artifact expects them.
+//! Training state: parameter + optimizer leaves, plus the AdamW update
+//! the native backend applies host-side.
 //!
-//! Leaf order contract (from `aot.py` / jax pytree flattening of
-//! `(params, opt, tokens, targets)` with `opt = {"m", "step", "v"}`):
+//! The leaf order contract comes from the AOT artifacts (`aot.py` / jax
+//! pytree flattening of `(params, opt, tokens, targets)` with
+//! `opt = {"m", "step", "v"}`):
 //!
 //! ```text
 //! inputs  = [params x P, m x P, step, v x P, tokens, targets]
 //! outputs = [loss, params x P, m x P, step, v x P]
 //! ```
+//!
+//! The PJRT path bakes the AdamW math into the train-step executable;
+//! the native path keeps the same state layout but applies
+//! [`adamw_update`] leaf by leaf, so checkpoints are interchangeable
+//! bookkeeping-wise and the trainer stays backend-agnostic.
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{ArtifactSpec, Engine, HostTensor};
+#[cfg(feature = "xla")]
+use crate::runtime::Engine;
+use crate::runtime::{ArtifactSpec, HostTensor};
+
+/// AdamW hyperparameters (the native backend's optimizer; the PJRT
+/// artifacts bake their own copy of the same defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamW {
+    fn default() -> Self {
+        AdamW { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// One AdamW step on a single leaf, with bias correction at step `t`
+/// (1-based).  Deterministic elementwise math — the checkpoint
+/// round-trip test relies on resumed updates being bit-identical.
+pub fn adamw_update(
+    param: &mut [f32],
+    grad: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: i32,
+    h: &AdamW,
+) {
+    debug_assert_eq!(param.len(), grad.len());
+    debug_assert_eq!(param.len(), m.len());
+    debug_assert_eq!(param.len(), v.len());
+    let bc1 = 1.0 - h.beta1.powi(t);
+    let bc2 = 1.0 - h.beta2.powi(t);
+    for i in 0..param.len() {
+        let g = grad[i];
+        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * g;
+        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * g * g;
+        let m_hat = m[i] / bc1;
+        let v_hat = v[i] / bc2;
+        param[i] -= h.lr * (m_hat / (v_hat.sqrt() + h.eps) + h.weight_decay * param[i]);
+    }
+}
 
 /// Host-side training state for one model+mode.
 #[derive(Debug, Clone)]
@@ -20,15 +71,20 @@ pub struct TrainState {
     pub m: Vec<HostTensor>,
     pub v: Vec<HostTensor>,
     pub step: HostTensor,
-    /// Leaf paths of `params` (from the init artifact), for named lookup.
+    /// Leaf paths of `params` (from the backend init), for named lookup.
     pub param_paths: Vec<String>,
 }
 
 impl TrainState {
-    /// Initialize by executing the `model_init_*` artifact.
-    pub fn init(engine: &Engine, init_artifact: &str, seed: i32) -> Result<Self> {
-        let spec = engine.spec(init_artifact)?.clone();
-        let params = engine.run(init_artifact, &[HostTensor::scalar_i32(seed)])?;
+    /// Build a fresh state (zero moments, step 0) from parameter leaves.
+    pub fn from_params(params: Vec<HostTensor>, param_paths: Vec<String>) -> Result<Self> {
+        if params.len() != param_paths.len() {
+            bail!(
+                "{} parameter leaves but {} paths",
+                params.len(),
+                param_paths.len()
+            );
+        }
         let m = params
             .iter()
             .map(|p| {
@@ -44,8 +100,16 @@ impl TrainState {
             m,
             v,
             step: HostTensor::scalar_i32(0),
-            param_paths: spec.output_paths.clone(),
+            param_paths,
         })
+    }
+
+    /// Initialize by executing the `model_init_*` artifact (PJRT path).
+    #[cfg(feature = "xla")]
+    pub fn init(engine: &Engine, init_artifact: &str, seed: i32) -> Result<Self> {
+        let spec = engine.spec(init_artifact)?.clone();
+        let params = engine.run(init_artifact, &[HostTensor::scalar_i32(seed)])?;
+        Self::from_params(params, spec.output_paths.clone())
     }
 
     pub fn n_leaves(&self) -> usize {
@@ -195,5 +259,51 @@ mod tests {
     fn bytes_accounting() {
         let s = dummy_state(2);
         assert_eq!(s.bytes(), 3 * 2 * 16);
+    }
+
+    #[test]
+    fn from_params_builds_zero_moments() {
+        let params = vec![HostTensor::f32(vec![2], vec![1.0, 2.0])];
+        let s = TrainState::from_params(params, vec!["['w']".into()]).unwrap();
+        assert_eq!(s.m[0].as_f32().unwrap(), &[0.0, 0.0]);
+        assert_eq!(s.v[0].as_f32().unwrap(), &[0.0, 0.0]);
+        assert_eq!(s.step.scalar().unwrap(), 0.0);
+        // Arity mismatch between leaves and paths is rejected.
+        let params = vec![HostTensor::f32(vec![1], vec![0.0])];
+        assert!(TrainState::from_params(params, vec![]).is_err());
+    }
+
+    #[test]
+    fn adamw_first_step_moves_against_gradient() {
+        let h = AdamW::default();
+        let mut p = vec![1.0f32, -1.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        let g = vec![2.0f32, -3.0];
+        adamw_update(&mut p, &g, &mut m, &mut v, 1, &h);
+        // With zero moments the first update is ~ -lr * sign(g).
+        assert!((p[0] - (1.0 - h.lr)).abs() < 1e-4, "{}", p[0]);
+        assert!((p[1] - (-1.0 + h.lr)).abs() < 1e-4, "{}", p[1]);
+        assert!(m[0] > 0.0 && v[0] > 0.0);
+    }
+
+    #[test]
+    fn adamw_is_deterministic() {
+        let h = AdamW::default();
+        let run = || {
+            let mut p = vec![0.5f32, 0.25, -0.75];
+            let mut m = vec![0.0f32; 3];
+            let mut v = vec![0.0f32; 3];
+            for t in 1..=10 {
+                let g: Vec<f32> = p.iter().map(|x| x * 0.3 + 0.1).collect();
+                adamw_update(&mut p, &g, &mut m, &mut v, t, &h);
+            }
+            p
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

@@ -1,24 +1,35 @@
-//! The fine-tuning trainer: the L3 hot loop.
+//! The fine-tuning trainer: the L3 hot loop, generic over the execution
+//! [`Backend`].
 //!
-//! Drives the AOT train-step executable over synthetic mini-batches,
-//! schedules the DKM codebook refresh (paper §5.1: every ~20 mini-batches,
-//! spt mode only), evaluates held-out loss (PPL) and QA accuracy (the
-//! MMLU surrogate), and records step timing + loss curves.
+//! The trainer owns everything backend-independent — mini-batching over
+//! the synthetic corpus, the DKM codebook-refresh schedule (paper §5.1:
+//! every ~20 mini-batches, spt mode only), held-out eval (PPL), QA
+//! accuracy (the MMLU surrogate), step timing, loss curves, and
+//! checkpoint/resume bookkeeping — and delegates the actual train step
+//! to the backend: the native substrate by default, or the AOT/PJRT
+//! engine (`--features xla`).
 //!
-//! Two dispatch paths (see EXPERIMENTS.md §Perf):
-//! * per-step: one `train_step` execution per mini-batch;
-//! * chunked: `train_chunk8` scans 8 microbatches inside one executable,
-//!   amortizing host<->device marshalling of the state.
+//! Two dispatch paths:
+//! * per-step: one `Backend::train_step` per mini-batch;
+//! * chunked: `Backend::train_chunk8` scans 8 microbatches inside one
+//!   dispatch where the backend supports it (the PJRT scan-of-8
+//!   executable, which amortizes host<->device marshalling).
+//!
+//! Resume contract: a run restored from a checkpoint replays the exact
+//! batch schedule of an uninterrupted run (the batcher is deterministic
+//! per seed and the trainer fast-forwards every RNG-consuming stream by
+//! the restored step count), so the resumed loss curve is bit-identical
+//! — `tests/integration_native_train.rs` asserts this.
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use super::backend::Backend;
 use super::state::TrainState;
 use crate::config::{Mode, RunConfig};
 use crate::data::{Batcher, QaTaskGen, SyntheticCorpus};
 use crate::metrics::Counters;
-use crate::runtime::{Engine, HostTensor};
 
 /// Trainer options beyond the run config.
 #[derive(Debug, Clone)]
@@ -30,6 +41,9 @@ pub struct TrainerOptions {
     /// Bigram structure of the synthetic corpus.
     pub corpus_branch: usize,
     pub corpus_bigram_p: f64,
+    /// Halt after this many optimizer steps *this run* (checkpoint /
+    /// resume workflows; `None` runs to `rc.steps`).
+    pub stop_after: Option<usize>,
 }
 
 impl Default for TrainerOptions {
@@ -39,6 +53,7 @@ impl Default for TrainerOptions {
             eval_batches: 4,
             corpus_branch: 4,
             corpus_bigram_p: 0.85,
+            stop_after: None,
         }
     }
 }
@@ -84,38 +99,27 @@ impl TrainReport {
 }
 
 /// The trainer itself.
-pub struct Trainer<'e> {
-    engine: &'e Engine,
+pub struct Trainer<'b, B: Backend> {
+    backend: &'b B,
     rc: RunConfig,
     opts: TrainerOptions,
     pub counters: Counters,
+    /// Final state of the last `train`/`train_qa` call (checkpointing).
+    pub last_state: Option<TrainState>,
 }
 
-impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, rc: RunConfig, opts: TrainerOptions) -> Self {
-        Trainer { engine, rc, opts, counters: Counters::new() }
+impl<'b, B: Backend> Trainer<'b, B> {
+    pub fn new(backend: &'b B, rc: RunConfig, opts: TrainerOptions) -> Self {
+        Trainer { backend, rc, opts, counters: Counters::new(), last_state: None }
     }
 
-    fn artifact(&self, entry: &str) -> String {
-        format!("{entry}_{}_{}", self.rc.model, self.rc.mode.as_str())
-    }
-
-    /// Workload shape (batch, seq) baked into the train-step artifact.
-    fn workload(&self) -> Result<(usize, usize)> {
-        let spec = self.engine.spec(&self.artifact("train_step"))?;
-        let batch = spec.meta_usize("batch").context("meta.batch")?;
-        let seq = spec.meta_usize("seq").context("meta.seq")?;
-        Ok((batch, seq))
-    }
-
-    fn vocab(&self) -> Result<usize> {
-        let spec = self.engine.spec(&self.artifact("train_step"))?;
-        spec.meta_usize("vocab").context("meta.vocab")
+    pub fn run_config(&self) -> &RunConfig {
+        &self.rc
     }
 
     /// Build the LM batcher over a synthetic corpus pool.
     fn make_batcher(&self, batch: usize, seq: usize, pool: usize) -> Result<Batcher> {
-        let vocab = self.vocab()?;
+        let vocab = self.backend.vocab(&self.rc)?;
         let mut corpus = SyntheticCorpus::new(
             vocab,
             self.opts.corpus_branch,
@@ -132,32 +136,39 @@ impl<'e> Trainer<'e> {
         Ok(Batcher::new(toks, tgts, batch, self.rc.seed ^ 0xBA7C4))
     }
 
-    /// Run LM fine-tuning for `rc.steps` mini-batches.
+    /// Run LM fine-tuning from a fresh state.
     pub fn train(&mut self) -> Result<TrainReport> {
-        let (batch, seq) = self.workload()?;
-        let step_name = self.artifact("train_step");
-        let chunk_name = format!(
-            "train_chunk8_{}_{}", self.rc.model, self.rc.mode.as_str()
-        );
-        let use_chunk = self.opts.chunked
-            && self.engine.manifest().get(&chunk_name).is_ok();
-        let mut state = TrainState::init(
-            self.engine,
-            &self.artifact("model_init"),
-            self.rc.seed as i32,
-        )?;
-        state.check_against(self.engine.spec(&step_name)?)?;
+        let state = self.backend.init_state(&self.rc)?;
+        self.train_from(state)
+    }
+
+    /// Run LM fine-tuning from an existing (e.g. checkpointed) state:
+    /// steps `state.step + 1 ..= rc.steps`, replaying the batch schedule
+    /// an uninterrupted run would have used.
+    pub fn train_from(&mut self, mut state: TrainState) -> Result<TrainReport> {
+        let (batch, seq) = self.backend.workload(&self.rc)?;
+        let use_chunk =
+            self.opts.chunked && self.backend.supports_chunked(&self.rc);
+        let start = state.step.scalar()? as usize;
+        if start > self.rc.steps {
+            bail!("state is at step {start}, past rc.steps {}", self.rc.steps);
+        }
         let pool = (self.rc.steps * batch).clamp(batch * 4, 4096);
         let mut batcher = self.make_batcher(batch, seq, pool)?;
         let mut eval_batcher = self.make_batcher(batch, seq, batch * 8)?;
+        self.fast_forward(&mut batcher, &mut eval_batcher, start, use_chunk)?;
 
-        let mut losses = Vec::with_capacity(self.rc.steps);
+        let stop_at = match self.opts.stop_after {
+            Some(n) => self.rc.steps.min(start + n),
+            None => self.rc.steps,
+        };
+        let mut losses = Vec::with_capacity(stop_at.saturating_sub(start));
         let mut evals = Vec::new();
         let mut refreshes = 0usize;
         let t0 = Instant::now();
-        let mut step_i = 0usize;
-        while step_i < self.rc.steps {
-            if use_chunk && step_i + 8 <= self.rc.steps {
+        let mut step_i = start;
+        while step_i < stop_at {
+            if use_chunk && step_i + 8 <= stop_at {
                 // ---- chunked dispatch: 8 microbatches, one execution ----
                 let mut toks = Vec::with_capacity(8 * batch * seq);
                 let mut tgts = Vec::with_capacity(8 * batch * seq);
@@ -166,21 +177,16 @@ impl<'e> Trainer<'e> {
                     toks.extend_from_slice(&b.tokens);
                     tgts.extend_from_slice(&b.targets);
                 }
-                let tk = HostTensor::i32(vec![8, batch, seq], toks);
-                let tg = HostTensor::i32(vec![8, batch, seq], tgts);
-                let inputs = state.step_inputs(tk, tg);
-                let out = self.engine.run(&chunk_name, &inputs)?;
-                let loss_vec = state.absorb_step_outputs(out)?;
-                losses.extend(loss_vec.as_f32()?.iter().copied());
+                let chunk_losses =
+                    self.backend.train_chunk8(&self.rc, &mut state, &toks, &tgts)?;
+                losses.extend_from_slice(&chunk_losses);
                 step_i += 8;
             } else {
                 // ---- per-step dispatch ----
                 let b = batcher.next();
-                let tk = HostTensor::i32(vec![batch, seq], b.tokens);
-                let tg = HostTensor::i32(vec![batch, seq], b.targets);
-                let inputs = state.step_inputs(tk, tg);
-                let out = self.engine.run(&step_name, &inputs)?;
-                let loss = state.absorb_step_outputs(out)?.scalar()?;
+                let loss = self
+                    .backend
+                    .train_step(&self.rc, &mut state, &b.tokens, &b.targets)?;
                 losses.push(loss);
                 step_i += 1;
             }
@@ -188,12 +194,14 @@ impl<'e> Trainer<'e> {
             self.counters.add("tokens", (batch * seq) as u64);
 
             // DKM codebook refresh (paper §5.1), spt only.
-            if self.rc.mode == Mode::Spt
-                && self.rc.codebook_refresh_every > 0
-                && step_i % self.rc.codebook_refresh_every == 0
-            {
-                self.refresh_codebooks(&mut state, &mut batcher)?;
-                refreshes += 1;
+            if self.refresh_due(step_i) {
+                let b = batcher.next();
+                if self
+                    .backend
+                    .refresh_codebooks(&self.rc, &mut state, &b.tokens)?
+                {
+                    refreshes += 1;
+                }
             }
 
             if self.rc.eval_every > 0 && step_i % self.rc.eval_every == 0 {
@@ -208,76 +216,91 @@ impl<'e> Trainer<'e> {
             }
         }
         let total = t0.elapsed().as_secs_f64();
-        Ok(TrainReport {
+        let report = TrainReport {
             model: self.rc.model.clone(),
             mode: self.rc.mode,
             steps: losses.len(),
-            tokens_per_sec: (losses.len() * batch * seq) as f64 / total,
+            tokens_per_sec: (losses.len() * batch * seq) as f64 / total.max(1e-9),
             losses,
             evals,
             total_secs: total,
             qa_accuracy: None,
             refreshes,
-        })
+        };
+        self.last_state = Some(state);
+        Ok(report)
+    }
+
+    /// Whether the codebook refresh fires after step `step_i`.
+    fn refresh_due(&self, step_i: usize) -> bool {
+        self.rc.mode == Mode::Spt
+            && self.rc.codebook_refresh_every > 0
+            && step_i % self.rc.codebook_refresh_every == 0
+    }
+
+    /// Replay the RNG-consuming draws steps `1..=start` would have made,
+    /// so a resumed run sees the same batch stream as an uninterrupted
+    /// one (the bit-identical-resume contract).  Simulates the exact
+    /// dispatch loop — including the chunked path's coarser
+    /// refresh/eval cadence — rather than assuming one check per step.
+    fn fast_forward(
+        &self,
+        batcher: &mut Batcher,
+        eval_batcher: &mut Batcher,
+        start: usize,
+        use_chunk: bool,
+    ) -> Result<()> {
+        let mut step_i = 0usize;
+        while step_i < start {
+            if use_chunk && step_i + 8 <= self.rc.steps {
+                for _ in 0..8 {
+                    batcher.next();
+                }
+                step_i += 8;
+            } else {
+                batcher.next();
+                step_i += 1;
+            }
+            if step_i > start {
+                // The uninterrupted run could only have stopped on this
+                // lattice; a mid-chunk checkpoint cannot be replayed.
+                bail!(
+                    "cannot resume at step {start}: chunked dispatch \
+                     advances in blocks of 8 (nearest boundary {step_i})"
+                );
+            }
+            if self.refresh_due(step_i) {
+                batcher.next();
+            }
+            if self.rc.eval_every > 0 && step_i % self.rc.eval_every == 0 {
+                for _ in 0..self.opts.eval_batches {
+                    eval_batcher.next();
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Mean eval loss over held-out batches.
     pub fn eval_loss(&self, state: &TrainState, batcher: &mut Batcher) -> Result<f32> {
-        let name = self.artifact("eval_loss");
-        let (batch, seq) = self.workload()?;
         let mut total = 0.0f32;
         for _ in 0..self.opts.eval_batches {
             let b = batcher.next();
-            let mut inputs = state.params.clone();
-            inputs.push(HostTensor::i32(vec![batch, seq], b.tokens));
-            inputs.push(HostTensor::i32(vec![batch, seq], b.targets));
-            let out = self.engine.run(&name, &inputs)?;
-            total += out[0].scalar()?;
+            total += self
+                .backend
+                .eval_loss(&self.rc, state, &b.tokens, &b.targets)?;
         }
-        Ok(total / self.opts.eval_batches as f32)
-    }
-
-    /// Run the whole-model DKM refresh and patch codebook leaves.
-    fn refresh_codebooks(&self, state: &mut TrainState, batcher: &mut Batcher) -> Result<()> {
-        let name = format!("codebook_refresh_{}", self.rc.model);
-        if self.engine.manifest().get(&name).is_err() {
-            return Ok(()); // refresh artifact not built; skip silently
-        }
-        let (batch, seq) = self.workload()?;
-        let b = batcher.next();
-        let mut inputs = state.params.clone();
-        inputs.push(HostTensor::i32(vec![batch, seq], b.tokens));
-        let out = self.engine.run(&name, &inputs)?;
-        if out.len() != 2 {
-            bail!("codebook refresh returned {} outputs", out.len());
-        }
-        let q_leaves = state.find_leaves("pq_q");
-        let k_leaves = state.find_leaves("pq_k");
-        if q_leaves.len() != 1 || k_leaves.len() != 1 {
-            bail!(
-                "expected exactly one stacked pq_q/pq_k leaf, found {}/{}",
-                q_leaves.len(),
-                k_leaves.len()
-            );
-        }
-        state.set_leaf(q_leaves[0], out[0].clone())?;
-        state.set_leaf(k_leaves[0], out[1].clone())?;
-        Ok(())
+        Ok(total / self.opts.eval_batches.max(1) as f32)
     }
 
     /// QA fine-tune + accuracy eval (Table 3's MMLU surrogate).
     pub fn train_qa(&mut self) -> Result<TrainReport> {
-        let (batch, seq) = self.workload()?;
-        let vocab = self.vocab()?;
-        let step_name = self.artifact("train_step");
-        let qa_name = self.artifact("qa_logits");
-        let mut state = TrainState::init(
-            self.engine,
-            &self.artifact("model_init"),
-            self.rc.seed as i32,
-        )?;
+        let (batch, seq) = self.backend.workload(&self.rc)?;
+        let vocab = self.backend.vocab(&self.rc)?;
+        let mut state = self.backend.init_state(&self.rc)?;
         let mut gen = QaTaskGen::new(vocab, 64, self.rc.seed);
         let mut losses = Vec::with_capacity(self.rc.steps);
+        let mut refreshes = 0usize;
         let t0 = Instant::now();
         for step_i in 1..=self.rc.steps {
             let qb = gen.batch(batch, seq);
@@ -285,31 +308,20 @@ impl<'e> Trainer<'e> {
                 qb.tokens.iter().flatten().map(|&t| t as i32).collect();
             let tgts: Vec<i32> =
                 qb.targets.iter().flatten().map(|&t| t as i32).collect();
-            let inputs = state.step_inputs(
-                HostTensor::i32(vec![batch, seq], toks),
-                HostTensor::i32(vec![batch, seq], tgts),
+            losses.push(
+                self.backend
+                    .train_step(&self.rc, &mut state, &toks, &tgts)?,
             );
-            let out = self.engine.run(&step_name, &inputs)?;
-            losses.push(state.absorb_step_outputs(out)?.scalar()?);
-            if self.rc.mode == Mode::Spt
-                && self.rc.codebook_refresh_every > 0
-                && step_i % self.rc.codebook_refresh_every == 0
-            {
-                // reuse LM refresh machinery with QA tokens
-                let name = format!("codebook_refresh_{}", self.rc.model);
-                if self.engine.manifest().get(&name).is_ok() {
-                    let qb2 = gen.batch(batch, seq);
-                    let toks2: Vec<i32> =
-                        qb2.tokens.iter().flatten().map(|&t| t as i32).collect();
-                    let mut inputs = state.params.clone();
-                    inputs.push(HostTensor::i32(vec![batch, seq], toks2));
-                    let out = self.engine.run(&name, &inputs)?;
-                    if out.len() == 2 {
-                        let q = state.find_leaves("pq_q");
-                        let k = state.find_leaves("pq_k");
-                        state.set_leaf(q[0], out[0].clone())?;
-                        state.set_leaf(k[0], out[1].clone())?;
-                    }
+            if self.refresh_due(step_i) {
+                // Reuse the refresh machinery with QA tokens.
+                let qb2 = gen.batch(batch, seq);
+                let toks2: Vec<i32> =
+                    qb2.tokens.iter().flatten().map(|&t| t as i32).collect();
+                if self
+                    .backend
+                    .refresh_codebooks(&self.rc, &mut state, &toks2)?
+                {
+                    refreshes += 1;
                 }
             }
         }
@@ -320,26 +332,28 @@ impl<'e> Trainer<'e> {
             let qb = gen.batch(batch, seq);
             let toks: Vec<i32> =
                 qb.tokens.iter().flatten().map(|&t| t as i32).collect();
-            let mut inputs = state.params.clone();
-            inputs.push(HostTensor::i32(vec![batch, seq], toks));
-            let out = self.engine.run(&qa_name, &inputs)?;
-            let logits = out[0].as_f32()?;
-            let rows: Vec<Vec<f32>> = (0..batch)
-                .map(|i| logits[i * 4..(i + 1) * 4].to_vec())
-                .collect();
+            let rows = self.backend.qa_choice_logits(
+                &self.rc,
+                &state,
+                &toks,
+                &qb.answer_pos,
+                &gen.answer_tokens(),
+            )?;
             correct_weighted += gen.accuracy(&qb, &rows);
         }
         let total = t0.elapsed().as_secs_f64();
-        Ok(TrainReport {
+        let report = TrainReport {
             model: self.rc.model.clone(),
             mode: self.rc.mode,
             steps: losses.len(),
-            tokens_per_sec: (losses.len() * batch * seq) as f64 / total,
+            tokens_per_sec: (losses.len() * batch * seq) as f64 / total.max(1e-9),
             losses,
             evals: Vec::new(),
             total_secs: total,
             qa_accuracy: Some(correct_weighted / eval_rounds as f32),
-            refreshes: 0,
-        })
+            refreshes,
+        };
+        self.last_state = Some(state);
+        Ok(report)
     }
 }

@@ -2,17 +2,16 @@
 //! strength of sparsification, SPT allows users to conduct short training
 //! trials on some sample data."
 //!
-//! Runs short fine-tuning trials across a grid of (L-fraction,
-//! beta-fraction) artifacts and ranks them by a quality/efficiency
-//! objective, regenerating the Fig. 10 sweep along the way.
+//! Runs short fine-tuning trials across the tuning modes on any
+//! [`Backend`] and ranks them by a quality/efficiency objective,
+//! regenerating the Fig. 10 sweep along the way.
 
 use anyhow::Result;
 
+use super::backend::Backend;
+use super::trainer::{Trainer, TrainerOptions};
 use crate::config::{Mode, RunConfig};
 use crate::metrics::Table;
-use crate::runtime::Engine;
-
-use super::trainer::{Trainer, TrainerOptions};
 
 /// One trial outcome.
 #[derive(Debug, Clone)]
@@ -25,18 +24,18 @@ pub struct TrialResult {
     pub tokens_per_sec: f64,
 }
 
-/// Sweep over the tuning modes available in the manifest for one model
+/// Sweep over the tuning modes the backend can run for one model
 /// (full/lora/spt); per paper Fig. 10 this is how sparsity strength is
 /// chosen before a long run.
-pub struct TrialManager<'e> {
-    engine: &'e Engine,
+pub struct TrialManager<'b, B: Backend> {
+    backend: &'b B,
     base: RunConfig,
     pub steps_per_trial: usize,
 }
 
-impl<'e> TrialManager<'e> {
-    pub fn new(engine: &'e Engine, base: RunConfig, steps_per_trial: usize) -> Self {
-        TrialManager { engine, base, steps_per_trial }
+impl<'b, B: Backend> TrialManager<'b, B> {
+    pub fn new(backend: &'b B, base: RunConfig, steps_per_trial: usize) -> Self {
+        TrialManager { backend, base, steps_per_trial }
     }
 
     /// Run one trial in a given mode.
@@ -45,7 +44,7 @@ impl<'e> TrialManager<'e> {
         rc.mode = mode;
         rc.steps = self.steps_per_trial;
         rc.eval_every = self.steps_per_trial; // single eval at the end
-        let mut trainer = Trainer::new(self.engine, rc, TrainerOptions::default());
+        let mut trainer = Trainer::new(self.backend, rc, TrainerOptions::default());
         let report = trainer.train()?;
         Ok(TrialResult {
             label: format!("{}-{}", report.model, mode.as_str()),
@@ -61,14 +60,17 @@ impl<'e> TrialManager<'e> {
     pub fn compare_modes(&self) -> Result<(Vec<TrialResult>, Table)> {
         let mut results = Vec::new();
         for mode in Mode::ALL {
-            let name = format!("train_step_{}_{}", self.base.model, mode.as_str());
-            if self.engine.manifest().get(&name).is_err() {
+            if !self.backend.has_mode(&self.base, mode) {
                 continue;
             }
             results.push(self.run_trial(mode)?);
         }
         let mut table = Table::new(
-            &format!("Sparsity trials — {}", self.base.model),
+            &format!(
+                "Sparsity trials — {} ({} backend)",
+                self.base.model,
+                self.backend.name()
+            ),
             &["System", "Final loss", "PPL", "s/step", "tokens/s"],
         );
         for r in &results {
@@ -82,19 +84,19 @@ impl<'e> TrialManager<'e> {
         }
         Ok((results, table))
     }
+}
 
-    /// Recommend a mode: fastest among those within `tolerance` relative
-    /// PPL of the best (the paper's efficiency/quality trade-off knob).
-    pub fn recommend(results: &[TrialResult], tolerance: f32) -> Option<&TrialResult> {
-        let best_ppl = results
-            .iter()
-            .map(|r| r.ppl)
-            .fold(f32::INFINITY, f32::min);
-        results
-            .iter()
-            .filter(|r| r.ppl <= best_ppl * (1.0 + tolerance))
-            .min_by(|a, b| a.secs_per_step.total_cmp(&b.secs_per_step))
-    }
+/// Recommend a mode: fastest among those within `tolerance` relative
+/// PPL of the best (the paper's efficiency/quality trade-off knob).
+pub fn recommend(results: &[TrialResult], tolerance: f32) -> Option<&TrialResult> {
+    let best_ppl = results
+        .iter()
+        .map(|r| r.ppl)
+        .fold(f32::INFINITY, f32::min);
+    results
+        .iter()
+        .filter(|r| r.ppl <= best_ppl * (1.0 + tolerance))
+        .min_by(|a, b| a.secs_per_step.total_cmp(&b.secs_per_step))
 }
 
 #[cfg(test)]
@@ -120,15 +122,15 @@ mod tests {
             tr("spt", 10.5, 0.5),
         ];
         // 10% tolerance: spt (10.5 <= 11.0) and fastest.
-        let r = TrialManager::recommend(&results, 0.10).unwrap();
+        let r = recommend(&results, 0.10).unwrap();
         assert_eq!(r.label, "spt");
         // 1% tolerance: only full/lora qualify; lora is faster.
-        let r = TrialManager::recommend(&results, 0.01).unwrap();
+        let r = recommend(&results, 0.01).unwrap();
         assert_eq!(r.label, "lora");
     }
 
     #[test]
     fn recommend_empty_is_none() {
-        assert!(TrialManager::recommend(&[], 0.1).is_none());
+        assert!(recommend(&[], 0.1).is_none());
     }
 }

@@ -13,22 +13,29 @@
 //!   HLO text by `aot.py`.
 //! * **L3 (this crate)** — the fine-tuning coordinator: config system,
 //!   synthetic data pipeline, microbatch trainer, sparsity-trial manager,
-//!   analytic GPU-memory model, a rust-native sparse substrate used for
-//!   baselines/benches, and the harness regenerating every table and
-//!   figure of the paper's evaluation.
+//!   analytic GPU-memory model, the rust-native sparse substrate
+//!   (forward *and* backward), and the harness regenerating every table
+//!   and figure of the paper's evaluation.
 //!
-//! The PJRT execution path ([`runtime`] and the artifact-driven parts of
-//! [`coordinator`]) is behind the off-by-default `xla` cargo feature: the
-//! default build needs no PJRT toolchain and still provides the full
-//! sparse substrate (including the parallel multi-head layer in
-//! [`sparse::mha`]), memory model, data pipeline, and benches.
+//! Training is **backend-agnostic** ([`coordinator::Backend`]):
+//!
+//! * [`coordinator::NativeBackend`] (default) fine-tunes a transformer
+//!   block end-to-end on the sparse substrate — dense projections,
+//!   PQ + top-L sparse attention, and the routed FFN all have native
+//!   backward passes ([`sparse::grad`], parallel twins in
+//!   [`sparse::mha`]) with AdamW applied host-side.  `spt train`,
+//!   `train-qa`, and `trial` work out of the box on any machine.
+//! * The PJRT engine ([`runtime`]'s `engine`, `coordinator`'s
+//!   `PjrtBackend`) executes pre-lowered AOT artifacts and sits behind
+//!   the off-by-default `xla` cargo feature (`--backend pjrt` on the
+//!   CLI); the bindings crate is stubbed so `--features xla` still
+//!   compiles without a PJRT toolchain.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod memmodel;
 pub mod metrics;
-#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sparse;
 pub mod util;

@@ -10,28 +10,26 @@
 //!   goldens    numeric round-trip validation vs python outputs
 //!   artifacts  list the AOT manifest
 //!
-//! Run `spt help` for flags.  Everything reads `artifacts/` produced by
-//! `make artifacts`.
+//! `train`, `train-qa`, and `trial` run on the native backend by default
+//! (no artifacts or PJRT toolchain needed); `--backend pjrt` selects the
+//! AOT path in a `--features xla` build.  Run `spt help` for flags.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use spt::config::{presets, Mode};
-#[cfg(feature = "xla")]
-use spt::config::RunConfig;
+use spt::config::{presets, Mode, RunConfig};
+use spt::coordinator::{checkpoint, trial, Backend, NativeBackend, Trainer, TrainerOptions};
+use spt::coordinator::trial::TrialManager;
 #[cfg(feature = "xla")]
 use spt::coordinator::profile as prof;
 #[cfg(feature = "xla")]
-use spt::coordinator::trial::TrialManager;
-#[cfg(feature = "xla")]
-use spt::coordinator::{Trainer, TrainerOptions};
+use spt::coordinator::PjrtBackend;
 use spt::memmodel;
 use spt::metrics::Table;
 #[cfg(feature = "xla")]
 use spt::runtime::Engine;
 use spt::util::fmt_bytes;
-#[cfg(feature = "xla")]
 use spt::util::fmt_duration;
 
 /// Minimal `--key value` / `--flag` argument parser.
@@ -84,14 +82,13 @@ impl Args {
         self.flags.iter().any(|f| f == flag)
     }
 
-    #[cfg(feature = "xla")]
     fn run_config(&self) -> Result<RunConfig> {
         let mut rc = match self.get("config") {
             Some(path) => RunConfig::from_file(path)?,
             None => RunConfig::default(),
         };
         for key in ["model", "mode", "batch", "seq", "steps", "eval_every",
-                    "codebook_refresh_every", "seed", "artifacts_dir",
+                    "codebook_refresh_every", "lr", "seed", "artifacts_dir",
                     "out_dir", "memory_budget_gb"] {
             if let Some(v) = self.get(key) {
                 rc.set(key, v)?;
@@ -109,15 +106,35 @@ fn main() {
     }
 }
 
+/// Which training backend a command should use.
+enum BackendChoice {
+    Native,
+    #[cfg(feature = "xla")]
+    Pjrt,
+}
+
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    match args.get("backend").unwrap_or("native") {
+        "native" => Ok(BackendChoice::Native),
+        "pjrt" => {
+            #[cfg(feature = "xla")]
+            return Ok(BackendChoice::Pjrt);
+            #[cfg(not(feature = "xla"))]
+            bail!(
+                "--backend pjrt executes AOT artifacts through PJRT; \
+                 rebuild with `--features xla` (see README)"
+            )
+        }
+        other => bail!("unknown backend '{other}' (native|pjrt)"),
+    }
+}
+
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.cmd.as_str() {
-        #[cfg(feature = "xla")]
-        "train" => cmd_train(&args, false),
-        #[cfg(feature = "xla")]
-        "train-qa" => cmd_train(&args, true),
-        #[cfg(feature = "xla")]
-        "trial" => cmd_trial(&args),
+        "train" => dispatch_train(&args, false),
+        "train-qa" => dispatch_train(&args, true),
+        "trial" => dispatch_trial(&args),
         #[cfg(feature = "xla")]
         "profile" => cmd_profile(&args),
         #[cfg(feature = "xla")]
@@ -128,10 +145,9 @@ fn run(argv: &[String]) -> Result<()> {
         #[cfg(feature = "xla")]
         "artifacts" => cmd_artifacts(&args),
         #[cfg(not(feature = "xla"))]
-        "train" | "train-qa" | "trial" | "profile" | "blocks" | "goldens"
-        | "artifacts" => bail!(
+        "profile" | "blocks" | "goldens" | "artifacts" => bail!(
             "'{}' executes AOT artifacts through PJRT; rebuild with \
-             `--features xla` (requires the xla bindings crate, see README)",
+             `--features xla` (see README)",
             args.cmd
         ),
         "help" | "--help" | "-h" => {
@@ -158,16 +174,45 @@ COMMANDS
   artifacts   list the AOT manifest
 
 COMMON FLAGS
-  --artifacts_dir DIR   (default: artifacts)
-  --model NAME          spt-tiny | spt-30m | spt-100m
+  --backend B           native (default, no artifacts needed) | pjrt
+  --model NAME          spt-tiny | spt-30m | spt-100m | spt-nano
   --mode MODE           full | lora | spt
+  --batch N  --seq N    workload shape (native backend)
   --steps N  --seed N   --eval_every N  --codebook_refresh_every N
+  --lr X                AdamW learning rate (native backend)
   --config FILE         TOML run config (keys as above)
-  --chunked             use the scan-of-8 fast dispatch path (train)
+  --chunked             scan-of-8 fast dispatch (pjrt backend train)
+  --resume FILE         continue training from a checkpoint (train)
+  --save_ckpt FILE      write the final training state (train)
+  --artifacts_dir DIR   (pjrt backend; default: artifacts)
 
-NOTE  every command except `memplan` and `help` executes AOT artifacts
-      through PJRT and needs a build with `--features xla`.
+NOTE  the native backend trains a single transformer block of the chosen
+      model preset end-to-end on the rust sparse substrate.  `profile`,
+      `blocks`, `goldens`, and `artifacts` always need `--features xla`
+      plus AOT artifacts; `memplan` and `help` need nothing.
 ";
+
+fn dispatch_train(args: &Args, qa: bool) -> Result<()> {
+    match backend_choice(args)? {
+        BackendChoice::Native => cmd_train(&NativeBackend::new(), args, qa),
+        #[cfg(feature = "xla")]
+        BackendChoice::Pjrt => {
+            let engine = engine_from(args)?;
+            cmd_train(&PjrtBackend::new(&engine), args, qa)
+        }
+    }
+}
+
+fn dispatch_trial(args: &Args) -> Result<()> {
+    match backend_choice(args)? {
+        BackendChoice::Native => cmd_trial(&NativeBackend::new(), args),
+        #[cfg(feature = "xla")]
+        BackendChoice::Pjrt => {
+            let engine = engine_from(args)?;
+            cmd_trial(&PjrtBackend::new(&engine), args)
+        }
+    }
+}
 
 #[cfg(feature = "xla")]
 fn engine_from(args: &Args) -> Result<Engine> {
@@ -175,22 +220,37 @@ fn engine_from(args: &Args) -> Result<Engine> {
     Engine::new(&dir)
 }
 
-#[cfg(feature = "xla")]
-fn cmd_train(args: &Args, qa: bool) -> Result<()> {
+fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
     let rc = args.run_config()?;
-    let engine = engine_from(args)?;
     let opts = TrainerOptions { chunked: args.has("chunked"), ..Default::default() };
     println!(
-        "[spt] {} fine-tuning: model={} mode={} steps={} (platform {})",
+        "[spt] {} fine-tuning: model={} mode={} steps={} (backend {}, {})",
         if qa { "QA" } else { "LM" },
         rc.model,
         rc.mode.as_str(),
         rc.steps,
-        engine.platform()
+        backend.name(),
+        backend.platform()
     );
     let out_dir = rc.out_dir.clone();
-    let mut trainer = Trainer::new(&engine, rc, opts);
-    let report = if qa { trainer.train_qa()? } else { trainer.train()? };
+    let resume = args.get("resume").map(str::to_string);
+    if qa && resume.is_some() {
+        bail!("--resume is only supported for `train` (LM); `train-qa` always starts fresh");
+    }
+    let save_ckpt = args.get("save_ckpt").map(str::to_string);
+    let mut trainer = Trainer::new(backend, rc, opts);
+    let report = if qa {
+        trainer.train_qa()?
+    } else if let Some(path) = resume {
+        let state = checkpoint::load(&path)?;
+        println!(
+            "[spt] resumed from {path} at step {}",
+            state.step.scalar()? as usize
+        );
+        trainer.train_from(state)?
+    } else {
+        trainer.train()?
+    };
     println!(
         "[spt] {} steps in {} ({:.0} tokens/s), final loss {:.4}",
         report.steps,
@@ -214,6 +274,15 @@ fn cmd_train(args: &Args, qa: bool) -> Result<()> {
     if report.refreshes > 0 {
         println!("[spt] DKM codebook refreshes: {}", report.refreshes);
     }
+    if let Some(path) = save_ckpt {
+        match &trainer.last_state {
+            Some(state) => {
+                checkpoint::save(state, &path)?;
+                println!("[spt] checkpoint -> {path}");
+            }
+            None => println!("[spt] no final state to checkpoint"),
+        }
+    }
     std::fs::create_dir_all(&out_dir).ok();
     let csv = format!(
         "{out_dir}/loss_{}_{}.csv",
@@ -225,15 +294,13 @@ fn cmd_train(args: &Args, qa: bool) -> Result<()> {
     Ok(())
 }
 
-#[cfg(feature = "xla")]
-fn cmd_trial(args: &Args) -> Result<()> {
+fn cmd_trial<B: Backend>(backend: &B, args: &Args) -> Result<()> {
     let rc = args.run_config()?;
-    let engine = engine_from(args)?;
     let steps = args.usize_or("trial_steps", 16)?;
-    let tm = TrialManager::new(&engine, rc, steps);
+    let tm = TrialManager::new(backend, rc, steps);
     let (results, table) = tm.compare_modes()?;
     println!("{}", table.render());
-    if let Some(best) = TrialManager::recommend(&results, 0.10) {
+    if let Some(best) = trial::recommend(&results, 0.10) {
         println!(
             "[spt] recommended: {} ({:.3} s/step at ppl {:.2}, within 10% of best)",
             best.label, best.secs_per_step, best.ppl

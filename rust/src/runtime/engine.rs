@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::HostTensor;
+use super::xla;
 
 /// Cumulative per-artifact execution statistics (Table 5's kernel
 /// breakdown is assembled from these).

@@ -1,16 +1,32 @@
-//! L3 runtime: PJRT client wrapper that loads and executes the AOT
-//! artifacts produced by `python/compile/aot.py`.
+//! L3 runtime: host tensors + artifact manifests (always available), and
+//! the PJRT execution engine (behind the `xla` feature).
 //!
 //! * [`manifest`] — parsed `artifacts/manifest.json` (signatures + metadata)
-//! * [`tensor`]   — host tensors + literal marshalling
-//! * [`engine`]   — compile cache + execution (literal and buffer paths)
-//! * [`goldens`]  — numeric round-trip validation against python outputs
+//! * [`tensor`]   — host tensors; the working representation shared by
+//!   every training backend (literal marshalling is `xla`-gated)
+//! * [`engine`]   — compile cache + execution (`xla` feature)
+//! * [`goldens`]  — numeric round-trip validation vs python (`xla`)
+//! * `xla`        — compile-time stub for the PJRT bindings crate, so
+//!   `--features xla` builds without the external dependency
+//!
+//! Since the native-backend refactor, `tensor` and `manifest` compile in
+//! the default build: [`HostTensor`] is the parameter/optimizer leaf
+//! type of [`crate::coordinator::TrainState`], which the engine-free
+//! [`crate::coordinator::NativeBackend`] trains directly.
 
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod goldens;
 pub mod manifest;
 pub mod tensor;
+// Public because `Engine` / `HostTensor` expose these types in their
+// signatures (buffers, literals) exactly as they would with the real
+// bindings crate.
+#[cfg(feature = "xla")]
+pub mod xla;
 
+#[cfg(feature = "xla")]
 pub use engine::{DeviceState, Engine, ExecStats};
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 pub use tensor::HostTensor;

@@ -1,8 +1,13 @@
-//! Host tensors + literal marshalling between the coordinator and PJRT.
+//! Host tensors — the coordinator's working representation — plus
+//! literal marshalling to PJRT when the `xla` feature is on.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
 
 use super::manifest::{DType, TensorSpec};
+#[cfg(feature = "xla")]
+use super::xla;
 use crate::util::rng::Rng;
 
 /// A host-side tensor: the coordinator's working representation.
@@ -82,6 +87,14 @@ impl HostTensor {
         }
     }
 
+    /// Mutable f32 view (the native backend's in-place AdamW update).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
     /// Scalar extraction (0-d or 1-element tensors).
     pub fn scalar(&self) -> Result<f32> {
         match self {
@@ -97,6 +110,7 @@ impl HostTensor {
     }
 
     /// Convert to an XLA literal for execution.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -107,6 +121,7 @@ impl HostTensor {
     }
 
     /// Read a literal back into a host tensor.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape().context("literal shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -215,18 +230,23 @@ mod tests {
     }
 
     #[test]
-    fn literal_roundtrip_f32() {
-        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
+    fn mutable_view_updates_in_place() {
+        let mut t = HostTensor::f32(vec![2], vec![1.0, 2.0]);
+        t.as_f32_mut().unwrap()[1] = 5.0;
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 5.0]);
+        let mut i = HostTensor::i32(vec![1], vec![3]);
+        assert!(i.as_f32_mut().is_err());
     }
 
+    // The literal round-trip tests ran against the real PJRT bindings;
+    // with the stubbed `xla` module the marshalling entry points must
+    // fail with an actionable error instead (swap this back to a
+    // round-trip check when the real bindings crate is linked).
+    #[cfg(feature = "xla")]
     #[test]
-    fn literal_roundtrip_i32() {
-        let t = HostTensor::i32(vec![3], vec![-1, 0, 7]);
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
+    fn literal_marshalling_reports_stubbed_bindings() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let err = t.to_literal().unwrap_err().to_string();
+        assert!(err.contains("stub"), "unexpected error: {err}");
     }
 }

@@ -1,6 +1,14 @@
 //! End-to-end attention pipelines over the substrate (dense baseline and
 //! sparse MHA), plus the attention-weight CDF measurement behind Fig. 3.
+//!
+//! The sparse pipeline is split at its differentiability boundary:
+//! [`sparse_attention`] = structure selection (PQ quantize + bucket-sort
+//! top-L, non-differentiable) followed by [`sparse_attention_masked`]
+//! (SDDMM → softmax → SpMM over a *fixed* selection — the part the
+//! native training path differentiates via
+//! [`super::grad::sparse_attention_backward`]).
 
+use super::codes::TopL;
 use super::csr::Csr;
 use super::matrix::Matrix;
 use super::pq::{self, Codebooks};
@@ -30,11 +38,30 @@ pub fn sparse_attention(
     l: usize,
     causal: bool,
 ) -> (Matrix, Csr) {
-    let scale = 1.0 / (q.cols as f32).sqrt();
     let cq = pq::quantize(&q.data, cb);
     let ck = pq::quantize(&k.data, cb);
     let idx = topl::select(&cq, &ck, l, causal);
-    let mut a = Csr::from_topl(&idx, k.rows);
+    sparse_attention_masked(q, k, v, &idx, causal)
+}
+
+/// The differentiable tail of the sparse pipeline: SDDMM -> causal
+/// re-mask -> softmax -> SpMM over a *fixed* top-L selection.
+///
+/// Splitting here lets the native backward ([`super::grad`]) and the
+/// finite-difference gradient tests treat the selection as a constant
+/// mask — gradients w.r.t. Q/K/V flow only through the kept entries,
+/// while the selection itself (PQ + bucket sort) stays
+/// non-differentiable, as in the paper.  Returns (output, post-softmax
+/// attention CSR — the cache the backward pass consumes).
+pub fn sparse_attention_masked(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    idx: &TopL,
+    causal: bool,
+) -> (Matrix, Csr) {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut a = Csr::from_topl(idx, k.rows);
     let q_scaled = q.map(|x| x * scale);
     a.sddmm(&q_scaled, k);
     // Causal re-mask: padding slots may reference future keys.

@@ -6,6 +6,7 @@
 //! `python/compile/kernels/routed_ffn.py` (which uses the static-capacity
 //! TPU formulation); here shapes are dynamic, as in the paper's CUDA code.
 
+use super::grad;
 use super::matrix::Matrix;
 
 /// Router output for a token batch.
@@ -96,6 +97,133 @@ pub fn block_partial(
     );
     // Outer projection (line 5); the caller scatters — paper's index_put.
     Some((tokens, h.matmul(&wo_g)))
+}
+
+/// One block's backward, the unit both [`routed_ffn_backward`] and the
+/// parallel [`crate::sparse::mha::routed_ffn_backward_par`] dispatch:
+/// recompute the block forward (gather + inner GEMM + ReLU), then push
+/// `dY` back through it.  The routing (mask and gate values) is treated
+/// as a constant, matching the forward's non-differentiable top-G'
+/// selection.  Returns `(tokens, dX_g, dW_I[g], dW_O[g])`, or `None`
+/// when no token activated the block.
+pub fn block_backward(
+    gi: usize,
+    x: &Matrix,
+    w_i: &Matrix,
+    w_o: &Matrix,
+    routing: &Routing,
+    dy: &Matrix,
+) -> Option<(Vec<usize>, Matrix, Matrix, Matrix)> {
+    let nt = x.rows;
+    let d = x.cols;
+    let dg = w_i.cols / routing.g;
+    let tokens: Vec<usize> = (0..nt).filter(|&t| routing.mask[t][gi]).collect();
+    if tokens.is_empty() {
+        return None;
+    }
+    // Gather X_g and dY_g.
+    let mut xg = Matrix::zeros(tokens.len(), d);
+    let mut dyg = Matrix::zeros(tokens.len(), d);
+    for (r, &t) in tokens.iter().enumerate() {
+        xg.row_mut(r).copy_from_slice(x.row(t));
+        dyg.row_mut(r).copy_from_slice(dy.row(t));
+    }
+    // Block slices of W_I (columns) and W_O (rows), as in the forward.
+    let mut wi_g = Matrix::zeros(d, dg);
+    for r in 0..d {
+        wi_g.row_mut(r)
+            .copy_from_slice(&w_i.row(r)[gi * dg..(gi + 1) * dg]);
+    }
+    let wo_g = Matrix::from_vec(
+        dg,
+        d,
+        w_o.data[gi * dg * d..(gi + 1) * dg * d].to_vec(),
+    );
+    // Recompute the hidden activations (recompute-based backward: the
+    // forward keeps no per-block caches).
+    let h = xg.matmul(&wi_g).relu();
+    let mut hg = h.clone();
+    for (r, &t) in tokens.iter().enumerate() {
+        let gate = routing.gate[t][gi];
+        for v in hg.row_mut(r) {
+            *v *= gate;
+        }
+    }
+    // dW_O[g] = (h * gate)^T dY_g ;  d(h*gate) = dY_g W_O[g]^T.
+    let dwo_g = grad::matmul_dw(&hg, &dyg);
+    let mut dh = grad::matmul_dx(&dyg, &wo_g);
+    for (r, &t) in tokens.iter().enumerate() {
+        let gate = routing.gate[t][gi];
+        for v in dh.row_mut(r) {
+            *v *= gate;
+        }
+    }
+    let dpre = grad::relu_backward(&h, &dh);
+    // dW_I[g] = X_g^T dpre ;  dX_g = dpre W_I[g]^T.
+    let dwi_g = grad::matmul_dw(&xg, &dpre);
+    let dxg = grad::matmul_dx(&dpre, &wi_g);
+    Some((tokens, dxg, dwi_g, dwo_g))
+}
+
+/// Backward of [`routed_ffn`]: per-block weight gradients accumulated
+/// along the same [`Routing`] the forward used, plus the scattered input
+/// gradient.  Returns `(dx, dw_i, dw_o)`.
+pub fn routed_ffn_backward(
+    x: &Matrix,
+    w_i: &Matrix,
+    w_o: &Matrix,
+    routing: &Routing,
+    dy: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let nt = x.rows;
+    let d = x.cols;
+    assert_eq!(w_i.cols % routing.g, 0);
+    assert_eq!(dy.rows, nt, "dY/X row mismatch");
+    assert_eq!(dy.cols, d, "dY/X col mismatch");
+    let dg = w_i.cols / routing.g;
+    let mut dx = Matrix::zeros(nt, d);
+    let mut dwi = Matrix::zeros(w_i.rows, w_i.cols);
+    let mut dwo = Matrix::zeros(w_o.rows, w_o.cols);
+    for gi in 0..routing.g {
+        if let Some((tokens, dxg, dwi_g, dwo_g)) =
+            block_backward(gi, x, w_i, w_o, routing, dy)
+        {
+            scatter_block_grads(
+                &mut dx, &mut dwi, &mut dwo, gi, dg, &tokens, &dxg, &dwi_g, &dwo_g,
+            );
+        }
+    }
+    (dx, dwi, dwo)
+}
+
+/// Merge one block's backward outputs into the full-size gradient
+/// buffers (ascending-block call order keeps the token scatter-add
+/// deterministic; the W_I/W_O slices are disjoint per block).  Shared
+/// with the parallel reduce in `sparse::mha`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scatter_block_grads(
+    dx: &mut Matrix,
+    dwi: &mut Matrix,
+    dwo: &mut Matrix,
+    gi: usize,
+    dg: usize,
+    tokens: &[usize],
+    dxg: &Matrix,
+    dwi_g: &Matrix,
+    dwo_g: &Matrix,
+) {
+    for (r, &t) in tokens.iter().enumerate() {
+        for (o, &g) in dx.row_mut(t).iter_mut().zip(dxg.row(r)) {
+            *o += g;
+        }
+    }
+    let d = dwi.rows;
+    for r in 0..d {
+        dwi.row_mut(r)[gi * dg..(gi + 1) * dg].copy_from_slice(dwi_g.row(r));
+    }
+    for r in 0..dg {
+        dwo.row_mut(gi * dg + r).copy_from_slice(dwo_g.row(r));
+    }
 }
 
 /// Routed FFN via BSpMV (paper Alg. 4).
@@ -219,6 +347,58 @@ mod tests {
         let y = routed_ffn(&x, &wi, &wo, &routing);
         let want = x.matmul(&wi).relu().matmul(&wo);
         assert!(y.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn backward_with_all_blocks_active_matches_plain_ffn_backward() {
+        // Zero router scores + G' = G makes every gate 1.0, so the routed
+        // backward must agree with the dense relu-FFN backward assembled
+        // from the grad primitives.
+        let mut rng = Rng::new(17);
+        let (nt, d, dd, g) = (9, 5, 12, 4);
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, dd, 0.4, &mut rng);
+        let wo = Matrix::randn(dd, d, 0.4, &mut rng);
+        let dy = Matrix::randn(nt, d, 1.0, &mut rng);
+        let routing = route(&Matrix::zeros(nt, g), g);
+        let (dx, dwi, dwo) = routed_ffn_backward(&x, &wi, &wo, &routing, &dy);
+        // Dense reference.
+        let h = x.matmul(&wi).relu();
+        let dwo_ref = grad::matmul_dw(&h, &dy);
+        let dh = grad::matmul_dx(&dy, &wo);
+        let dpre = grad::relu_backward(&h, &dh);
+        let dwi_ref = grad::matmul_dw(&x, &dpre);
+        let dx_ref = grad::matmul_dx(&dpre, &wi);
+        assert!(dx.max_abs_diff(&dx_ref) < 1e-4, "{}", dx.max_abs_diff(&dx_ref));
+        assert!(dwi.max_abs_diff(&dwi_ref) < 1e-4, "{}", dwi.max_abs_diff(&dwi_ref));
+        assert!(dwo.max_abs_diff(&dwo_ref) < 1e-4, "{}", dwo.max_abs_diff(&dwo_ref));
+    }
+
+    #[test]
+    fn inactive_blocks_get_zero_weight_gradient() {
+        let mut rng = Rng::new(18);
+        let (nt, d, dd, g, ga) = (6, 4, 8, 4, 1);
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, dd, 0.4, &mut rng);
+        let wo = Matrix::randn(dd, d, 0.4, &mut rng);
+        let dy = Matrix::randn(nt, d, 1.0, &mut rng);
+        let routing = route(&Matrix::randn(nt, g, 1.0, &mut rng), ga);
+        let (_, dwi, dwo) = routed_ffn_backward(&x, &wi, &wo, &routing, &dy);
+        let dg = dd / g;
+        for gi in 0..g {
+            let active = (0..nt).any(|t| routing.mask[t][gi]);
+            if active {
+                continue;
+            }
+            for r in 0..d {
+                assert!(dwi.row(r)[gi * dg..(gi + 1) * dg]
+                    .iter()
+                    .all(|&v| v == 0.0));
+            }
+            for r in gi * dg..(gi + 1) * dg {
+                assert!(dwo.row(r).iter().all(|&v| v == 0.0));
+            }
+        }
     }
 
     #[test]

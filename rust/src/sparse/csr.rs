@@ -254,7 +254,7 @@ mod tests {
     }
 
     #[test]
-    fn memory_is_o_nl_not_n2(){
+    fn memory_is_o_nl_not_n2() {
         let n = 512;
         let l = 64;
         let idx = TopL::from_rows(

@@ -1,0 +1,265 @@
+//! Backward passes for the sparse substrate (the native training path).
+//!
+//! The forward pipelines in [`super::attention`] / [`super::bspmv`] treat
+//! the *structure* decisions — PQ quantization, bucket-sort top-L
+//! selection, router top-G' selection — as non-differentiable, exactly as
+//! the paper's CUDA kernels do: gradients flow only through the kept
+//! attention entries and the activated FFN blocks, while codebooks are
+//! maintained by the DKM-style k-means refresh instead of SGD.
+//!
+//! Everything here is the *sequential cross-validation reference*; the
+//! rayon-parallel twins live in [`super::mha`] and must reproduce these
+//! results bit-for-bit (same per-row / per-block operation order — only
+//! the distribution of rows/blocks across workers differs).
+
+use super::csr::Csr;
+use super::matrix::Matrix;
+
+/// `dX` for `Y = X @ W` given `dY`: `dX = dY @ W^T`.
+///
+/// `dy` is `[n, p]`, `w` is `[m, p]`-transposed-view (i.e. the forward
+/// weight `[m, p]`), result is `[n, m]`.
+pub fn matmul_dx(dy: &Matrix, w: &Matrix) -> Matrix {
+    assert_eq!(dy.cols, w.cols, "matmul_dx: dY/W inner dim mismatch");
+    let mut out = Matrix::zeros(dy.rows, w.rows);
+    for i in 0..dy.rows {
+        let dy_row = dy.row(i);
+        let out_row = out.row_mut(i);
+        for (k, o) in out_row.iter_mut().enumerate() {
+            *o = dy_row.iter().zip(w.row(k)).map(|(a, b)| a * b).sum();
+        }
+    }
+    out
+}
+
+/// `dW` for `Y = X @ W` given `dY`: `dW = X^T @ dY`.
+///
+/// `x` is `[n, m]`, `dy` is `[n, p]`, result is `[m, p]`.  Accumulation
+/// over the `n` rows happens in ascending row order for every output
+/// element, so the result is deterministic.
+pub fn matmul_dw(x: &Matrix, dy: &Matrix) -> Matrix {
+    assert_eq!(x.rows, dy.rows, "matmul_dw: X/dY row mismatch");
+    let mut out = Matrix::zeros(x.cols, dy.cols);
+    for i in 0..x.rows {
+        let x_row = x.row(i);
+        let dy_row = dy.row(i);
+        for (k, &a) in x_row.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let out_row = out.row_mut(k);
+            for (o, &b) in out_row.iter_mut().zip(dy_row) {
+                *o += a * b;
+            }
+        }
+    }
+    out
+}
+
+/// Backward of both directions of `Y = X @ W` at once.
+pub fn linear_backward(x: &Matrix, w: &Matrix, dy: &Matrix) -> (Matrix, Matrix) {
+    (matmul_dx(dy, w), matmul_dw(x, dy))
+}
+
+/// ReLU backward given the forward *output* `h = relu(pre)`:
+/// `dpre = dy ⊙ [h > 0]` (the subgradient at the kink is 0, matching
+/// `relu`'s `max(0, ·)`).
+pub fn relu_backward(h: &Matrix, dy: &Matrix) -> Matrix {
+    assert_eq!(h.rows, dy.rows, "relu_backward shape mismatch");
+    assert_eq!(h.cols, dy.cols, "relu_backward shape mismatch");
+    let data = h
+        .data
+        .iter()
+        .zip(&dy.data)
+        .map(|(&hv, &g)| if hv > 0.0 { g } else { 0.0 })
+        .collect();
+    Matrix { rows: h.rows, cols: h.cols, data }
+}
+
+/// Backward of [`super::attention::sparse_attention_masked`] through the
+/// kept entries only.
+///
+/// `attn` is the post-softmax CSR the forward returned (probabilities in
+/// `values`, the flat top-L structure in `indices`).  Gradients w.r.t.
+/// Q/K/V flow exclusively through the kept `(query, key)` pairs; causal
+/// padding slots carry probability 0 after the forward re-mask and so
+/// contribute nothing here.  Returns `(dq, dk, dv)`.
+pub fn sparse_attention_backward(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    attn: &Csr,
+    dy: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    assert_eq!(attn.rows, q.rows, "attn/Q row mismatch");
+    assert_eq!(attn.cols, k.rows, "attn/K col mismatch");
+    assert_eq!(dy.rows, q.rows, "dY/Q row mismatch");
+    assert_eq!(dy.cols, v.cols, "dY/V col mismatch");
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut dq = Matrix::zeros(q.rows, q.cols);
+    let mut dk = Matrix::zeros(k.rows, k.cols);
+    let mut dv = Matrix::zeros(v.rows, v.cols);
+    let mut dp = Vec::new();
+    for r in 0..attn.rows {
+        let range = attn.row_range(r);
+        if range.is_empty() {
+            continue;
+        }
+        let dy_row = dy.row(r);
+        // dP_rj = dy_r . v_j, plus the softmax-backward row reduction
+        // dot = sum_j P_rj dP_rj.
+        dp.clear();
+        let mut dot = 0.0f32;
+        for p in range.clone() {
+            let j = attn.indices[p] as usize;
+            let g: f32 = dy_row.iter().zip(v.row(j)).map(|(a, b)| a * b).sum();
+            dot += attn.values[p] * g;
+            dp.push(g);
+        }
+        for (slot, p) in range.enumerate() {
+            let j = attn.indices[p] as usize;
+            let prob = attn.values[p];
+            if prob != 0.0 {
+                // dV_j += P_rj dy_r
+                for (o, &g) in dv.row_mut(j).iter_mut().zip(dy_row) {
+                    *o += prob * g;
+                }
+            }
+            // Softmax backward: dS_rj = P_rj (dP_rj - dot); the logits
+            // were S = scale * q_r . k_j.
+            let ds = prob * (dp[slot] - dot);
+            if ds == 0.0 {
+                continue;
+            }
+            let c = scale * ds;
+            for (o, &x) in dq.row_mut(r).iter_mut().zip(k.row(j)) {
+                *o += c * x;
+            }
+            for (o, &x) in dk.row_mut(j).iter_mut().zip(q.row(r)) {
+                *o += c * x;
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// Backward of [`super::attention::dense_attention`] (the full/LoRA
+/// attention path of the native model).  Recomputes the probability
+/// matrix in the forward operation order, then applies the standard
+/// softmax-attention gradients.  Returns `(dq, dk, dv)`.
+pub fn dense_attention_backward(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    causal: bool,
+    dy: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    assert_eq!(q.cols, k.cols, "Q/K dim mismatch");
+    assert_eq!(k.rows, v.rows, "K/V row mismatch");
+    assert_eq!(dy.rows, q.rows, "dY/Q row mismatch");
+    assert_eq!(dy.cols, v.cols, "dY/V col mismatch");
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul(&k.transpose()).map(|x| x * scale);
+    if causal {
+        for i in 0..logits.rows {
+            for j in (i + 1)..logits.cols {
+                *logits.at_mut(i, j) = -1e30;
+            }
+        }
+    }
+    let p = logits.softmax_rows();
+    // dV = P^T dY;  dP = dY V^T.
+    let dv = matmul_dw(&p, dy);
+    let dp = matmul_dx(dy, v);
+    // Softmax backward per row: dS = P ⊙ (dP - sum_j P dP).
+    let mut ds = Matrix::zeros(p.rows, p.cols);
+    for r in 0..p.rows {
+        let p_row = p.row(r);
+        let dp_row = dp.row(r);
+        let dot: f32 = p_row.iter().zip(dp_row).map(|(a, b)| a * b).sum();
+        for (o, (&pv, &g)) in ds.row_mut(r).iter_mut().zip(p_row.iter().zip(dp_row)) {
+            *o = pv * (g - dot);
+        }
+    }
+    // dQ = scale * dS K;  dK = scale * dS^T Q.
+    let dq = ds.matmul(k).map(|x| x * scale);
+    let dk = matmul_dw(&ds, q).map(|x| x * scale);
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::attention;
+    use crate::sparse::codes::TopL;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_backward_shapes_and_values() {
+        // y = x @ w with scalar-friendly sizes; check against hand math.
+        let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Matrix::from_vec(2, 1, vec![5.0, 6.0]);
+        let dy = Matrix::from_vec(2, 1, vec![1.0, 1.0]);
+        let (dx, dw) = linear_backward(&x, &w, &dy);
+        // dx = dy w^T = [[5,6],[5,6]]
+        assert_eq!(dx.data, vec![5.0, 6.0, 5.0, 6.0]);
+        // dw = x^T dy = [[4],[6]]
+        assert_eq!(dw.data, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn relu_backward_masks_inactive() {
+        let h = Matrix::from_vec(1, 4, vec![0.0, 1.5, 0.0, 2.0]);
+        let dy = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(relu_backward(&h, &dy).data, vec![0.0, 2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn sparse_backward_with_full_mask_matches_dense_backward() {
+        // When every key is kept the sparse backward must agree with the
+        // dense-attention backward (same function, different bookkeeping).
+        let mut rng = Rng::new(11);
+        let (n, d) = (10, 6);
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let dy = Matrix::randn(n, d, 1.0, &mut rng);
+        let full: Vec<Vec<u32>> = (0..n).map(|_| (0..n as u32).collect()).collect();
+        let idx = TopL::from_rows(&full);
+        let (_, attn) = attention::sparse_attention_masked(&q, &k, &v, &idx, false);
+        let (dq_s, dk_s, dv_s) = sparse_attention_backward(&q, &k, &v, &attn, &dy);
+        let (dq_d, dk_d, dv_d) = dense_attention_backward(&q, &k, &v, false, &dy);
+        assert!(dq_s.max_abs_diff(&dq_d) < 1e-4, "{}", dq_s.max_abs_diff(&dq_d));
+        assert!(dk_s.max_abs_diff(&dk_d) < 1e-4, "{}", dk_s.max_abs_diff(&dk_d));
+        assert!(dv_s.max_abs_diff(&dv_d) < 1e-4, "{}", dv_s.max_abs_diff(&dv_d));
+    }
+
+    #[test]
+    fn causal_padding_slots_get_no_gradient() {
+        // Row 0 of a causal mask keeps only key 0; the padding slots point
+        // at future keys whose probability is 0 after the re-mask, so dK
+        // and dV rows for those keys must stay 0 (from row 0's view).
+        let mut rng = Rng::new(12);
+        let (n, d) = (5, 4);
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        // Only query row 0 receives upstream gradient.
+        let mut dy = Matrix::zeros(n, d);
+        for c in 0..d {
+            *dy.at_mut(0, c) = 1.0;
+        }
+        let idx = TopL::from_rows(&(0..n).map(|_| vec![0u32, 1, 2]).collect::<Vec<_>>());
+        let (_, attn) = attention::sparse_attention_masked(&q, &k, &v, &idx, true);
+        let (dq, dk, dv) = sparse_attention_backward(&q, &k, &v, &attn, &dy);
+        // Future keys 1 and 2 are masked for query 0: no gradient.
+        for j in 1..3 {
+            assert!(dk.row(j).iter().all(|&x| x == 0.0), "dk row {j}");
+            assert!(dv.row(j).iter().all(|&x| x == 0.0), "dv row {j}");
+        }
+        // Query 0 attends only to key 0 with probability 1: softmax
+        // backward collapses to 0 for dq.
+        assert!(dq.row(0).iter().all(|&x| x.abs() < 1e-6));
+        assert!(dv.row(0).iter().zip(v.row(0)).all(|(&g, _)| g == 1.0));
+    }
+}

@@ -1,6 +1,18 @@
 //! Dense row-major f32 matrix — the substrate's working representation.
+//!
+//! `matmul` parallelizes over output rows once the product is large
+//! enough to amortize the fork: every output row is produced by the same
+//! per-row operation order as the sequential loop, so results are
+//! bit-identical at any thread count (the property all substrate
+//! parallelism maintains).
+
+use rayon::prelude::*;
 
 use crate::util::rng::Rng;
+
+/// Below this many multiply-adds `matmul` stays sequential (forking the
+/// rayon pool costs more than the product itself).
+const PAR_MATMUL_FLOPS: usize = 1 << 16;
 
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,25 +58,64 @@ impl Matrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// `self @ other` — naive blocked GEMM (sufficient for substrate-scale
-    /// baselines; the heavy GEMMs run inside XLA).
+    /// `self @ other` — naive GEMM, row-parallel above
+    /// [`PAR_MATMUL_FLOPS`].  Per-row operation order is identical on
+    /// both paths, so the output is the same bits either way.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            let out_row = out.row_mut(i);
-            for (k, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = other.row(k);
-                for (j, &b) in b_row.iter().enumerate() {
-                    out_row[j] += a * b;
-                }
+        if out.cols == 0 {
+            return out;
+        }
+        if self.rows * self.cols * other.cols >= PAR_MATMUL_FLOPS {
+            out.data
+                .par_chunks_mut(other.cols)
+                .enumerate()
+                .for_each(|(i, out_row)| {
+                    Self::matmul_row(self.row(i), other, out_row);
+                });
+        } else {
+            for i in 0..self.rows {
+                Self::matmul_row(self.row(i), other, out.row_mut(i));
             }
         }
         out
+    }
+
+    /// One output row of `matmul`: `out_row += a_row @ other`.
+    #[inline]
+    fn matmul_row(a_row: &[f32], other: &Matrix, out_row: &mut [f32]) {
+        for (k, &a) in a_row.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let b_row = other.row(k);
+            for (o, &b) in out_row.iter_mut().zip(b_row) {
+                *o += a * b;
+            }
+        }
+    }
+
+    /// Elementwise sum (residual connections in the native model).
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "add shape mismatch");
+        assert_eq!(self.cols, other.cols, "add shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise in-place accumulate.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.rows, other.rows, "add_assign shape mismatch");
+        assert_eq!(self.cols, other.cols, "add_assign shape mismatch");
+        for (o, &b) in self.data.iter_mut().zip(&other.data) {
+            *o += b;
+        }
     }
 
     pub fn transpose(&self) -> Matrix {
@@ -171,5 +222,33 @@ mod tests {
     fn relu_clamps() {
         let a = Matrix::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
         assert_eq!(a.relu().data, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn add_and_add_assign() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![0.5, -2.0, 1.0, 0.0]);
+        let c = a.add(&b);
+        assert_eq!(c.data, vec![1.5, 0.0, 4.0, 4.0]);
+        let mut d = a.clone();
+        d.add_assign(&b);
+        assert_eq!(d, c);
+    }
+
+    #[test]
+    fn parallel_matmul_matches_sequential_bits() {
+        // Above the parallel threshold the row-parallel path must produce
+        // the same bits as a 1-thread pool run of the same call.
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(64, 48, 1.0, &mut rng);
+        let b = Matrix::randn(48, 64, 1.0, &mut rng);
+        assert!(64 * 48 * 64 >= super::PAR_MATMUL_FLOPS);
+        let par = a.matmul(&b);
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(1)
+            .build()
+            .expect("pool");
+        let seq = pool.install(|| a.matmul(&b));
+        assert_eq!(par, seq);
     }
 }

@@ -1,18 +1,23 @@
-//! Batched multi-head execution layer over the sparse substrate.
+//! Batched multi-head execution layer over the sparse substrate —
+//! forward *and* backward.
 //!
-//! The single-head pipelines in [`super::attention`] and
-//! [`super::bspmv`] stay the *sequential cross-validation reference*;
+//! The single-head pipelines in [`super::attention`], [`super::bspmv`]
+//! and [`super::grad`] stay the *sequential cross-validation reference*;
 //! this module runs H heads with rayon parallelism over
-//! (head × query-chunk) and fans the routed FFN out over its weight
-//! blocks.  Both parallel paths reproduce the sequential results
-//! bit-for-bit: every per-row floating-point reduction happens in the
-//! same operation order as the reference — only *across* rows/blocks is
-//! the work distributed — so the property tests can assert equality at
-//! tight tolerance without chasing reassociation noise.
+//! (head × query-chunk), fans the routed FFN out over its weight blocks,
+//! and does the same for the backward passes
+//! ([`MultiHeadSparseAttention::backward`],
+//! [`routed_ffn_backward_par`]).  All parallel paths reproduce the
+//! sequential results bit-for-bit: every per-row floating-point
+//! reduction happens in the same operation order as the reference — only
+//! *across* rows/blocks/heads is the work distributed — so the property
+//! tests can assert exact equality without chasing reassociation noise.
 
 use rayon::prelude::*;
 
 use super::bspmv::{self, Routing};
+use super::csr::Csr;
+use super::grad;
 use super::matrix::Matrix;
 use super::pq::{self, Codebooks};
 use super::topl;
@@ -102,6 +107,65 @@ impl MultiHeadSparseAttention {
             .into_par_iter()
             .map(|h| self.forward_head(&q[h], &k[h], &v[h], &self.codebooks[h]))
             .collect()
+    }
+
+    /// Forward that also returns each head's post-softmax attention CSR
+    /// — the cache [`Self::backward`] consumes.  Rayon-parallel over
+    /// heads; within a head this is the sequential single-head pipeline,
+    /// so outputs are bit-identical to [`Self::forward`] /
+    /// [`Self::forward_seq`].
+    pub fn forward_cached(
+        &self,
+        q: &[Matrix],
+        k: &[Matrix],
+        v: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Csr>) {
+        self.check(q, k, v);
+        let per_head: Vec<(Matrix, Csr)> = (0..self.heads())
+            .into_par_iter()
+            .map(|h| {
+                let cb = &self.codebooks[h];
+                let cq = pq::quantize(&q[h].data, cb);
+                let ck = pq::quantize(&k[h].data, cb);
+                let idx = topl::select(&cq, &ck, self.l, self.causal);
+                super::attention::sparse_attention_masked(
+                    &q[h], &k[h], &v[h], &idx, self.causal,
+                )
+            })
+            .collect();
+        per_head.into_iter().unzip()
+    }
+
+    /// Multi-head backward through the kept entries: rayon over heads,
+    /// each head running the sequential reference kernel
+    /// [`grad::sparse_attention_backward`] — so the result is
+    /// bit-identical to a head-by-head sequential sweep.  Returns
+    /// per-head `(dq, dk, dv)`.
+    #[allow(clippy::type_complexity)]
+    pub fn backward(
+        &self,
+        q: &[Matrix],
+        k: &[Matrix],
+        v: &[Matrix],
+        attn: &[Csr],
+        dy: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Matrix>, Vec<Matrix>) {
+        let hh = self.heads();
+        assert_eq!(attn.len(), hh, "attn head count");
+        assert_eq!(dy.len(), hh, "dy head count");
+        let per_head: Vec<(Matrix, Matrix, Matrix)> = (0..hh)
+            .into_par_iter()
+            .map(|h| grad::sparse_attention_backward(&q[h], &k[h], &v[h], &attn[h], &dy[h]))
+            .collect();
+        let mut dq = Vec::with_capacity(hh);
+        let mut dk = Vec::with_capacity(hh);
+        let mut dv = Vec::with_capacity(hh);
+        for (a, b, c) in per_head {
+            dq.push(a);
+            dk.push(b);
+            dv.push(c);
+        }
+        (dq, dk, dv)
     }
 
     /// One head of the parallel path.  Per chunk, each query row runs the
@@ -215,6 +279,43 @@ pub fn routed_ffn_par(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing)
     y
 }
 
+/// Parallel routed-FFN backward: fan out over the G weight blocks — each
+/// task runs the shared [`bspmv::block_backward`] kernel — then reduce in
+/// ascending block order, exactly mirroring the forward's
+/// [`routed_ffn_par`] structure.  Bit-identical to
+/// [`bspmv::routed_ffn_backward`] by construction: the per-block math is
+/// the same function, the token scatter-add happens in block order, and
+/// each block owns disjoint slices of dW_I / dW_O.
+pub fn routed_ffn_backward_par(
+    x: &Matrix,
+    w_i: &Matrix,
+    w_o: &Matrix,
+    routing: &Routing,
+    dy: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let nt = x.rows;
+    let d = x.cols;
+    assert_eq!(w_i.cols % routing.g, 0);
+    assert_eq!(dy.rows, nt, "dY/X row mismatch");
+    assert_eq!(dy.cols, d, "dY/X col mismatch");
+    let dg = w_i.cols / routing.g;
+    let partials: Vec<Option<(Vec<usize>, Matrix, Matrix, Matrix)>> = (0..routing.g)
+        .into_par_iter()
+        .map(|gi| bspmv::block_backward(gi, x, w_i, w_o, routing, dy))
+        .collect();
+    let mut dx = Matrix::zeros(nt, d);
+    let mut dwi = Matrix::zeros(w_i.rows, w_i.cols);
+    let mut dwo = Matrix::zeros(w_o.rows, w_o.cols);
+    for (gi, partial) in partials.into_iter().enumerate() {
+        if let Some((tokens, dxg, dwi_g, dwo_g)) = partial {
+            bspmv::scatter_block_grads(
+                &mut dx, &mut dwi, &mut dwo, gi, dg, &tokens, &dxg, &dwi_g, &dwo_g,
+            );
+        }
+    }
+    (dx, dwi, dwo)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +408,61 @@ mod tests {
         let par = routed_ffn_par(&x, &wi, &wo, &routing);
         let seq = bspmv::routed_ffn(&x, &wi, &wo, &routing);
         assert!(par.max_abs_diff(&seq) < 1e-7, "{}", par.max_abs_diff(&seq));
+    }
+
+    #[test]
+    fn forward_cached_matches_forward_and_seq_reference() {
+        let (cbs, q, k, v) = head_workload(3, 23, 2, 4, 7);
+        let mha = MultiHeadSparseAttention::new(cbs, 5, true);
+        let plain = mha.forward(&q, &k, &v);
+        let seq = mha.forward_seq(&q, &k, &v);
+        let (cached, attn) = mha.forward_cached(&q, &k, &v);
+        assert_eq!(attn.len(), 3);
+        for h in 0..3 {
+            // Cached = the sequential CSR pipeline, bit for bit.
+            assert_eq!(seq[h], cached[h], "head {h} vs seq");
+            assert!(plain[h].max_abs_diff(&cached[h]) < 1e-7, "head {h} vs par");
+            assert_eq!(attn[h].rows, 23);
+        }
+    }
+
+    #[test]
+    fn parallel_backward_matches_sequential_reference() {
+        let (cbs, q, k, v) = head_workload(3, 19, 2, 4, 8);
+        let mut rng = Rng::new(80);
+        let mha = MultiHeadSparseAttention::new(cbs, 6, true);
+        let (ys, attn) = mha.forward_cached(&q, &k, &v);
+        let dy: Vec<Matrix> = ys
+            .iter()
+            .map(|y| Matrix::randn(y.rows, y.cols, 1.0, &mut rng))
+            .collect();
+        let (dq, dk, dv) = mha.backward(&q, &k, &v, &attn, &dy);
+        for h in 0..3 {
+            let (eq, ek, ev) = crate::sparse::grad::sparse_attention_backward(
+                &q[h], &k[h], &v[h], &attn[h], &dy[h],
+            );
+            assert_eq!(dq[h], eq, "head {h} dq");
+            assert_eq!(dk[h], ek, "head {h} dk");
+            assert_eq!(dv[h], ev, "head {h} dv");
+        }
+    }
+
+    #[test]
+    fn routed_ffn_backward_par_matches_sequential() {
+        let mut rng = Rng::new(9);
+        let (nt, d, gg, dg, ga) = (27, 5, 8, 3, 3);
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, gg * dg, 0.3, &mut rng);
+        let wo = Matrix::randn(gg * dg, d, 0.3, &mut rng);
+        let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+        let dy = Matrix::randn(nt, d, 1.0, &mut rng);
+        let routing = bspmv::route(&scores, ga);
+        let (dx_p, dwi_p, dwo_p) = routed_ffn_backward_par(&x, &wi, &wo, &routing, &dy);
+        let (dx_s, dwi_s, dwo_s) =
+            bspmv::routed_ffn_backward(&x, &wi, &wo, &routing, &dy);
+        assert_eq!(dx_p, dx_s);
+        assert_eq!(dwi_p, dwi_s);
+        assert_eq!(dwo_p, dwo_s);
     }
 
     #[test]

@@ -17,12 +17,20 @@
 //! layers a rayon-parallel multi-head path (head × query-chunk fan-out,
 //! block-parallel routed FFN) over the sequential single-head pipelines,
 //! which remain the cross-validation reference.
+//!
+//! Since the native-backend refactor the substrate is trainable:
+//! [`grad`] implements the backward passes (dense projections, sparse
+//! attention through the fixed top-L mask, routed FFN along the same
+//! routing as the forward), with parallel twins in [`mha`].  Structure
+//! decisions — PQ quantization, top-L and top-G' selection — stay
+//! non-differentiable, as in the paper's kernels.
 
 pub mod attention;
 pub mod bspmv;
 pub mod bsr;
 pub mod codes;
 pub mod csr;
+pub mod grad;
 pub mod matrix;
 pub mod mha;
 pub mod naive_pq;

@@ -1,0 +1,142 @@
+//! Coordinator integration on the native backend: end-to-end fine-tuning
+//! loops with no PJRT toolchain and no artifacts — the default build's
+//! `spt train` path.  Includes the checkpoint save → restore → resume
+//! round trip, asserting the resumed loss curve is *bit-identical* to an
+//! uninterrupted run.
+
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::{checkpoint, trial, Backend, NativeBackend, Trainer, TrainerOptions};
+use spt::coordinator::trial::TrialManager;
+
+fn rc(mode: Mode, steps: usize) -> RunConfig {
+    RunConfig {
+        model: "spt-nano".into(),
+        mode,
+        batch: 2,
+        seq: 32,
+        steps,
+        eval_every: 0,
+        codebook_refresh_every: 3,
+        lr: 5e-3,
+        seed: 11,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn native_training_reduces_loss_in_all_modes() {
+    let backend = NativeBackend::new();
+    for mode in Mode::ALL {
+        let mut cfg = rc(mode, 30);
+        cfg.eval_every = 15;
+        let mut trainer = Trainer::new(&backend, cfg, TrainerOptions::default());
+        let report = trainer.train().expect("train");
+        assert_eq!(report.steps, 30, "{mode:?}");
+        assert!(
+            report.losses.iter().all(|l| l.is_finite()),
+            "{mode:?}: non-finite loss"
+        );
+        let first: f32 = report.losses[..5].iter().sum::<f32>() / 5.0;
+        let last: f32 = report.losses[25..].iter().sum::<f32>() / 5.0;
+        assert!(
+            last < first,
+            "{mode:?}: loss did not decrease ({first:.4} -> {last:.4})"
+        );
+        let e = report.evals.last().expect("eval point");
+        assert!(e.ppl.is_finite() && e.ppl > 1.0, "{mode:?}: ppl {}", e.ppl);
+        if mode == Mode::Spt {
+            assert!(report.refreshes > 0, "codebook refresh never ran");
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
+    let backend = NativeBackend::new();
+    // Uninterrupted 8-step reference (spt: the mode with the most moving
+    // parts — sparse attention, routing, codebook refreshes).
+    let mut full = Trainer::new(&backend, rc(Mode::Spt, 8), TrainerOptions::default());
+    let full_report = full.train().expect("uninterrupted run");
+    assert_eq!(full_report.losses.len(), 8);
+
+    // Interrupted run: halt after 4 optimizer steps, checkpoint to disk.
+    let mut first = Trainer::new(
+        &backend,
+        rc(Mode::Spt, 8),
+        TrainerOptions { stop_after: Some(4), ..Default::default() },
+    );
+    let r1 = first.train().expect("first half");
+    assert_eq!(r1.losses.len(), 4);
+    let dir = std::env::temp_dir().join("spt_native_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.ckpt");
+    checkpoint::save(first.last_state.as_ref().expect("state"), &path).expect("save");
+
+    // Restore and run to completion.
+    let restored = checkpoint::load(&path).expect("load");
+    assert_eq!(restored.step.scalar().unwrap(), 4.0);
+    let mut second = Trainer::new(&backend, rc(Mode::Spt, 8), TrainerOptions::default());
+    let r2 = second.train_from(restored).expect("resumed half");
+    assert_eq!(r2.losses.len(), 4);
+
+    // The stitched loss curve must equal the uninterrupted one bitwise.
+    for (i, (stitched, reference)) in r1
+        .losses
+        .iter()
+        .chain(r2.losses.iter())
+        .zip(&full_report.losses)
+        .enumerate()
+    {
+        assert_eq!(
+            stitched.to_bits(),
+            reference.to_bits(),
+            "loss diverged at step {} ({stitched} vs {reference})",
+            i + 1
+        );
+    }
+    // And so must the final parameter/optimizer state.
+    let s_full = full.last_state.as_ref().expect("full state");
+    let s_res = second.last_state.as_ref().expect("resumed state");
+    assert_eq!(s_full.params, s_res.params);
+    assert_eq!(s_full.m, s_res.m);
+    assert_eq!(s_full.v, s_res.v);
+    assert_eq!(s_full.step, s_res.step);
+}
+
+#[test]
+fn qa_training_runs_and_scores() {
+    let backend = NativeBackend::new();
+    let mut trainer = Trainer::new(&backend, rc(Mode::Lora, 6), TrainerOptions::default());
+    let report = trainer.train_qa().expect("train-qa");
+    assert_eq!(report.steps, 6);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let acc = report.qa_accuracy.expect("accuracy");
+    assert!((0.0..=1.0).contains(&acc), "accuracy {acc}");
+}
+
+#[test]
+fn trial_manager_compares_all_modes_natively() {
+    let backend = NativeBackend::new();
+    let tm = TrialManager::new(&backend, rc(Mode::Spt, 2), 2);
+    let (results, table) = tm.compare_modes().expect("trials");
+    assert_eq!(results.len(), Mode::ALL.len());
+    let rendered = table.render();
+    assert!(rendered.contains("native"), "table should name the backend");
+    let best = trial::recommend(&results, 0.10).expect("recommendation");
+    assert!(results.iter().any(|r| r.label == best.label));
+}
+
+#[test]
+fn backend_reports_workload_and_modes() {
+    let backend = NativeBackend::new();
+    let cfg = rc(Mode::Full, 1);
+    assert_eq!(backend.name(), "native");
+    assert!(backend.has_mode(&cfg, Mode::Spt));
+    let (batch, seq) = backend.workload(&cfg).unwrap();
+    assert_eq!((batch, seq), (2, 32));
+    // seq clamps to the model's max_seq.
+    let mut big = cfg.clone();
+    big.seq = 10_000;
+    assert_eq!(backend.workload(&big).unwrap().1, 64); // spt-nano max_seq
+    assert_eq!(backend.vocab(&cfg).unwrap(), 512);
+}

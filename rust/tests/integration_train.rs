@@ -3,7 +3,7 @@
 #![cfg(feature = "xla")]
 
 use spt::config::{Mode, RunConfig};
-use spt::coordinator::{checkpoint, TrainState, Trainer, TrainerOptions};
+use spt::coordinator::{checkpoint, PjrtBackend, TrainState, Trainer, TrainerOptions};
 use spt::runtime::{Engine, HostTensor};
 
 fn engine() -> Option<Engine> {
@@ -30,7 +30,8 @@ fn rc(mode: Mode, steps: usize) -> RunConfig {
 #[test]
 fn spt_training_reduces_loss() {
     let Some(engine) = engine() else { return };
-    let mut trainer = Trainer::new(&engine, rc(Mode::Spt, 14), TrainerOptions::default());
+    let backend = PjrtBackend::new(&engine);
+    let mut trainer = Trainer::new(&backend, rc(Mode::Spt, 14), TrainerOptions::default());
     let report = trainer.train().expect("train");
     assert_eq!(report.steps, 14);
     assert!(report.losses.iter().all(|l| l.is_finite()));
@@ -45,12 +46,13 @@ fn spt_training_reduces_loss() {
 #[test]
 fn all_modes_train_and_chunked_path_agrees() {
     let Some(engine) = engine() else { return };
+    let backend = PjrtBackend::new(&engine);
     for mode in Mode::ALL {
         let name = format!("train_step_spt-tiny_{}", mode.as_str());
         if engine.manifest().get(&name).is_err() {
             continue;
         }
-        let mut t = Trainer::new(&engine, rc(mode, 4), TrainerOptions::default());
+        let mut t = Trainer::new(&backend, rc(mode, 4), TrainerOptions::default());
         let r = t.train().expect("train");
         assert!(r.losses.iter().all(|l| l.is_finite()), "{mode:?}");
     }
@@ -60,10 +62,10 @@ fn all_modes_train_and_chunked_path_agrees() {
         let mut cfg = rc(Mode::Lora, 8);
         cfg.eval_every = 0;
         cfg.codebook_refresh_every = 0;
-        let mut a = Trainer::new(&engine, cfg.clone(), TrainerOptions::default());
+        let mut a = Trainer::new(&backend, cfg.clone(), TrainerOptions::default());
         let ra = a.train().expect("per-step");
         let mut b = Trainer::new(
-            &engine,
+            &backend,
             cfg,
             TrainerOptions { chunked: true, ..Default::default() },
         );
@@ -78,9 +80,10 @@ fn all_modes_train_and_chunked_path_agrees() {
 #[test]
 fn qa_training_beats_chance() {
     let Some(engine) = engine() else { return };
+    let backend = PjrtBackend::new(&engine);
     let mut cfg = rc(Mode::Lora, 40);
     cfg.eval_every = 0;
-    let mut trainer = Trainer::new(&engine, cfg, TrainerOptions::default());
+    let mut trainer = Trainer::new(&backend, cfg, TrainerOptions::default());
     let report = trainer.train_qa().expect("train-qa");
     let acc = report.qa_accuracy.expect("accuracy");
     // 4 choices -> chance 25%; after 60 steps on the rule-based task the

@@ -1,0 +1,319 @@
+//! Finite-difference gradient checks for the native backward passes.
+//!
+//! Each property builds a scalar loss `f = sum(output ⊙ R)` for a fixed
+//! random weighting `R`, computes analytic gradients via the backward
+//! kernels in `spt::sparse::grad` / `bspmv`, and compares them against
+//! central differences on randomly chosen coordinates.
+//!
+//! The structure decisions are held *fixed* across perturbations, the
+//! same way training treats them: the top-L selection is computed once
+//! and `sparse_attention_masked` differentiates through the kept entries
+//! only, and the FFN routing is computed once from unperturbed scores.
+//! For the routed FFN, coordinates whose perturbation flips a ReLU
+//! pre-activation sign are skipped (the loss is piecewise linear; a
+//! crossed kink makes the central difference measure the chord, not
+//! either one-sided derivative).
+
+use spt::sparse::attention;
+use spt::sparse::bspmv::{self, Routing};
+use spt::sparse::codes::{Codes, TopL};
+use spt::sparse::grad;
+use spt::sparse::topl;
+use spt::sparse::Matrix;
+use spt::util::proptest::{check, prop_assert, Gen, PropResult};
+
+const EPS: f32 = 1e-2;
+
+/// |fd - an| within `abs + rel * max(|fd|, |an|)`.
+fn close(fd: f32, an: f32, abs: f32, rel: f32) -> bool {
+    (fd - an).abs() <= abs + rel * fd.abs().max(an.abs())
+}
+
+fn weighted_sum(y: &Matrix, r: &Matrix) -> f32 {
+    y.data.iter().zip(&r.data).map(|(a, b)| a * b).sum()
+}
+
+fn random_codes(g: &mut Gen, n: usize, m: usize, e: usize) -> Codes {
+    let mut c = Codes::zeros(n, m);
+    for x in c.data.iter_mut() {
+        *x = g.usize_in(0, e - 1) as u8;
+    }
+    c
+}
+
+/// Pick `count` distinct-ish coordinates of an `rows x cols` matrix.
+fn sample_coords(g: &mut Gen, rows: usize, cols: usize, count: usize) -> Vec<(usize, usize)> {
+    (0..count)
+        .map(|_| (g.usize_in(0, rows - 1), g.usize_in(0, cols - 1)))
+        .collect()
+}
+
+// ---------------------------------------------------------------- attention
+
+#[test]
+fn sparse_attention_gradients_match_finite_differences() {
+    check(10, |g| {
+        let n = g.usize_in(3, 9);
+        let m = g.usize_in(1, 3);
+        let dsub = g.usize_in(1, 3);
+        let d = m * dsub;
+        let l = g.usize_in(1, n);
+        let causal = g.bool();
+        let mut rng = g.rng().fork();
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let r = Matrix::randn(n, d, 1.0, &mut rng);
+        // Fixed top-L structure from the real selection pipeline.
+        let cq = random_codes(g, n, m, 4);
+        let ck = random_codes(g, n, m, 4);
+        let idx = topl::select(&cq, &ck, l, causal);
+
+        let (_, attn) = attention::sparse_attention_masked(&q, &k, &v, &idx, causal);
+        let (dq, dk, dv) = grad::sparse_attention_backward(&q, &k, &v, &attn, &r);
+
+        let loss = |q_: &Matrix, k_: &Matrix, v_: &Matrix| -> f32 {
+            let (y, _) = attention::sparse_attention_masked(q_, k_, v_, &idx, causal);
+            weighted_sum(&y, &r)
+        };
+        for (ri, ci) in sample_coords(g, n, d, 5) {
+            // dQ
+            let mut qp = q.clone();
+            *qp.at_mut(ri, ci) = q.at(ri, ci) + EPS;
+            let mut qm = q.clone();
+            *qm.at_mut(ri, ci) = q.at(ri, ci) - EPS;
+            let fd = (loss(&qp, &k, &v) - loss(&qm, &k, &v)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dq.at(ri, ci), 5e-3, 5e-2),
+                format!("dq[{ri},{ci}]: fd {fd} vs an {}", dq.at(ri, ci)),
+            )?;
+            // dK
+            let mut kp = k.clone();
+            *kp.at_mut(ri, ci) = k.at(ri, ci) + EPS;
+            let mut km = k.clone();
+            *km.at_mut(ri, ci) = k.at(ri, ci) - EPS;
+            let fd = (loss(&q, &kp, &v) - loss(&q, &km, &v)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dk.at(ri, ci), 5e-3, 5e-2),
+                format!("dk[{ri},{ci}]: fd {fd} vs an {}", dk.at(ri, ci)),
+            )?;
+            // dV
+            let mut vp = v.clone();
+            *vp.at_mut(ri, ci) = v.at(ri, ci) + EPS;
+            let mut vm = v.clone();
+            *vm.at_mut(ri, ci) = v.at(ri, ci) - EPS;
+            let fd = (loss(&q, &k, &vp) - loss(&q, &k, &vm)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dv.at(ri, ci), 5e-3, 5e-2),
+                format!("dv[{ri},{ci}]: fd {fd} vs an {}", dv.at(ri, ci)),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dense_attention_gradients_match_finite_differences() {
+    check(10, |g| {
+        let n = g.usize_in(3, 8);
+        let d = g.usize_in(2, 6);
+        let causal = g.bool();
+        let mut rng = g.rng().fork();
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let r = Matrix::randn(n, d, 1.0, &mut rng);
+        let (dq, dk, dv) = grad::dense_attention_backward(&q, &k, &v, causal, &r);
+        let loss = |q_: &Matrix, k_: &Matrix, v_: &Matrix| -> f32 {
+            weighted_sum(&attention::dense_attention(q_, k_, v_, causal), &r)
+        };
+        for (ri, ci) in sample_coords(g, n, d, 4) {
+            let mut qp = q.clone();
+            *qp.at_mut(ri, ci) += EPS;
+            let mut qm = q.clone();
+            *qm.at_mut(ri, ci) -= EPS;
+            let fd = (loss(&qp, &k, &v) - loss(&qm, &k, &v)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dq.at(ri, ci), 5e-3, 5e-2),
+                format!("dq[{ri},{ci}]: fd {fd} vs an {}", dq.at(ri, ci)),
+            )?;
+            let mut kp = k.clone();
+            *kp.at_mut(ri, ci) += EPS;
+            let mut km = k.clone();
+            *km.at_mut(ri, ci) -= EPS;
+            let fd = (loss(&q, &kp, &v) - loss(&q, &km, &v)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dk.at(ri, ci), 5e-3, 5e-2),
+                format!("dk[{ri},{ci}]: fd {fd} vs an {}", dk.at(ri, ci)),
+            )?;
+            let mut vp = v.clone();
+            *vp.at_mut(ri, ci) += EPS;
+            let mut vm = v.clone();
+            *vm.at_mut(ri, ci) -= EPS;
+            let fd = (loss(&q, &k, &vp) - loss(&q, &k, &vm)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dv.at(ri, ci), 5e-3, 5e-2),
+                format!("dv[{ri},{ci}]: fd {fd} vs an {}", dv.at(ri, ci)),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- routed FFN
+
+/// ReLU pre-activation signs over all active (block, token, unit) slots,
+/// in deterministic order — used to detect kink crossings.
+fn relu_signs(x: &Matrix, wi: &Matrix, routing: &Routing) -> Vec<bool> {
+    let dg = wi.cols / routing.g;
+    let mut signs = Vec::new();
+    for gi in 0..routing.g {
+        for t in 0..x.rows {
+            if !routing.mask[t][gi] {
+                continue;
+            }
+            for u in 0..dg {
+                let col = gi * dg + u;
+                let pre: f32 = x
+                    .row(t)
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &a)| a * wi.at(i, col))
+                    .sum();
+                signs.push(pre > 0.0);
+            }
+        }
+    }
+    signs
+}
+
+#[test]
+fn routed_ffn_gradients_match_finite_differences() {
+    check(12, |g| {
+        let nt = g.usize_in(2, 10);
+        let d = g.usize_in(2, 6);
+        let gg = *g.pick(&[2usize, 4]);
+        let dg = g.usize_in(1, 4);
+        let dd = gg * dg;
+        let ga = g.usize_in(1, gg);
+        let mut rng = g.rng().fork();
+        let x = Matrix::randn(nt, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, dd, 0.5, &mut rng);
+        let wo = Matrix::randn(dd, d, 0.5, &mut rng);
+        let r = Matrix::randn(nt, d, 1.0, &mut rng);
+        let routing = bspmv::route(&Matrix::randn(nt, gg, 1.0, &mut rng), ga);
+        let (dx, dwi, dwo) =
+            bspmv::routed_ffn_backward(&x, &wi, &wo, &routing, &r);
+        let loss = |x_: &Matrix, wi_: &Matrix, wo_: &Matrix| -> f32 {
+            weighted_sum(&bspmv::routed_ffn(x_, wi_, wo_, &routing), &r)
+        };
+        // The loss is piecewise multilinear, so away from kinks the
+        // central difference is exact up to float noise.
+        let check_coord = |fd: f32, an: f32, what: &str| -> PropResult {
+            prop_assert(close(fd, an, 2e-3, 2e-2), format!("{what}: fd {fd} vs an {an}"))
+        };
+        for (ri, ci) in sample_coords(g, nt, d, 4) {
+            let mut xp = x.clone();
+            *xp.at_mut(ri, ci) += EPS;
+            let mut xm = x.clone();
+            *xm.at_mut(ri, ci) -= EPS;
+            if relu_signs(&xp, &wi, &routing) != relu_signs(&xm, &wi, &routing) {
+                continue; // kink crossed: skip this coordinate
+            }
+            let fd = (loss(&xp, &wi, &wo) - loss(&xm, &wi, &wo)) / (2.0 * EPS);
+            check_coord(fd, dx.at(ri, ci), &format!("dx[{ri},{ci}]"))?;
+        }
+        for (ri, ci) in sample_coords(g, d, dd, 4) {
+            let mut wp = wi.clone();
+            *wp.at_mut(ri, ci) += EPS;
+            let mut wm = wi.clone();
+            *wm.at_mut(ri, ci) -= EPS;
+            if relu_signs(&x, &wp, &routing) != relu_signs(&x, &wm, &routing) {
+                continue;
+            }
+            let fd = (loss(&x, &wp, &wo) - loss(&x, &wm, &wo)) / (2.0 * EPS);
+            check_coord(fd, dwi.at(ri, ci), &format!("dwi[{ri},{ci}]"))?;
+        }
+        for (ri, ci) in sample_coords(g, dd, d, 4) {
+            // f is exactly linear in W_O: no kinks possible.
+            let mut wp = wo.clone();
+            *wp.at_mut(ri, ci) += EPS;
+            let mut wm = wo.clone();
+            *wm.at_mut(ri, ci) -= EPS;
+            let fd = (loss(&x, &wi, &wp) - loss(&x, &wi, &wm)) / (2.0 * EPS);
+            check_coord(fd, dwo.at(ri, ci), &format!("dwo[{ri},{ci}]"))?;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- projections
+
+#[test]
+fn linear_backward_matches_finite_differences() {
+    check(15, |g| {
+        let n = g.usize_in(1, 8);
+        let m = g.usize_in(1, 6);
+        let p = g.usize_in(1, 6);
+        let mut rng = g.rng().fork();
+        let x = Matrix::randn(n, m, 1.0, &mut rng);
+        let w = Matrix::randn(m, p, 1.0, &mut rng);
+        let r = Matrix::randn(n, p, 1.0, &mut rng);
+        let (dx, dw) = grad::linear_backward(&x, &w, &r);
+        let loss =
+            |x_: &Matrix, w_: &Matrix| -> f32 { weighted_sum(&x_.matmul(w_), &r) };
+        for (ri, ci) in sample_coords(g, n, m, 3) {
+            let mut xp = x.clone();
+            *xp.at_mut(ri, ci) += EPS;
+            let mut xm = x.clone();
+            *xm.at_mut(ri, ci) -= EPS;
+            let fd = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dx.at(ri, ci), 2e-3, 2e-2),
+                format!("dx[{ri},{ci}]: fd {fd} vs an {}", dx.at(ri, ci)),
+            )?;
+        }
+        for (ri, ci) in sample_coords(g, m, p, 3) {
+            let mut wp = w.clone();
+            *wp.at_mut(ri, ci) += EPS;
+            let mut wm = w.clone();
+            *wm.at_mut(ri, ci) -= EPS;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * EPS);
+            prop_assert(
+                close(fd, dw.at(ri, ci), 2e-3, 2e-2),
+                format!("dw[{ri},{ci}]: fd {fd} vs an {}", dw.at(ri, ci)),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// Keep TopL in the public-API smoke below so the flat-buffer reuse the
+// backward relies on stays exercised from outside the crate.
+#[test]
+fn masked_forward_agrees_with_selection_pipeline() {
+    check(10, |g| {
+        let n = g.usize_in(2, 12);
+        let m = g.usize_in(1, 3);
+        let l = g.usize_in(1, n);
+        let causal = g.bool();
+        let mut rng = g.rng().fork();
+        let d = m * 2;
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let cq = random_codes(g, n, m, 4);
+        let ck = random_codes(g, n, m, 4);
+        let idx: TopL = topl::select(&cq, &ck, l, causal);
+        let (y, attn) = attention::sparse_attention_masked(&q, &k, &v, &idx, causal);
+        prop_assert(y.rows == n && y.cols == d, "output shape")?;
+        prop_assert(attn.nnz() == n * l, "CSR keeps exactly L entries per query")?;
+        // Kept-entry probabilities renormalize to 1 per row (or 0 for a
+        // fully-masked row, which cannot happen here since l >= 1).
+        for r in 0..n {
+            let s: f32 = attn.row_range(r).map(|p| attn.values[p]).sum();
+            prop_assert((s - 1.0).abs() < 1e-4, format!("row {r} prob sum {s}"))?;
+        }
+        Ok(())
+    });
+}
