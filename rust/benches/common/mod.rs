@@ -178,6 +178,15 @@ pub fn emit(name: &str, table: &Table) {
     println!("[bench] wrote bench_out/{name}.md and .csv\n");
 }
 
+/// Write a machine-readable result to bench_out/<name>.json, so perf
+/// trajectories can be tracked across PRs.
+pub fn emit_json(name: &str, value: &spt::util::json::Json) {
+    let dir = Path::new("bench_out");
+    std::fs::create_dir_all(dir).ok();
+    std::fs::write(dir.join(format!("{name}.json")), format!("{value}\n")).ok();
+    println!("[bench] wrote bench_out/{name}.json\n");
+}
+
 /// Samples/warmup knobs (env-tunable so CI can be quick).
 pub fn samples() -> usize {
     std::env::var("SPT_BENCH_SAMPLES")

@@ -15,12 +15,15 @@
 
 mod common;
 
+use std::collections::BTreeMap;
+
 use spt::config::{presets, Mode, RunConfig};
 use spt::coordinator::{Backend, NativeBackend};
 use spt::data::SyntheticCorpus;
 use spt::memmodel;
 use spt::metrics::Table;
 use spt::util::fmt_duration;
+use spt::util::json::Json;
 
 fn main() {
     max_length_table();
@@ -76,11 +79,14 @@ fn thread_scaling_table() {
 
 /// Native-backend fine-tune step (fwd + bwd + AdamW) per mode, with the
 /// thread-scaling treatment: dedicated rayon pools sized per
-/// [`common::thread_counts`], one step per sample.
+/// [`common::thread_counts`], one step per sample.  Besides the rendered
+/// table, emits machine-readable `bench_out/BENCH_table3_native.json`
+/// (mode × threads × ms/step) so the perf trajectory is tracked across
+/// PRs.
 fn fine_tune_step_table() {
-    // spt-nano keeps this fast under `cargo test` (which executes the
-    // harness=false bench binaries); set SPT_TABLE3_NATIVE_MODEL=spt-tiny
-    // for a measurement at the paper-surrogate scale.
+    // spt-nano keeps the default run fast; the perf-tracking target is
+    // SPT_TABLE3_NATIVE_MODEL=spt-mini-64 (GEMM-bound, same block), and
+    // spt-tiny measures at the paper-surrogate scale.
     let model = std::env::var("SPT_TABLE3_NATIVE_MODEL")
         .unwrap_or_else(|_| "spt-nano".into());
     let backend = NativeBackend::new();
@@ -91,6 +97,7 @@ fn fine_tune_step_table() {
         ),
         &["Threads", "full", "lora", "spt", "spt vs full"],
     );
+    let mut json_entries: Vec<Json> = Vec::new();
     for t in common::thread_counts() {
         let pool = common::pool(t);
         let mut cells = vec![t.to_string()];
@@ -129,13 +136,19 @@ fn fine_tune_step_table() {
                     });
                 },
             );
+            let median = r.median();
             if mode == Mode::Full {
-                full_median = Some(r.median());
+                full_median = Some(median);
             }
             if mode == Mode::Spt {
-                spt_median = Some(r.median());
+                spt_median = Some(median);
             }
-            cells.push(fmt_duration(r.median()));
+            cells.push(fmt_duration(median));
+            let mut e = BTreeMap::new();
+            e.insert("mode".to_string(), Json::Str(mode.as_str().to_string()));
+            e.insert("threads".to_string(), Json::Num(t as f64));
+            e.insert("ms_per_step".to_string(), Json::Num(median * 1e3));
+            json_entries.push(Json::Obj(e));
         }
         cells.push(match (full_median, spt_median) {
             (Some(f), Some(sp)) => format!("{:.2}x", f / sp),
@@ -144,6 +157,13 @@ fn fine_tune_step_table() {
         table.row(&cells);
     }
     common::emit("table3_native_step", &table);
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("table3_native_step".to_string()));
+    top.insert("model".to_string(), Json::Str(model));
+    top.insert("warmup".to_string(), Json::Num(w as f64));
+    top.insert("samples".to_string(), Json::Num(s as f64));
+    top.insert("entries".to_string(), Json::Arr(json_entries));
+    common::emit_json("BENCH_table3_native", &Json::Obj(top));
 }
 
 /// The original artifact-driven end-to-end comparison (QA surrogate

@@ -44,7 +44,19 @@ fn native_kernels() {
     let wo = Matrix::randn(dff, d, 0.2, &mut rng);
     let routing = bspmv::route(&Matrix::randn(nt, gg, 1.0, &mut rng), ga);
 
+    // The blocked GEMM microkernel underneath every dense product, timed
+    // with and without workspace reuse (the training hot path reuses).
+    let mut ws = spt::sparse::Workspace::default();
+    let gemm_alloc = bench("gemm_alloc", w, s, || {
+        std::hint::black_box(x.matmul(&wi));
+    });
+    let gemm_reuse = bench("gemm_reuse", w, s, || {
+        std::hint::black_box(x.matmul_ws(&wi, &mut ws));
+    });
+
     let results: Vec<(&str, spt::metrics::BenchResult)> = vec![
+        ("GEMM microkernel (alloc per call)", gemm_alloc),
+        ("GEMM microkernel (reused workspace)", gemm_reuse),
         (
             "pq_lookup (quantize)",
             bench("quantize", w, s, || {
@@ -117,6 +129,11 @@ fn native_kernels() {
                     format!("{:.2}x vs dense (memory, not speed, is the goal)", dn / r.median())
                 })
                 .unwrap_or_default(),
+            "GEMM microkernel (reused workspace)" => {
+                get("GEMM microkernel (alloc per call)")
+                    .map(|al| format!("{:.2}x vs alloc per call", al / r.median()))
+                    .unwrap_or_default()
+            }
             _ => String::new(),
         };
         table.row(&[

@@ -88,6 +88,16 @@ pub fn models() -> Vec<ModelConfig> {
             vocab_size: 4096,
             max_seq: 128,
         },
+        // Bench-scale config over the mini-64 block: big enough that a
+        // fine-tune step is GEMM-bound (the table3 native-step bench's
+        // thread-scaling target), small enough for CI.
+        ModelConfig {
+            name: "spt-mini-64".into(),
+            block: block("mini-64").unwrap(),
+            n_layers: 1,
+            vocab_size: 2048,
+            max_seq: 128,
+        },
         // Test-scale config for the native backend's fast paths (tests,
         // doc examples); small enough that a full fwd+bwd step is
         // milliseconds on one core.

@@ -21,10 +21,21 @@
 //! Deliberate simplifications (tracked in ROADMAP.md): a single block
 //! regardless of the preset's `n_layers` (batched multi-layer training
 //! is backlog), no layer norm, and an untied LM head that stays
-//! trainable in every mode (the task head).  The forward/backward is
-//! deterministic at any rayon pool size — every parallel path reduces in
-//! a fixed order — which the bit-identical checkpoint-resume test relies
-//! on.
+//! trainable in every mode (the task head).
+//!
+//! ## Parallelism and determinism
+//!
+//! `train_step` / `eval_loss` fan out over the microbatch items: each
+//! item runs its forward + backward into a private [`GradAcc`] (with a
+//! per-worker GEMM [`Workspace`] reused across the item's ops), and the
+//! per-item gradients and losses are then reduced in ascending item
+//! order.  Together with the substrate's own guarantees (every parallel
+//! GEMM/head/block path reduces in a fixed order) this keeps the whole
+//! step deterministic at any rayon pool size — losses, parameters, and
+//! AdamW moments are bit-identical whether the pool has 1 or 64 threads,
+//! which the checkpoint-resume and thread-determinism tests rely on.
+
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 use rayon::prelude::*;
@@ -38,16 +49,49 @@ use crate::sparse::bspmv::{self, Routing};
 use crate::sparse::grad;
 use crate::sparse::mha::{self, MultiHeadSparseAttention};
 use crate::sparse::pq::{self, Codebooks};
-use crate::sparse::{Csr, Matrix};
+use crate::sparse::{Csr, Matrix, Workspace};
 use crate::util::rng::Rng;
 
 /// The always-available backend (see module docs).
 #[derive(Debug, Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    /// Memoized preset + leaf layout for the last `(model, mode)` seen,
+    /// so repeated steps with an unchanged [`RunConfig`] don't
+    /// re-deserialize the preset table and rebuild the layout per call.
+    cache: Mutex<Option<LayoutCache>>,
+}
+
+#[derive(Debug)]
+struct LayoutCache {
+    model: String,
+    mode: Mode,
+    cfg: Arc<ModelConfig>,
+    layout: Arc<Layout>,
+}
 
 impl NativeBackend {
     pub fn new() -> Self {
-        NativeBackend
+        NativeBackend::default()
+    }
+
+    /// The cached `(preset, layout)` pair for `rc`, rebuilding on a
+    /// model/mode change.
+    fn cached(&self, rc: &RunConfig) -> Result<(Arc<ModelConfig>, Arc<Layout>)> {
+        let mut guard = self.cache.lock().expect("layout cache poisoned");
+        if let Some(c) = guard.as_ref() {
+            if c.model == rc.model && c.mode == rc.mode {
+                return Ok((c.cfg.clone(), c.layout.clone()));
+            }
+        }
+        let cfg = Arc::new(presets::model(&rc.model)?);
+        let layout = Arc::new(Layout::new(&cfg, rc.mode)?);
+        *guard = Some(LayoutCache {
+            model: rc.model.clone(),
+            mode: rc.mode,
+            cfg: cfg.clone(),
+            layout: layout.clone(),
+        });
+        Ok((cfg, layout))
     }
 }
 
@@ -400,14 +444,29 @@ impl GradAcc {
         slot: usize,
         base_ix: usize,
         dw: &Matrix,
+        ws: &mut Workspace,
     ) {
         match (&layout.lora, &w.lora) {
             (Some(ixs), Some(mats)) => {
                 let (a, b) = &mats[slot];
                 self.add(ixs[slot].a, &grad::matmul_dx(dw, b));
-                self.add(ixs[slot].b, &grad::matmul_dw(a, dw));
+                self.add(ixs[slot].b, &grad::matmul_dw_ws(a, dw, ws));
             }
             _ => self.add(base_ix, dw),
+        }
+    }
+
+    /// Accumulate another item's gradients leaf by leaf.  Calling this
+    /// in ascending item order reproduces one fixed reduction order, so
+    /// the merged gradients are identical at any pool size.
+    fn merge(&mut self, other: &GradAcc) {
+        for (mine, theirs) in self.g.iter_mut().zip(&other.g) {
+            if let (Some(a), Some(b)) = (mine.as_mut(), theirs.as_ref()) {
+                debug_assert_eq!(a.len(), b.len());
+                for (o, &x) in a.iter_mut().zip(b) {
+                    *o += x;
+                }
+            }
         }
     }
 
@@ -533,12 +592,12 @@ fn ce_loss(logits: &Matrix, targets: &[i32], vocab: usize) -> Result<f32> {
 }
 
 impl NativeBackend {
-    fn model_config(&self, rc: &RunConfig) -> Result<ModelConfig> {
-        presets::model(&rc.model)
+    fn model_config(&self, rc: &RunConfig) -> Result<Arc<ModelConfig>> {
+        Ok(self.cached(rc)?.0)
     }
 
-    fn layout(&self, rc: &RunConfig) -> Result<Layout> {
-        Layout::new(&self.model_config(rc)?, rc.mode)
+    fn layout(&self, rc: &RunConfig) -> Result<Arc<Layout>> {
+        Ok(self.cached(rc)?.1)
     }
 
     /// Token + learned positional embedding for one sequence.
@@ -583,6 +642,7 @@ impl NativeBackend {
     }
 
     /// One sequence forward up to the block output `x2` (no LM head).
+    /// `ws` is the item's reusable GEMM workspace.
     fn forward_block(
         &self,
         layout: &Layout,
@@ -590,36 +650,37 @@ impl NativeBackend {
         state: &TrainState,
         tok: &[i32],
         sparse: Option<&MultiHeadSparseAttention>,
+        ws: &mut Workspace,
     ) -> Result<ItemTrace> {
         let x = self.embed(layout, state, tok)?;
-        let q = split_heads(&x.matmul(&w.wq), layout.heads, layout.d_head);
-        let k = split_heads(&x.matmul(&w.wk), layout.heads, layout.d_head);
-        let v = split_heads(&x.matmul(&w.wv), layout.heads, layout.d_head);
+        let q = split_heads(&x.matmul_ws(&w.wq, ws), layout.heads, layout.d_head);
+        let k = split_heads(&x.matmul_ws(&w.wk, ws), layout.heads, layout.d_head);
+        let v = split_heads(&x.matmul_ws(&w.wv, ws), layout.heads, layout.d_head);
         let (ys, attn) = if layout.mode == Mode::Spt {
             let layer = sparse.context("spt mode without a sparse layer")?;
             let (ys, csrs) = layer.forward_cached(&q, &k, &v);
             (ys, Some(csrs))
         } else {
-            let ys: Vec<Matrix> = q
-                .par_iter()
-                .zip(k.par_iter())
-                .zip(v.par_iter())
-                .map(|((qh, kh), vh)| attention::dense_attention(qh, kh, vh, true))
+            let ys: Vec<Matrix> = (0..layout.heads)
+                .into_par_iter()
+                .map_init(Workspace::default, |hws, h| {
+                    attention::dense_attention_ws(&q[h], &k[h], &v[h], true, hws)
+                })
                 .collect();
             (ys, None)
         };
         let attn_out = concat_heads(&ys);
-        let x1 = x.add(&attn_out.matmul(&w.wo));
+        let x1 = x.add(&attn_out.matmul_ws(&w.wo, ws));
         let (f, h1, routing) = if layout.mode == Mode::Spt {
             let router = w.router.as_ref().context("spt mode without router")?;
-            let scores = x1.matmul(router);
+            let scores = x1.matmul_ws(router, ws);
             let g_active = layout.sparsity.active_groups(layout.groups).min(layout.groups);
             let routing = bspmv::route(&scores, g_active);
             let f = mha::routed_ffn_par(&x1, &w.wi, &w.wo2, &routing);
             (f, None, Some(routing))
         } else {
-            let h1 = x1.matmul(&w.wi).relu();
-            let f = h1.matmul(&w.wo2);
+            let h1 = x1.matmul_ws(&w.wi, ws).relu();
+            let f = h1.matmul_ws(&w.wo2, ws);
             (f, Some(h1), None)
         };
         let x2 = x1.add(&f);
@@ -634,13 +695,15 @@ impl NativeBackend {
         state: &TrainState,
         tok: &[i32],
         sparse: Option<&MultiHeadSparseAttention>,
+        ws: &mut Workspace,
     ) -> Result<(ItemTrace, Matrix)> {
-        let trace = self.forward_block(layout, w, state, tok, sparse)?;
-        let logits = trace.x2.matmul(&w.wout);
+        let trace = self.forward_block(layout, w, state, tok, sparse, ws)?;
+        let logits = trace.x2.matmul_ws(&w.wout, ws);
         Ok((trace, logits))
     }
 
     /// One sequence backward; accumulates leaf gradients into `acc`.
+    /// `ws` is the item's reusable GEMM workspace.
     #[allow(clippy::too_many_arguments)]
     fn backward_item(
         &self,
@@ -651,9 +714,10 @@ impl NativeBackend {
         dlogits: &Matrix,
         sparse: Option<&MultiHeadSparseAttention>,
         acc: &mut GradAcc,
+        ws: &mut Workspace,
     ) -> Result<()> {
         // LM head.
-        acc.add(layout.wout, &grad::matmul_dw(&trace.x2, dlogits));
+        acc.add(layout.wout, &grad::matmul_dw_ws(&trace.x2, dlogits, ws));
         let dx2 = grad::matmul_dx(dlogits, &w.wout);
         // FFN (dX2 flows through both the residual and the FFN branch).
         let (dx1_ffn, dwi_eff, dwo2_eff) = if layout.mode == Mode::Spt {
@@ -661,17 +725,18 @@ impl NativeBackend {
             mha::routed_ffn_backward_par(&trace.x1, &w.wi, &w.wo2, routing, &dx2)
         } else {
             let h1 = trace.h1.as_ref().context("missing ffn trace")?;
-            let dwo2 = grad::matmul_dw(h1, &dx2);
+            let dwo2 = grad::matmul_dw_ws(h1, &dx2, ws);
             let dpre = grad::relu_backward(h1, &grad::matmul_dx(&dx2, &w.wo2));
-            let dwi = grad::matmul_dw(&trace.x1, &dpre);
+            let dwi = grad::matmul_dw_ws(&trace.x1, &dpre, ws);
             let dx = grad::matmul_dx(&dpre, &w.wi);
             (dx, dwi, dwo2)
         };
-        acc.add_weight(layout, w, SLOT_WI, layout.wi, &dwi_eff);
-        acc.add_weight(layout, w, SLOT_WO2, layout.wo2, &dwo2_eff);
+        acc.add_weight(layout, w, SLOT_WI, layout.wi, &dwi_eff, ws);
+        acc.add_weight(layout, w, SLOT_WO2, layout.wo2, &dwo2_eff, ws);
         let dx1 = dx2.add(&dx1_ffn);
         // Attention output projection.
-        acc.add_weight(layout, w, SLOT_O, layout.wo, &grad::matmul_dw(&trace.attn_out, &dx1));
+        let dwo_eff = grad::matmul_dw_ws(&trace.attn_out, &dx1, ws);
+        acc.add_weight(layout, w, SLOT_O, layout.wo, &dwo_eff, ws);
         let dy_heads = split_heads(&grad::matmul_dx(&dx1, &w.wo), layout.heads, layout.d_head);
         // Attention core.
         let (dq_h, dk_h, dv_h) = if layout.mode == Mode::Spt {
@@ -681,9 +746,9 @@ impl NativeBackend {
         } else {
             let per: Vec<(Matrix, Matrix, Matrix)> = (0..layout.heads)
                 .into_par_iter()
-                .map(|h| {
-                    grad::dense_attention_backward(
-                        &trace.q[h], &trace.k[h], &trace.v[h], true, &dy_heads[h],
+                .map_init(Workspace::default, |hws, h| {
+                    grad::dense_attention_backward_ws(
+                        &trace.q[h], &trace.k[h], &trace.v[h], true, &dy_heads[h], hws,
                     )
                 })
                 .collect();
@@ -692,9 +757,12 @@ impl NativeBackend {
         let dq = concat_heads(&dq_h);
         let dk = concat_heads(&dk_h);
         let dv = concat_heads(&dv_h);
-        acc.add_weight(layout, w, SLOT_Q, layout.wq, &grad::matmul_dw(&trace.x, &dq));
-        acc.add_weight(layout, w, SLOT_K, layout.wk, &grad::matmul_dw(&trace.x, &dk));
-        acc.add_weight(layout, w, SLOT_V, layout.wv, &grad::matmul_dw(&trace.x, &dv));
+        let dwq_eff = grad::matmul_dw_ws(&trace.x, &dq, ws);
+        acc.add_weight(layout, w, SLOT_Q, layout.wq, &dwq_eff, ws);
+        let dwk_eff = grad::matmul_dw_ws(&trace.x, &dk, ws);
+        acc.add_weight(layout, w, SLOT_K, layout.wk, &dwk_eff, ws);
+        let dwv_eff = grad::matmul_dw_ws(&trace.x, &dv, ws);
+        acc.add_weight(layout, w, SLOT_V, layout.wv, &dwv_eff, ws);
         // Embedding gradients only exist in full mode (frozen otherwise).
         if layout.mode == Mode::Full {
             let mut dx = dx1.clone();
@@ -785,17 +853,36 @@ impl Backend for NativeBackend {
         let layout = self.layout(rc)?;
         let w = Weights::materialize(&layout, state)?;
         let sparse = self.sparse_layer(&layout, &w, seq)?;
-        let mut acc = GradAcc::new(&layout);
         let inv_count = 1.0 / (batch * seq) as f32;
+        // Fan out over the microbatch: each item computes its forward +
+        // backward into a private GradAcc with a per-worker workspace.
+        let layout_ref: &Layout = &layout;
+        let state_ref: &TrainState = state;
+        let w_ref = &w;
+        let sparse_ref = sparse.as_ref();
+        let per_item: Result<Vec<(f64, GradAcc)>> = (0..batch)
+            .into_par_iter()
+            .map_init(Workspace::default, |ws, bi| {
+                let tok = &tokens[bi * seq..(bi + 1) * seq];
+                let tgt = &targets[bi * seq..(bi + 1) * seq];
+                let (trace, logits) =
+                    self.forward_item(layout_ref, w_ref, state_ref, tok, sparse_ref, ws)?;
+                let (lsum, dlogits) =
+                    ce_loss_and_grad(&logits, tgt, inv_count, layout_ref.vocab)?;
+                let mut acc = GradAcc::new(layout_ref);
+                self.backward_item(
+                    layout_ref, w_ref, &trace, tok, &dlogits, sparse_ref, &mut acc, ws,
+                )?;
+                Ok((lsum as f64, acc))
+            })
+            .collect();
+        // Reduce in ascending item order: the loss sum and every leaf
+        // gradient see one fixed operation order at any pool size.
+        let mut acc = GradAcc::new(&layout);
         let mut loss_sum = 0.0f64;
-        for bi in 0..batch {
-            let tok = &tokens[bi * seq..(bi + 1) * seq];
-            let tgt = &targets[bi * seq..(bi + 1) * seq];
-            let (trace, logits) =
-                self.forward_item(&layout, &w, state, tok, sparse.as_ref())?;
-            let (lsum, dlogits) = ce_loss_and_grad(&logits, tgt, inv_count, layout.vocab)?;
-            loss_sum += lsum as f64;
-            self.backward_item(&layout, &w, &trace, tok, &dlogits, sparse.as_ref(), &mut acc)?;
+        for (lsum, item_acc) in per_item? {
+            loss_sum += lsum;
+            acc.merge(&item_acc);
         }
         let loss = loss_sum as f32 * inv_count;
         // AdamW update, host side.
@@ -830,12 +917,24 @@ impl Backend for NativeBackend {
         let w = Weights::materialize(&layout, state)?;
         let sparse = self.sparse_layer(&layout, &w, seq)?;
         let inv_count = 1.0 / (batch * seq) as f32;
+        // Item-parallel like train_step; the f64 per-item losses are
+        // summed in ascending item order after the join.
+        let layout_ref: &Layout = &layout;
+        let w_ref = &w;
+        let sparse_ref = sparse.as_ref();
+        let per_item: Result<Vec<f64>> = (0..batch)
+            .into_par_iter()
+            .map_init(Workspace::default, |ws, bi| {
+                let tok = &tokens[bi * seq..(bi + 1) * seq];
+                let tgt = &targets[bi * seq..(bi + 1) * seq];
+                let (_, logits) =
+                    self.forward_item(layout_ref, w_ref, state, tok, sparse_ref, ws)?;
+                Ok(ce_loss(&logits, tgt, layout_ref.vocab)? as f64)
+            })
+            .collect();
         let mut loss_sum = 0.0f64;
-        for bi in 0..batch {
-            let tok = &tokens[bi * seq..(bi + 1) * seq];
-            let tgt = &targets[bi * seq..(bi + 1) * seq];
-            let (_, logits) = self.forward_item(&layout, &w, state, tok, sparse.as_ref())?;
-            loss_sum += ce_loss(&logits, tgt, layout.vocab)? as f64;
+        for l in per_item? {
+            loss_sum += l;
         }
         Ok(loss_sum as f32 * inv_count)
     }
@@ -855,13 +954,15 @@ impl Backend for NativeBackend {
         let layout = self.layout(rc)?;
         let w = Weights::materialize(&layout, state)?;
         let sparse = self.sparse_layer(&layout, &w, seq)?;
+        let mut ws = Workspace::default();
         let mut out = Vec::with_capacity(batch);
         for (bi, &pos) in answer_pos.iter().enumerate() {
             if pos >= seq {
                 bail!("answer slot {pos} outside sequence {seq}");
             }
             let tok = &tokens[bi * seq..(bi + 1) * seq];
-            let trace = self.forward_block(&layout, &w, state, tok, sparse.as_ref())?;
+            let trace =
+                self.forward_block(&layout, &w, state, tok, sparse.as_ref(), &mut ws)?;
             // Only the answer slot's choice-token logits are read, so
             // skip the full (seq x vocab) LM-head GEMM: four d-length
             // dot products against the relevant wout columns suffice.
@@ -904,11 +1005,12 @@ impl Backend for NativeBackend {
         let dh = layout.d_head;
         let mut head_data: Vec<Vec<f32>> =
             vec![Vec::with_capacity(2 * batch * seq * dh); layout.heads];
+        let mut ws = Workspace::default();
         for bi in 0..batch {
             let tok = &tokens[bi * seq..(bi + 1) * seq];
             let x = self.embed(&layout, state, tok)?;
-            let kf = x.matmul(&w.wk);
-            let qf = x.matmul(&w.wq);
+            let kf = x.matmul_ws(&w.wk, &mut ws);
+            let qf = x.matmul_ws(&w.wq, &mut ws);
             for proj in [&kf, &qf] {
                 for r in 0..proj.rows {
                     let row = proj.row(r);
@@ -1002,6 +1104,23 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{mode:?} nondeterministic");
             }
         }
+    }
+
+    #[test]
+    fn layout_cache_reuses_allocation_until_config_changes() {
+        let backend = NativeBackend::new();
+        let rc_spt = rc(Mode::Spt);
+        let l1 = backend.layout(&rc_spt).unwrap();
+        let l2 = backend.layout(&rc_spt).unwrap();
+        assert!(Arc::ptr_eq(&l1, &l2), "unchanged config must hit the cache");
+        let rc_full = rc(Mode::Full);
+        let l3 = backend.layout(&rc_full).unwrap();
+        assert!(!Arc::ptr_eq(&l1, &l3), "mode change must rebuild");
+        assert_eq!(l3.mode, Mode::Full);
+        // Switching back rebuilds (single-entry cache) and stays correct.
+        let l4 = backend.layout(&rc_spt).unwrap();
+        assert_eq!(l4.mode, Mode::Spt);
+        assert_eq!(l4.n_leaves(), l1.n_leaves());
     }
 
     #[test]

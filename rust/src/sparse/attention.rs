@@ -10,22 +10,60 @@
 
 use super::codes::TopL;
 use super::csr::Csr;
-use super::matrix::Matrix;
+use super::matrix::{self, Matrix, Workspace};
 use super::pq::{self, Codebooks};
 use super::topl;
 
 /// Vanilla dense attention for one head: `softmax(Q K^T / sqrt(d)) V`.
 pub fn dense_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    dense_attention_ws(q, k, v, causal, &mut Workspace::default())
+}
+
+/// [`dense_attention`] reusing a caller-owned GEMM workspace: the
+/// O(n²) logits/probability matrix lives in the workspace, the logits
+/// run on the NT microkernel (no transposed K materialized), and the
+/// final product reuses the pack buffer.  Bit-identical to
+/// [`dense_attention`].
+pub fn dense_attention_ws(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    causal: bool,
+    ws: &mut Workspace,
+) -> Matrix {
+    assert_eq!(q.cols, k.cols, "Q/K dim mismatch");
+    assert_eq!(k.rows, v.rows, "K/V row mismatch");
     let scale = 1.0 / (q.cols as f32).sqrt();
-    let mut logits = q.matmul(&k.transpose()).map(|x| x * scale);
+    ws.attn.reset_any(q.rows, k.rows);
+    matrix::gemm_nt_into(
+        q.rows, q.cols, k.rows, &q.data, &k.data, k.cols, 0, &mut ws.attn.data,
+    );
+    for x in ws.attn.data.iter_mut() {
+        *x *= scale;
+    }
     if causal {
-        for i in 0..logits.rows {
-            for j in (i + 1)..logits.cols {
-                *logits.at_mut(i, j) = -1e30;
+        for i in 0..ws.attn.rows {
+            for j in (i + 1)..ws.attn.cols {
+                *ws.attn.at_mut(i, j) = -1e30;
             }
         }
     }
-    logits.softmax_rows().matmul(v)
+    ws.attn.softmax_rows_inplace();
+    // P @ V — field-split borrows: the probabilities read from ws.attn
+    // while the pack buffer packs V.
+    let mut out = Matrix::zeros(q.rows, v.cols);
+    matrix::gemm_into(
+        q.rows,
+        k.rows,
+        v.cols,
+        &ws.attn.data,
+        &v.data,
+        v.cols,
+        0,
+        &mut out.data,
+        &mut ws.packb,
+    );
+    out
 }
 
 /// Full sparse MHA for one head (paper Alg. 1): PQ quantize -> bucket-sort

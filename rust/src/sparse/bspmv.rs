@@ -5,9 +5,16 @@
 //! back.  This is the rust-native twin of
 //! `python/compile/kernels/routed_ffn.py` (which uses the static-capacity
 //! TPU formulation); here shapes are dynamic, as in the paper's CUDA code.
+//!
+//! The per-block GEMMs run on the blocked microkernel in
+//! [`super::matrix`] and multiply the `W_I[g]` column block / `W_O[g]`
+//! row block *in place* — the kernel's strided-B addressing covers the
+//! slices, so no per-block weight copy is materialized.  Each call
+//! threads a [`BlockScratch`] through the block kernels to reuse the
+//! gather/hidden buffers; scratch contents never affect results.
 
 use super::grad;
-use super::matrix::Matrix;
+use super::matrix::{self, Matrix, Workspace};
 
 /// Router output for a token batch.
 #[derive(Debug, Clone)]
@@ -20,28 +27,54 @@ pub struct Routing {
     pub g_active: usize,
 }
 
+/// Reusable per-task buffers for [`block_partial`] / [`block_backward`]:
+/// the token gathers, the hidden activations, and the GEMM workspace.
+/// Contents are meaningless between calls — a fresh and a reused scratch
+/// produce identical bits.
+#[derive(Debug, Default)]
+pub struct BlockScratch {
+    ws: Workspace,
+    xg: Matrix,
+    dyg: Matrix,
+    h: Matrix,
+    hg: Matrix,
+    dh: Matrix,
+}
+
 /// Compute routing from router scores (top-G' by |score|, gated by a
 /// softmax over the selected scores — matches the L1 kernel semantics).
+///
+/// Selection is `select_nth_unstable`-based — O(G) per token instead of
+/// a full O(G log G) sort — followed by a sort of just the G' winners,
+/// which restores the |score|-desc-then-index order the full-sort
+/// implementation produced, so gate values are bit-identical to it.
 pub fn route(scores: &Matrix, g_active: usize) -> Routing {
     let nt = scores.rows;
     let g = scores.cols;
     assert!(g_active >= 1 && g_active <= g);
     let mut mask = vec![vec![false; g]; nt];
     let mut gate = vec![vec![0.0f32; g]; nt];
+    let mut order: Vec<usize> = Vec::with_capacity(g);
     for t in 0..nt {
         let row = scores.row(t);
-        // top-G' by |score|, ties by lower index.
-        let mut order: Vec<usize> = (0..g).collect();
-        order.sort_by(|&a, &b| {
-            row[b].abs().total_cmp(&row[a].abs()).then(a.cmp(&b))
-        });
-        let sel = &order[..g_active];
+        // top-G' by |score|, ties by lower index — a strict total order,
+        // so the winner *set* of select_nth equals the full sort's.
+        let cmp = |a: &usize, b: &usize| {
+            row[*b].abs().total_cmp(&row[*a].abs()).then(a.cmp(b))
+        };
+        order.clear();
+        order.extend(0..g);
+        if g_active < g {
+            order.select_nth_unstable_by(g_active - 1, cmp);
+        }
+        let sel = &mut order[..g_active];
+        sel.sort_unstable_by(cmp);
         let mx = sel.iter().map(|&j| row[j]).fold(f32::NEG_INFINITY, f32::max);
         let mut denom = 0.0f32;
-        for &j in sel {
+        for &j in sel.iter() {
             denom += (row[j] - mx).exp();
         }
-        for &j in sel {
+        for &j in sel.iter() {
             mask[t][j] = true;
             gate[t][j] = (row[j] - mx).exp() / denom.max(1e-30) * g_active as f32;
         }
@@ -61,6 +94,7 @@ pub fn block_partial(
     w_i: &Matrix,
     w_o: &Matrix,
     routing: &Routing,
+    scratch: &mut BlockScratch,
 ) -> Option<(Vec<usize>, Matrix)> {
     let nt = x.rows;
     let d = x.cols;
@@ -71,32 +105,48 @@ pub fn block_partial(
         return None;
     }
     // Gather X_g.
-    let mut xg = Matrix::zeros(tokens.len(), d);
+    scratch.xg.reset_any(tokens.len(), d);
     for (r, &t) in tokens.iter().enumerate() {
-        xg.row_mut(r).copy_from_slice(x.row(t));
+        scratch.xg.row_mut(r).copy_from_slice(x.row(t));
     }
-    // Block of W_I: columns [gi*dg, (gi+1)*dg).
-    let mut wi_g = Matrix::zeros(d, dg);
-    for r in 0..d {
-        wi_g.row_mut(r)
-            .copy_from_slice(&w_i.row(r)[gi * dg..(gi + 1) * dg]);
+    // Inner projection against the W_I column block [gi*dg, (gi+1)*dg),
+    // packed straight out of w_i (no wi_g copy), then ReLU + gate.
+    scratch.h.reset_any(tokens.len(), dg);
+    matrix::gemm_into(
+        tokens.len(),
+        d,
+        dg,
+        &scratch.xg.data,
+        &w_i.data,
+        w_i.cols,
+        gi * dg,
+        &mut scratch.h.data,
+        &mut scratch.ws.packb,
+    );
+    for v in scratch.h.data.iter_mut() {
+        *v = v.max(0.0);
     }
-    // Inner projection + ReLU (line 4), gated.
-    let mut h = xg.matmul(&wi_g).relu();
     for (r, &t) in tokens.iter().enumerate() {
         let gate = routing.gate[t][gi];
-        for v in h.row_mut(r) {
+        for v in scratch.h.row_mut(r) {
             *v *= gate;
         }
     }
-    // Block of W_O: rows [gi*dg, (gi+1)*dg).
-    let wo_g = Matrix::from_vec(
+    // Outer projection (line 5) against the contiguous W_O row block;
+    // the caller scatters — paper's index_put.
+    let mut yg = Matrix::zeros(tokens.len(), d);
+    matrix::gemm_into(
+        tokens.len(),
         dg,
         d,
-        w_o.data[gi * dg * d..(gi + 1) * dg * d].to_vec(),
+        &scratch.h.data,
+        &w_o.data[gi * dg * d..(gi + 1) * dg * d],
+        d,
+        0,
+        &mut yg.data,
+        &mut scratch.ws.packb,
     );
-    // Outer projection (line 5); the caller scatters — paper's index_put.
-    Some((tokens, h.matmul(&wo_g)))
+    Some((tokens, yg))
 }
 
 /// One block's backward, the unit both [`routed_ffn_backward`] and the
@@ -113,6 +163,7 @@ pub fn block_backward(
     w_o: &Matrix,
     routing: &Routing,
     dy: &Matrix,
+    scratch: &mut BlockScratch,
 ) -> Option<(Vec<usize>, Matrix, Matrix, Matrix)> {
     let nt = x.rows;
     let d = x.cols;
@@ -121,47 +172,81 @@ pub fn block_backward(
     if tokens.is_empty() {
         return None;
     }
+    let ng = tokens.len();
     // Gather X_g and dY_g.
-    let mut xg = Matrix::zeros(tokens.len(), d);
-    let mut dyg = Matrix::zeros(tokens.len(), d);
+    scratch.xg.reset_any(ng, d);
+    scratch.dyg.reset_any(ng, d);
     for (r, &t) in tokens.iter().enumerate() {
-        xg.row_mut(r).copy_from_slice(x.row(t));
-        dyg.row_mut(r).copy_from_slice(dy.row(t));
+        scratch.xg.row_mut(r).copy_from_slice(x.row(t));
+        scratch.dyg.row_mut(r).copy_from_slice(dy.row(t));
     }
-    // Block slices of W_I (columns) and W_O (rows), as in the forward.
-    let mut wi_g = Matrix::zeros(d, dg);
-    for r in 0..d {
-        wi_g.row_mut(r)
-            .copy_from_slice(&w_i.row(r)[gi * dg..(gi + 1) * dg]);
+    // Recompute the hidden activations (recompute-based backward: the
+    // forward keeps no per-block caches).  W_I's column block is packed
+    // in place, as in the forward.
+    scratch.h.reset_any(ng, dg);
+    matrix::gemm_into(
+        ng,
+        d,
+        dg,
+        &scratch.xg.data,
+        &w_i.data,
+        w_i.cols,
+        gi * dg,
+        &mut scratch.h.data,
+        &mut scratch.ws.packb,
+    );
+    for v in scratch.h.data.iter_mut() {
+        *v = v.max(0.0);
     }
-    let wo_g = Matrix::from_vec(
+    scratch.hg.reset_any(ng, dg);
+    scratch.hg.data.copy_from_slice(&scratch.h.data);
+    for (r, &t) in tokens.iter().enumerate() {
+        let gate = routing.gate[t][gi];
+        for v in scratch.hg.row_mut(r) {
+            *v *= gate;
+        }
+    }
+    // dW_O[g] = (h * gate)^T dY_g ;  d(h*gate) = dY_g W_O[g]^T (the
+    // contiguous W_O row block, multiplied without a transpose copy).
+    let dwo_g = grad::matmul_dw_ws(&scratch.hg, &scratch.dyg, &mut scratch.ws);
+    scratch.dh.reset_any(ng, dg);
+    matrix::gemm_nt_into(
+        ng,
+        d,
+        dg,
+        &scratch.dyg.data,
+        &w_o.data[gi * dg * d..(gi + 1) * dg * d],
+        d,
+        0,
+        &mut scratch.dh.data,
+    );
+    for (r, &t) in tokens.iter().enumerate() {
+        let gate = routing.gate[t][gi];
+        for v in scratch.dh.row_mut(r) {
+            *v *= gate;
+        }
+    }
+    // dpre = dh ⊙ [h > 0], in place (the ReLU backward; h = max(pre, 0)
+    // is never NaN, so the <= test is the exact complement).
+    for (o, &hv) in scratch.dh.data.iter_mut().zip(&scratch.h.data) {
+        if hv <= 0.0 {
+            *o = 0.0;
+        }
+    }
+    // dW_I[g] = X_g^T dpre ;  dX_g = dpre W_I[g]^T (the W_I column block
+    // addressed row-strided, again with no copy).
+    let dwi_g = grad::matmul_dw_ws(&scratch.xg, &scratch.dh, &mut scratch.ws);
+    let mut dxg = Matrix::zeros(ng, d);
+    matrix::gemm_nt_into(
+        ng,
         dg,
         d,
-        w_o.data[gi * dg * d..(gi + 1) * dg * d].to_vec(),
+        &scratch.dh.data,
+        &w_i.data,
+        w_i.cols,
+        gi * dg,
+        &mut dxg.data,
     );
-    // Recompute the hidden activations (recompute-based backward: the
-    // forward keeps no per-block caches).
-    let h = xg.matmul(&wi_g).relu();
-    let mut hg = h.clone();
-    for (r, &t) in tokens.iter().enumerate() {
-        let gate = routing.gate[t][gi];
-        for v in hg.row_mut(r) {
-            *v *= gate;
-        }
-    }
-    // dW_O[g] = (h * gate)^T dY_g ;  d(h*gate) = dY_g W_O[g]^T.
-    let dwo_g = grad::matmul_dw(&hg, &dyg);
-    let mut dh = grad::matmul_dx(&dyg, &wo_g);
-    for (r, &t) in tokens.iter().enumerate() {
-        let gate = routing.gate[t][gi];
-        for v in dh.row_mut(r) {
-            *v *= gate;
-        }
-    }
-    let dpre = grad::relu_backward(&h, &dh);
-    // dW_I[g] = X_g^T dpre ;  dX_g = dpre W_I[g]^T.
-    let dwi_g = grad::matmul_dw(&xg, &dpre);
-    let dxg = grad::matmul_dx(&dpre, &wi_g);
     Some((tokens, dxg, dwi_g, dwo_g))
 }
 
@@ -184,9 +269,10 @@ pub fn routed_ffn_backward(
     let mut dx = Matrix::zeros(nt, d);
     let mut dwi = Matrix::zeros(w_i.rows, w_i.cols);
     let mut dwo = Matrix::zeros(w_o.rows, w_o.cols);
+    let mut scratch = BlockScratch::default();
     for gi in 0..routing.g {
         if let Some((tokens, dxg, dwi_g, dwo_g)) =
-            block_backward(gi, x, w_i, w_o, routing, dy)
+            block_backward(gi, x, w_i, w_o, routing, dy, &mut scratch)
         {
             scatter_block_grads(
                 &mut dx, &mut dwi, &mut dwo, gi, dg, &tokens, &dxg, &dwi_g, &dwo_g,
@@ -236,8 +322,9 @@ pub fn routed_ffn(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing) -> 
     let d = x.cols;
     assert_eq!(w_i.cols % routing.g, 0);
     let mut y = Matrix::zeros(nt, d);
+    let mut scratch = BlockScratch::default();
     for gi in 0..routing.g {
-        if let Some((tokens, yg)) = block_partial(gi, x, w_i, w_o, routing) {
+        if let Some((tokens, yg)) = block_partial(gi, x, w_i, w_o, routing, &mut scratch) {
             for (r, &t) in tokens.iter().enumerate() {
                 for (o, &v) in y.row_mut(t).iter_mut().zip(yg.row(r)) {
                     *o += v;
@@ -330,6 +417,58 @@ mod tests {
                     (gate_sum - ga as f32).abs() < 1e-4,
                     format!("gate sum {gate_sum}"),
                 )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn route_selection_matches_full_sort_reference() {
+        // The select_nth-based routing must pick the same winner set and
+        // produce the same gate bits as the original full-sort version.
+        check(25, |g| {
+            let nt = g.usize_in(1, 24);
+            let gg = *g.pick(&[2usize, 4, 8, 16]);
+            let ga = g.usize_in(1, gg);
+            let mut rng = g.rng().fork();
+            // Duplicate |score| values to exercise the index tie-break.
+            let mut scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+            for v in scores.data.iter_mut() {
+                *v = (*v * 4.0).round() / 4.0;
+            }
+            let fast = route(&scores, ga);
+            for t in 0..nt {
+                let row = scores.row(t);
+                let mut order: Vec<usize> = (0..gg).collect();
+                order.sort_by(|&a, &b| {
+                    row[b].abs().total_cmp(&row[a].abs()).then(a.cmp(&b))
+                });
+                let sel = &order[..ga];
+                let mx =
+                    sel.iter().map(|&j| row[j]).fold(f32::NEG_INFINITY, f32::max);
+                let mut denom = 0.0f32;
+                for &j in sel {
+                    denom += (row[j] - mx).exp();
+                }
+                for j in 0..gg {
+                    let want_mask = sel.contains(&j);
+                    prop_assert(
+                        fast.mask[t][j] == want_mask,
+                        format!("token {t} block {j}: mask mismatch"),
+                    )?;
+                    let want_gate = if want_mask {
+                        (row[j] - mx).exp() / denom.max(1e-30) * ga as f32
+                    } else {
+                        0.0
+                    };
+                    prop_assert(
+                        fast.gate[t][j].to_bits() == want_gate.to_bits(),
+                        format!(
+                            "token {t} block {j}: gate {} vs {}",
+                            fast.gate[t][j], want_gate
+                        ),
+                    )?;
+                }
             }
             Ok(())
         });

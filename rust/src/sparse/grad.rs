@@ -7,53 +7,63 @@
 //! attention entries and the activated FFN blocks, while codebooks are
 //! maintained by the DKM-style k-means refresh instead of SGD.
 //!
-//! Everything here is the *sequential cross-validation reference*; the
-//! rayon-parallel twins live in [`super::mha`] and must reproduce these
-//! results bit-for-bit (same per-row / per-block operation order — only
-//! the distribution of rows/blocks across workers differs).
+//! The projection backwards run on the blocked microkernel in
+//! [`super::matrix`]: `dX = dY @ W^T` maps onto [`matrix::gemm_nt_into`]
+//! (no transpose materialized), and `dW = X^T @ dY` onto a blocked
+//! transpose plus [`matrix::gemm_into`].  Per-output-element
+//! accumulation order is unchanged from the naive loops, so results are
+//! bit-identical to the sequential reference at any thread count.  The
+//! `*_ws` variants reuse a caller-owned [`Workspace`] so the training
+//! hot path stops allocating scratch per op.
 
 use super::csr::Csr;
-use super::matrix::Matrix;
+use super::matrix::{self, Matrix, Workspace};
 
 /// `dX` for `Y = X @ W` given `dY`: `dX = dY @ W^T`.
 ///
-/// `dy` is `[n, p]`, `w` is `[m, p]`-transposed-view (i.e. the forward
-/// weight `[m, p]`), result is `[n, m]`.
+/// `dy` is `[n, p]`, `w` is the forward weight `[m, p]`, result is
+/// `[n, m]`.  Runs on the NT microkernel — each output element is one
+/// ascending-order dot product, so no workspace is needed.
 pub fn matmul_dx(dy: &Matrix, w: &Matrix) -> Matrix {
-    assert_eq!(dy.cols, w.cols, "matmul_dx: dY/W inner dim mismatch");
-    let mut out = Matrix::zeros(dy.rows, w.rows);
-    for i in 0..dy.rows {
-        let dy_row = dy.row(i);
-        let out_row = out.row_mut(i);
-        for (k, o) in out_row.iter_mut().enumerate() {
-            *o = dy_row.iter().zip(w.row(k)).map(|(a, b)| a * b).sum();
-        }
-    }
+    let mut out = Matrix::default();
+    matmul_dx_into(dy, w, &mut out);
     out
+}
+
+/// [`matmul_dx`] into a reusable output matrix.
+pub fn matmul_dx_into(dy: &Matrix, w: &Matrix, out: &mut Matrix) {
+    assert_eq!(dy.cols, w.cols, "matmul_dx: dY/W inner dim mismatch");
+    out.reset_any(dy.rows, w.rows);
+    matrix::gemm_nt_into(
+        dy.rows, dy.cols, w.rows, &dy.data, &w.data, w.cols, 0, &mut out.data,
+    );
 }
 
 /// `dW` for `Y = X @ W` given `dY`: `dW = X^T @ dY`.
 ///
 /// `x` is `[n, m]`, `dy` is `[n, p]`, result is `[m, p]`.  Accumulation
 /// over the `n` rows happens in ascending row order for every output
-/// element, so the result is deterministic.
+/// element, so the result is deterministic at any thread count.
 pub fn matmul_dw(x: &Matrix, dy: &Matrix) -> Matrix {
-    assert_eq!(x.rows, dy.rows, "matmul_dw: X/dY row mismatch");
-    let mut out = Matrix::zeros(x.cols, dy.cols);
-    for i in 0..x.rows {
-        let x_row = x.row(i);
-        let dy_row = dy.row(i);
-        for (k, &a) in x_row.iter().enumerate() {
-            if a == 0.0 {
-                continue;
-            }
-            let out_row = out.row_mut(k);
-            for (o, &b) in out_row.iter_mut().zip(dy_row) {
-                *o += a * b;
-            }
-        }
-    }
+    matmul_dw_ws(x, dy, &mut Workspace::default())
+}
+
+/// [`matmul_dw`] reusing `ws` for the transpose + pack scratch.
+pub fn matmul_dw_ws(x: &Matrix, dy: &Matrix, ws: &mut Workspace) -> Matrix {
+    let mut out = Matrix::default();
+    matmul_dw_into(x, dy, &mut out, ws);
     out
+}
+
+/// [`matmul_dw`] into a reusable output matrix.
+pub fn matmul_dw_into(x: &Matrix, dy: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+    assert_eq!(x.rows, dy.rows, "matmul_dw: X/dY row mismatch");
+    out.reset_any(x.cols, dy.cols);
+    let Workspace { packb, tmp, .. } = ws;
+    matrix::transpose_slice(x.rows, x.cols, &x.data, tmp);
+    matrix::gemm_into(
+        x.cols, x.rows, dy.cols, tmp, &dy.data, dy.cols, 0, &mut out.data, packb,
+    );
 }
 
 /// Backward of both directions of `Y = X @ W` at once.
@@ -154,36 +164,77 @@ pub fn dense_attention_backward(
     causal: bool,
     dy: &Matrix,
 ) -> (Matrix, Matrix, Matrix) {
+    dense_attention_backward_ws(q, k, v, causal, dy, &mut Workspace::default())
+}
+
+/// [`dense_attention_backward`] reusing a caller-owned workspace: the
+/// O(n²) probability matrix and its gradient live in the workspace's
+/// matrix slots (dS overwrites dP in place), so the backward allocates
+/// only its returned gradients.  Bit-identical to the allocating path.
+pub fn dense_attention_backward_ws(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    causal: bool,
+    dy: &Matrix,
+    ws: &mut Workspace,
+) -> (Matrix, Matrix, Matrix) {
     assert_eq!(q.cols, k.cols, "Q/K dim mismatch");
     assert_eq!(k.rows, v.rows, "K/V row mismatch");
     assert_eq!(dy.rows, q.rows, "dY/Q row mismatch");
     assert_eq!(dy.cols, v.cols, "dY/V col mismatch");
     let scale = 1.0 / (q.cols as f32).sqrt();
-    let mut logits = q.matmul(&k.transpose()).map(|x| x * scale);
+    let (n, nk) = (q.rows, k.rows);
+    // P = softmax(scale * Q K^T) in ws.attn — NT kernel, no transposed
+    // K materialized.
+    ws.attn.reset_any(n, nk);
+    matrix::gemm_nt_into(n, q.cols, nk, &q.data, &k.data, k.cols, 0, &mut ws.attn.data);
+    for x in ws.attn.data.iter_mut() {
+        *x *= scale;
+    }
     if causal {
-        for i in 0..logits.rows {
-            for j in (i + 1)..logits.cols {
-                *logits.at_mut(i, j) = -1e30;
+        for i in 0..n {
+            for j in (i + 1)..nk {
+                *ws.attn.at_mut(i, j) = -1e30;
             }
         }
     }
-    let p = logits.softmax_rows();
-    // dV = P^T dY;  dP = dY V^T.
-    let dv = matmul_dw(&p, dy);
-    let dp = matmul_dx(dy, v);
-    // Softmax backward per row: dS = P ⊙ (dP - sum_j P dP).
-    let mut ds = Matrix::zeros(p.rows, p.cols);
-    for r in 0..p.rows {
-        let p_row = p.row(r);
-        let dp_row = dp.row(r);
-        let dot: f32 = p_row.iter().zip(dp_row).map(|(a, b)| a * b).sum();
-        for (o, (&pv, &g)) in ds.row_mut(r).iter_mut().zip(p_row.iter().zip(dp_row)) {
-            *o = pv * (g - dot);
+    ws.attn.softmax_rows_inplace();
+    // dV = P^T dY: transpose P into ws.tmp, then the packed kernel
+    // (field-split borrows keep P readable while packb packs dY).
+    let mut dv = Matrix::zeros(nk, dy.cols);
+    matrix::transpose_slice(n, nk, &ws.attn.data, &mut ws.tmp);
+    matrix::gemm_into(
+        nk, n, dy.cols, &ws.tmp, &dy.data, dy.cols, 0, &mut dv.data, &mut ws.packb,
+    );
+    // dP = dY V^T into ws.attn2, then softmax backward overwrites it in
+    // place with dS = P ⊙ (dP - sum_j P dP).
+    ws.attn2.reset_any(n, nk);
+    matrix::gemm_nt_into(n, dy.cols, nk, &dy.data, &v.data, v.cols, 0, &mut ws.attn2.data);
+    for r in 0..n {
+        let p_row = ws.attn.row(r);
+        let dp_row = ws.attn2.row_mut(r);
+        let dot: f32 = p_row.iter().zip(dp_row.iter()).map(|(a, b)| a * b).sum();
+        for (o, &pv) in dp_row.iter_mut().zip(p_row) {
+            *o = pv * (*o - dot);
         }
     }
     // dQ = scale * dS K;  dK = scale * dS^T Q.
-    let dq = ds.matmul(k).map(|x| x * scale);
-    let dk = matmul_dw(&ds, q).map(|x| x * scale);
+    let mut dq = Matrix::zeros(n, k.cols);
+    matrix::gemm_into(
+        n, nk, k.cols, &ws.attn2.data, &k.data, k.cols, 0, &mut dq.data, &mut ws.packb,
+    );
+    for x in dq.data.iter_mut() {
+        *x *= scale;
+    }
+    let mut dk = Matrix::zeros(nk, q.cols);
+    matrix::transpose_slice(n, nk, &ws.attn2.data, &mut ws.tmp);
+    matrix::gemm_into(
+        nk, n, q.cols, &ws.tmp, &q.data, q.cols, 0, &mut dk.data, &mut ws.packb,
+    );
+    for x in dk.data.iter_mut() {
+        *x *= scale;
+    }
     (dq, dk, dv)
 }
 
@@ -205,6 +256,52 @@ mod tests {
         assert_eq!(dx.data, vec![5.0, 6.0, 5.0, 6.0]);
         // dw = x^T dy = [[4],[6]]
         assert_eq!(dw.data, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_dw_matches_naive_rank1_accumulation_bits() {
+        // The transpose + blocked-GEMM path must reproduce the naive
+        // ascending-row rank-1 accumulation exactly.
+        fn naive_dw(x: &Matrix, dy: &Matrix) -> Matrix {
+            let mut out = Matrix::zeros(x.cols, dy.cols);
+            for i in 0..x.rows {
+                let x_row = x.row(i);
+                let dy_row = dy.row(i);
+                for (k, &a) in x_row.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let out_row = out.row_mut(k);
+                    for (o, &b) in out_row.iter_mut().zip(dy_row) {
+                        *o += a * b;
+                    }
+                }
+            }
+            out
+        }
+        let mut rng = Rng::new(42);
+        for (n, m, p) in [(5, 4, 3), (150, 70, 40), (33, 129, 65)] {
+            let x = Matrix::randn(n, m, 1.0, &mut rng);
+            let dy = Matrix::randn(n, p, 1.0, &mut rng);
+            assert_eq!(matmul_dw(&x, &dy), naive_dw(&x, &dy), "{n}x{m}x{p}");
+        }
+    }
+
+    #[test]
+    fn matmul_dx_ws_and_into_match_allocating_path() {
+        let mut rng = Rng::new(43);
+        let dy = Matrix::randn(21, 33, 1.0, &mut rng);
+        let w = Matrix::randn(17, 33, 1.0, &mut rng);
+        let want = matmul_dx(&dy, &w);
+        let mut out = Matrix::default();
+        matmul_dx_into(&dy, &w, &mut out);
+        assert_eq!(out, want);
+        let mut ws = Workspace::default();
+        let x = Matrix::randn(21, 17, 1.0, &mut rng);
+        let want_dw = matmul_dw(&x, &dy);
+        assert_eq!(matmul_dw_ws(&x, &dy, &mut ws), want_dw);
+        // Reuse the same workspace for a second, differently-shaped op.
+        assert_eq!(matmul_dw_ws(&dy, &x, &mut ws), matmul_dw(&dy, &x));
     }
 
     #[test]
@@ -232,6 +329,25 @@ mod tests {
         assert!(dq_s.max_abs_diff(&dq_d) < 1e-4, "{}", dq_s.max_abs_diff(&dq_d));
         assert!(dk_s.max_abs_diff(&dk_d) < 1e-4, "{}", dk_s.max_abs_diff(&dk_d));
         assert!(dv_s.max_abs_diff(&dv_d) < 1e-4, "{}", dv_s.max_abs_diff(&dv_d));
+    }
+
+    #[test]
+    fn dense_backward_ws_matches_allocating_path_bits() {
+        let mut rng = Rng::new(44);
+        let (n, d) = (12, 8);
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let dy = Matrix::randn(n, d, 1.0, &mut rng);
+        let mut ws = Workspace::default();
+        for causal in [false, true] {
+            let (dq, dk, dv) = dense_attention_backward(&q, &k, &v, causal, &dy);
+            let (dq2, dk2, dv2) =
+                dense_attention_backward_ws(&q, &k, &v, causal, &dy, &mut ws);
+            assert_eq!(dq, dq2, "causal={causal}");
+            assert_eq!(dk, dk2, "causal={causal}");
+            assert_eq!(dv, dv2, "causal={causal}");
+        }
     }
 
     #[test]

@@ -1,21 +1,64 @@
-//! Dense row-major f32 matrix — the substrate's working representation.
+//! Dense row-major f32 matrix — the substrate's working representation —
+//! plus the blocked GEMM microkernel the training hot paths run on.
 //!
-//! `matmul` parallelizes over output rows once the product is large
-//! enough to amortize the fork: every output row is produced by the same
-//! per-row operation order as the sequential loop, so results are
-//! bit-identical at any thread count (the property all substrate
-//! parallelism maintains).
+//! ## The microkernel
+//!
+//! [`gemm_into`] computes `C = A @ B` with the B operand packed once per
+//! call into column panels of [`NR`] floats, then tiled over (M, N, K)
+//! with [`MC`]-row × [`KC`]-deep blocks so one panel tile stays cache
+//! resident while a row block streams over it.  The per-output-element
+//! accumulation order is exactly the naive kernel's — ascending `k`,
+//! zero `a` terms skipped — so the blocked, rayon-parallel product is
+//! bit-identical to a sequential naive loop at any thread count (the
+//! property all substrate parallelism maintains).  [`gemm_nt_into`]
+//! (`C = A @ B^T`) keeps each output element a single ascending-order
+//! dot product for the same reason.
+//!
+//! Both kernels address B as `row * stride + column offset`, so callers
+//! can multiply against a column block or row block of a larger matrix
+//! (the routed FFN's `W_I[g]` / `W_O[g]`) without materializing the
+//! slice — the packing walks the block in place.
+//!
+//! ## Workspaces
+//!
+//! [`Workspace`] owns the pack/transpose scratch; the `*_into` / `*_ws`
+//! variants reuse it across calls so steady-state training stops
+//! allocating fresh buffers per GEMM.  Workspace contents never affect
+//! results: a fresh and a reused workspace produce identical bits.
 
 use rayon::prelude::*;
 
 use crate::util::rng::Rng;
 
-/// Below this many multiply-adds `matmul` stays sequential (forking the
+/// Below this many multiply-adds the GEMMs stay sequential (forking the
 /// rayon pool costs more than the product itself).
 const PAR_MATMUL_FLOPS: usize = 1 << 16;
 
+/// Packed-B panel width (columns), the unit of N tiling.
+const NR: usize = 64;
+/// K (depth) tile: one `KC x NR` panel tile is 32 KiB — comfortably
+/// cache-resident while a row block streams over it.
+const KC: usize = 128;
+/// Rows of C per cache block and per parallel task.
+const MC: usize = 32;
+/// B rows per block of the NT kernel (reused across a C row block).
+const NJ: usize = 32;
+
+/// Reusable scratch for the blocked GEMM kernels: the packed-B buffer,
+/// a transpose scratch, and two matrix slots for O(n²) attention
+/// transients (logits/probabilities and their gradients).  Contents are
+/// meaningless between calls — any workspace, including a fresh one,
+/// produces identical results.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub(crate) packb: Vec<f32>,
+    pub(crate) tmp: Vec<f32>,
+    pub(crate) attn: Matrix,
+    pub(crate) attn2: Matrix,
+}
+
 /// Dense row-major matrix.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -35,6 +78,26 @@ impl Matrix {
     pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
         let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
         Matrix { rows, cols, data }
+    }
+
+    /// Reshape to `rows x cols`, reusing the allocation; contents zeroed.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.reset_any(rows, cols);
+        self.data.fill(0.0);
+    }
+
+    /// Reshape to `rows x cols`, reusing the allocation; contents
+    /// *unspecified* when the element count is unchanged.  For consumers
+    /// that overwrite every element anyway (the GEMM kernels zero-fill
+    /// their output; gathers copy every row), this skips the redundant
+    /// memset the steady-state hot path would otherwise pay per op.
+    pub(crate) fn reset_any(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        if self.data.len() != rows * cols {
+            self.data.clear();
+            self.data.resize(rows * cols, 0.0);
+        }
     }
 
     #[inline]
@@ -58,42 +121,37 @@ impl Matrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// `self @ other` — naive GEMM, row-parallel above
-    /// [`PAR_MATMUL_FLOPS`].  Per-row operation order is identical on
-    /// both paths, so the output is the same bits either way.
+    /// `self @ other` through the blocked microkernel, allocating both
+    /// the output and a transient workspace.  Hot paths should prefer
+    /// [`Self::matmul_ws`] / [`Self::matmul_into`] with a reused
+    /// [`Workspace`]; the result is bit-identical either way.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Matrix::zeros(self.rows, other.cols);
-        if out.cols == 0 {
-            return out;
-        }
-        if self.rows * self.cols * other.cols >= PAR_MATMUL_FLOPS {
-            out.data
-                .par_chunks_mut(other.cols)
-                .enumerate()
-                .for_each(|(i, out_row)| {
-                    Self::matmul_row(self.row(i), other, out_row);
-                });
-        } else {
-            for i in 0..self.rows {
-                Self::matmul_row(self.row(i), other, out.row_mut(i));
-            }
-        }
+        self.matmul_ws(other, &mut Workspace::default())
+    }
+
+    /// `self @ other`, reusing `ws` for the packed-B panels.
+    pub fn matmul_ws(&self, other: &Matrix, ws: &mut Workspace) -> Matrix {
+        let mut out = Matrix::default();
+        self.matmul_into(other, &mut out, ws);
         out
     }
 
-    /// One output row of `matmul`: `out_row += a_row @ other`.
-    #[inline]
-    fn matmul_row(a_row: &[f32], other: &Matrix, out_row: &mut [f32]) {
-        for (k, &a) in a_row.iter().enumerate() {
-            if a == 0.0 {
-                continue;
-            }
-            let b_row = other.row(k);
-            for (o, &b) in out_row.iter_mut().zip(b_row) {
-                *o += a * b;
-            }
-        }
+    /// `out = self @ other`, reusing both the output allocation and the
+    /// workspace pack buffer.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        out.reset_any(self.rows, other.cols);
+        gemm_into(
+            self.rows,
+            self.cols,
+            other.cols,
+            &self.data,
+            &other.data,
+            other.cols,
+            0,
+            &mut out.data,
+            &mut ws.packb,
+        );
     }
 
     /// Elementwise sum (residual connections in the native model).
@@ -119,13 +177,16 @@ impl Matrix {
     }
 
     pub fn transpose(&self) -> Matrix {
-        let mut out = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                *out.at_mut(c, r) = self.at(r, c);
-            }
-        }
+        let mut out = Matrix::default();
+        self.transpose_into(&mut out);
         out
+    }
+
+    /// Blocked transpose into a reusable output matrix.
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.rows = self.cols;
+        out.cols = self.rows;
+        transpose_slice(self.rows, self.cols, &self.data, &mut out.data);
     }
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
@@ -157,8 +218,15 @@ impl Matrix {
     /// Row-wise softmax (dense attention baseline).
     pub fn softmax_rows(&self) -> Matrix {
         let mut out = self.clone();
+        out.softmax_rows_inplace();
+        out
+    }
+
+    /// Row-wise softmax in place (same per-row operation order as
+    /// [`Self::softmax_rows`]).
+    pub fn softmax_rows_inplace(&mut self) {
         for r in 0..self.rows {
-            let row = out.row_mut(r);
+            let row = self.row_mut(r);
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let mut sum = 0.0;
             for x in row.iter_mut() {
@@ -169,7 +237,6 @@ impl Matrix {
                 *x /= sum.max(1e-30);
             }
         }
-        out
     }
 
     pub fn bytes(&self) -> usize {
@@ -177,9 +244,242 @@ impl Matrix {
     }
 }
 
+/// Pack columns `[b_col0, b_col0 + n)` of the row-major `b` (`k` rows,
+/// row stride `b_stride`) into column panels of [`NR`] floats: panel `p`
+/// holds rows `0..k` of its column range, row-major within the panel, so
+/// the microkernel streams each `KC x NR` tile contiguously.
+fn pack_b(k: usize, n: usize, b: &[f32], b_stride: usize, b_col0: usize, pack: &mut Vec<f32>) {
+    pack.clear();
+    pack.reserve(k * n);
+    let mut p0 = 0;
+    while p0 < n {
+        let w = NR.min(n - p0);
+        for kk in 0..k {
+            let off = kk * b_stride + b_col0 + p0;
+            pack.extend_from_slice(&b[off..off + w]);
+        }
+        p0 += w;
+    }
+}
+
+/// The per-row-block kernel of [`gemm_into`]: accumulate rows
+/// `[row0, row0 + rows)` of C against the packed B panels.  The K-block
+/// loop is outermost and ascending, and within a block `kk` ascends, so
+/// every output element accumulates in plain ascending-`k` order —
+/// identical to the naive loop, independent of tiling.
+fn gemm_rows(
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    pack: &[f32],
+    out: &mut [f32],
+) {
+    let mut kb = 0;
+    while kb < k {
+        let kw = KC.min(k - kb);
+        let mut p0 = 0;
+        while p0 < n {
+            let w = NR.min(n - p0);
+            // Panel p0 starts after p0 full columns of k rows each.
+            let panel = &pack[p0 * k..p0 * k + k * w];
+            for i in 0..rows {
+                let a_row = &a[(row0 + i) * k..(row0 + i) * k + k];
+                let seg = &mut out[i * n + p0..i * n + p0 + w];
+                for kk in kb..kb + kw {
+                    let av = a_row[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &panel[kk * w..kk * w + w];
+                    for (o, &bv) in seg.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            p0 += w;
+        }
+        kb += kw;
+    }
+}
+
+/// Blocked GEMM: `out[m x n] = a[m x k] @ B`, where B is the column
+/// block `[b_col0, b_col0 + n)` of a row-major buffer with row stride
+/// `b_stride`.  `out` is fully overwritten.  Row-parallel above
+/// [`PAR_MATMUL_FLOPS`]; bit-identical at any thread count (see the
+/// module docs).  `pack` is the reusable packed-B scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    b_stride: usize,
+    b_col0: usize,
+    out: &mut [f32],
+    pack: &mut Vec<f32>,
+) {
+    assert!(a.len() >= m * k, "gemm: A too small");
+    assert_eq!(out.len(), m * n, "gemm: C shape mismatch");
+    if k > 0 && n > 0 {
+        assert!(
+            (k - 1) * b_stride + b_col0 + n <= b.len(),
+            "gemm: B block out of bounds"
+        );
+    }
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    pack_b(k, n, b, b_stride, b_col0, pack);
+    let pack: &[f32] = pack;
+    if m * k * n >= PAR_MATMUL_FLOPS {
+        out.par_chunks_mut(MC * n)
+            .enumerate()
+            .for_each(|(ci, chunk)| {
+                gemm_rows(ci * MC, chunk.len() / n, k, n, a, pack, chunk);
+            });
+    } else {
+        gemm_rows(0, m, k, n, a, pack, out);
+    }
+}
+
+/// The per-row-block kernel of [`gemm_nt_into`]: each output element is
+/// one ascending-order dot product, with B processed in [`NJ`]-row
+/// blocks so a block is reused across the chunk's rows.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nt_rows(
+    row0: usize,
+    rows: usize,
+    kdim: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    b_stride: usize,
+    b_col0: usize,
+    out: &mut [f32],
+) {
+    let mut j0 = 0;
+    while j0 < n {
+        let jw = NJ.min(n - j0);
+        for i in 0..rows {
+            let a_row = &a[(row0 + i) * kdim..(row0 + i) * kdim + kdim];
+            for j in j0..j0 + jw {
+                let off = j * b_stride + b_col0;
+                let b_row = &b[off..off + kdim];
+                let mut acc = 0.0f32;
+                for (x, y) in a_row.iter().zip(b_row) {
+                    acc += x * y;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        j0 += jw;
+    }
+}
+
+/// Blocked `out[m x n] = a[m x kdim] @ B^T`, where row `j` of B lives at
+/// `b[j * b_stride + b_col0 ..][..kdim]` — i.e. B is a row or column
+/// block of a larger row-major matrix, multiplied without materializing
+/// the transpose.  `out` is fully overwritten; row-parallel above
+/// [`PAR_MATMUL_FLOPS`] and bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_into(
+    m: usize,
+    kdim: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    b_stride: usize,
+    b_col0: usize,
+    out: &mut [f32],
+) {
+    assert!(a.len() >= m * kdim, "gemm_nt: A too small");
+    assert_eq!(out.len(), m * n, "gemm_nt: C shape mismatch");
+    if n > 0 && kdim > 0 {
+        assert!(
+            (n - 1) * b_stride + b_col0 + kdim <= b.len(),
+            "gemm_nt: B block out of bounds"
+        );
+    }
+    out.fill(0.0);
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    if m * kdim * n >= PAR_MATMUL_FLOPS {
+        out.par_chunks_mut(MC * n)
+            .enumerate()
+            .for_each(|(ci, chunk)| {
+                gemm_nt_rows(
+                    ci * MC,
+                    chunk.len() / n,
+                    kdim,
+                    n,
+                    a,
+                    b,
+                    b_stride,
+                    b_col0,
+                    chunk,
+                );
+            });
+    } else {
+        gemm_nt_rows(0, m, kdim, n, a, b, b_stride, b_col0, out);
+    }
+}
+
+/// Blocked transpose of `src` (`rows x cols`, row-major) into `dst`
+/// (`cols x rows`), reusing the destination allocation.
+pub(crate) fn transpose_slice(rows: usize, cols: usize, src: &[f32], dst: &mut Vec<f32>) {
+    assert_eq!(src.len(), rows * cols, "transpose shape mismatch");
+    // Every element is overwritten below; only grow/shrink zero-fills.
+    if dst.len() != rows * cols {
+        dst.clear();
+        dst.resize(rows * cols, 0.0);
+    }
+    const TB: usize = 32;
+    let mut r0 = 0;
+    while r0 < rows {
+        let rl = (r0 + TB).min(rows);
+        let mut c0 = 0;
+        while c0 < cols {
+            let cl = (c0 + TB).min(cols);
+            for r in r0..rl {
+                for c in c0..cl {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+            c0 = cl;
+        }
+        r0 = rl;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The pre-microkernel reference: plain triple loop, ascending k,
+    /// zero-`a` terms skipped — the order the blocked kernel must match
+    /// bit for bit.
+    fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for (k, &av) in a.row(i).iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let orow = out.row_mut(i);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
 
     #[test]
     fn matmul_small() {
@@ -201,10 +501,105 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_matches_naive_bits_across_tile_boundaries() {
+        // Shapes straddling the MC/KC/NR tile edges, plus scattered
+        // zeros to exercise the skip path.
+        let mut rng = Rng::new(3);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (MC - 1, KC - 1, NR - 1),
+            (MC + 3, KC + 5, NR + 7),
+            (2 * MC + 1, 2 * KC + 3, 2 * NR + 9),
+            (7, 300, 90),
+        ] {
+            let mut a = Matrix::randn(m, k, 1.0, &mut rng);
+            for (i, v) in a.data.iter_mut().enumerate() {
+                if i % 7 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = matmul_naive(&a, &b);
+            assert_eq!(got, want, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_column_block_matches_materialized_slice() {
+        // Multiplying against a column block of B in place must equal
+        // multiplying against a copied-out slice.
+        let mut rng = Rng::new(4);
+        let (m, k, n_full, col0, n) = (9, 37, 50, 12, 20);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n_full, 1.0, &mut rng);
+        let mut b_slice = Matrix::zeros(k, n);
+        for r in 0..k {
+            b_slice.row_mut(r).copy_from_slice(&b.row(r)[col0..col0 + n]);
+        }
+        let want = a.matmul(&b_slice);
+        let mut out = vec![0.0f32; m * n];
+        let mut pack = Vec::new();
+        gemm_into(m, k, n, &a.data, &b.data, b.cols, col0, &mut out, &mut pack);
+        assert_eq!(out, want.data);
+    }
+
+    #[test]
+    fn gemm_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(5);
+        for (m, kd, n) in [(3, 5, 4), (40, 70, 45), (65, 129, 33)] {
+            let a = Matrix::randn(m, kd, 1.0, &mut rng);
+            let b = Matrix::randn(n, kd, 1.0, &mut rng);
+            let want = a.matmul(&b.transpose());
+            let mut out = vec![0.0f32; m * n];
+            gemm_nt_into(m, kd, n, &a.data, &b.data, b.cols, 0, &mut out);
+            let got = Matrix::from_vec(m, n, out);
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-5, "{m}x{kd}x{n}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffers_and_matches_matmul() {
+        let mut rng = Rng::new(6);
+        let mut ws = Workspace::default();
+        let mut out = Matrix::default();
+        for (m, k, n) in [(20, 30, 40), (5, 8, 3), (33, 65, 70)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            a.matmul_into(&b, &mut out, &mut ws);
+            assert_eq!(out, a.matmul(&b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
     fn transpose_involution() {
         let mut rng = Rng::new(1);
         let a = Matrix::randn(3, 5, 1.0, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_elementwise() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(67, 41, 1.0, &mut rng);
+        let t = a.transpose();
+        assert_eq!((t.rows, t.cols), (41, 67));
+        for r in 0..a.rows {
+            for c in 0..a.cols {
+                assert_eq!(t.at(c, r), a.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn reset_reuses_allocation() {
+        let mut m = Matrix::zeros(4, 4);
+        m.data[0] = 9.0;
+        m.reset(2, 3);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.len(), 6);
     }
 
     #[test]

@@ -262,10 +262,13 @@ pub fn routed_ffn_par(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing)
     let nt = x.rows;
     let d = x.cols;
     assert_eq!(w_i.cols % routing.g, 0);
-    // Fan out: one task per block.
+    // Fan out: one task per block, each reusing a per-worker
+    // [`bspmv::BlockScratch`] (scratch contents never affect results).
     let partials: Vec<Option<(Vec<usize>, Matrix)>> = (0..routing.g)
         .into_par_iter()
-        .map(|gi| bspmv::block_partial(gi, x, w_i, w_o, routing))
+        .map_init(bspmv::BlockScratch::default, |scratch, gi| {
+            bspmv::block_partial(gi, x, w_i, w_o, routing, scratch)
+        })
         .collect();
     // Reduce: scatter-add partials in block order (cheap: O(active · d)).
     let mut y = Matrix::zeros(nt, d);
@@ -301,7 +304,9 @@ pub fn routed_ffn_backward_par(
     let dg = w_i.cols / routing.g;
     let partials: Vec<Option<(Vec<usize>, Matrix, Matrix, Matrix)>> = (0..routing.g)
         .into_par_iter()
-        .map(|gi| bspmv::block_backward(gi, x, w_i, w_o, routing, dy))
+        .map_init(bspmv::BlockScratch::default, |scratch, gi| {
+            bspmv::block_backward(gi, x, w_i, w_o, routing, dy, scratch)
+        })
         .collect();
     let mut dx = Matrix::zeros(nt, d);
     let mut dwi = Matrix::zeros(w_i.rows, w_i.cols);

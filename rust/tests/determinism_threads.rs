@@ -1,0 +1,118 @@
+//! Thread-count determinism of the native backend's item-parallel step.
+//!
+//! PR "hot-path overhaul" fans `train_step` / `eval_loss` out over batch
+//! items and rebuilds the GEMMs on a blocked microkernel; both must stay
+//! bit-identical at any rayon pool size.  These tests run the same
+//! spt-nano fine-tune under dedicated pools of 1, 2, and 8 threads
+//! (deliberately oversubscribed relative to small CI machines) and
+//! assert the losses, eval losses, parameters, and AdamW moments agree
+//! to the bit.  CI additionally runs this file under two
+//! `RAYON_NUM_THREADS` settings to cover the global-pool path.
+
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::{Backend, NativeBackend, TrainState};
+use spt::data::SyntheticCorpus;
+
+const STEPS: usize = 3;
+
+fn rc(mode: Mode) -> RunConfig {
+    RunConfig {
+        model: "spt-nano".into(),
+        mode,
+        batch: 8,
+        seq: 32,
+        seed: 123,
+        lr: 5e-3,
+        eval_every: 0,
+        codebook_refresh_every: 0,
+        ..RunConfig::default()
+    }
+}
+
+fn lm_batch(rc: &RunConfig, backend: &NativeBackend) -> (Vec<i32>, Vec<i32>) {
+    let (batch, seq) = backend.workload(rc).unwrap();
+    let vocab = backend.vocab(rc).unwrap();
+    let mut corpus = SyntheticCorpus::new(vocab, 4, 0.85, rc.seed);
+    let mut tokens = Vec::new();
+    let mut targets = Vec::new();
+    for _ in 0..batch {
+        let (x, y) = corpus.lm_pair(seq);
+        tokens.extend(x.iter().map(|&t| t as i32));
+        targets.extend(y.iter().map(|&t| t as i32));
+    }
+    (tokens, targets)
+}
+
+/// Run `STEPS` train steps plus one eval under a dedicated pool of
+/// `threads` workers; returns the loss bit patterns and the final state.
+fn run_under_pool(threads: usize, mode: Mode) -> (Vec<u32>, TrainState) {
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("pool");
+    pool.install(|| {
+        let backend = NativeBackend::new();
+        let cfg = rc(mode);
+        let (tokens, targets) = lm_batch(&cfg, &backend);
+        let mut state = backend.init_state(&cfg).unwrap();
+        let mut bits = Vec::with_capacity(STEPS + 1);
+        for _ in 0..STEPS {
+            let loss = backend
+                .train_step(&cfg, &mut state, &tokens, &targets)
+                .unwrap();
+            assert!(loss.is_finite(), "{mode:?}: non-finite loss");
+            bits.push(loss.to_bits());
+        }
+        let eval = backend.eval_loss(&cfg, &state, &tokens, &targets).unwrap();
+        bits.push(eval.to_bits());
+        (bits, state)
+    })
+}
+
+#[test]
+fn train_step_bit_identical_across_pool_sizes() {
+    for mode in Mode::ALL {
+        let (bits1, state1) = run_under_pool(1, mode);
+        for threads in [2usize, 8] {
+            let (bits_t, state_t) = run_under_pool(threads, mode);
+            assert_eq!(
+                bits1, bits_t,
+                "{mode:?}: losses diverge between pools of 1 and {threads}"
+            );
+            assert_eq!(
+                state1.params, state_t.params,
+                "{mode:?}: params diverge between pools of 1 and {threads}"
+            );
+            assert_eq!(
+                state1.m, state_t.m,
+                "{mode:?}: AdamW m diverges between pools of 1 and {threads}"
+            );
+            assert_eq!(
+                state1.v, state_t.v,
+                "{mode:?}: AdamW v diverges between pools of 1 and {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn global_pool_matches_dedicated_single_thread_pool() {
+    // Whatever RAYON_NUM_THREADS CI sets for the global pool, results
+    // must equal the dedicated 1-thread pool's.
+    let backend = NativeBackend::new();
+    let cfg = rc(Mode::Spt);
+    let (tokens, targets) = lm_batch(&cfg, &backend);
+    let mut state = backend.init_state(&cfg).unwrap();
+    let mut global_bits = Vec::new();
+    for _ in 0..STEPS {
+        global_bits.push(
+            backend
+                .train_step(&cfg, &mut state, &tokens, &targets)
+                .unwrap()
+                .to_bits(),
+        );
+    }
+    let (reference, ref_state) = run_under_pool(1, Mode::Spt);
+    assert_eq!(&reference[..STEPS], &global_bits[..]);
+    assert_eq!(ref_state.params, state.params);
+}
