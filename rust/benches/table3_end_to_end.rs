@@ -84,9 +84,11 @@ fn thread_scaling_table() {
 /// (mode × threads × ms/step) so the perf trajectory is tracked across
 /// PRs.
 fn fine_tune_step_table() {
-    // spt-nano keeps the default run fast; the perf-tracking target is
-    // SPT_TABLE3_NATIVE_MODEL=spt-mini-64 (GEMM-bound, same block), and
-    // spt-tiny measures at the paper-surrogate scale.
+    // spt-nano keeps the default run fast; the perf-tracking targets are
+    // SPT_TABLE3_NATIVE_MODEL=spt-mini-64 (GEMM-bound, same block) and
+    // spt-mini-64-l4 (the same block stacked 4 layers deep — the
+    // multi-layer train-step path), and spt-tiny measures at the
+    // paper-surrogate scale.
     let model = std::env::var("SPT_TABLE3_NATIVE_MODEL")
         .unwrap_or_else(|_| "spt-nano".into());
     let backend = NativeBackend::new();

@@ -98,6 +98,16 @@ pub fn models() -> Vec<ModelConfig> {
             vocab_size: 2048,
             max_seq: 128,
         },
+        // Depth-bearing bench config: the GEMM-bound mini-64 block
+        // stacked 4 layers deep, for the native multi-layer train-step
+        // benches (`SPT_TABLE3_NATIVE_MODEL=spt-mini-64-l4`).
+        ModelConfig {
+            name: "spt-mini-64-l4".into(),
+            block: block("mini-64").unwrap(),
+            n_layers: 4,
+            vocab_size: 2048,
+            max_seq: 128,
+        },
         // Test-scale config for the native backend's fast paths (tests,
         // doc examples); small enough that a full fwd+bwd step is
         // milliseconds on one core.
@@ -105,6 +115,16 @@ pub fn models() -> Vec<ModelConfig> {
             name: "spt-nano".into(),
             block: block("mini-64").unwrap(),
             n_layers: 1,
+            vocab_size: 512,
+            max_seq: 64,
+        },
+        // spt-nano stacked two layers deep: the smallest model that
+        // exercises the multi-layer native path (inter-layer gradient
+        // flow, per-layer codebooks, depth-aware checkpoints) in tests.
+        ModelConfig {
+            name: "spt-nano-l2".into(),
+            block: block("mini-64").unwrap(),
+            n_layers: 2,
             vocab_size: 512,
             max_seq: 64,
         },
@@ -173,5 +193,21 @@ mod tests {
     fn unknown_names_error() {
         assert!(block("opt-9999").is_err());
         assert!(model("nope").is_err());
+    }
+
+    #[test]
+    fn depth_variants_share_their_base_shape() {
+        // The -l2/-l4 presets differ from their base only in depth, so
+        // loss curves compare apples to apples across depths.
+        let nano = model("spt-nano").unwrap();
+        let nano2 = model("spt-nano-l2").unwrap();
+        assert_eq!(nano.block, nano2.block);
+        assert_eq!(nano.vocab_size, nano2.vocab_size);
+        assert_eq!(nano.max_seq, nano2.max_seq);
+        assert_eq!(nano2.n_layers, 2);
+        let mini = model("spt-mini-64").unwrap();
+        let mini4 = model("spt-mini-64-l4").unwrap();
+        assert_eq!(mini.block, mini4.block);
+        assert_eq!(mini4.n_layers, 4);
     }
 }

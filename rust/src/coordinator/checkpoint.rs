@@ -7,6 +7,12 @@
 //! per leaf: u8 dtype | u32 ndim | u64 dims... | u64 byte_len | payload
 //! repeated for: params, m, v, then step (i32)
 //! ```
+//!
+//! The format is leaf-count generic, so the native backend's multi-layer
+//! states (one leaf group per transformer layer) round-trip without any
+//! format changes — `tests/integration_native_train.rs` asserts a
+//! mid-run resume on an `n_layers = 2` preset is bit-identical to an
+//! uninterrupted run.
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -1,39 +1,56 @@
 //! The native training backend: end-to-end fine-tuning on the rust
 //! sparse substrate, no PJRT toolchain or AOT artifacts required.
 //!
-//! The model is one transformer block with tied machinery to the paper's
-//! three tuning modes:
+//! The model is the preset's full `n_layers`-deep pre-norm residual
+//! stack, mirroring the L2 JAX definition's block structure
+//! (`python/compile/model.py::model_forward`): token + learned position
+//! embeddings, then per layer
 //!
-//! * **full** — embeddings + dense causal MHA + dense ReLU FFN + LM
-//!   head, everything trained;
+//! ```text
+//! x   = x + MHA(LN(x; ln1))        (attention sub-block)
+//! x   = x + FFN(LN(x; ln2))        (feed-forward sub-block)
+//! ```
+//!
+//! followed by a final layer norm and the readout.  One deliberate
+//! deviation from the JAX model (which carries a separate `['head']`
+//! leaf, rotary embeddings on some blocks, and a router load-balance
+//! aux loss): the native readout is **tied to the token embedding**
+//! (`logits = LN(x; lnf) · E^T`), so the tied leaf doubles as the task
+//! head and trains in every mode.  Per tuning mode:
+//!
+//! * **full** — embeddings + every layer's dense causal MHA, dense ReLU
+//!   FFN, and layer norms, everything trained;
 //! * **lora** — the backbone frozen, rank-r adapters on the six
-//!   projections (q/k/v/o and both FFN matrices) plus the LM head
-//!   trained;
+//!   projections (q/k/v/o and both FFN matrices) of *every layer* plus
+//!   the tied embedding/readout trained;
 //! * **spt**  — LoRA's trainable set, with the *execution* swapped for
-//!   the sparse substrate: PQ + bucket-sort top-L sparse attention
-//!   ([`MultiHeadSparseAttention`]) and the routed FFN over BSpMV
-//!   ([`mha::routed_ffn_par`]).  Gradients flow only through kept
+//!   the sparse substrate per layer: PQ + bucket-sort top-L sparse
+//!   attention ([`MultiHeadSparseAttention`]) and the routed FFN over
+//!   BSpMV ([`mha::routed_ffn_par`]).  Gradients flow only through kept
 //!   attention entries and activated FFN blocks
-//!   ([`crate::sparse::grad`]); PQ codebooks are maintained by the DKM
-//!   k-means refresh, and the router/top-G' selection is treated as
-//!   non-differentiable, as in the paper's kernels.
-//!
-//! Deliberate simplifications (tracked in ROADMAP.md): a single block
-//! regardless of the preset's `n_layers` (batched multi-layer training
-//! is backlog), no layer norm, and an untied LM head that stays
-//! trainable in every mode (the task head).
+//!   ([`crate::sparse::grad`]); each layer owns its per-head PQ
+//!   codebooks, maintained by the DKM k-means refresh, and the
+//!   router/top-G' selection is treated as non-differentiable, as in
+//!   the paper's kernels.
 //!
 //! ## Parallelism and determinism
 //!
-//! `train_step` / `eval_loss` fan out over the microbatch items: each
-//! item runs its forward + backward into a private [`GradAcc`] (with a
-//! per-worker GEMM [`Workspace`] reused across the item's ops), and the
-//! per-item gradients and losses are then reduced in ascending item
-//! order.  Together with the substrate's own guarantees (every parallel
-//! GEMM/head/block path reduces in a fixed order) this keeps the whole
-//! step deterministic at any rayon pool size — losses, parameters, and
-//! AdamW moments are bit-identical whether the pool has 1 or 64 threads,
-//! which the checkpoint-resume and thread-determinism tests rely on.
+//! `train_step` fans out over *fixed-size item chunks* (size
+//! [`GRAD_CHUNK`], independent of the thread count): each chunk runs its
+//! items' forwards + backwards sequentially into one shared [`GradAcc`]
+//! (with a per-worker GEMM [`Workspace`] reused across ops), and the
+//! per-chunk gradients and losses are then reduced in ascending chunk
+//! order.  Chunking keeps gradient memory at O(batch / GRAD_CHUNK)
+//! accumulators instead of O(batch) — which matters now that each
+//! accumulator spans every layer's leaves — while the fixed chunk
+//! boundaries keep the floating-point reduction tree identical at any
+//! rayon pool size.  Together with the substrate's own guarantees
+//! (every parallel GEMM/head/block path reduces in a fixed order) this
+//! keeps the whole step deterministic: losses, parameters, and AdamW
+//! moments are bit-identical whether the pool has 1 or 64 threads,
+//! which the checkpoint-resume and thread-determinism tests rely on —
+//! including the `n_layers >= 2` presets (`spt-nano-l2`,
+//! `spt-mini-64-l4`).
 
 use std::sync::{Arc, Mutex};
 
@@ -51,6 +68,11 @@ use crate::sparse::mha::{self, MultiHeadSparseAttention};
 use crate::sparse::pq::{self, Codebooks};
 use crate::sparse::{Csr, Matrix, Workspace};
 use crate::util::rng::Rng;
+
+/// Items per gradient-accumulation chunk in `train_step`.  Fixed (never
+/// derived from the pool size) so the gradient reduction tree — and so
+/// every result bit — is the same at any thread count.
+const GRAD_CHUNK: usize = 4;
 
 /// The always-available backend (see module docs).
 #[derive(Debug, Default)]
@@ -102,8 +124,8 @@ struct LoraIx {
     b: usize,
 }
 
-/// Slots of the six adapted projections, indexing `Layout::lora` /
-/// `Weights::lora`.
+/// Slots of the six adapted projections, indexing `LayerIx::lora` /
+/// `LayerWeights::lora`.
 const SLOT_Q: usize = 0;
 const SLOT_K: usize = 1;
 const SLOT_V: usize = 2;
@@ -111,8 +133,28 @@ const SLOT_O: usize = 3;
 const SLOT_WI: usize = 4;
 const SLOT_WO2: usize = 5;
 
+/// Leaf indices of one transformer layer.
+#[derive(Debug, Clone)]
+struct LayerIx {
+    ln1_scale: usize,
+    ln1_bias: usize,
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo: usize,
+    ln2_scale: usize,
+    ln2_bias: usize,
+    wi: usize,
+    wo2: usize,
+    lora: Option<[LoraIx; 6]>,
+    router: Option<usize>,
+    pq_cb: Option<usize>,
+}
+
 /// Static description of the native model: dimensions plus the index of
-/// every leaf in the [`TrainState`] vectors.
+/// every leaf in the [`TrainState`] vectors.  Shared leaves (tied
+/// embedding/readout, positions, final layer norm) come first, then one
+/// [`LayerIx`] group per layer.
 #[derive(Debug, Clone)]
 struct Layout {
     mode: Mode,
@@ -127,20 +169,26 @@ struct Layout {
     pq_dsub: usize,
     groups: usize,
     sparsity: Sparsity,
+    /// Token embedding, tied to the readout (`logits = xf · tok^T`).
     tok: usize,
     pos: usize,
-    wq: usize,
-    wk: usize,
-    wv: usize,
-    wo: usize,
-    wi: usize,
-    wo2: usize,
-    wout: usize,
-    lora: Option<[LoraIx; 6]>,
-    router: Option<usize>,
-    pq_cb: Option<usize>,
+    lnf_scale: usize,
+    lnf_bias: usize,
+    layers: Vec<LayerIx>,
     shapes: Vec<(usize, usize)>,
     paths: Vec<String>,
+    inits: Vec<LeafInit>,
+}
+
+/// How a leaf is initialized (recorded at registration time so
+/// `init_state` stays a single deterministic pass over the leaves).
+#[derive(Debug, Clone, Copy)]
+enum LeafInit {
+    /// `N(0, scale^2)` draws from the init RNG stream.
+    Normal(f32),
+    /// Constant fill, consuming no RNG draws (layer-norm scales start
+    /// at 1; biases and LoRA `b` factors at 0).
+    Const(f32),
 }
 
 /// Leaf registrar backing [`Layout::new`].
@@ -148,14 +196,21 @@ struct Layout {
 struct LeafBuilder {
     shapes: Vec<(usize, usize)>,
     paths: Vec<String>,
+    inits: Vec<LeafInit>,
 }
 
 impl LeafBuilder {
-    fn add(&mut self, path: impl Into<String>, rows: usize, cols: usize) -> usize {
+    fn add(&mut self, path: impl Into<String>, rows: usize, cols: usize, init: LeafInit) -> usize {
         let ix = self.paths.len();
         self.paths.push(path.into());
         self.shapes.push((rows, cols));
+        self.inits.push(init);
         ix
+    }
+
+    /// Fan-in scaled normal init for a dense `[rows, cols]` weight.
+    fn fan_in(rows: usize) -> LeafInit {
+        LeafInit::Normal(1.0 / (rows as f32).sqrt())
     }
 }
 
@@ -168,41 +223,81 @@ impl Layout {
         if pq_m * pq_dsub != d_head {
             bail!("PQ subspaces ({pq_m} x {pq_dsub}) do not tile d_head {d_head}");
         }
+        let n_layers = cfg.n_layers.max(1);
         let r = b.lora_rank;
         let mut lb = LeafBuilder::default();
-        let tok = lb.add("['embed']['tok']", cfg.vocab_size, d);
-        let pos = lb.add("['embed']['pos']", cfg.max_seq, d);
-        let wq = lb.add("['attn']['wq']", d, d);
-        let wk = lb.add("['attn']['wk']", d, d);
-        let wv = lb.add("['attn']['wv']", d, d);
-        let wo = lb.add("['attn']['wo']", d, d);
-        let wi = lb.add("['ffn']['wi']", d, dff);
-        let wo2 = lb.add("['ffn']['wo']", dff, d);
-        let wout = lb.add("['head']['wout']", d, cfg.vocab_size);
-        let lora = if mode == Mode::Lora || mode == Mode::Spt {
-            let mut pair = |name: &str, rows: usize, cols: usize| LoraIx {
-                a: lb.add(format!("['lora']['{name}']['a']"), rows, r),
-                b: lb.add(format!("['lora']['{name}']['b']"), r, cols),
+        let tok = lb.add("['embed']['tok']", cfg.vocab_size, d, LeafInit::Normal(0.02));
+        let pos = lb.add("['embed']['pos']", cfg.max_seq, d, LeafInit::Normal(0.02));
+        let mut layers = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let p = |leaf: &str| format!("['blocks'][{li}]{leaf}");
+            let ln1_scale = lb.add(p("['ln1']['scale']"), 1, d, LeafInit::Const(1.0));
+            let ln1_bias = lb.add(p("['ln1']['bias']"), 1, d, LeafInit::Const(0.0));
+            let wq = lb.add(p("['attn']['wq']"), d, d, LeafBuilder::fan_in(d));
+            let wk = lb.add(p("['attn']['wk']"), d, d, LeafBuilder::fan_in(d));
+            let wv = lb.add(p("['attn']['wv']"), d, d, LeafBuilder::fan_in(d));
+            let wo = lb.add(p("['attn']['wo']"), d, d, LeafBuilder::fan_in(d));
+            let ln2_scale = lb.add(p("['ln2']['scale']"), 1, d, LeafInit::Const(1.0));
+            let ln2_bias = lb.add(p("['ln2']['bias']"), 1, d, LeafInit::Const(0.0));
+            let wi = lb.add(p("['ffn']['wi']"), d, dff, LeafBuilder::fan_in(d));
+            let wo2 = lb.add(p("['ffn']['wo']"), dff, d, LeafBuilder::fan_in(dff));
+            let lora = if mode == Mode::Lora || mode == Mode::Spt {
+                let mut pair = |name: &str, rows: usize, cols: usize| LoraIx {
+                    a: lb.add(
+                        p(&format!("['lora']['{name}']['a']")),
+                        rows,
+                        r,
+                        LeafBuilder::fan_in(rows),
+                    ),
+                    b: lb.add(
+                        p(&format!("['lora']['{name}']['b']")),
+                        r,
+                        cols,
+                        LeafInit::Const(0.0),
+                    ),
+                };
+                Some([
+                    pair("q", d, d),
+                    pair("k", d, d),
+                    pair("v", d, d),
+                    pair("o", d, d),
+                    pair("wi", d, dff),
+                    pair("wo", dff, d),
+                ])
+            } else {
+                None
             };
-            Some([
-                pair("q", d, d),
-                pair("k", d, d),
-                pair("v", d, d),
-                pair("o", d, d),
-                pair("wi", d, dff),
-                pair("wo", dff, d),
-            ])
-        } else {
-            None
-        };
-        let (router, pq_cb) = if mode == Mode::Spt {
-            (
-                Some(lb.add("['router']", d, b.ffn_groups)),
-                Some(lb.add("['pq']['codebooks']", heads, pq_m * pq_e * pq_dsub)),
-            )
-        } else {
-            (None, None)
-        };
+            let (router, pq_cb) = if mode == Mode::Spt {
+                (
+                    Some(lb.add(p("['router']"), d, b.ffn_groups, LeafBuilder::fan_in(d))),
+                    Some(lb.add(
+                        p("['pq']['codebooks']"),
+                        heads,
+                        pq_m * pq_e * pq_dsub,
+                        LeafInit::Normal(0.05),
+                    )),
+                )
+            } else {
+                (None, None)
+            };
+            layers.push(LayerIx {
+                ln1_scale,
+                ln1_bias,
+                wq,
+                wk,
+                wv,
+                wo,
+                ln2_scale,
+                ln2_bias,
+                wi,
+                wo2,
+                lora,
+                router,
+                pq_cb,
+            });
+        }
+        let lnf_scale = lb.add("['lnf']['scale']", 1, d, LeafInit::Const(1.0));
+        let lnf_bias = lb.add("['lnf']['bias']", 1, d, LeafInit::Const(0.0));
         Ok(Layout {
             mode,
             vocab: cfg.vocab_size,
@@ -218,18 +313,12 @@ impl Layout {
             sparsity: b.sparsity,
             tok,
             pos,
-            wq,
-            wk,
-            wv,
-            wo,
-            wi,
-            wo2,
-            wout,
-            lora,
-            router,
-            pq_cb,
+            lnf_scale,
+            lnf_bias,
+            layers,
             shapes: lb.shapes,
             paths: lb.paths,
+            inits: lb.inits,
         })
     }
 
@@ -237,72 +326,83 @@ impl Layout {
         self.paths.len()
     }
 
-    /// Init scale per leaf: 0.02 for embeddings, fan-in scaled for
-    /// weights, small for PQ codebooks, and exactly 0 for LoRA `b`
-    /// factors (the standard adapter-delta-starts-at-zero init).
-    fn init_scale(&self, ix: usize) -> f32 {
-        if ix == self.tok || ix == self.pos {
-            return 0.02;
-        }
-        if let Some(pairs) = &self.lora {
-            for p in pairs {
-                if ix == p.b {
-                    return 0.0;
-                }
-                if ix == p.a {
-                    return 1.0 / (self.shapes[ix].0 as f32).sqrt();
-                }
-            }
-        }
-        if Some(ix) == self.pq_cb {
-            return 0.05;
-        }
-        // Dense weights (wq..wout, router): fan-in scaling.
-        1.0 / (self.shapes[ix].0 as f32).sqrt()
-    }
-
     /// Which leaves receive AdamW updates in this mode.
     fn trainable(&self) -> Vec<bool> {
         let mut t = vec![false; self.n_leaves()];
-        t[self.wout] = true; // the task head trains in every mode
-        match self.mode {
-            Mode::Full => {
-                for ix in [
-                    self.tok, self.pos, self.wq, self.wk, self.wv, self.wo, self.wi,
-                    self.wo2,
-                ] {
-                    t[ix] = true;
-                }
-            }
-            Mode::Lora | Mode::Spt => {
-                if let Some(pairs) = &self.lora {
-                    for p in pairs {
-                        t[p.a] = true;
-                        t[p.b] = true;
+        // The tied embedding/readout is the task head: it trains in
+        // every mode (in lora/spt it is the only non-adapter leaf that
+        // moves, receiving gradient from both the readout and the
+        // embedding lookup).
+        t[self.tok] = true;
+        if self.mode == Mode::Full {
+            t[self.pos] = true;
+            t[self.lnf_scale] = true;
+            t[self.lnf_bias] = true;
+        }
+        for lx in &self.layers {
+            match self.mode {
+                Mode::Full => {
+                    for ix in [
+                        lx.ln1_scale,
+                        lx.ln1_bias,
+                        lx.wq,
+                        lx.wk,
+                        lx.wv,
+                        lx.wo,
+                        lx.ln2_scale,
+                        lx.ln2_bias,
+                        lx.wi,
+                        lx.wo2,
+                    ] {
+                        t[ix] = true;
                     }
                 }
-                // The router and PQ codebooks are not SGD-trained: the
-                // top-G' / top-L selections are non-differentiable and
-                // codebooks refresh via DKM k-means.
+                Mode::Lora | Mode::Spt => {
+                    if let Some(pairs) = &lx.lora {
+                        for p in pairs {
+                            t[p.a] = true;
+                            t[p.b] = true;
+                        }
+                    }
+                    // The router and PQ codebooks are not SGD-trained:
+                    // the top-G' / top-L selections are
+                    // non-differentiable and codebooks refresh via DKM
+                    // k-means.
+                }
             }
         }
         t
     }
 }
 
-/// Materialized effective weights for one step (base + LoRA deltas).
-struct Weights {
+/// Materialized effective weights of one layer (base + LoRA deltas).
+struct LayerWeights {
+    ln1_scale: Matrix,
+    ln1_bias: Matrix,
     wq: Matrix,
     wk: Matrix,
     wv: Matrix,
     wo: Matrix,
+    ln2_scale: Matrix,
+    ln2_bias: Matrix,
     wi: Matrix,
     wo2: Matrix,
-    wout: Matrix,
-    /// Adapter factors (a, b) per slot, aligned with `Layout::lora`.
+    /// Adapter factors (a, b) per slot, aligned with `LayerIx::lora`.
     lora: Option<Vec<(Matrix, Matrix)>>,
     router: Option<Matrix>,
     codebooks: Option<Vec<Codebooks>>,
+}
+
+/// Materialized effective weights for one step: the shared tied
+/// embedding/readout and final layer norm plus one [`LayerWeights`] per
+/// layer.
+struct Weights {
+    /// `[vocab, d]`; embedding rows on the way in, readout columns
+    /// (transposed) on the way out.
+    tok: Matrix,
+    lnf_scale: Matrix,
+    lnf_bias: Matrix,
+    layers: Vec<LayerWeights>,
 }
 
 fn leaf_matrix(layout: &Layout, state: &TrainState, ix: usize) -> Result<Matrix> {
@@ -325,6 +425,73 @@ fn leaf_matrix(layout: &Layout, state: &TrainState, ix: usize) -> Result<Matrix>
     Ok(Matrix::from_vec(rows, cols, data.to_vec()))
 }
 
+fn materialize_layer(layout: &Layout, lx: &LayerIx, state: &TrainState) -> Result<LayerWeights> {
+    let lora = match &lx.lora {
+        Some(pairs) => Some(
+            pairs
+                .iter()
+                .map(|p| {
+                    Ok((
+                        leaf_matrix(layout, state, p.a)?,
+                        leaf_matrix(layout, state, p.b)?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        None => None,
+    };
+    let eff = |base_ix: usize, slot: usize| -> Result<Matrix> {
+        let mut w = leaf_matrix(layout, state, base_ix)?;
+        if let Some(mats) = &lora {
+            let (a, b) = &mats[slot];
+            w.add_assign(&a.matmul(b));
+        }
+        Ok(w)
+    };
+    let wq = eff(lx.wq, SLOT_Q)?;
+    let wk = eff(lx.wk, SLOT_K)?;
+    let wv = eff(lx.wv, SLOT_V)?;
+    let wo = eff(lx.wo, SLOT_O)?;
+    let wi = eff(lx.wi, SLOT_WI)?;
+    let wo2 = eff(lx.wo2, SLOT_WO2)?;
+    let router = match lx.router {
+        Some(ix) => Some(leaf_matrix(layout, state, ix)?),
+        None => None,
+    };
+    let codebooks = match lx.pq_cb {
+        Some(ix) => {
+            let flat = state.params[ix].as_f32()?;
+            let stride = layout.pq_m * layout.pq_e * layout.pq_dsub;
+            Some(
+                (0..layout.heads)
+                    .map(|h| Codebooks {
+                        m: layout.pq_m,
+                        e: layout.pq_e,
+                        dsub: layout.pq_dsub,
+                        data: flat[h * stride..(h + 1) * stride].to_vec(),
+                    })
+                    .collect(),
+            )
+        }
+        None => None,
+    };
+    Ok(LayerWeights {
+        ln1_scale: leaf_matrix(layout, state, lx.ln1_scale)?,
+        ln1_bias: leaf_matrix(layout, state, lx.ln1_bias)?,
+        wq,
+        wk,
+        wv,
+        wo,
+        ln2_scale: leaf_matrix(layout, state, lx.ln2_scale)?,
+        ln2_bias: leaf_matrix(layout, state, lx.ln2_bias)?,
+        wi,
+        wo2,
+        lora,
+        router,
+        codebooks,
+    })
+}
+
 impl Weights {
     fn materialize(layout: &Layout, state: &TrainState) -> Result<Self> {
         if state.params.len() != layout.n_leaves() {
@@ -334,75 +501,50 @@ impl Weights {
                 layout.n_leaves()
             );
         }
-        let lora = match &layout.lora {
-            Some(pairs) => Some(
-                pairs
-                    .iter()
-                    .map(|p| {
-                        Ok((
-                            leaf_matrix(layout, state, p.a)?,
-                            leaf_matrix(layout, state, p.b)?,
-                        ))
-                    })
-                    .collect::<Result<Vec<_>>>()?,
-            ),
-            None => None,
-        };
-        let eff = |base_ix: usize, slot: usize| -> Result<Matrix> {
-            let mut w = leaf_matrix(layout, state, base_ix)?;
-            if let Some(mats) = &lora {
-                let (a, b) = &mats[slot];
-                w.add_assign(&a.matmul(b));
-            }
-            Ok(w)
-        };
-        let wq = eff(layout.wq, SLOT_Q)?;
-        let wk = eff(layout.wk, SLOT_K)?;
-        let wv = eff(layout.wv, SLOT_V)?;
-        let wo = eff(layout.wo, SLOT_O)?;
-        let wi = eff(layout.wi, SLOT_WI)?;
-        let wo2 = eff(layout.wo2, SLOT_WO2)?;
-        let wout = leaf_matrix(layout, state, layout.wout)?;
-        let router = match layout.router {
-            Some(ix) => Some(leaf_matrix(layout, state, ix)?),
-            None => None,
-        };
-        let codebooks = match layout.pq_cb {
-            Some(ix) => {
-                let flat = state.params[ix].as_f32()?;
-                let stride = layout.pq_m * layout.pq_e * layout.pq_dsub;
-                Some(
-                    (0..layout.heads)
-                        .map(|h| Codebooks {
-                            m: layout.pq_m,
-                            e: layout.pq_e,
-                            dsub: layout.pq_dsub,
-                            data: flat[h * stride..(h + 1) * stride].to_vec(),
-                        })
-                        .collect(),
-                )
-            }
-            None => None,
-        };
-        Ok(Weights { wq, wk, wv, wo, wi, wo2, wout, lora, router, codebooks })
+        let layers = layout
+            .layers
+            .iter()
+            .map(|lx| materialize_layer(layout, lx, state))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Weights {
+            tok: leaf_matrix(layout, state, layout.tok)?,
+            lnf_scale: leaf_matrix(layout, state, layout.lnf_scale)?,
+            lnf_bias: leaf_matrix(layout, state, layout.lnf_bias)?,
+            layers,
+        })
     }
 }
 
-/// Per-item forward caches consumed by the backward pass.
-struct ItemTrace {
-    x: Matrix,
+/// Per-layer forward caches consumed by the backward pass.
+struct LayerTrace {
+    /// The residual-stream input this layer consumed.
+    x_in: Matrix,
+    /// `ln1(x_in)` — the attention sub-block's input.
+    a_in: Matrix,
     q: Vec<Matrix>,
     k: Vec<Matrix>,
     v: Vec<Matrix>,
     /// spt: per-head post-softmax attention CSRs.
     attn: Option<Vec<Csr>>,
     attn_out: Matrix,
-    x1: Matrix,
+    /// `x_in + attn_out · W_O` — the FFN sub-block's residual input.
+    x_mid: Matrix,
+    /// `ln2(x_mid)` — the FFN sub-block's input.
+    f_in: Matrix,
     /// full/lora: dense FFN hidden activations (post-ReLU).
     h1: Option<Matrix>,
     /// spt: the routing the FFN forward used (backward follows it).
     routing: Option<Routing>,
-    x2: Matrix,
+}
+
+/// Per-item forward caches: one [`LayerTrace`] per layer plus the final
+/// residual stream and its layer-normed readout input.
+struct ItemTrace {
+    layers: Vec<LayerTrace>,
+    /// Last layer's output (input to the final layer norm).
+    x_out: Matrix,
+    /// `lnf(x_out)` — what the tied readout multiplies.
+    xf: Matrix,
 }
 
 /// Gradient accumulator: one flat buffer per *trainable* leaf.
@@ -435,18 +577,19 @@ impl GradAcc {
     }
 
     /// Route an effective-weight gradient to the base leaf (full mode)
-    /// or decompose onto the LoRA factors (`W_eff = W + a b` gives
-    /// `da = dW b^T`, `db = a^T dW`; the frozen base absorbs nothing).
+    /// or decompose onto the layer's LoRA factors (`W_eff = W + a b`
+    /// gives `da = dW b^T`, `db = a^T dW`; the frozen base absorbs
+    /// nothing).
     fn add_weight(
         &mut self,
-        layout: &Layout,
-        w: &Weights,
+        lx: &LayerIx,
+        lw: &LayerWeights,
         slot: usize,
         base_ix: usize,
         dw: &Matrix,
         ws: &mut Workspace,
     ) {
-        match (&layout.lora, &w.lora) {
+        match (&lx.lora, &lw.lora) {
             (Some(ixs), Some(mats)) => {
                 let (a, b) = &mats[slot];
                 self.add(ixs[slot].a, &grad::matmul_dx(dw, b));
@@ -456,9 +599,9 @@ impl GradAcc {
         }
     }
 
-    /// Accumulate another item's gradients leaf by leaf.  Calling this
-    /// in ascending item order reproduces one fixed reduction order, so
-    /// the merged gradients are identical at any pool size.
+    /// Accumulate another accumulator's gradients leaf by leaf.  Calling
+    /// this in ascending chunk order reproduces one fixed reduction
+    /// order, so the merged gradients are identical at any pool size.
     fn merge(&mut self, other: &GradAcc) {
         for (mine, theirs) in self.g.iter_mut().zip(&other.g) {
             if let (Some(a), Some(b)) = (mine.as_mut(), theirs.as_ref()) {
@@ -470,8 +613,9 @@ impl GradAcc {
         }
     }
 
-    /// Scatter token/position embedding gradients (full mode only — the
-    /// embedding leaves are frozen otherwise and `add` no-ops).
+    /// Scatter token/position embedding gradients.  The token leaf is
+    /// tied to the readout and trainable in every mode; the position
+    /// leaf is frozen outside full mode and `add`-style no-ops.
     fn scatter_embed(&mut self, layout: &Layout, tok: &[i32], dx: &Matrix) {
         let d = layout.d;
         if let Some(buf) = &mut self.g[layout.tok] {
@@ -623,82 +767,111 @@ impl NativeBackend {
         Ok(x)
     }
 
-    /// Build the sparse multi-head layer once per call (spt mode only):
-    /// the codebooks are constant within a step and `L` depends only on
-    /// the sequence length, so per-item construction would just clone
-    /// codebooks `batch` times.
-    fn sparse_layer(
+    /// Build the per-layer sparse multi-head layers once per call (spt
+    /// mode only): each layer's codebooks are constant within a step and
+    /// `L` depends only on the sequence length, so per-item construction
+    /// would just clone codebooks `batch` times.
+    fn sparse_layers(
         &self,
         layout: &Layout,
         w: &Weights,
         seq: usize,
-    ) -> Result<Option<MultiHeadSparseAttention>> {
+    ) -> Result<Option<Vec<MultiHeadSparseAttention>>> {
         if layout.mode != Mode::Spt {
             return Ok(None);
         }
         let l = layout.sparsity.topl(seq).min(seq);
-        let cbs = w.codebooks.clone().context("spt mode without codebooks")?;
-        Ok(Some(MultiHeadSparseAttention::new(cbs, l, true)))
+        let layers = w
+            .layers
+            .iter()
+            .map(|lw| {
+                let cbs = lw.codebooks.clone().context("spt mode without codebooks")?;
+                Ok(MultiHeadSparseAttention::new(cbs, l, true))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Some(layers))
     }
 
-    /// One sequence forward up to the block output `x2` (no LM head).
-    /// `ws` is the item's reusable GEMM workspace.
-    fn forward_block(
+    /// One sequence forward through the whole pre-norm stack, up to the
+    /// final layer norm (no readout).  `ws` is the item's reusable GEMM
+    /// workspace.
+    fn forward_model(
         &self,
         layout: &Layout,
         w: &Weights,
         state: &TrainState,
         tok: &[i32],
-        sparse: Option<&MultiHeadSparseAttention>,
+        sparse: Option<&[MultiHeadSparseAttention]>,
         ws: &mut Workspace,
     ) -> Result<ItemTrace> {
-        let x = self.embed(layout, state, tok)?;
-        let q = split_heads(&x.matmul_ws(&w.wq, ws), layout.heads, layout.d_head);
-        let k = split_heads(&x.matmul_ws(&w.wk, ws), layout.heads, layout.d_head);
-        let v = split_heads(&x.matmul_ws(&w.wv, ws), layout.heads, layout.d_head);
-        let (ys, attn) = if layout.mode == Mode::Spt {
-            let layer = sparse.context("spt mode without a sparse layer")?;
-            let (ys, csrs) = layer.forward_cached(&q, &k, &v);
-            (ys, Some(csrs))
-        } else {
-            let ys: Vec<Matrix> = (0..layout.heads)
-                .into_par_iter()
-                .map_init(Workspace::default, |hws, h| {
-                    attention::dense_attention_ws(&q[h], &k[h], &v[h], true, hws)
-                })
-                .collect();
-            (ys, None)
-        };
-        let attn_out = concat_heads(&ys);
-        let x1 = x.add(&attn_out.matmul_ws(&w.wo, ws));
-        let (f, h1, routing) = if layout.mode == Mode::Spt {
-            let router = w.router.as_ref().context("spt mode without router")?;
-            let scores = x1.matmul_ws(router, ws);
-            let g_active = layout.sparsity.active_groups(layout.groups).min(layout.groups);
-            let routing = bspmv::route(&scores, g_active);
-            let f = mha::routed_ffn_par(&x1, &w.wi, &w.wo2, &routing);
-            (f, None, Some(routing))
-        } else {
-            let h1 = x1.matmul_ws(&w.wi, ws).relu();
-            let f = h1.matmul_ws(&w.wo2, ws);
-            (f, Some(h1), None)
-        };
-        let x2 = x1.add(&f);
-        Ok(ItemTrace { x, q, k, v, attn, attn_out, x1, h1, routing, x2 })
+        let mut x = self.embed(layout, state, tok)?;
+        let mut layers = Vec::with_capacity(w.layers.len());
+        for (li, lw) in w.layers.iter().enumerate() {
+            let a_in = grad::layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
+            let q = split_heads(&a_in.matmul_ws(&lw.wq, ws), layout.heads, layout.d_head);
+            let k = split_heads(&a_in.matmul_ws(&lw.wk, ws), layout.heads, layout.d_head);
+            let v = split_heads(&a_in.matmul_ws(&lw.wv, ws), layout.heads, layout.d_head);
+            let (ys, attn) = if layout.mode == Mode::Spt {
+                let layer = &sparse.context("spt mode without sparse layers")?[li];
+                let (ys, csrs) = layer.forward_cached(&q, &k, &v);
+                (ys, Some(csrs))
+            } else {
+                let ys: Vec<Matrix> = (0..layout.heads)
+                    .into_par_iter()
+                    .map_init(Workspace::default, |hws, h| {
+                        attention::dense_attention_ws(&q[h], &k[h], &v[h], true, hws)
+                    })
+                    .collect();
+                (ys, None)
+            };
+            let attn_out = concat_heads(&ys);
+            let x_mid = x.add(&attn_out.matmul_ws(&lw.wo, ws));
+            let f_in = grad::layer_norm(&x_mid, &lw.ln2_scale, &lw.ln2_bias);
+            let (f, h1, routing) = if layout.mode == Mode::Spt {
+                let router = lw.router.as_ref().context("spt mode without router")?;
+                let scores = f_in.matmul_ws(router, ws);
+                let g_active = layout.sparsity.active_groups(layout.groups).min(layout.groups);
+                let routing = bspmv::route(&scores, g_active);
+                let f = mha::routed_ffn_par(&f_in, &lw.wi, &lw.wo2, &routing);
+                (f, None, Some(routing))
+            } else {
+                let h1 = f_in.matmul_ws(&lw.wi, ws).relu();
+                let f = h1.matmul_ws(&lw.wo2, ws);
+                (f, Some(h1), None)
+            };
+            let x_next = x_mid.add(&f);
+            layers.push(LayerTrace {
+                x_in: x,
+                a_in,
+                q,
+                k,
+                v,
+                attn,
+                attn_out,
+                x_mid,
+                f_in,
+                h1,
+                routing,
+            });
+            x = x_next;
+        }
+        let xf = grad::layer_norm(&x, &w.lnf_scale, &w.lnf_bias);
+        Ok(ItemTrace { layers, x_out: x, xf })
     }
 
-    /// One sequence forward; returns the backward caches and the logits.
+    /// One sequence forward; returns the backward caches and the logits
+    /// (`xf · tok^T` through the tied readout, on the NT kernel).
     fn forward_item(
         &self,
         layout: &Layout,
         w: &Weights,
         state: &TrainState,
         tok: &[i32],
-        sparse: Option<&MultiHeadSparseAttention>,
+        sparse: Option<&[MultiHeadSparseAttention]>,
         ws: &mut Workspace,
     ) -> Result<(ItemTrace, Matrix)> {
-        let trace = self.forward_block(layout, w, state, tok, sparse, ws)?;
-        let logits = trace.x2.matmul_ws(&w.wout, ws);
+        let trace = self.forward_model(layout, w, state, tok, sparse, ws)?;
+        let logits = grad::matmul_dx(&trace.xf, &w.tok);
         Ok((trace, logits))
     }
 
@@ -712,65 +885,88 @@ impl NativeBackend {
         trace: &ItemTrace,
         tok: &[i32],
         dlogits: &Matrix,
-        sparse: Option<&MultiHeadSparseAttention>,
+        sparse: Option<&[MultiHeadSparseAttention]>,
         acc: &mut GradAcc,
         ws: &mut Workspace,
     ) -> Result<()> {
-        // LM head.
-        acc.add(layout.wout, &grad::matmul_dw_ws(&trace.x2, dlogits, ws));
-        let dx2 = grad::matmul_dx(dlogits, &w.wout);
-        // FFN (dX2 flows through both the residual and the FFN branch).
-        let (dx1_ffn, dwi_eff, dwo2_eff) = if layout.mode == Mode::Spt {
-            let routing = trace.routing.as_ref().context("missing routing trace")?;
-            mha::routed_ffn_backward_par(&trace.x1, &w.wi, &w.wo2, routing, &dx2)
-        } else {
-            let h1 = trace.h1.as_ref().context("missing ffn trace")?;
-            let dwo2 = grad::matmul_dw_ws(h1, &dx2, ws);
-            let dpre = grad::relu_backward(h1, &grad::matmul_dx(&dx2, &w.wo2));
-            let dwi = grad::matmul_dw_ws(&trace.x1, &dpre, ws);
-            let dx = grad::matmul_dx(&dpre, &w.wi);
-            (dx, dwi, dwo2)
-        };
-        acc.add_weight(layout, w, SLOT_WI, layout.wi, &dwi_eff, ws);
-        acc.add_weight(layout, w, SLOT_WO2, layout.wo2, &dwo2_eff, ws);
-        let dx1 = dx2.add(&dx1_ffn);
-        // Attention output projection.
-        let dwo_eff = grad::matmul_dw_ws(&trace.attn_out, &dx1, ws);
-        acc.add_weight(layout, w, SLOT_O, layout.wo, &dwo_eff, ws);
-        let dy_heads = split_heads(&grad::matmul_dx(&dx1, &w.wo), layout.heads, layout.d_head);
-        // Attention core.
-        let (dq_h, dk_h, dv_h) = if layout.mode == Mode::Spt {
-            let layer = sparse.context("spt mode without a sparse layer")?;
-            let attn = trace.attn.as_ref().context("missing attn trace")?;
-            layer.backward(&trace.q, &trace.k, &trace.v, attn, &dy_heads)
-        } else {
-            let per: Vec<(Matrix, Matrix, Matrix)> = (0..layout.heads)
-                .into_par_iter()
-                .map_init(Workspace::default, |hws, h| {
-                    grad::dense_attention_backward_ws(
-                        &trace.q[h], &trace.k[h], &trace.v[h], true, &dy_heads[h], hws,
-                    )
-                })
-                .collect();
-            unzip3(per)
-        };
-        let dq = concat_heads(&dq_h);
-        let dk = concat_heads(&dk_h);
-        let dv = concat_heads(&dv_h);
-        let dwq_eff = grad::matmul_dw_ws(&trace.x, &dq, ws);
-        acc.add_weight(layout, w, SLOT_Q, layout.wq, &dwq_eff, ws);
-        let dwk_eff = grad::matmul_dw_ws(&trace.x, &dk, ws);
-        acc.add_weight(layout, w, SLOT_K, layout.wk, &dwk_eff, ws);
-        let dwv_eff = grad::matmul_dw_ws(&trace.x, &dv, ws);
-        acc.add_weight(layout, w, SLOT_V, layout.wv, &dwv_eff, ws);
-        // Embedding gradients only exist in full mode (frozen otherwise).
-        if layout.mode == Mode::Full {
-            let mut dx = dx1.clone();
-            dx.add_assign(&grad::matmul_dx(&dq, &w.wq));
-            dx.add_assign(&grad::matmul_dx(&dk, &w.wk));
-            dx.add_assign(&grad::matmul_dx(&dv, &w.wv));
-            acc.scatter_embed(layout, tok, &dx);
+        // Tied readout: dTok += dlogits^T · xf; dxf = dlogits · tok.
+        acc.add(layout.tok, &grad::matmul_dw_ws(dlogits, &trace.xf, ws));
+        let dxf = dlogits.matmul_ws(&w.tok, ws);
+        // Final layer norm.
+        let (mut dx, dlnf_s, dlnf_b) =
+            grad::layer_norm_backward(&trace.x_out, &w.lnf_scale, &dxf);
+        acc.add(layout.lnf_scale, &dlnf_s);
+        acc.add(layout.lnf_bias, &dlnf_b);
+        // Layer-by-layer backward, deepest first.
+        for li in (0..trace.layers.len()).rev() {
+            let lt = &trace.layers[li];
+            let lx = &layout.layers[li];
+            let lw = &w.layers[li];
+            // FFN sub-block: x_next = x_mid + FFN(f_in); dx hits both
+            // the residual and the FFN branch.
+            let (df_in, dwi_eff, dwo2_eff) = if layout.mode == Mode::Spt {
+                let routing = lt.routing.as_ref().context("missing routing trace")?;
+                mha::routed_ffn_backward_par(&lt.f_in, &lw.wi, &lw.wo2, routing, &dx)
+            } else {
+                let h1 = lt.h1.as_ref().context("missing ffn trace")?;
+                let dwo2 = grad::matmul_dw_ws(h1, &dx, ws);
+                let dpre = grad::relu_backward(h1, &grad::matmul_dx(&dx, &lw.wo2));
+                let dwi = grad::matmul_dw_ws(&lt.f_in, &dpre, ws);
+                let dff = grad::matmul_dx(&dpre, &lw.wi);
+                (dff, dwi, dwo2)
+            };
+            acc.add_weight(lx, lw, SLOT_WI, lx.wi, &dwi_eff, ws);
+            acc.add_weight(lx, lw, SLOT_WO2, lx.wo2, &dwo2_eff, ws);
+            let (dx_mid_ln, dln2_s, dln2_b) =
+                grad::layer_norm_backward(&lt.x_mid, &lw.ln2_scale, &df_in);
+            acc.add(lx.ln2_scale, &dln2_s);
+            acc.add(lx.ln2_bias, &dln2_b);
+            let dx_mid = dx.add(&dx_mid_ln);
+            // Attention output projection: x_mid = x_in + attn_out · W_O.
+            let dwo_eff = grad::matmul_dw_ws(&lt.attn_out, &dx_mid, ws);
+            acc.add_weight(lx, lw, SLOT_O, lx.wo, &dwo_eff, ws);
+            let dy_heads =
+                split_heads(&grad::matmul_dx(&dx_mid, &lw.wo), layout.heads, layout.d_head);
+            // Attention core.
+            let (dq_h, dk_h, dv_h) = if layout.mode == Mode::Spt {
+                let layer = &sparse.context("spt mode without sparse layers")?[li];
+                let attn = lt.attn.as_ref().context("missing attn trace")?;
+                layer.backward(&lt.q, &lt.k, &lt.v, attn, &dy_heads)
+            } else {
+                let per: Vec<(Matrix, Matrix, Matrix)> = (0..layout.heads)
+                    .into_par_iter()
+                    .map_init(Workspace::default, |hws, h| {
+                        grad::dense_attention_backward_ws(
+                            &lt.q[h], &lt.k[h], &lt.v[h], true, &dy_heads[h], hws,
+                        )
+                    })
+                    .collect();
+                unzip3(per)
+            };
+            let dq = concat_heads(&dq_h);
+            let dk = concat_heads(&dk_h);
+            let dv = concat_heads(&dv_h);
+            let dwq_eff = grad::matmul_dw_ws(&lt.a_in, &dq, ws);
+            acc.add_weight(lx, lw, SLOT_Q, lx.wq, &dwq_eff, ws);
+            let dwk_eff = grad::matmul_dw_ws(&lt.a_in, &dk, ws);
+            acc.add_weight(lx, lw, SLOT_K, lx.wk, &dwk_eff, ws);
+            let dwv_eff = grad::matmul_dw_ws(&lt.a_in, &dv, ws);
+            acc.add_weight(lx, lw, SLOT_V, lx.wv, &dwv_eff, ws);
+            // Back through ln1 into this layer's residual input (the
+            // effective weights carry the LoRA path too).
+            let mut da_in = grad::matmul_dx(&dq, &lw.wq);
+            da_in.add_assign(&grad::matmul_dx(&dk, &lw.wk));
+            da_in.add_assign(&grad::matmul_dx(&dv, &lw.wv));
+            let (dx_ln1, dln1_s, dln1_b) =
+                grad::layer_norm_backward(&lt.x_in, &lw.ln1_scale, &da_in);
+            acc.add(lx.ln1_scale, &dln1_s);
+            acc.add(lx.ln1_bias, &dln1_b);
+            dx = dx_mid.add(&dx_ln1);
         }
+        // Embedding gradients: the tied token leaf collects in every
+        // mode (it also took the readout gradient above); positions only
+        // in full mode.
+        acc.scatter_embed(layout, tok, &dx);
         Ok(())
     }
 
@@ -795,6 +991,78 @@ impl NativeBackend {
             }
         }
         Ok((batch, seq))
+    }
+
+    /// Forward + backward over the whole mini-batch with the chunked
+    /// item fan-out (no optimizer update).  Returns the mean loss and
+    /// the merged gradient accumulator.
+    fn grad_step(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, GradAcc)> {
+        let (batch, seq) = self.check_batch(rc, tokens, Some(targets))?;
+        let layout = self.layout(rc)?;
+        let w = Weights::materialize(&layout, state)?;
+        let sparse = self.sparse_layers(&layout, &w, seq)?;
+        let inv_count = 1.0 / (batch * seq) as f32;
+        // Fan out over fixed-size item chunks: each chunk accumulates
+        // its items sequentially into one GradAcc (per-worker GEMM
+        // workspace reused across the chunk's ops), so gradient memory
+        // is O(chunks) while the reduction tree stays independent of
+        // the pool size.
+        let layout_ref: &Layout = &layout;
+        let w_ref = &w;
+        let sparse_ref = sparse.as_deref();
+        let n_chunks = batch.div_ceil(GRAD_CHUNK);
+        let per_chunk: Result<Vec<(f64, GradAcc)>> = (0..n_chunks)
+            .into_par_iter()
+            .map_init(Workspace::default, |ws, ci| {
+                let mut acc = GradAcc::new(layout_ref);
+                let mut lsum = 0.0f64;
+                for bi in ci * GRAD_CHUNK..((ci + 1) * GRAD_CHUNK).min(batch) {
+                    let tok = &tokens[bi * seq..(bi + 1) * seq];
+                    let tgt = &targets[bi * seq..(bi + 1) * seq];
+                    let (trace, logits) =
+                        self.forward_item(layout_ref, w_ref, state, tok, sparse_ref, ws)?;
+                    let (lsum_i, dlogits) =
+                        ce_loss_and_grad(&logits, tgt, inv_count, layout_ref.vocab)?;
+                    lsum += lsum_i as f64;
+                    self.backward_item(
+                        layout_ref, w_ref, &trace, tok, &dlogits, sparse_ref, &mut acc, ws,
+                    )?;
+                }
+                Ok((lsum, acc))
+            })
+            .collect();
+        // Reduce in ascending chunk order: the loss sum and every leaf
+        // gradient see one fixed operation order at any pool size.
+        let mut acc = GradAcc::new(&layout);
+        let mut loss_sum = 0.0f64;
+        for (lsum, chunk_acc) in per_chunk? {
+            loss_sum += lsum;
+            acc.merge(&chunk_acc);
+        }
+        Ok((loss_sum as f32 * inv_count, acc))
+    }
+
+    /// Forward + backward for one batch without touching the optimizer:
+    /// the mean loss plus the per-leaf gradient buffers (`None` for
+    /// frozen leaves), indexed like `TrainState::params`.  Exposed for
+    /// the finite-difference and determinism tests.
+    #[doc(hidden)]
+    #[allow(clippy::type_complexity)]
+    pub fn loss_and_grads(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<Option<Vec<f32>>>)> {
+        let (loss, acc) = self.grad_step(rc, state, tokens, targets)?;
+        Ok((loss, acc.g))
     }
 }
 
@@ -828,14 +1096,13 @@ impl Backend for NativeBackend {
         let mut params = Vec::with_capacity(layout.n_leaves());
         for ix in 0..layout.n_leaves() {
             let (rows, cols) = layout.shapes[ix];
-            let scale = layout.init_scale(ix);
-            let data = if scale == 0.0 {
-                vec![0.0f32; rows * cols]
-            } else {
-                rng.normal_vec(rows * cols)
+            let data = match layout.inits[ix] {
+                LeafInit::Const(c) => vec![c; rows * cols],
+                LeafInit::Normal(scale) => rng
+                    .normal_vec(rows * cols)
                     .into_iter()
                     .map(|x| x * scale)
-                    .collect()
+                    .collect(),
             };
             params.push(HostTensor::f32(vec![rows, cols], data));
         }
@@ -849,42 +1116,7 @@ impl Backend for NativeBackend {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<f32> {
-        let (batch, seq) = self.check_batch(rc, tokens, Some(targets))?;
-        let layout = self.layout(rc)?;
-        let w = Weights::materialize(&layout, state)?;
-        let sparse = self.sparse_layer(&layout, &w, seq)?;
-        let inv_count = 1.0 / (batch * seq) as f32;
-        // Fan out over the microbatch: each item computes its forward +
-        // backward into a private GradAcc with a per-worker workspace.
-        let layout_ref: &Layout = &layout;
-        let state_ref: &TrainState = state;
-        let w_ref = &w;
-        let sparse_ref = sparse.as_ref();
-        let per_item: Result<Vec<(f64, GradAcc)>> = (0..batch)
-            .into_par_iter()
-            .map_init(Workspace::default, |ws, bi| {
-                let tok = &tokens[bi * seq..(bi + 1) * seq];
-                let tgt = &targets[bi * seq..(bi + 1) * seq];
-                let (trace, logits) =
-                    self.forward_item(layout_ref, w_ref, state_ref, tok, sparse_ref, ws)?;
-                let (lsum, dlogits) =
-                    ce_loss_and_grad(&logits, tgt, inv_count, layout_ref.vocab)?;
-                let mut acc = GradAcc::new(layout_ref);
-                self.backward_item(
-                    layout_ref, w_ref, &trace, tok, &dlogits, sparse_ref, &mut acc, ws,
-                )?;
-                Ok((lsum as f64, acc))
-            })
-            .collect();
-        // Reduce in ascending item order: the loss sum and every leaf
-        // gradient see one fixed operation order at any pool size.
-        let mut acc = GradAcc::new(&layout);
-        let mut loss_sum = 0.0f64;
-        for (lsum, item_acc) in per_item? {
-            loss_sum += lsum;
-            acc.merge(&item_acc);
-        }
-        let loss = loss_sum as f32 * inv_count;
+        let (loss, acc) = self.grad_step(rc, state, tokens, targets)?;
         // AdamW update, host side.
         let t = state.step.scalar()? as i32 + 1;
         state.step = HostTensor::scalar_i32(t);
@@ -915,13 +1147,13 @@ impl Backend for NativeBackend {
         let (batch, seq) = self.check_batch(rc, tokens, Some(targets))?;
         let layout = self.layout(rc)?;
         let w = Weights::materialize(&layout, state)?;
-        let sparse = self.sparse_layer(&layout, &w, seq)?;
+        let sparse = self.sparse_layers(&layout, &w, seq)?;
         let inv_count = 1.0 / (batch * seq) as f32;
-        // Item-parallel like train_step; the f64 per-item losses are
-        // summed in ascending item order after the join.
+        // Item-parallel (no gradient memory to bound); the f64 per-item
+        // losses are summed in ascending item order after the join.
         let layout_ref: &Layout = &layout;
         let w_ref = &w;
-        let sparse_ref = sparse.as_ref();
+        let sparse_ref = sparse.as_deref();
         let per_item: Result<Vec<f64>> = (0..batch)
             .into_par_iter()
             .map_init(Workspace::default, |ws, bi| {
@@ -953,7 +1185,7 @@ impl Backend for NativeBackend {
         }
         let layout = self.layout(rc)?;
         let w = Weights::materialize(&layout, state)?;
-        let sparse = self.sparse_layer(&layout, &w, seq)?;
+        let sparse = self.sparse_layers(&layout, &w, seq)?;
         let mut ws = Workspace::default();
         let mut out = Vec::with_capacity(batch);
         for (bi, &pos) in answer_pos.iter().enumerate() {
@@ -962,19 +1194,19 @@ impl Backend for NativeBackend {
             }
             let tok = &tokens[bi * seq..(bi + 1) * seq];
             let trace =
-                self.forward_block(&layout, &w, state, tok, sparse.as_ref(), &mut ws)?;
+                self.forward_model(&layout, &w, state, tok, sparse.as_deref(), &mut ws)?;
             // Only the answer slot's choice-token logits are read, so
-            // skip the full (seq x vocab) LM-head GEMM: four d-length
-            // dot products against the relevant wout columns suffice.
-            let h = trace.x2.row(pos);
+            // skip the full (seq x vocab) readout: with the tied head
+            // each choice logit is one d-length dot product against the
+            // token's embedding row.
+            let h = trace.xf.row(pos);
             out.push(
                 answer_tokens
                     .iter()
                     .map(|&t| {
-                        let col = t as usize;
                         h.iter()
-                            .enumerate()
-                            .map(|(i, &a)| a * w.wout.at(i, col))
+                            .zip(w.tok.row(t as usize))
+                            .map(|(&a, &b)| a * b)
                             .sum::<f32>()
                     })
                     .collect::<Vec<f32>>(),
@@ -994,41 +1226,51 @@ impl Backend for NativeBackend {
         }
         let (batch, seq) = self.check_batch(rc, tokens, None)?;
         let layout = self.layout(rc)?;
-        let Some(cb_ix) = layout.pq_cb else {
+        if layout.layers.iter().all(|lx| lx.pq_cb.is_none()) {
             return Ok(false);
-        };
+        }
         let w = Weights::materialize(&layout, state)?;
-        let mut cbs = w.codebooks.clone().context("spt mode without codebooks")?;
-        // Collect the current K and Q projections per head (queries and
-        // keys share the codebook space — match counts compare their
-        // codes directly).
+        let sparse = self.sparse_layers(&layout, &w, seq)?;
+        // Collect the current K and Q projections per (layer, head):
+        // every layer quantizes its *own* pre-norm stream, so the
+        // refresh runs the real stacked forward and reads each layer's
+        // head-split projections out of the trace (queries and keys
+        // share the codebook space — match counts compare their codes
+        // directly).
+        let n_layers = layout.layers.len();
         let dh = layout.d_head;
-        let mut head_data: Vec<Vec<f32>> =
-            vec![Vec::with_capacity(2 * batch * seq * dh); layout.heads];
+        let mut head_data: Vec<Vec<Vec<f32>>> =
+            vec![vec![Vec::with_capacity(2 * batch * seq * dh); layout.heads]; n_layers];
         let mut ws = Workspace::default();
         for bi in 0..batch {
             let tok = &tokens[bi * seq..(bi + 1) * seq];
-            let x = self.embed(&layout, state, tok)?;
-            let kf = x.matmul_ws(&w.wk, &mut ws);
-            let qf = x.matmul_ws(&w.wq, &mut ws);
-            for proj in [&kf, &qf] {
-                for r in 0..proj.rows {
-                    let row = proj.row(r);
-                    for (h, data) in head_data.iter_mut().enumerate() {
-                        data.extend_from_slice(&row[h * dh..(h + 1) * dh]);
-                    }
+            let trace =
+                self.forward_model(&layout, &w, state, tok, sparse.as_deref(), &mut ws)?;
+            for (lt, per_head) in trace.layers.iter().zip(head_data.iter_mut()) {
+                for (h, data) in per_head.iter_mut().enumerate() {
+                    data.extend_from_slice(&lt.k[h].data);
+                    data.extend_from_slice(&lt.q[h].data);
                 }
             }
         }
-        for (cb, data) in cbs.iter_mut().zip(&head_data) {
-            pq::codebook_update(data, cb, 1.0);
-        }
         let stride = layout.pq_m * layout.pq_e * layout.pq_dsub;
-        let buf = state.params[cb_ix].as_f32_mut()?;
-        for (h, cb) in cbs.iter().enumerate() {
-            buf[h * stride..(h + 1) * stride].copy_from_slice(&cb.data);
+        let mut refreshed = false;
+        for (li, lx) in layout.layers.iter().enumerate() {
+            let Some(cb_ix) = lx.pq_cb else { continue };
+            let mut cbs = w.layers[li]
+                .codebooks
+                .clone()
+                .context("spt mode without codebooks")?;
+            for (cb, data) in cbs.iter_mut().zip(&head_data[li]) {
+                pq::codebook_update(data, cb, 1.0);
+            }
+            let buf = state.params[cb_ix].as_f32_mut()?;
+            for (h, cb) in cbs.iter().enumerate() {
+                buf[h * stride..(h + 1) * stride].copy_from_slice(&cb.data);
+            }
+            refreshed = true;
         }
-        Ok(true)
+        Ok(refreshed)
     }
 }
 
@@ -1036,15 +1278,19 @@ impl Backend for NativeBackend {
 mod tests {
     use super::*;
 
-    fn rc(mode: Mode) -> RunConfig {
+    fn rc_model(model: &str, mode: Mode) -> RunConfig {
         RunConfig {
-            model: "spt-nano".into(),
+            model: model.into(),
             mode,
             batch: 2,
             seq: 24,
             seed: 7,
             ..RunConfig::default()
         }
+    }
+
+    fn rc(mode: Mode) -> RunConfig {
+        rc_model("spt-nano", mode)
     }
 
     fn lm_batch(rc: &RunConfig, backend: &NativeBackend) -> (Vec<i32>, Vec<i32>) {
@@ -1064,19 +1310,45 @@ mod tests {
 
     #[test]
     fn layouts_have_expected_leaf_counts() {
+        // Per layer: 2 LN pairs + 6 projections = 10 leaves; shared:
+        // tok, pos + final LN pair = 4; lora adds 12 per layer, spt adds
+        // router + codebooks = 2 per layer.
         let cfg = presets::model("spt-nano").unwrap();
+        assert_eq!(cfg.n_layers, 1);
         let full = Layout::new(&cfg, Mode::Full).unwrap();
-        assert_eq!(full.n_leaves(), 9);
+        assert_eq!(full.n_leaves(), 4 + 10);
         let lora = Layout::new(&cfg, Mode::Lora).unwrap();
-        assert_eq!(lora.n_leaves(), 9 + 12);
+        assert_eq!(lora.n_leaves(), 4 + 10 + 12);
         let spt = Layout::new(&cfg, Mode::Spt).unwrap();
-        assert_eq!(spt.n_leaves(), 9 + 12 + 2);
+        assert_eq!(spt.n_leaves(), 4 + 10 + 12 + 2);
         assert_eq!(spt.paths.len(), spt.shapes.len());
-        // Trainable sets: full trains the backbone, lora/spt do not.
-        assert!(full.trainable()[full.wq]);
-        assert!(!spt.trainable()[spt.wq]);
-        assert!(spt.trainable()[spt.lora.unwrap()[SLOT_Q].a]);
-        assert!(!spt.trainable()[spt.router.unwrap()]);
+        assert_eq!(spt.paths.len(), spt.inits.len());
+        // Trainable sets: full trains the backbone + layer norms,
+        // lora/spt train the adapters and the tied embedding/readout.
+        assert!(full.trainable()[full.layers[0].wq]);
+        assert!(full.trainable()[full.layers[0].ln1_scale]);
+        assert!(full.trainable()[full.lnf_scale]);
+        assert!(!spt.trainable()[spt.layers[0].wq]);
+        assert!(!spt.trainable()[spt.layers[0].ln1_scale]);
+        assert!(spt.trainable()[spt.tok], "tied head must train in spt");
+        assert!(spt.trainable()[spt.layers[0].lora.as_ref().unwrap()[SLOT_Q].a]);
+        assert!(!spt.trainable()[spt.layers[0].router.unwrap()]);
+    }
+
+    #[test]
+    fn multi_layer_layout_stacks_leaf_groups() {
+        let cfg = presets::model("spt-nano-l2").unwrap();
+        assert_eq!(cfg.n_layers, 2);
+        let full = Layout::new(&cfg, Mode::Full).unwrap();
+        assert_eq!(full.n_leaves(), 4 + 2 * 10);
+        assert_eq!(full.layers.len(), 2);
+        let spt = Layout::new(&cfg, Mode::Spt).unwrap();
+        assert_eq!(spt.n_leaves(), 4 + 2 * (10 + 12 + 2));
+        // Each layer owns distinct leaves with layer-tagged paths.
+        assert_ne!(spt.layers[0].wq, spt.layers[1].wq);
+        assert!(spt.paths[spt.layers[0].wq].starts_with("['blocks'][0]"));
+        assert!(spt.paths[spt.layers[1].wq].starts_with("['blocks'][1]"));
+        assert!(spt.paths[spt.layers[1].pq_cb.unwrap()].contains("['pq']"));
     }
 
     #[test]
@@ -1103,6 +1375,26 @@ mod tests {
                 assert!(x.is_finite(), "{mode:?} loss not finite");
                 assert_eq!(x.to_bits(), y.to_bits(), "{mode:?} nondeterministic");
             }
+        }
+    }
+
+    #[test]
+    fn multi_layer_train_step_runs_in_all_modes() {
+        for mode in Mode::ALL {
+            let rc = rc_model("spt-nano-l2", mode);
+            let backend = NativeBackend::new();
+            let (tokens, targets) = lm_batch(&rc, &backend);
+            let mut state = backend.init_state(&rc).unwrap();
+            let l1 = backend
+                .train_step(&rc, &mut state, &tokens, &targets)
+                .unwrap();
+            let l2 = backend
+                .train_step(&rc, &mut state, &tokens, &targets)
+                .unwrap();
+            assert!(l1.is_finite() && l2.is_finite(), "{mode:?}");
+            // Repeating the same batch must move the loss (all layers
+            // receive gradient through the stack).
+            assert_ne!(l1.to_bits(), l2.to_bits(), "{mode:?}: params frozen?");
         }
     }
 
@@ -1138,26 +1430,53 @@ mod tests {
     }
 
     #[test]
-    fn codebook_refresh_updates_codebook_leaf_only_in_spt() {
-        let rc = rc(Mode::Spt);
+    fn codebook_refresh_updates_every_layer_only_in_spt() {
+        let rc = rc_model("spt-nano-l2", Mode::Spt);
         let backend = NativeBackend::new();
         let (tokens, _) = lm_batch(&rc, &backend);
         let mut state = backend.init_state(&rc).unwrap();
         let layout = backend.layout(&rc).unwrap();
-        let cb_ix = layout.pq_cb.unwrap();
-        let before = state.params[cb_ix].clone();
+        let before: Vec<HostTensor> = layout
+            .layers
+            .iter()
+            .map(|lx| state.params[lx.pq_cb.unwrap()].clone())
+            .collect();
         let refreshed = backend.refresh_codebooks(&rc, &mut state, &tokens).unwrap();
         assert!(refreshed);
-        let after = &state.params[cb_ix];
-        assert!(before.max_abs_diff(after).unwrap() > 0.0, "codebooks unchanged");
+        for (li, (lx, b)) in layout.layers.iter().zip(&before).enumerate() {
+            let after = &state.params[lx.pq_cb.unwrap()];
+            assert!(
+                b.max_abs_diff(after).unwrap() > 0.0,
+                "layer {li} codebooks unchanged"
+            );
+        }
         // Full mode: refresh is a no-op.
-        let rc_full = rc_full_helper();
+        let rc_full = rc(Mode::Full);
         let mut s2 = backend.init_state(&rc_full).unwrap();
         let (t2, _) = lm_batch(&rc_full, &backend);
         assert!(!backend.refresh_codebooks(&rc_full, &mut s2, &t2).unwrap());
     }
 
-    fn rc_full_helper() -> RunConfig {
-        rc(Mode::Full)
+    #[test]
+    fn loss_and_grads_matches_train_step_loss_and_masks_frozen_leaves() {
+        let rc = rc(Mode::Spt);
+        let backend = NativeBackend::new();
+        let (tokens, targets) = lm_batch(&rc, &backend);
+        let state = backend.init_state(&rc).unwrap();
+        let (loss, grads) = backend
+            .loss_and_grads(&rc, &state, &tokens, &targets)
+            .unwrap();
+        let mut state2 = state.clone();
+        let step_loss = backend
+            .train_step(&rc, &mut state2, &tokens, &targets)
+            .unwrap();
+        assert_eq!(loss.to_bits(), step_loss.to_bits());
+        let layout = backend.layout(&rc).unwrap();
+        for (ix, (g, &on)) in grads.iter().zip(layout.trainable().iter()).enumerate() {
+            assert_eq!(g.is_some(), on, "leaf {ix} gradient mask mismatch");
+        }
+        // The tied head gradient is live (readout + embedding paths).
+        let gtok = grads[layout.tok].as_ref().unwrap();
+        assert!(gtok.iter().any(|&x| x != 0.0), "tied tok grad all-zero");
     }
 }

@@ -14,6 +14,12 @@
 //! the native path keeps the same state layout but applies
 //! [`adamw_update`] leaf by leaf, so checkpoints are interchangeable
 //! bookkeeping-wise and the trainer stays backend-agnostic.
+//!
+//! Everything here is *leaf-generic*: the native backend's `n_layers`-
+//! deep layouts simply register one leaf group per layer
+//! (`['blocks'][i][...]` paths — weights, layer norms, adapters, and
+//! per-layer PQ codebooks), and the moment vectors, the AdamW sweep, and
+//! the artifact I/O contracts thread through unchanged.
 
 use anyhow::{bail, Context, Result};
 

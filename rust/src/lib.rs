@@ -19,11 +19,13 @@
 //!
 //! Training is **backend-agnostic** ([`coordinator::Backend`]):
 //!
-//! * [`coordinator::NativeBackend`] (default) fine-tunes a transformer
-//!   block end-to-end on the sparse substrate — dense projections,
-//!   PQ + top-L sparse attention, and the routed FFN all have native
-//!   backward passes ([`sparse::grad`], parallel twins in
-//!   [`sparse::mha`]) with AdamW applied host-side.  `spt train`,
+//! * [`coordinator::NativeBackend`] (default) fine-tunes the preset's
+//!   full `n_layers`-deep pre-norm transformer stack end-to-end on the
+//!   sparse substrate — layer norms, dense projections, PQ + top-L
+//!   sparse attention, and the routed FFN all have native backward
+//!   passes ([`sparse::grad`], parallel twins in [`sparse::mha`]) with
+//!   AdamW applied host-side and the readout tied to the token
+//!   embedding.  `spt train`,
 //!   `train-qa`, and `trial` work out of the box on any machine.
 //! * The PJRT engine ([`runtime`]'s `engine`, `coordinator`'s
 //!   `PjrtBackend`) executes pre-lowered AOT artifacts and sits behind

@@ -175,7 +175,7 @@ COMMANDS
 
 COMMON FLAGS
   --backend B           native (default, no artifacts needed) | pjrt
-  --model NAME          spt-tiny | spt-30m | spt-100m | spt-nano
+  --model NAME          spt-tiny | spt-30m | spt-100m | spt-nano[-l2] | spt-mini-64[-l4]
   --mode MODE           full | lora | spt
   --batch N  --seq N    workload shape (native backend)
   --steps N  --seed N   --eval_every N  --codebook_refresh_every N
@@ -186,8 +186,8 @@ COMMON FLAGS
   --save_ckpt FILE      write the final training state (train)
   --artifacts_dir DIR   (pjrt backend; default: artifacts)
 
-NOTE  the native backend trains a single transformer block of the chosen
-      model preset end-to-end on the rust sparse substrate.  `profile`,
+NOTE  the native backend trains the chosen preset's full n_layers-deep
+      pre-norm stack end-to-end on the rust sparse substrate.  `profile`,
       `blocks`, `goldens`, and `artifacts` always need `--features xla`
       plus AOT artifacts; `memplan` and `help` need nothing.
 ";

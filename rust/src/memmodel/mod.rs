@@ -19,6 +19,15 @@
 //! qualitative orderings, and ratio checks against Table 1/Table 4/Fig. 8b
 //! live in `rust/tests/` and the bench harness prints model outputs next
 //! to the paper's columns.
+//!
+//! The native training path now *realizes* the `n_layers`-deep
+//! activation picture [`model_peak`] prices: `coordinator/native.rs`
+//! stacks the preset's full depth and its backward holds every layer's
+//! saved activations live (per-layer attention CSRs, routed-FFN
+//! routings, layer-norm inputs) exactly as the
+//! no-activation-checkpointing branch below assumes, while gradient
+//! memory is bounded by the fixed-size chunked accumulator fan-out
+//! rather than O(batch).
 
 pub mod block;
 pub mod report;
@@ -29,7 +38,8 @@ use crate::config::{BlockConfig, Mode};
 
 /// Peak memory for an `n_layers`-deep model: with activation
 /// checkpointing off (paper's setting), backward keeps every layer's saved
-/// activations live, while weights/grads/opt scale with depth.
+/// activations live, while weights/grads/opt scale with depth — the same
+/// structure the native backend's stacked train step materializes.
 pub fn model_peak(
     cfg: &BlockConfig,
     mode: Mode,

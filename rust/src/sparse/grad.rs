@@ -86,6 +86,94 @@ pub fn relu_backward(h: &Matrix, dy: &Matrix) -> Matrix {
     Matrix { rows: h.rows, cols: h.cols, data }
 }
 
+/// Epsilon inside layer norm's variance square root — matches the L2
+/// JAX `layer_norm` definition (`python/compile/model.py`).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row-wise layer norm `y = (x - mu) / sqrt(var + LN_EPS) * scale + bias`
+/// (biased variance over the feature dimension, as in the L2 model).
+///
+/// `scale` and `bias` are `[1, d]`.  Per-row reductions run in ascending
+/// column order, so results are deterministic and independent of any
+/// outer parallelism.
+pub fn layer_norm(x: &Matrix, scale: &Matrix, bias: &Matrix) -> Matrix {
+    assert_eq!(scale.cols, x.cols, "layer_norm: scale dim mismatch");
+    assert_eq!(bias.cols, x.cols, "layer_norm: bias dim mismatch");
+    let d = x.cols;
+    let mut out = Matrix::zeros(x.rows, d);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let (mean, inv) = row_mean_inv_std(row);
+        for (i, (o, &v)) in out.row_mut(r).iter_mut().zip(row).enumerate() {
+            *o = (v - mean) * inv * scale.data[i] + bias.data[i];
+        }
+    }
+    out
+}
+
+/// Per-row mean and `1 / sqrt(var + LN_EPS)`, in the exact operation
+/// order both the forward and the backward recomputation use.
+fn row_mean_inv_std(row: &[f32]) -> (f32, f32) {
+    let d = row.len() as f32;
+    let mut mean = 0.0f32;
+    for &v in row {
+        mean += v;
+    }
+    mean /= d;
+    let mut var = 0.0f32;
+    for &v in row {
+        let c = v - mean;
+        var += c * c;
+    }
+    var /= d;
+    (mean, 1.0 / (var + LN_EPS).sqrt())
+}
+
+/// Backward of [`layer_norm`] given the forward *input* `x` (mean and
+/// variance are recomputed per row in the forward's operation order).
+///
+/// With `xhat = (x - mu) * inv_std` and `dxhat = dy ⊙ scale`:
+/// `dx = inv_std * (dxhat - mean(dxhat) - xhat * mean(dxhat ⊙ xhat))`.
+/// Returns `(dx, dscale, dbias)`; `dscale = Σ_rows dy ⊙ xhat` and
+/// `dbias = Σ_rows dy` are `[1, d]`, accumulated in ascending row order.
+pub fn layer_norm_backward(
+    x: &Matrix,
+    scale: &Matrix,
+    dy: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    assert_eq!(scale.cols, x.cols, "layer_norm_backward: scale dim mismatch");
+    assert_eq!(dy.rows, x.rows, "layer_norm_backward: dY row mismatch");
+    assert_eq!(dy.cols, x.cols, "layer_norm_backward: dY col mismatch");
+    let d = x.cols;
+    let inv_d = 1.0 / d as f32;
+    let mut dx = Matrix::zeros(x.rows, d);
+    let mut dscale = Matrix::zeros(1, d);
+    let mut dbias = Matrix::zeros(1, d);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let dy_row = dy.row(r);
+        let (mean, inv) = row_mean_inv_std(row);
+        let mut sum_dxhat = 0.0f32;
+        let mut sum_dxhat_xhat = 0.0f32;
+        for i in 0..d {
+            let xhat = (row[i] - mean) * inv;
+            let dxh = dy_row[i] * scale.data[i];
+            sum_dxhat += dxh;
+            sum_dxhat_xhat += dxh * xhat;
+            dscale.data[i] += dy_row[i] * xhat;
+            dbias.data[i] += dy_row[i];
+        }
+        let m1 = sum_dxhat * inv_d;
+        let m2 = sum_dxhat_xhat * inv_d;
+        for (i, o) in dx.row_mut(r).iter_mut().enumerate() {
+            let xhat = (row[i] - mean) * inv;
+            let dxh = dy_row[i] * scale.data[i];
+            *o = inv * (dxh - m1 - xhat * m2);
+        }
+    }
+    (dx, dscale, dbias)
+}
+
 /// Backward of [`super::attention::sparse_attention_masked`] through the
 /// kept entries only.
 ///
@@ -302,6 +390,55 @@ mod tests {
         assert_eq!(matmul_dw_ws(&x, &dy, &mut ws), want_dw);
         // Reuse the same workspace for a second, differently-shaped op.
         assert_eq!(matmul_dw_ws(&dy, &x, &mut ws), matmul_dw(&dy, &x));
+    }
+
+    #[test]
+    fn layer_norm_normalizes_rows() {
+        let mut rng = Rng::new(21);
+        let x = Matrix::randn(6, 32, 3.0, &mut rng);
+        let ones = Matrix::from_vec(1, 32, vec![1.0; 32]);
+        let zeros = Matrix::zeros(1, 32);
+        let y = layer_norm(&x, &ones, &zeros);
+        for r in 0..y.rows {
+            let row = y.row(r);
+            let mean: f32 = row.iter().sum::<f32>() / 32.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "row {r} var {var}");
+        }
+        // Scale and bias are applied per column after normalization.
+        let mut scale = Matrix::zeros(1, 32);
+        let mut bias = Matrix::zeros(1, 32);
+        for i in 0..32 {
+            scale.data[i] = 2.0;
+            bias.data[i] = -1.0;
+        }
+        let y2 = layer_norm(&x, &scale, &bias);
+        for (a, b) in y2.data.iter().zip(&y.data) {
+            assert!((a - (2.0 * b - 1.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layer_norm_backward_bias_and_scale_reductions() {
+        let mut rng = Rng::new(22);
+        let x = Matrix::randn(5, 8, 1.0, &mut rng);
+        let scale = Matrix::randn(1, 8, 1.0, &mut rng);
+        let dy = Matrix::randn(5, 8, 1.0, &mut rng);
+        let (_, dscale, dbias) = layer_norm_backward(&x, &scale, &dy);
+        // dbias is the plain column sum of dy.
+        for c in 0..8 {
+            let want: f32 = (0..5).map(|r| dy.at(r, c)).sum();
+            assert!((dbias.at(0, c) - want).abs() < 1e-5);
+        }
+        // dscale matches sum_rows dy * xhat computed independently.
+        let ones = Matrix::from_vec(1, 8, vec![1.0; 8]);
+        let zeros = Matrix::zeros(1, 8);
+        let xhat = layer_norm(&x, &ones, &zeros);
+        for c in 0..8 {
+            let want: f32 = (0..5).map(|r| dy.at(r, c) * xhat.at(r, c)).sum();
+            assert!((dscale.at(0, c) - want).abs() < 1e-4);
+        }
     }
 
     #[test]

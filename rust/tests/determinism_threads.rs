@@ -1,12 +1,14 @@
-//! Thread-count determinism of the native backend's item-parallel step.
+//! Thread-count determinism of the native backend's chunk-parallel step.
 //!
-//! PR "hot-path overhaul" fans `train_step` / `eval_loss` out over batch
-//! items and rebuilds the GEMMs on a blocked microkernel; both must stay
+//! `train_step` fans out over fixed-size item chunks and `eval_loss`
+//! over items, on top of the blocked GEMM microkernel; both must stay
 //! bit-identical at any rayon pool size.  These tests run the same
-//! spt-nano fine-tune under dedicated pools of 1, 2, and 8 threads
-//! (deliberately oversubscribed relative to small CI machines) and
-//! assert the losses, eval losses, parameters, and AdamW moments agree
-//! to the bit.  CI additionally runs this file under two
+//! fine-tune under dedicated pools of 1, 2, and 8 threads (deliberately
+//! oversubscribed relative to small CI machines) and assert the losses,
+//! eval losses, parameters, and AdamW moments agree to the bit — for the
+//! single-block `spt-nano` preset and for the multi-layer `spt-nano-l2`
+//! stack (per-layer weights, layer norms, and codebook leaves all
+//! compared).  CI additionally runs the `global_pool` tests under two
 //! `RAYON_NUM_THREADS` settings to cover the global-pool path.
 
 use spt::config::{Mode, RunConfig};
@@ -15,9 +17,9 @@ use spt::data::SyntheticCorpus;
 
 const STEPS: usize = 3;
 
-fn rc(mode: Mode) -> RunConfig {
+fn rc(model: &str, mode: Mode) -> RunConfig {
     RunConfig {
-        model: "spt-nano".into(),
+        model: model.into(),
         mode,
         batch: 8,
         seq: 32,
@@ -45,14 +47,14 @@ fn lm_batch(rc: &RunConfig, backend: &NativeBackend) -> (Vec<i32>, Vec<i32>) {
 
 /// Run `STEPS` train steps plus one eval under a dedicated pool of
 /// `threads` workers; returns the loss bit patterns and the final state.
-fn run_under_pool(threads: usize, mode: Mode) -> (Vec<u32>, TrainState) {
+fn run_under_pool(threads: usize, model: &str, mode: Mode) -> (Vec<u32>, TrainState) {
     let pool = rayon::ThreadPoolBuilder::new()
         .num_threads(threads)
         .build()
         .expect("pool");
     pool.install(|| {
         let backend = NativeBackend::new();
-        let cfg = rc(mode);
+        let cfg = rc(model, mode);
         let (tokens, targets) = lm_batch(&cfg, &backend);
         let mut state = backend.init_state(&cfg).unwrap();
         let mut bits = Vec::with_capacity(STEPS + 1);
@@ -60,7 +62,7 @@ fn run_under_pool(threads: usize, mode: Mode) -> (Vec<u32>, TrainState) {
             let loss = backend
                 .train_step(&cfg, &mut state, &tokens, &targets)
                 .unwrap();
-            assert!(loss.is_finite(), "{mode:?}: non-finite loss");
+            assert!(loss.is_finite(), "{model}/{mode:?}: non-finite loss");
             bits.push(loss.to_bits());
         }
         let eval = backend.eval_loss(&cfg, &state, &tokens, &targets).unwrap();
@@ -69,38 +71,50 @@ fn run_under_pool(threads: usize, mode: Mode) -> (Vec<u32>, TrainState) {
     })
 }
 
-#[test]
-fn train_step_bit_identical_across_pool_sizes() {
+/// The shared assertion: pools of 2 and 8 must reproduce the 1-thread
+/// pool bit-for-bit — losses, every parameter leaf, and both AdamW
+/// moment sets (which covers per-layer weights, layer norms, adapters,
+/// and codebook leaves on multi-layer presets).
+fn assert_pool_invariance(model: &str) {
     for mode in Mode::ALL {
-        let (bits1, state1) = run_under_pool(1, mode);
+        let (bits1, state1) = run_under_pool(1, model, mode);
         for threads in [2usize, 8] {
-            let (bits_t, state_t) = run_under_pool(threads, mode);
+            let (bits_t, state_t) = run_under_pool(threads, model, mode);
             assert_eq!(
                 bits1, bits_t,
-                "{mode:?}: losses diverge between pools of 1 and {threads}"
+                "{model}/{mode:?}: losses diverge between pools of 1 and {threads}"
             );
             assert_eq!(
                 state1.params, state_t.params,
-                "{mode:?}: params diverge between pools of 1 and {threads}"
+                "{model}/{mode:?}: params diverge between pools of 1 and {threads}"
             );
             assert_eq!(
                 state1.m, state_t.m,
-                "{mode:?}: AdamW m diverges between pools of 1 and {threads}"
+                "{model}/{mode:?}: AdamW m diverges between pools of 1 and {threads}"
             );
             assert_eq!(
                 state1.v, state_t.v,
-                "{mode:?}: AdamW v diverges between pools of 1 and {threads}"
+                "{model}/{mode:?}: AdamW v diverges between pools of 1 and {threads}"
             );
         }
     }
 }
 
 #[test]
-fn global_pool_matches_dedicated_single_thread_pool() {
-    // Whatever RAYON_NUM_THREADS CI sets for the global pool, results
-    // must equal the dedicated 1-thread pool's.
+fn train_step_bit_identical_across_pool_sizes() {
+    assert_pool_invariance("spt-nano");
+}
+
+#[test]
+fn multi_layer_train_step_bit_identical_across_pool_sizes() {
+    assert_pool_invariance("spt-nano-l2");
+}
+
+/// Whatever `RAYON_NUM_THREADS` CI sets for the global pool, results
+/// must equal the dedicated 1-thread pool's.
+fn assert_global_pool_matches_reference(model: &str) {
     let backend = NativeBackend::new();
-    let cfg = rc(Mode::Spt);
+    let cfg = rc(model, Mode::Spt);
     let (tokens, targets) = lm_batch(&cfg, &backend);
     let mut state = backend.init_state(&cfg).unwrap();
     let mut global_bits = Vec::new();
@@ -112,7 +126,19 @@ fn global_pool_matches_dedicated_single_thread_pool() {
                 .to_bits(),
         );
     }
-    let (reference, ref_state) = run_under_pool(1, Mode::Spt);
-    assert_eq!(&reference[..STEPS], &global_bits[..]);
-    assert_eq!(ref_state.params, state.params);
+    let (reference, ref_state) = run_under_pool(1, model, Mode::Spt);
+    assert_eq!(&reference[..STEPS], &global_bits[..], "{model}: losses");
+    assert_eq!(ref_state.params, state.params, "{model}: params");
+    assert_eq!(ref_state.m, state.m, "{model}: AdamW m");
+    assert_eq!(ref_state.v, state.v, "{model}: AdamW v");
+}
+
+#[test]
+fn global_pool_matches_dedicated_single_thread_pool() {
+    assert_global_pool_matches_reference("spt-nano");
+}
+
+#[test]
+fn global_pool_matches_dedicated_single_thread_pool_multi_layer() {
+    assert_global_pool_matches_reference("spt-nano-l2");
 }

@@ -8,9 +8,9 @@ use spt::config::{Mode, RunConfig};
 use spt::coordinator::{checkpoint, trial, Backend, NativeBackend, Trainer, TrainerOptions};
 use spt::coordinator::trial::TrialManager;
 
-fn rc(mode: Mode, steps: usize) -> RunConfig {
+fn rc_for(model: &str, mode: Mode, steps: usize) -> RunConfig {
     RunConfig {
-        model: "spt-nano".into(),
+        model: model.into(),
         mode,
         batch: 2,
         seq: 32,
@@ -23,27 +23,36 @@ fn rc(mode: Mode, steps: usize) -> RunConfig {
     }
 }
 
-#[test]
-fn native_training_reduces_loss_in_all_modes() {
+fn rc(mode: Mode, steps: usize) -> RunConfig {
+    rc_for("spt-nano", mode, steps)
+}
+
+/// 30-step fine-tune per mode on `model`; the tail of the loss curve
+/// must sit below the head.
+fn assert_training_reduces_loss(model: &str) {
     let backend = NativeBackend::new();
     for mode in Mode::ALL {
-        let mut cfg = rc(mode, 30);
+        let mut cfg = rc_for(model, mode, 30);
         cfg.eval_every = 15;
         let mut trainer = Trainer::new(&backend, cfg, TrainerOptions::default());
         let report = trainer.train().expect("train");
-        assert_eq!(report.steps, 30, "{mode:?}");
+        assert_eq!(report.steps, 30, "{model}/{mode:?}");
         assert!(
             report.losses.iter().all(|l| l.is_finite()),
-            "{mode:?}: non-finite loss"
+            "{model}/{mode:?}: non-finite loss"
         );
         let first: f32 = report.losses[..5].iter().sum::<f32>() / 5.0;
         let last: f32 = report.losses[25..].iter().sum::<f32>() / 5.0;
         assert!(
             last < first,
-            "{mode:?}: loss did not decrease ({first:.4} -> {last:.4})"
+            "{model}/{mode:?}: loss did not decrease ({first:.4} -> {last:.4})"
         );
         let e = report.evals.last().expect("eval point");
-        assert!(e.ppl.is_finite() && e.ppl > 1.0, "{mode:?}: ppl {}", e.ppl);
+        assert!(
+            e.ppl.is_finite() && e.ppl > 1.0,
+            "{model}/{mode:?}: ppl {}",
+            e.ppl
+        );
         if mode == Mode::Spt {
             assert!(report.refreshes > 0, "codebook refresh never ran");
         }
@@ -51,31 +60,46 @@ fn native_training_reduces_loss_in_all_modes() {
 }
 
 #[test]
-fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
+fn native_training_reduces_loss_in_all_modes() {
+    assert_training_reduces_loss("spt-nano");
+}
+
+#[test]
+fn multi_layer_training_reduces_loss_in_all_modes() {
+    // The n_layers=2 stack must train end to end — every layer's leaves
+    // receive gradient through the pre-norm residual stream.
+    assert_training_reduces_loss("spt-nano-l2");
+}
+
+/// The resume contract on `model`: an 8-step run interrupted at step 4,
+/// checkpointed, restored, and finished must reproduce the
+/// uninterrupted run bit-for-bit (spt: the mode with the most moving
+/// parts — sparse attention, routing, codebook refreshes).
+fn assert_resume_bit_identical(model: &str, ckpt_name: &str) {
     let backend = NativeBackend::new();
-    // Uninterrupted 8-step reference (spt: the mode with the most moving
-    // parts — sparse attention, routing, codebook refreshes).
-    let mut full = Trainer::new(&backend, rc(Mode::Spt, 8), TrainerOptions::default());
+    let mut full =
+        Trainer::new(&backend, rc_for(model, Mode::Spt, 8), TrainerOptions::default());
     let full_report = full.train().expect("uninterrupted run");
     assert_eq!(full_report.losses.len(), 8);
 
     // Interrupted run: halt after 4 optimizer steps, checkpoint to disk.
     let mut first = Trainer::new(
         &backend,
-        rc(Mode::Spt, 8),
+        rc_for(model, Mode::Spt, 8),
         TrainerOptions { stop_after: Some(4), ..Default::default() },
     );
     let r1 = first.train().expect("first half");
     assert_eq!(r1.losses.len(), 4);
     let dir = std::env::temp_dir().join("spt_native_ckpt_test");
     std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("resume.ckpt");
+    let path = dir.join(ckpt_name);
     checkpoint::save(first.last_state.as_ref().expect("state"), &path).expect("save");
 
     // Restore and run to completion.
     let restored = checkpoint::load(&path).expect("load");
     assert_eq!(restored.step.scalar().unwrap(), 4.0);
-    let mut second = Trainer::new(&backend, rc(Mode::Spt, 8), TrainerOptions::default());
+    let mut second =
+        Trainer::new(&backend, rc_for(model, Mode::Spt, 8), TrainerOptions::default());
     let r2 = second.train_from(restored).expect("resumed half");
     assert_eq!(r2.losses.len(), 4);
 
@@ -90,7 +114,7 @@ fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
         assert_eq!(
             stitched.to_bits(),
             reference.to_bits(),
-            "loss diverged at step {} ({stitched} vs {reference})",
+            "{model}: loss diverged at step {} ({stitched} vs {reference})",
             i + 1
         );
     }
@@ -101,6 +125,19 @@ fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
     assert_eq!(s_full.m, s_res.m);
     assert_eq!(s_full.v, s_res.v);
     assert_eq!(s_full.step, s_res.step);
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
+    assert_resume_bit_identical("spt-nano", "resume.ckpt");
+}
+
+#[test]
+fn multi_layer_checkpoint_resume_is_bit_identical() {
+    // Mid-run resume with per-layer leaves (weights, layer norms,
+    // adapters, per-layer codebooks) round-tripping through the binary
+    // checkpoint format.
+    assert_resume_bit_identical("spt-nano-l2", "resume_l2.ckpt");
 }
 
 #[test]
