@@ -1,0 +1,121 @@
+//! Decode-throughput bench: continuous batching vs one-sequence-at-a-time
+//! on the native cached-decode path.
+//!
+//! Runs a synthetic request trace through [`spt::infer::ServeDriver`]
+//! twice — once with the in-flight capacity at `SPT_DECODE_MAX_BATCH`
+//! (default 8) and once at 1 — cross-checks that every request generated
+//! identical tokens (the batching-invariance contract), and emits
+//! machine-readable `bench_out/BENCH_decode_native.json` so the serving
+//! perf trajectory is tracked across PRs alongside the table3 train-step
+//! record.  Model via `SPT_DECODE_BENCH_MODEL` (default `spt-mini-64`,
+//! the GEMM-bound bench block); mode via `SPT_DECODE_BENCH_MODE`.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::{Backend, NativeBackend};
+use spt::data::SyntheticCorpus;
+use spt::infer::serve::ServeReport;
+use spt::infer::{InferModel, Request, Sampler, ServeConfig, ServeDriver};
+use spt::metrics::Table;
+use spt::util::fmt_duration;
+use spt::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+fn main() {
+    let model_name =
+        std::env::var("SPT_DECODE_BENCH_MODEL").unwrap_or_else(|_| "spt-mini-64".into());
+    let mode = std::env::var("SPT_DECODE_BENCH_MODE")
+        .ok()
+        .and_then(|s| Mode::parse(&s).ok())
+        .unwrap_or(Mode::Spt);
+    let n_requests = env_usize("SPT_DECODE_REQUESTS", 16);
+    let prompt_len = env_usize("SPT_DECODE_PROMPT_LEN", 16);
+    let tokens = env_usize("SPT_DECODE_TOKENS", 32);
+    let max_batch = env_usize("SPT_DECODE_MAX_BATCH", 8);
+
+    let rc = RunConfig {
+        model: model_name.clone(),
+        mode,
+        seed: 0x5E17E,
+        ..RunConfig::default()
+    };
+    let backend = NativeBackend::new();
+    let state = backend.init_state(&rc).expect("init state");
+    let model = InferModel::new(&rc, state).expect("materialize");
+    assert!(
+        prompt_len + tokens <= model.max_seq(),
+        "workload exceeds max_seq {}",
+        model.max_seq()
+    );
+    let mut corpus = SyntheticCorpus::new(model.vocab(), 4, 0.85, rc.seed);
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|id| Request {
+            id,
+            prompt: corpus.sequence(prompt_len).iter().map(|&t| t as i32).collect(),
+            max_new_tokens: tokens,
+        })
+        .collect();
+    let run = |mb: usize| -> ServeReport {
+        let cfg = ServeConfig { max_batch: mb, sampler: Sampler::Greedy, seed: rc.seed };
+        let mut driver = ServeDriver::new(&model, cfg).expect("driver");
+        for r in &reqs {
+            driver.submit(r.clone()).expect("submit");
+        }
+        driver.run_to_completion().expect("serve")
+    };
+    // Warmup pass (page in weights/pack panels), then the measured runs.
+    let _ = run(max_batch);
+    let batched = run(max_batch);
+    let baseline = run(1);
+    for (b, s) in batched.completions.iter().zip(&baseline.completions) {
+        assert_eq!(b.tokens, s.tokens, "request {}: batching changed the tokens", b.id);
+    }
+    let speedup = batched.tokens_per_sec / baseline.tokens_per_sec.max(1e-9);
+
+    let mut table = Table::new(
+        &format!(
+            "Decode throughput — {model_name}/{} ({n_requests} reqs, prompt {prompt_len}, \
+             {tokens} new tokens, max_batch {max_batch})",
+            mode.as_str()
+        ),
+        &["Config", "tok/s", "steps", "p50 lat", "p99 lat", "speedup"],
+    );
+    for (name, r, s) in [
+        ("continuous batching", &batched, format!("{speedup:.2}x")),
+        ("one-at-a-time", &baseline, "1.00x".to_string()),
+    ] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", r.tokens_per_sec),
+            r.decode_steps.to_string(),
+            fmt_duration(r.latency_percentile(50.0)),
+            fmt_duration(r.latency_percentile(99.0)),
+            s,
+        ]);
+    }
+    common::emit("decode_throughput", &table);
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("decode_native".into()));
+    top.insert("model".into(), Json::Str(model_name));
+    top.insert("mode".into(), Json::Str(mode.as_str().into()));
+    top.insert("requests".into(), Json::Num(n_requests as f64));
+    top.insert("prompt_len".into(), Json::Num(prompt_len as f64));
+    top.insert("max_new_tokens".into(), Json::Num(tokens as f64));
+    top.insert("max_batch".into(), Json::Num(max_batch as f64));
+    top.insert("batched".into(), batched.to_json());
+    top.insert("baseline".into(), baseline.to_json());
+    top.insert("speedup".into(), Json::Num(speedup));
+    common::emit_json("BENCH_decode_native", &Json::Obj(top));
+    println!("[decode_throughput] continuous batching speedup: {speedup:.2}x");
+}

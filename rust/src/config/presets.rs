@@ -108,6 +108,18 @@ pub fn models() -> Vec<ModelConfig> {
             vocab_size: 2048,
             max_seq: 128,
         },
+        // Serving bench config: mini-64 stacked 2 deep — deep enough
+        // that continuous batching amortizes real per-layer decode work.
+        // CI's recorded trajectory point stays on spt-mini-64; run
+        // `SPT_DECODE_BENCH_MODEL=spt-mini-64-l2 cargo bench --bench
+        // decode_throughput` for the multi-layer serving measurement.
+        ModelConfig {
+            name: "spt-mini-64-l2".into(),
+            block: block("mini-64").unwrap(),
+            n_layers: 2,
+            vocab_size: 2048,
+            max_seq: 128,
+        },
         // Test-scale config for the native backend's fast paths (tests,
         // doc examples); small enough that a full fwd+bwd step is
         // milliseconds on one core.
@@ -209,5 +221,9 @@ mod tests {
         let mini4 = model("spt-mini-64-l4").unwrap();
         assert_eq!(mini.block, mini4.block);
         assert_eq!(mini4.n_layers, 4);
+        let mini2 = model("spt-mini-64-l2").unwrap();
+        assert_eq!(mini.block, mini2.block);
+        assert_eq!(mini.max_seq, mini2.max_seq);
+        assert_eq!(mini2.n_layers, 2);
     }
 }

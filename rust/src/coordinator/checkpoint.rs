@@ -3,10 +3,17 @@
 //!
 //! Layout (little-endian):
 //! ```text
-//! magic "SPTCKPT1" | u32 n_leaves
+//! magic "SPTCKPT2" | u32 model_len | model bytes | u8 mode | u32 n_layers
+//!                  | u32 n_leaves
 //! per leaf: u8 dtype | u32 ndim | u64 dims... | u64 byte_len | payload
 //! repeated for: params, m, v, then step (i32)
 //! ```
+//!
+//! v2 embeds the model identity ([`CkptMeta`]: model name, tuning mode,
+//! layer count) so `--resume` and `spt generate` can fail fast with a
+//! clear error instead of a leaf-shape mismatch deep in materialization.
+//! Legacy v1 files ("SPTCKPT1", no identity block) still load — they
+//! just carry no metadata to verify against.
 //!
 //! The format is leaf-count generic, so the native backend's multi-layer
 //! states (one leaf group per transformer layer) round-trip without any
@@ -20,9 +27,55 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::state::TrainState;
+use crate::config::Mode;
 use crate::runtime::HostTensor;
 
-const MAGIC: &[u8; 8] = b"SPTCKPT1";
+const MAGIC_V1: &[u8; 8] = b"SPTCKPT1";
+const MAGIC_V2: &[u8; 8] = b"SPTCKPT2";
+
+/// Model identity embedded in v2 checkpoint headers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CkptMeta {
+    pub model: String,
+    pub mode: Mode,
+    pub n_layers: usize,
+}
+
+impl CkptMeta {
+    /// Fail with a clear error when this checkpoint does not belong to
+    /// the `(model, mode)` the caller is about to run.
+    pub fn verify(&self, model: &str, mode: Mode) -> Result<()> {
+        if self.model != model || self.mode != mode {
+            bail!(
+                "checkpoint was trained as model '{}' mode '{}' ({} layers); \
+                 requested model '{}' mode '{}' — pass the matching --model/--mode",
+                self.model,
+                self.mode.as_str(),
+                self.n_layers,
+                model,
+                mode.as_str()
+            );
+        }
+        Ok(())
+    }
+}
+
+fn mode_code(mode: Mode) -> u8 {
+    match mode {
+        Mode::Full => 0,
+        Mode::Lora => 1,
+        Mode::Spt => 2,
+    }
+}
+
+fn mode_from_code(code: u8) -> Result<Mode> {
+    Ok(match code {
+        0 => Mode::Full,
+        1 => Mode::Lora,
+        2 => Mode::Spt,
+        other => bail!("corrupt checkpoint: mode code {other}"),
+    })
+}
 
 fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
     let (code, bytes): (u8, Vec<u8>) = match t {
@@ -87,13 +140,32 @@ fn read_tensor(r: &mut impl Read) -> Result<HostTensor> {
     })
 }
 
-/// Save a training state (params + optimizer) to disk.
+/// Save a training state (params + optimizer) to disk in the legacy v1
+/// format (no model identity).  Prefer [`save_tagged`], which stamps the
+/// checkpoint with its [`CkptMeta`] so later loads can verify it.
 pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    save_inner(state, None, path.as_ref())
+}
+
+/// Save a training state stamped with its model identity (v2 header).
+pub fn save_tagged(state: &TrainState, meta: &CkptMeta, path: impl AsRef<Path>) -> Result<()> {
+    save_inner(state, Some(meta), path.as_ref())
+}
+
+fn save_inner(state: &TrainState, meta: Option<&CkptMeta>, path: &Path) -> Result<()> {
     let mut w = std::io::BufWriter::new(
-        std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {:?}", path.as_ref()))?,
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
     );
-    w.write_all(MAGIC)?;
+    match meta {
+        None => w.write_all(MAGIC_V1)?,
+        Some(m) => {
+            w.write_all(MAGIC_V2)?;
+            w.write_all(&(m.model.len() as u32).to_le_bytes())?;
+            w.write_all(m.model.as_bytes())?;
+            w.write_all(&[mode_code(m.mode)])?;
+            w.write_all(&(m.n_layers as u32).to_le_bytes())?;
+        }
+    }
     w.write_all(&(state.params.len() as u32).to_le_bytes())?;
     for group in [&state.params, &state.m, &state.v] {
         for t in group {
@@ -108,17 +180,43 @@ pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-/// Restore a training state from disk.
+/// Restore a training state from disk (either header version),
+/// discarding any identity metadata.  Use [`load_tagged`] when the
+/// caller wants to verify the checkpoint against a run configuration.
 pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
+    Ok(load_tagged(path)?.0)
+}
+
+/// Restore a training state plus its identity metadata (`None` for
+/// legacy v1 checkpoints, which carry none).
+pub fn load_tagged(path: impl AsRef<Path>) -> Result<(TrainState, Option<CkptMeta>)> {
     let mut r = std::io::BufReader::new(
         std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {:?}", path.as_ref()))?,
     );
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let meta = if &magic == MAGIC_V1 {
+        None
+    } else if &magic == MAGIC_V2 {
+        let mut mlen = [0u8; 4];
+        r.read_exact(&mut mlen)?;
+        let mlen = u32::from_le_bytes(mlen) as usize;
+        if mlen > 4096 {
+            bail!("corrupt checkpoint: model name length {mlen}");
+        }
+        let mut mbuf = vec![0u8; mlen];
+        r.read_exact(&mut mbuf)?;
+        let model = String::from_utf8(mbuf).context("checkpoint model name")?;
+        let mut code = [0u8; 1];
+        r.read_exact(&mut code)?;
+        let mode = mode_from_code(code[0])?;
+        let mut nl = [0u8; 4];
+        r.read_exact(&mut nl)?;
+        Some(CkptMeta { model, mode, n_layers: u32::from_le_bytes(nl) as usize })
+    } else {
         bail!("not an SPT checkpoint (bad magic)");
-    }
+    };
     let mut n = [0u8; 4];
     r.read_exact(&mut n)?;
     let n = u32::from_le_bytes(n) as usize;
@@ -141,7 +239,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
         .split('\n')
         .map(str::to_string)
         .collect();
-    Ok(TrainState { params, m, v, step, param_paths })
+    Ok((TrainState { params, m, v, step, param_paths }, meta))
 }
 
 #[cfg(test)]
@@ -180,6 +278,44 @@ mod tests {
         assert_eq!(s.v, s2.v);
         assert_eq!(s.step, s2.step);
         assert_eq!(s.param_paths, s2.param_paths);
+    }
+
+    #[test]
+    fn tagged_roundtrip_preserves_meta_and_state() {
+        let dir = std::env::temp_dir().join("spt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tagged.ckpt");
+        let s = state();
+        let meta = CkptMeta {
+            model: "spt-nano-l2".into(),
+            mode: Mode::Spt,
+            n_layers: 2,
+        };
+        save_tagged(&s, &meta, &path).unwrap();
+        let (s2, m2) = load_tagged(&path).unwrap();
+        assert_eq!(s.params, s2.params);
+        assert_eq!(s.step, s2.step);
+        assert_eq!(m2.as_ref(), Some(&meta));
+        // The untagged loader still reads it.
+        let s3 = load(&path).unwrap();
+        assert_eq!(s.params, s3.params);
+        // verify(): exact match passes, any identity drift fails clearly.
+        meta.verify("spt-nano-l2", Mode::Spt).unwrap();
+        let err = meta.verify("spt-nano", Mode::Spt).unwrap_err();
+        assert!(err.to_string().contains("spt-nano-l2"), "{err}");
+        assert!(meta.verify("spt-nano-l2", Mode::Full).is_err());
+    }
+
+    #[test]
+    fn legacy_v1_loads_with_no_meta() {
+        let dir = std::env::temp_dir().join("spt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.ckpt");
+        let s = state();
+        save(&s, &path).unwrap();
+        let (s2, meta) = load_tagged(&path).unwrap();
+        assert_eq!(s.params, s2.params);
+        assert!(meta.is_none());
     }
 
     #[test]

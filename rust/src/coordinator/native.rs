@@ -66,7 +66,7 @@ use crate::sparse::bspmv::{self, Routing};
 use crate::sparse::grad;
 use crate::sparse::mha::{self, MultiHeadSparseAttention};
 use crate::sparse::pq::{self, Codebooks};
-use crate::sparse::{Csr, Matrix, Workspace};
+use crate::sparse::{Csr, Matrix, PackedB, Workspace};
 use crate::util::rng::Rng;
 
 /// Items per gradient-accumulation chunk in `train_step`.  Fixed (never
@@ -135,7 +135,7 @@ const SLOT_WO2: usize = 5;
 
 /// Leaf indices of one transformer layer.
 #[derive(Debug, Clone)]
-struct LayerIx {
+pub(crate) struct LayerIx {
     ln1_scale: usize,
     ln1_bias: usize,
     wq: usize,
@@ -154,36 +154,37 @@ struct LayerIx {
 /// Static description of the native model: dimensions plus the index of
 /// every leaf in the [`TrainState`] vectors.  Shared leaves (tied
 /// embedding/readout, positions, final layer norm) come first, then one
-/// [`LayerIx`] group per layer.
+/// [`LayerIx`] group per layer.  `pub(crate)` so the inference subsystem
+/// (`crate::infer`) shares the exact model description the trainer uses.
 #[derive(Debug, Clone)]
-struct Layout {
-    mode: Mode,
-    vocab: usize,
-    d: usize,
-    dff: usize,
-    max_seq: usize,
-    heads: usize,
-    d_head: usize,
-    pq_m: usize,
-    pq_e: usize,
-    pq_dsub: usize,
-    groups: usize,
-    sparsity: Sparsity,
+pub(crate) struct Layout {
+    pub(crate) mode: Mode,
+    pub(crate) vocab: usize,
+    pub(crate) d: usize,
+    pub(crate) dff: usize,
+    pub(crate) max_seq: usize,
+    pub(crate) heads: usize,
+    pub(crate) d_head: usize,
+    pub(crate) pq_m: usize,
+    pub(crate) pq_e: usize,
+    pub(crate) pq_dsub: usize,
+    pub(crate) groups: usize,
+    pub(crate) sparsity: Sparsity,
     /// Token embedding, tied to the readout (`logits = xf · tok^T`).
-    tok: usize,
-    pos: usize,
-    lnf_scale: usize,
-    lnf_bias: usize,
-    layers: Vec<LayerIx>,
-    shapes: Vec<(usize, usize)>,
-    paths: Vec<String>,
-    inits: Vec<LeafInit>,
+    pub(crate) tok: usize,
+    pub(crate) pos: usize,
+    pub(crate) lnf_scale: usize,
+    pub(crate) lnf_bias: usize,
+    pub(crate) layers: Vec<LayerIx>,
+    pub(crate) shapes: Vec<(usize, usize)>,
+    pub(crate) paths: Vec<String>,
+    pub(crate) inits: Vec<LeafInit>,
 }
 
 /// How a leaf is initialized (recorded at registration time so
 /// `init_state` stays a single deterministic pass over the leaves).
 #[derive(Debug, Clone, Copy)]
-enum LeafInit {
+pub(crate) enum LeafInit {
     /// `N(0, scale^2)` draws from the init RNG stream.
     Normal(f32),
     /// Constant fill, consuming no RNG draws (layer-norm scales start
@@ -215,7 +216,7 @@ impl LeafBuilder {
 }
 
 impl Layout {
-    fn new(cfg: &ModelConfig, mode: Mode) -> Result<Self> {
+    pub(crate) fn new(cfg: &ModelConfig, mode: Mode) -> Result<Self> {
         let b = &cfg.block;
         let (d, dff) = (b.d_model, b.d_ffn);
         let (heads, d_head) = (b.n_heads(), b.d_head);
@@ -322,7 +323,7 @@ impl Layout {
         })
     }
 
-    fn n_leaves(&self) -> usize {
+    pub(crate) fn n_leaves(&self) -> usize {
         self.paths.len()
     }
 
@@ -375,34 +376,51 @@ impl Layout {
     }
 }
 
-/// Materialized effective weights of one layer (base + LoRA deltas).
-struct LayerWeights {
-    ln1_scale: Matrix,
-    ln1_bias: Matrix,
-    wq: Matrix,
-    wk: Matrix,
-    wv: Matrix,
-    wo: Matrix,
-    ln2_scale: Matrix,
-    ln2_bias: Matrix,
-    wi: Matrix,
-    wo2: Matrix,
+/// Materialized effective weights of one layer (base + LoRA deltas),
+/// with the GEMM microkernel's packed-B panels cached for the forward
+/// projections (pack-once: the weights are constant within a step — and
+/// for a whole inference session — so repeated products skip the
+/// per-call packing pass; the cache is invalidated by construction
+/// because `Weights` is re-materialized after every optimizer update).
+pub(crate) struct LayerWeights {
+    pub(crate) ln1_scale: Matrix,
+    pub(crate) ln1_bias: Matrix,
+    pub(crate) wq: Matrix,
+    pub(crate) wk: Matrix,
+    pub(crate) wv: Matrix,
+    pub(crate) wo: Matrix,
+    pub(crate) ln2_scale: Matrix,
+    pub(crate) ln2_bias: Matrix,
+    pub(crate) wi: Matrix,
+    pub(crate) wo2: Matrix,
+    /// Packed panels of the four attention projections (always used by
+    /// the forward, in every mode).
+    pub(crate) wq_p: PackedB,
+    pub(crate) wk_p: PackedB,
+    pub(crate) wv_p: PackedB,
+    pub(crate) wo_p: PackedB,
+    /// Packed panels of the dense-FFN matrices (full/lora forward; the
+    /// spt forward multiplies `W_I`/`W_O` block-wise through BSpMV, whose
+    /// sub-NR block widths don't tile the full-matrix panels).
+    pub(crate) wi_p: Option<PackedB>,
+    pub(crate) wo2_p: Option<PackedB>,
     /// Adapter factors (a, b) per slot, aligned with `LayerIx::lora`.
-    lora: Option<Vec<(Matrix, Matrix)>>,
-    router: Option<Matrix>,
-    codebooks: Option<Vec<Codebooks>>,
+    pub(crate) lora: Option<Vec<(Matrix, Matrix)>>,
+    pub(crate) router: Option<Matrix>,
+    pub(crate) codebooks: Option<Vec<Codebooks>>,
 }
 
 /// Materialized effective weights for one step: the shared tied
 /// embedding/readout and final layer norm plus one [`LayerWeights`] per
-/// layer.
-struct Weights {
+/// layer.  `pub(crate)` so `crate::infer` materializes a session's
+/// weights through exactly this path.
+pub(crate) struct Weights {
     /// `[vocab, d]`; embedding rows on the way in, readout columns
     /// (transposed) on the way out.
-    tok: Matrix,
-    lnf_scale: Matrix,
-    lnf_bias: Matrix,
-    layers: Vec<LayerWeights>,
+    pub(crate) tok: Matrix,
+    pub(crate) lnf_scale: Matrix,
+    pub(crate) lnf_bias: Matrix,
+    pub(crate) layers: Vec<LayerWeights>,
 }
 
 fn leaf_matrix(layout: &Layout, state: &TrainState, ix: usize) -> Result<Matrix> {
@@ -454,6 +472,19 @@ fn materialize_layer(layout: &Layout, lx: &LayerIx, state: &TrainState) -> Resul
     let wo = eff(lx.wo, SLOT_O)?;
     let wi = eff(lx.wi, SLOT_WI)?;
     let wo2 = eff(lx.wo2, SLOT_WO2)?;
+    // Pack-once: the forward's B operands, packed here so every item (and
+    // every decode step) skips the per-call packing pass.
+    let (wq_p, wk_p, wv_p, wo_p) = (
+        PackedB::pack(&wq),
+        PackedB::pack(&wk),
+        PackedB::pack(&wv),
+        PackedB::pack(&wo),
+    );
+    let (wi_p, wo2_p) = if layout.mode == Mode::Spt {
+        (None, None)
+    } else {
+        (Some(PackedB::pack(&wi)), Some(PackedB::pack(&wo2)))
+    };
     let router = match lx.router {
         Some(ix) => Some(leaf_matrix(layout, state, ix)?),
         None => None,
@@ -486,6 +517,12 @@ fn materialize_layer(layout: &Layout, lx: &LayerIx, state: &TrainState) -> Resul
         ln2_bias: leaf_matrix(layout, state, lx.ln2_bias)?,
         wi,
         wo2,
+        wq_p,
+        wk_p,
+        wv_p,
+        wo_p,
+        wi_p,
+        wo2_p,
         lora,
         router,
         codebooks,
@@ -493,7 +530,7 @@ fn materialize_layer(layout: &Layout, lx: &LayerIx, state: &TrainState) -> Resul
 }
 
 impl Weights {
-    fn materialize(layout: &Layout, state: &TrainState) -> Result<Self> {
+    pub(crate) fn materialize(layout: &Layout, state: &TrainState) -> Result<Self> {
         if state.params.len() != layout.n_leaves() {
             bail!(
                 "state has {} leaves, layout wants {} (model/mode mismatch?)",
@@ -515,36 +552,38 @@ impl Weights {
     }
 }
 
-/// Per-layer forward caches consumed by the backward pass.
-struct LayerTrace {
+/// Per-layer forward caches consumed by the backward pass — and, via
+/// `crate::infer`, the prefill output that seeds a decode cache (the
+/// per-head K/V projections are exactly the cache contents).
+pub(crate) struct LayerTrace {
     /// The residual-stream input this layer consumed.
-    x_in: Matrix,
+    pub(crate) x_in: Matrix,
     /// `ln1(x_in)` — the attention sub-block's input.
-    a_in: Matrix,
-    q: Vec<Matrix>,
-    k: Vec<Matrix>,
-    v: Vec<Matrix>,
+    pub(crate) a_in: Matrix,
+    pub(crate) q: Vec<Matrix>,
+    pub(crate) k: Vec<Matrix>,
+    pub(crate) v: Vec<Matrix>,
     /// spt: per-head post-softmax attention CSRs.
-    attn: Option<Vec<Csr>>,
-    attn_out: Matrix,
+    pub(crate) attn: Option<Vec<Csr>>,
+    pub(crate) attn_out: Matrix,
     /// `x_in + attn_out · W_O` — the FFN sub-block's residual input.
-    x_mid: Matrix,
+    pub(crate) x_mid: Matrix,
     /// `ln2(x_mid)` — the FFN sub-block's input.
-    f_in: Matrix,
+    pub(crate) f_in: Matrix,
     /// full/lora: dense FFN hidden activations (post-ReLU).
-    h1: Option<Matrix>,
+    pub(crate) h1: Option<Matrix>,
     /// spt: the routing the FFN forward used (backward follows it).
-    routing: Option<Routing>,
+    pub(crate) routing: Option<Routing>,
 }
 
 /// Per-item forward caches: one [`LayerTrace`] per layer plus the final
 /// residual stream and its layer-normed readout input.
-struct ItemTrace {
-    layers: Vec<LayerTrace>,
+pub(crate) struct ItemTrace {
+    pub(crate) layers: Vec<LayerTrace>,
     /// Last layer's output (input to the final layer norm).
-    x_out: Matrix,
+    pub(crate) x_out: Matrix,
     /// `lnf(x_out)` — what the tied readout multiplies.
-    xf: Matrix,
+    pub(crate) xf: Matrix,
 }
 
 /// Gradient accumulator: one flat buffer per *trainable* leaf.
@@ -638,7 +677,7 @@ impl GradAcc {
 }
 
 /// Column-slice the H heads out of a `[n, H*dh]` matrix.
-fn split_heads(x: &Matrix, heads: usize, dh: usize) -> Vec<Matrix> {
+pub(crate) fn split_heads(x: &Matrix, heads: usize, dh: usize) -> Vec<Matrix> {
     assert_eq!(x.cols, heads * dh, "head split shape mismatch");
     (0..heads)
         .map(|h| {
@@ -652,7 +691,7 @@ fn split_heads(x: &Matrix, heads: usize, dh: usize) -> Vec<Matrix> {
 }
 
 /// Inverse of [`split_heads`].
-fn concat_heads(parts: &[Matrix]) -> Matrix {
+pub(crate) fn concat_heads(parts: &[Matrix]) -> Matrix {
     let rows = parts[0].rows;
     let dh = parts[0].cols;
     let mut out = Matrix::zeros(rows, parts.len() * dh);
@@ -740,17 +779,40 @@ impl NativeBackend {
         Ok(self.cached(rc)?.0)
     }
 
-    fn layout(&self, rc: &RunConfig) -> Result<Arc<Layout>> {
+    pub(crate) fn layout(&self, rc: &RunConfig) -> Result<Arc<Layout>> {
         Ok(self.cached(rc)?.1)
     }
 
     /// Token + learned positional embedding for one sequence.
-    fn embed(&self, layout: &Layout, state: &TrainState, tok: &[i32]) -> Result<Matrix> {
+    pub(crate) fn embed(
+        &self,
+        layout: &Layout,
+        state: &TrainState,
+        tok: &[i32],
+    ) -> Result<Matrix> {
+        self.embed_at(layout, state, tok, 0)
+    }
+
+    /// [`Self::embed`] with the sequence starting at absolute position
+    /// `pos0` — the decode path embeds each new token at its own
+    /// position; row `s` here is bit-identical to row `pos0 + s` of a
+    /// full-sequence embed (the sum is row-local).
+    pub(crate) fn embed_at(
+        &self,
+        layout: &Layout,
+        state: &TrainState,
+        tok: &[i32],
+        pos0: usize,
+    ) -> Result<Matrix> {
         let te = state.params[layout.tok].as_f32()?;
         let pe = state.params[layout.pos].as_f32()?;
         let d = layout.d;
-        if tok.len() > layout.max_seq {
-            bail!("sequence {} exceeds max_seq {}", tok.len(), layout.max_seq);
+        if pos0 + tok.len() > layout.max_seq {
+            bail!(
+                "sequence {} exceeds max_seq {}",
+                pos0 + tok.len(),
+                layout.max_seq
+            );
         }
         let mut x = Matrix::zeros(tok.len(), d);
         for (s, &t) in tok.iter().enumerate() {
@@ -759,7 +821,7 @@ impl NativeBackend {
                 bail!("token {t} out of vocabulary {}", layout.vocab);
             }
             let trow = &te[t * d..(t + 1) * d];
-            let prow = &pe[s * d..(s + 1) * d];
+            let prow = &pe[(pos0 + s) * d..(pos0 + s + 1) * d];
             for ((o, &a), &b) in x.row_mut(s).iter_mut().zip(trow).zip(prow) {
                 *o = a + b;
             }
@@ -771,16 +833,29 @@ impl NativeBackend {
     /// mode only): each layer's codebooks are constant within a step and
     /// `L` depends only on the sequence length, so per-item construction
     /// would just clone codebooks `batch` times.
-    fn sparse_layers(
+    pub(crate) fn sparse_layers(
         &self,
         layout: &Layout,
         w: &Weights,
         seq: usize,
     ) -> Result<Option<Vec<MultiHeadSparseAttention>>> {
+        let l = layout.sparsity.topl(seq).min(seq);
+        self.sparse_layers_with_l(layout, w, l)
+    }
+
+    /// [`Self::sparse_layers`] with an explicit sparsity strength —
+    /// the inference prefill pins `l` to the *full* target sequence's L
+    /// (clamped to the prompt length) so prefill + decode reproduce a
+    /// full-sequence forward bit for bit.
+    pub(crate) fn sparse_layers_with_l(
+        &self,
+        layout: &Layout,
+        w: &Weights,
+        l: usize,
+    ) -> Result<Option<Vec<MultiHeadSparseAttention>>> {
         if layout.mode != Mode::Spt {
             return Ok(None);
         }
-        let l = layout.sparsity.topl(seq).min(seq);
         let layers = w
             .layers
             .iter()
@@ -795,7 +870,7 @@ impl NativeBackend {
     /// One sequence forward through the whole pre-norm stack, up to the
     /// final layer norm (no readout).  `ws` is the item's reusable GEMM
     /// workspace.
-    fn forward_model(
+    pub(crate) fn forward_model(
         &self,
         layout: &Layout,
         w: &Weights,
@@ -808,9 +883,9 @@ impl NativeBackend {
         let mut layers = Vec::with_capacity(w.layers.len());
         for (li, lw) in w.layers.iter().enumerate() {
             let a_in = grad::layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
-            let q = split_heads(&a_in.matmul_ws(&lw.wq, ws), layout.heads, layout.d_head);
-            let k = split_heads(&a_in.matmul_ws(&lw.wk, ws), layout.heads, layout.d_head);
-            let v = split_heads(&a_in.matmul_ws(&lw.wv, ws), layout.heads, layout.d_head);
+            let q = split_heads(&a_in.matmul_packed(&lw.wq_p), layout.heads, layout.d_head);
+            let k = split_heads(&a_in.matmul_packed(&lw.wk_p), layout.heads, layout.d_head);
+            let v = split_heads(&a_in.matmul_packed(&lw.wv_p), layout.heads, layout.d_head);
             let (ys, attn) = if layout.mode == Mode::Spt {
                 let layer = &sparse.context("spt mode without sparse layers")?[li];
                 let (ys, csrs) = layer.forward_cached(&q, &k, &v);
@@ -825,7 +900,7 @@ impl NativeBackend {
                 (ys, None)
             };
             let attn_out = concat_heads(&ys);
-            let x_mid = x.add(&attn_out.matmul_ws(&lw.wo, ws));
+            let x_mid = x.add(&attn_out.matmul_packed(&lw.wo_p));
             let f_in = grad::layer_norm(&x_mid, &lw.ln2_scale, &lw.ln2_bias);
             let (f, h1, routing) = if layout.mode == Mode::Spt {
                 let router = lw.router.as_ref().context("spt mode without router")?;
@@ -835,8 +910,10 @@ impl NativeBackend {
                 let f = mha::routed_ffn_par(&f_in, &lw.wi, &lw.wo2, &routing);
                 (f, None, Some(routing))
             } else {
-                let h1 = f_in.matmul_ws(&lw.wi, ws).relu();
-                let f = h1.matmul_ws(&lw.wo2, ws);
+                let wi_p = lw.wi_p.as_ref().context("dense mode without packed W_I")?;
+                let wo2_p = lw.wo2_p.as_ref().context("dense mode without packed W_O")?;
+                let h1 = f_in.matmul_packed(wi_p).relu();
+                let f = h1.matmul_packed(wo2_p);
                 (f, Some(h1), None)
             };
             let x_next = x_mid.add(&f);
@@ -861,7 +938,7 @@ impl NativeBackend {
 
     /// One sequence forward; returns the backward caches and the logits
     /// (`xf · tok^T` through the tied readout, on the NT kernel).
-    fn forward_item(
+    pub(crate) fn forward_item(
         &self,
         layout: &Layout,
         w: &Weights,
@@ -1063,6 +1140,26 @@ impl NativeBackend {
     ) -> Result<(f32, Vec<Option<Vec<f32>>>)> {
         let (loss, acc) = self.grad_step(rc, state, tokens, targets)?;
         Ok((loss, acc.g))
+    }
+
+    /// Full-sequence forward logits (`[seq, vocab]`) for one sequence —
+    /// the reference the inference subsystem's prefill/decode parity
+    /// tests compare against (same weights materialization, same
+    /// sequence-length-derived L, same kernels as training).
+    #[doc(hidden)]
+    pub fn forward_logits(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+    ) -> Result<Matrix> {
+        let layout = self.layout(rc)?;
+        let w = Weights::materialize(&layout, state)?;
+        let sparse = self.sparse_layers(&layout, &w, tokens.len())?;
+        let mut ws = Workspace::default();
+        let (_, logits) =
+            self.forward_item(&layout, &w, state, tokens, sparse.as_deref(), &mut ws)?;
+        Ok(logits)
     }
 }
 

@@ -1,0 +1,152 @@
+//! The decode cache: per-layer, per-head K/V matrices plus (spt mode)
+//! the PQ codes of every cached key.
+//!
+//! Keys and values append row by row as decode advances; codes append
+//! through [`pq::quantize_append`], so the cached code matrix is always
+//! bit-identical to a fresh quantization of the cached keys — which is
+//! exactly what the training forward's top-L selection consumes.
+
+use anyhow::{bail, Result};
+
+use crate::sparse::pq::{self, Codebooks};
+use crate::sparse::{Codes, Matrix};
+
+/// One layer's cached decode state.
+pub struct LayerCache {
+    /// Per-head cached keys, `[len, d_head]` each.
+    pub k: Vec<Matrix>,
+    /// Per-head cached values, `[len, d_head]` each.
+    pub v: Vec<Matrix>,
+    /// spt only: per-head PQ codes of the cached keys (`[len, M]`).
+    pub codes: Option<Vec<Codes>>,
+}
+
+/// Per-sequence decode cache: one [`LayerCache`] per transformer layer.
+pub struct DecodeCache {
+    pub layers: Vec<LayerCache>,
+}
+
+impl DecodeCache {
+    /// An empty cache for an `n_layers`-deep model.  `pq_m` is `Some`
+    /// (the per-head subspace count) in spt mode, `None` otherwise.
+    pub fn new(n_layers: usize, heads: usize, d_head: usize, pq_m: Option<usize>) -> Self {
+        let layers = (0..n_layers)
+            .map(|_| LayerCache {
+                k: (0..heads).map(|_| Matrix::zeros(0, d_head)).collect(),
+                v: (0..heads).map(|_| Matrix::zeros(0, d_head)).collect(),
+                codes: pq_m.map(|m| (0..heads).map(|_| Codes::zeros(0, m)).collect()),
+            })
+            .collect();
+        DecodeCache { layers }
+    }
+
+    /// Cached positions (every layer and head stays in lockstep).
+    pub fn len(&self) -> usize {
+        self.layers
+            .first()
+            .and_then(|lc| lc.k.first())
+            .map(|m| m.rows)
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one position's K/V rows (`[heads * d_head]` concatenated
+    /// head-major, the projection row layout) to layer `li`, quantizing
+    /// the new key against `cbs` when this cache carries codes.
+    pub fn append(
+        &mut self,
+        li: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        cbs: Option<&[Codebooks]>,
+    ) -> Result<()> {
+        let lc = &mut self.layers[li];
+        let heads = lc.k.len();
+        let dh = lc.k[0].cols;
+        if k_row.len() != heads * dh || v_row.len() != heads * dh {
+            bail!(
+                "append row has {} values, cache wants {} heads x {}",
+                k_row.len(),
+                heads,
+                dh
+            );
+        }
+        if lc.codes.is_some() && cbs.is_none() {
+            bail!("cache carries PQ codes but no codebooks were supplied");
+        }
+        for h in 0..heads {
+            let seg = h * dh..(h + 1) * dh;
+            lc.k[h].rows += 1;
+            lc.k[h].data.extend_from_slice(&k_row[seg.clone()]);
+            lc.v[h].rows += 1;
+            lc.v[h].data.extend_from_slice(&v_row[seg.clone()]);
+            if let (Some(codes), Some(cbs)) = (&mut lc.codes, cbs) {
+                pq::quantize_append(&k_row[seg], &cbs[h], &mut codes[h]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Measured bytes held by this cache (K/V floats + code bytes) —
+    /// the runtime twin of the analytic `memmodel::decode` accounting.
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|lc| {
+                let kv: usize = lc.k.iter().chain(&lc.v).map(Matrix::bytes).sum();
+                let codes: usize = lc
+                    .codes
+                    .as_ref()
+                    .map(|cs| cs.iter().map(Codes::bytes).sum())
+                    .unwrap_or(0);
+                kv + codes
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn append_grows_all_heads_in_lockstep() {
+        let mut cache = DecodeCache::new(2, 3, 4, Some(2));
+        let mut rng = Rng::new(1);
+        let cbs: Vec<Codebooks> =
+            (0..3).map(|_| Codebooks::random(2, 4, 2, &mut rng)).collect();
+        assert!(cache.is_empty());
+        for pos in 0..5 {
+            for li in 0..2 {
+                let k: Vec<f32> = rng.normal_vec(12);
+                let v: Vec<f32> = rng.normal_vec(12);
+                cache.append(li, &k, &v, Some(&cbs)).unwrap();
+            }
+            assert_eq!(cache.len(), pos + 1);
+        }
+        for lc in &cache.layers {
+            for h in 0..3 {
+                assert_eq!(lc.k[h].rows, 5);
+                assert_eq!(lc.v[h].rows, 5);
+                assert_eq!(lc.codes.as_ref().unwrap()[h].n, 5);
+            }
+        }
+        // 2 layers x 3 heads x (2 x 5 x 4 floats) + codes 2x3x(5x2 bytes)
+        assert_eq!(cache.bytes(), 2 * 3 * 2 * 5 * 4 * 4 + 2 * 3 * 5 * 2);
+    }
+
+    #[test]
+    fn append_rejects_wrong_row_width_and_missing_codebooks() {
+        let mut cache = DecodeCache::new(1, 2, 4, Some(2));
+        assert!(cache.append(0, &[0.0; 4], &[0.0; 8], None).is_err());
+        assert!(cache.append(0, &[0.0; 8], &[0.0; 8], None).is_err());
+        let mut dense = DecodeCache::new(1, 2, 4, None);
+        dense.append(0, &[0.0; 8], &[0.0; 8], None).unwrap();
+        assert_eq!(dense.len(), 1);
+        assert!(dense.layers[0].codes.is_none());
+    }
+}

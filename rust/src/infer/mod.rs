@@ -1,0 +1,42 @@
+//! Native inference subsystem: cached-decode autoregressive generation
+//! on the rust sparse substrate — the serving counterpart of
+//! [`crate::coordinator::native`].
+//!
+//! Three parts, mirroring the paper's two modules at decode time plus a
+//! serving layer above them:
+//!
+//! * [`cache`] — the per-layer [`DecodeCache`]: per-head K/V matrices
+//!   plus (spt mode) the PQ codes of the cached keys, so each decode
+//!   step re-quantizes nothing and selects top-L straight from integer
+//!   codes.  This is the paper's Fig. 9 memory argument applied to a
+//!   KV cache: sparse MHA bounds per-token attention *state* at O(L)
+//!   values + indices instead of O(n) probabilities, and the cache
+//!   itself is O(n·d + n·M) per layer.
+//! * [`session`] — [`InferModel`] (a loaded checkpoint materialized
+//!   through the trainer's own `Weights` path, packed-B panels cached
+//!   once for the session) and [`Session`] (prefill + one-token decode).
+//!   **Determinism contract:** prefill runs the *training* forward
+//!   bit-for-bit, and `prefill(prompt)` + N decode steps produce logits
+//!   bit-identical to a single training forward over `prompt + N`
+//!   tokens — at any rayon pool size.  The sparse path pins the
+//!   session's L to the target sequence length's L, which is what makes
+//!   the equivalence exact (see `session` docs).
+//! * [`serve`] — the continuous-batching driver: a step-loop scheduler
+//!   that admits queued prompts, retires finished sequences, and batches
+//!   every in-flight decode token through one GEMM per projection and
+//!   one routed-FFN call per layer (the paper's
+//!   batch-tokens-by-activated-block kernel is batch-shape agnostic, so
+//!   cross-request batching is free).  Per-request token streams are
+//!   bit-identical regardless of the batch composition.
+//! * [`sampler`] — greedy and temperature/top-k sampling off the
+//!   deterministic [`crate::util::rng::Rng`] stream.
+
+pub mod cache;
+pub mod sampler;
+pub mod serve;
+pub mod session;
+
+pub use cache::DecodeCache;
+pub use sampler::Sampler;
+pub use serve::{Completion, Request, ServeConfig, ServeDriver, ServeReport};
+pub use session::{InferModel, Session};

@@ -1,0 +1,417 @@
+//! Continuous-batching serve driver: a step-loop scheduler over the
+//! cached-decode path.
+//!
+//! Each step (1) **admits** queued requests in submission order while a
+//! slot is free (prefill runs on admission, and the first token is
+//! sampled immediately from the prefill logits), (2) runs **one batched
+//! decode** over every in-flight sequence — one GEMM per projection and
+//! one routed-FFN call per layer across all their new tokens — and
+//! (3) **retires** finished sequences in ascending slot order, freeing
+//! capacity for the next admissions.
+//!
+//! Determinism: per-request token streams depend only on the model, the
+//! request (prompt, `max_new_tokens`) and the per-request RNG stream
+//! (derived from the driver seed and the request id) — every batched op
+//! is row-local and bit-identical to a single-sequence decode, so the
+//! batch composition, `max_batch`, and the rayon pool size never change
+//! what any request generates (asserted by `serving_is_batch_invariant`
+//! below).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::sampler::Sampler;
+use super::session::{decode_batch, prefill_state, DecodeState, InferModel, StepScratch};
+use crate::util::rng::Rng;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub tokens: Vec<i32>,
+    /// Seconds from the driver's first step to retirement (includes
+    /// queueing — the client-visible latency under load).
+    pub latency_secs: f64,
+}
+
+/// Driver knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// In-flight sequence capacity (1 = the one-at-a-time baseline).
+    pub max_batch: usize,
+    pub sampler: Sampler,
+    /// Base seed; request `id` forks a decorrelated per-request stream.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, sampler: Sampler::Greedy, seed: 0 }
+    }
+}
+
+/// Bookkeeping for one in-flight sequence (parallel to the driver's
+/// `states` vector, which `decode_batch` consumes directly).
+struct SlotMeta {
+    id: usize,
+    rng: Rng,
+    out: Vec<i32>,
+    max_new: usize,
+    logits: Vec<f32>,
+}
+
+/// Aggregate results of a drained driver.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Completions sorted by request id.
+    pub completions: Vec<Completion>,
+    pub wall_secs: f64,
+    pub decode_steps: usize,
+    pub generated_tokens: usize,
+    /// Steady-state decode throughput: generated tokens / wall seconds.
+    pub tokens_per_sec: f64,
+    /// Peak in-flight sequences observed.
+    pub peak_in_flight: usize,
+}
+
+impl ServeReport {
+    /// Machine-readable form — the shared schema of
+    /// `bench_out/BENCH_decode_native.json`, used by both `spt
+    /// serve-bench` and the `decode_throughput` bench so the two
+    /// producers cannot drift.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("tokens_per_sec".into(), Json::Num(self.tokens_per_sec));
+        m.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        m.insert("decode_steps".into(), Json::Num(self.decode_steps as f64));
+        m.insert(
+            "generated_tokens".into(),
+            Json::Num(self.generated_tokens as f64),
+        );
+        m.insert(
+            "peak_in_flight".into(),
+            Json::Num(self.peak_in_flight as f64),
+        );
+        m.insert("p50_latency_s".into(), Json::Num(self.latency_percentile(50.0)));
+        m.insert("p90_latency_s".into(), Json::Num(self.latency_percentile(90.0)));
+        m.insert("p99_latency_s".into(), Json::Num(self.latency_percentile(99.0)));
+        Json::Obj(m)
+    }
+
+    /// Latency percentile over completions (p in [0, 100]).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let mut lat: Vec<f64> = self.completions.iter().map(|c| c.latency_secs).collect();
+        if lat.is_empty() {
+            return 0.0;
+        }
+        lat.sort_by(f64::total_cmp);
+        let ix = ((p / 100.0) * (lat.len() - 1) as f64).round() as usize;
+        lat[ix.min(lat.len() - 1)]
+    }
+}
+
+/// The continuous-batching driver.
+pub struct ServeDriver<'m> {
+    model: &'m InferModel,
+    cfg: ServeConfig,
+    queue: VecDeque<Request>,
+    states: Vec<DecodeState>,
+    meta: Vec<SlotMeta>,
+    finished: Vec<Completion>,
+    /// Cross-step decode scratch (GEMM workspace + routing buffers),
+    /// reused for the driver's whole lifetime.
+    scratch: StepScratch,
+    epoch: Option<Instant>,
+    decode_steps: usize,
+    generated_tokens: usize,
+    peak_in_flight: usize,
+}
+
+impl<'m> ServeDriver<'m> {
+    pub fn new(model: &'m InferModel, cfg: ServeConfig) -> Result<Self> {
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        Ok(ServeDriver {
+            model,
+            cfg,
+            queue: VecDeque::new(),
+            states: Vec::new(),
+            meta: Vec::new(),
+            finished: Vec::new(),
+            scratch: StepScratch::default(),
+            epoch: None,
+            decode_steps: 0,
+            generated_tokens: 0,
+            peak_in_flight: 0,
+        })
+    }
+
+    /// Enqueue a request (admitted in submission order).
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        if req.max_new_tokens == 0 {
+            bail!("request {}: max_new_tokens must be >= 1", req.id);
+        }
+        if req.prompt.is_empty() {
+            bail!("request {}: empty prompt", req.id);
+        }
+        if req.prompt.len() + req.max_new_tokens > self.model.max_seq() {
+            bail!(
+                "request {}: prompt {} + max_new {} exceeds max_seq {}",
+                req.id,
+                req.prompt.len(),
+                req.max_new_tokens,
+                self.model.max_seq()
+            );
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Request ids currently in flight, in admission order.
+    pub fn in_flight_ids(&self) -> Vec<usize> {
+        self.meta.iter().map(|m| m.id).collect()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// One scheduler step: admit → batched decode → sample → retire.
+    /// Returns `false` once the queue and all slots are drained.
+    pub fn step(&mut self) -> Result<bool> {
+        let epoch = *self.epoch.get_or_insert_with(Instant::now);
+        // Admit in submission order while capacity allows.  Prefill runs
+        // here; the first token is sampled straight from its logits.
+        while self.states.len() < self.cfg.max_batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            let target = req.prompt.len() + req.max_new_tokens;
+            let (state, logits) = prefill_state(self.model, &req.prompt, target)?;
+            let mut slot = SlotMeta {
+                id: req.id,
+                rng: Rng::new(
+                    self.cfg
+                        .seed
+                        .wrapping_add((req.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                ),
+                out: Vec::with_capacity(req.max_new_tokens),
+                max_new: req.max_new_tokens,
+                logits,
+            };
+            let first = self.cfg.sampler.sample(&slot.logits, &mut slot.rng) as i32;
+            slot.out.push(first);
+            self.generated_tokens += 1;
+            if slot.out.len() >= slot.max_new {
+                self.finished.push(Completion {
+                    id: slot.id,
+                    tokens: slot.out,
+                    latency_secs: epoch.elapsed().as_secs_f64(),
+                });
+                continue;
+            }
+            self.states.push(state);
+            self.meta.push(slot);
+        }
+        self.peak_in_flight = self.peak_in_flight.max(self.states.len());
+        if self.states.is_empty() {
+            return Ok(!self.queue.is_empty());
+        }
+        // One batched decode over every in-flight sequence's last token.
+        let tokens: Vec<i32> = self
+            .meta
+            .iter()
+            .map(|m| *m.out.last().expect("in-flight slot with no token"))
+            .collect();
+        let logits = decode_batch(self.model, &mut self.states, &tokens, &mut self.scratch)?;
+        self.decode_steps += 1;
+        // Sample per slot (ascending slot order; each slot's own RNG).
+        let mut done: Vec<usize> = Vec::new();
+        for (si, m) in self.meta.iter_mut().enumerate() {
+            m.logits.clear();
+            m.logits.extend_from_slice(logits.row(si));
+            let t = self.cfg.sampler.sample(&m.logits, &mut m.rng) as i32;
+            m.out.push(t);
+            self.generated_tokens += 1;
+            if m.out.len() >= m.max_new {
+                done.push(si);
+            }
+        }
+        // Retire in ascending slot order (completions keep a stable
+        // order); remove descending so indices stay valid.
+        for &si in &done {
+            let m = &self.meta[si];
+            self.finished.push(Completion {
+                id: m.id,
+                tokens: m.out.clone(),
+                latency_secs: epoch.elapsed().as_secs_f64(),
+            });
+        }
+        for &si in done.iter().rev() {
+            self.meta.remove(si);
+            self.states.remove(si);
+        }
+        Ok(!(self.queue.is_empty() && self.states.is_empty()))
+    }
+
+    /// Drain queue and slots; returns the aggregate report.  All report
+    /// counters and the wall clock are anchored to the driver's epoch
+    /// (its first `step`), so the numbers stay consistent when manual
+    /// `step()` calls preceded this.
+    pub fn run_to_completion(&mut self) -> Result<ServeReport> {
+        let epoch = *self.epoch.get_or_insert_with(Instant::now);
+        while self.step()? {}
+        let wall = epoch.elapsed().as_secs_f64();
+        let mut completions = self.finished.clone();
+        completions.sort_by_key(|c| c.id);
+        Ok(ServeReport {
+            wall_secs: wall,
+            decode_steps: self.decode_steps,
+            generated_tokens: self.generated_tokens,
+            tokens_per_sec: self.generated_tokens as f64 / wall.max(1e-9),
+            peak_in_flight: self.peak_in_flight,
+            completions,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, RunConfig};
+    use crate::coordinator::{Backend, NativeBackend};
+
+    fn model(mode: Mode) -> InferModel {
+        let rc = RunConfig {
+            model: "spt-nano".into(),
+            mode,
+            seed: 9,
+            ..RunConfig::default()
+        };
+        let backend = NativeBackend::new();
+        let state = backend.init_state(&rc).unwrap();
+        InferModel::new(&rc, state).unwrap()
+    }
+
+    fn requests(n: usize, max_new: usize) -> Vec<Request> {
+        (0..n)
+            .map(|id| Request {
+                id,
+                prompt: vec![1 + id as i32, 2, 3, 4 + id as i32],
+                max_new_tokens: max_new,
+            })
+            .collect()
+    }
+
+    fn run(model: &InferModel, reqs: &[Request], max_batch: usize) -> ServeReport {
+        let cfg = ServeConfig {
+            max_batch,
+            sampler: Sampler::TopK { k: 8, temperature: 0.9 },
+            seed: 77,
+        };
+        let mut driver = ServeDriver::new(model, cfg).unwrap();
+        for r in reqs {
+            driver.submit(r.clone()).unwrap();
+        }
+        driver.run_to_completion().unwrap()
+    }
+
+    #[test]
+    fn serving_is_batch_invariant() {
+        // The continuous-batching contract: every request generates the
+        // same tokens whether it shares a batch or runs alone.
+        for mode in Mode::ALL {
+            let m = model(mode);
+            let reqs = requests(5, 7);
+            let batched = run(&m, &reqs, 4);
+            let serial = run(&m, &reqs, 1);
+            assert_eq!(batched.completions.len(), 5, "{mode:?}");
+            assert_eq!(serial.completions.len(), 5, "{mode:?}");
+            for (b, s) in batched.completions.iter().zip(&serial.completions) {
+                assert_eq!(b.id, s.id, "{mode:?}");
+                assert_eq!(b.tokens, s.tokens, "{mode:?} request {}", b.id);
+                assert_eq!(b.tokens.len(), 7, "{mode:?}");
+            }
+            assert!(batched.peak_in_flight > 1, "{mode:?}: never batched");
+            assert_eq!(serial.peak_in_flight, 1, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn admit_and_retire_follow_submission_order() {
+        let m = model(Mode::Spt);
+        // Request 0 is long, 1 and 2 shorter: with capacity 2, request 2
+        // must wait for a retirement, then take the freed slot.
+        let reqs = vec![
+            Request { id: 0, prompt: vec![1, 2, 3], max_new_tokens: 10 },
+            Request { id: 1, prompt: vec![4, 5, 6], max_new_tokens: 3 },
+            Request { id: 2, prompt: vec![7, 8, 9], max_new_tokens: 3 },
+        ];
+        let mut driver =
+            ServeDriver::new(&m, ServeConfig { max_batch: 2, ..Default::default() }).unwrap();
+        for r in &reqs {
+            driver.submit(r.clone()).unwrap();
+        }
+        // Step 1: 0 and 1 admitted (submission order), 2 queued.
+        assert!(driver.step().unwrap());
+        assert_eq!(driver.in_flight_ids(), vec![0, 1], "admission order");
+        assert_eq!(driver.queued(), 1);
+        // Step 2: request 1 reaches 3 tokens (1 at admission + 2 decode
+        // steps) and retires.
+        assert!(driver.step().unwrap());
+        assert_eq!(driver.in_flight_ids(), vec![0], "short request retired");
+        assert_eq!(driver.queued(), 1);
+        // Step 3: the freed slot goes to request 2.
+        assert!(driver.step().unwrap());
+        assert_eq!(driver.in_flight_ids(), vec![0, 2], "freed slot refilled");
+        let report = driver.run_to_completion().unwrap();
+        let ids: Vec<usize> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        let lens: Vec<usize> =
+            report.completions.iter().map(|c| c.tokens.len()).collect();
+        assert_eq!(lens, vec![10, 3, 3]);
+        assert_eq!(report.generated_tokens, 16);
+        assert!(report.latency_percentile(50.0) <= report.latency_percentile(99.0));
+    }
+
+    #[test]
+    fn submit_validates_requests() {
+        let m = model(Mode::Spt);
+        let mut driver = ServeDriver::new(&m, ServeConfig::default()).unwrap();
+        assert!(driver
+            .submit(Request { id: 0, prompt: vec![], max_new_tokens: 1 })
+            .is_err());
+        assert!(driver
+            .submit(Request { id: 1, prompt: vec![1], max_new_tokens: 0 })
+            .is_err());
+        let too_long = m.max_seq();
+        assert!(driver
+            .submit(Request { id: 2, prompt: vec![1, 2], max_new_tokens: too_long })
+            .is_err());
+        assert!(ServeDriver::new(&m, ServeConfig { max_batch: 0, ..Default::default() })
+            .is_err());
+    }
+
+    #[test]
+    fn max_new_one_completes_without_a_decode_step() {
+        let m = model(Mode::Lora);
+        let mut driver = ServeDriver::new(&m, ServeConfig::default()).unwrap();
+        driver
+            .submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 1 })
+            .unwrap();
+        let report = driver.run_to_completion().unwrap();
+        assert_eq!(report.completions.len(), 1);
+        assert_eq!(report.completions[0].tokens.len(), 1);
+        assert_eq!(report.decode_steps, 0);
+    }
+}

@@ -1,0 +1,531 @@
+//! Loaded-checkpoint inference: [`InferModel`] (weights materialized
+//! once, packed-B panels cached for the whole session) and [`Session`]
+//! (prefill + incremental decode for one sequence).
+//!
+//! ## The determinism / parity contract
+//!
+//! `prefill(prompt)` followed by N teacher-forced decode steps produces
+//! logits **bit-identical** to one training forward over the
+//! `prompt + N`-token sequence, in every mode and at any rayon pool
+//! size.  The pieces:
+//!
+//! * Prefill *is* the training forward
+//!   ([`NativeBackend::forward_model`]) over the prompt; the per-layer
+//!   per-head K/V projections in its trace seed the [`DecodeCache`].
+//! * Every decode-step op is row-local and runs in the training
+//!   kernel's per-row operation order (projections through the packed
+//!   GEMM, layer norm, the cached-attention row kernels, the routed
+//!   FFN's per-token gather), so row `pos` of the incremental path
+//!   carries the training forward's exact bits by induction over
+//!   positions — causality means the full forward's row `pos` never
+//!   reads rows past `pos`.
+//! * **Sparse L pinning:** the training forward derives attention's L
+//!   from the *full* sequence length.  A session therefore fixes
+//!   `l_sess = topl(target_len)` at construction — prefill runs with
+//!   `min(l_sess, prompt_len)` and every decode step selects
+//!   `min(l_sess, pos+1)` keys — which reproduces the full-sequence
+//!   selection exactly (future keys only ever occupy the sentinel
+//!   bucket and zero-probability padding slots; see
+//!   [`crate::sparse::mha::decode_attend_row`]).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use rayon::prelude::*;
+
+use crate::config::{Mode, RunConfig};
+use crate::coordinator::checkpoint::{self, CkptMeta};
+use crate::coordinator::native::{ItemTrace, Layout, NativeBackend, Weights};
+use crate::coordinator::TrainState;
+use crate::infer::cache::{DecodeCache, LayerCache};
+use crate::sparse::bspmv::{self, Routing};
+use crate::sparse::{attention, grad, mha, pq};
+use crate::sparse::{Matrix, Workspace};
+
+/// A checkpoint materialized for inference: the trainer's own layout and
+/// effective-weight materialization (LoRA deltas folded in, PQ codebooks
+/// split per head, packed-B panels for the six projections built once
+/// and reused by every prefill and decode step of every session).
+pub struct InferModel {
+    pub(crate) backend: NativeBackend,
+    pub(crate) layout: Arc<Layout>,
+    pub(crate) weights: Weights,
+    pub(crate) state: TrainState,
+    pub(crate) model: String,
+    pub(crate) mode: Mode,
+}
+
+impl InferModel {
+    /// Materialize from an in-memory training state.
+    pub fn new(rc: &RunConfig, state: TrainState) -> Result<Self> {
+        let backend = NativeBackend::new();
+        let layout = backend.layout(rc)?;
+        let weights = Weights::materialize(&layout, &state)
+            .with_context(|| format!("materializing '{}' ({})", rc.model, rc.mode.as_str()))?;
+        Ok(InferModel {
+            backend,
+            layout,
+            weights,
+            state,
+            model: rc.model.clone(),
+            mode: rc.mode,
+        })
+    }
+
+    /// Load a checkpoint from disk, verifying its embedded identity
+    /// (v2 headers) against the requested model/mode before touching a
+    /// single leaf.  Legacy v1 checkpoints carry no identity; shape
+    /// mismatches then surface from materialization.
+    pub fn from_checkpoint(rc: &RunConfig, path: impl AsRef<Path>) -> Result<Self> {
+        let (state, meta) = checkpoint::load_tagged(path.as_ref())?;
+        if let Some(meta) = &meta {
+            meta.verify(&rc.model, rc.mode)?;
+        }
+        let model = Self::new(rc, state)?;
+        if let Some(CkptMeta { n_layers, .. }) = meta {
+            if n_layers != model.layout.layers.len() {
+                bail!(
+                    "checkpoint says {n_layers} layers, preset '{}' has {}",
+                    rc.model,
+                    model.layout.layers.len()
+                );
+            }
+        }
+        Ok(model)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.layout.vocab
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.layout.max_seq
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layout.layers.len()
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+}
+
+/// One sequence's incremental decode state: the cache, the absolute
+/// position (tokens consumed so far), the session-pinned sparse L, and
+/// the target length that L was pinned to (decoding past it would
+/// silently void the parity contract, so [`decode_batch`] refuses).
+pub(crate) struct DecodeState {
+    pub(crate) cache: DecodeCache,
+    pub(crate) pos: usize,
+    pub(crate) l_sess: usize,
+    pub(crate) target_len: usize,
+}
+
+/// Per-worker scratch for the (sequence × head) attention fan-out.
+#[derive(Default, Clone)]
+struct RowScratch {
+    sparse: mha::DecodeScratch,
+    dense_logits: Vec<f32>,
+}
+
+/// Cross-step scratch for [`decode_batch`]: the GEMM workspace and the
+/// router's [`Routing`] buffers, reused across every step of a session
+/// or serve loop (this is what makes `bspmv::route_into`'s buffer reuse
+/// span the whole serving run, not just one step's layers).  Contents
+/// never affect results.
+pub(crate) struct StepScratch {
+    ws: Workspace,
+    routing: Routing,
+}
+
+impl Default for StepScratch {
+    fn default() -> Self {
+        StepScratch {
+            ws: Workspace::default(),
+            routing: Routing { mask: Vec::new(), gate: Vec::new(), g: 1, g_active: 1 },
+        }
+    }
+}
+
+/// Run the training forward over `prompt`, seed a decode cache from its
+/// trace, and return the state plus the last row's logits.
+pub(crate) fn prefill_state(
+    model: &InferModel,
+    prompt: &[i32],
+    target_len: usize,
+) -> Result<(DecodeState, Vec<f32>)> {
+    let layout = &*model.layout;
+    if prompt.is_empty() {
+        bail!("prompt must contain at least one token");
+    }
+    if target_len < prompt.len() {
+        bail!(
+            "target length {target_len} shorter than the {}-token prompt",
+            prompt.len()
+        );
+    }
+    if target_len > layout.max_seq {
+        bail!(
+            "target length {target_len} exceeds max_seq {} of '{}'",
+            layout.max_seq,
+            model.model
+        );
+    }
+    // The session's L is the *target* sequence length's L; prefill clamps
+    // it to the prompt (selection needs l <= keys), which preserves every
+    // bit of the full-length forward (see the module docs).
+    let l_sess = layout.sparsity.topl(target_len).min(target_len);
+    let sparse = model.backend.sparse_layers_with_l(
+        layout,
+        &model.weights,
+        l_sess.min(prompt.len()),
+    )?;
+    let mut ws = Workspace::default();
+    let trace = model.backend.forward_model(
+        layout,
+        &model.weights,
+        &model.state,
+        prompt,
+        sparse.as_deref(),
+        &mut ws,
+    )?;
+    let ItemTrace { layers, xf, .. } = trace;
+    let mut cache_layers = Vec::with_capacity(layers.len());
+    for (li, lt) in layers.into_iter().enumerate() {
+        let codes = model.weights.layers[li].codebooks.as_ref().map(|cbs| {
+            lt.k.iter()
+                .zip(cbs)
+                .map(|(kh, cb)| pq::quantize(&kh.data, cb))
+                .collect::<Vec<_>>()
+        });
+        cache_layers.push(LayerCache { k: lt.k, v: lt.v, codes });
+    }
+    let cache = DecodeCache { layers: cache_layers };
+    // Last-row logits through the tied readout, on the same NT kernel as
+    // the decode path and the training readout (`grad::matmul_dx` is
+    // row-local, so the 1-row product equals that row of the full
+    // readout by construction — no hand-rolled twin to keep in sync).
+    let mut last = Matrix::zeros(1, xf.cols);
+    last.row_mut(0).copy_from_slice(xf.row(prompt.len() - 1));
+    let logits = grad::matmul_dx(&last, &model.weights.tok).data;
+    Ok((
+        DecodeState { cache, pos: prompt.len(), l_sess, target_len },
+        logits,
+    ))
+}
+
+/// One decode step for a batch of independent sequences: embed each new
+/// token at its sequence's position, run the layer stack with one GEMM
+/// per projection and one routed-FFN call per layer across all in-flight
+/// tokens, attend per (sequence × head) against each sequence's cache,
+/// append the new K/V (and key codes) to every cache, and return the
+/// `[S, vocab]` logits.
+///
+/// Every op is row-local in the training kernels' per-row operation
+/// order, so each sequence's row is bit-identical to a single-sequence
+/// decode — batching (and the rayon fan-out) never changes results.
+pub(crate) fn decode_batch(
+    model: &InferModel,
+    states: &mut [DecodeState],
+    tokens: &[i32],
+    scratch: &mut StepScratch,
+) -> Result<Matrix> {
+    let layout = &*model.layout;
+    let s_count = states.len();
+    assert_eq!(tokens.len(), s_count, "one token per in-flight sequence");
+    assert!(s_count > 0, "empty decode batch");
+    let (heads, dh, d) = (layout.heads, layout.d_head, layout.d);
+    // Embed each token at its own absolute position.  Refuse to decode
+    // past a sequence's pinned target length: its L was derived from
+    // that total, so further steps would silently match no full-sequence
+    // forward.
+    let mut x = Matrix::zeros(s_count, d);
+    for (si, st) in states.iter().enumerate() {
+        if st.pos >= st.target_len {
+            bail!(
+                "sequence already holds its target length {} (L was pinned \
+                 to it); start a new session with a longer target",
+                st.target_len
+            );
+        }
+        let row = model.backend.embed_at(
+            layout,
+            &model.state,
+            &tokens[si..si + 1],
+            st.pos,
+        )?;
+        x.row_mut(si).copy_from_slice(row.row(0));
+    }
+    let StepScratch { ws, routing } = scratch;
+    for (li, lw) in model.weights.layers.iter().enumerate() {
+        let a_in = grad::layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
+        let q = a_in.matmul_packed(&lw.wq_p);
+        let k = a_in.matmul_packed(&lw.wk_p);
+        let v = a_in.matmul_packed(&lw.wv_p);
+        // Append the new K/V (and key codes) before attending: the new
+        // token attends to itself.
+        for (si, st) in states.iter_mut().enumerate() {
+            st.cache
+                .append(li, k.row(si), v.row(si), lw.codebooks.as_deref())?;
+        }
+        // Cached attention, parallel over (sequence × head) into
+        // disjoint `dh`-wide slices of the concatenated output.
+        let mut attn_out = Matrix::zeros(s_count, d);
+        let states_ro: &[DecodeState] = states;
+        let q_ref = &q;
+        attn_out
+            .data
+            .par_chunks_mut(dh)
+            .enumerate()
+            .for_each_init(RowScratch::default, |scratch, (ci, out)| {
+                let (si, h) = (ci / heads, ci % heads);
+                let st = &states_ro[si];
+                let lc = &st.cache.layers[li];
+                let q_row = &q_ref.row(si)[h * dh..(h + 1) * dh];
+                match (&lc.codes, &lw.codebooks) {
+                    (Some(codes), Some(cbs)) => mha::decode_attend_row(
+                        &cbs[h],
+                        q_row,
+                        &lc.k[h],
+                        &lc.v[h],
+                        &codes[h],
+                        st.pos,
+                        st.l_sess,
+                        out,
+                        &mut scratch.sparse,
+                    ),
+                    _ => attention::dense_attend_row(
+                        q_row,
+                        &lc.k[h],
+                        &lc.v[h],
+                        &mut scratch.dense_logits,
+                        out,
+                    ),
+                }
+            });
+        let x_mid = x.add(&attn_out.matmul_packed(&lw.wo_p));
+        let f_in = grad::layer_norm(&x_mid, &lw.ln2_scale, &lw.ln2_bias);
+        let f = if layout.mode == Mode::Spt {
+            let router = lw.router.as_ref().context("spt mode without router")?;
+            let scores = f_in.matmul_ws(router, ws);
+            let g_active = layout.sparsity.active_groups(layout.groups).min(layout.groups);
+            bspmv::route_into(&scores, g_active, routing);
+            mha::routed_ffn_auto(&f_in, &lw.wi, &lw.wo2, routing)
+        } else {
+            let wi_p = lw.wi_p.as_ref().context("dense mode without packed W_I")?;
+            let wo2_p = lw.wo2_p.as_ref().context("dense mode without packed W_O")?;
+            let h1 = f_in.matmul_packed(wi_p).relu();
+            h1.matmul_packed(wo2_p)
+        };
+        x = x_mid.add(&f);
+    }
+    let xf = grad::layer_norm(&x, &model.weights.lnf_scale, &model.weights.lnf_bias);
+    for st in states.iter_mut() {
+        st.pos += 1;
+    }
+    // Tied readout for every in-flight row (NT kernel, row-local).
+    Ok(grad::matmul_dx(&xf, &model.weights.tok))
+}
+
+/// One generation stream over an [`InferModel`].
+pub struct Session<'m> {
+    model: &'m InferModel,
+    state: DecodeState,
+    last_logits: Vec<f32>,
+    scratch: StepScratch,
+}
+
+impl<'m> Session<'m> {
+    /// Prefill `prompt` with the sparse L pinned to `target_len` (the
+    /// prompt length plus every token you intend to decode; the parity
+    /// contract is stated against this total, and decoding past it is
+    /// refused).
+    pub fn new(model: &'m InferModel, prompt: &[i32], target_len: usize) -> Result<Self> {
+        let (state, last_logits) = prefill_state(model, prompt, target_len)?;
+        Ok(Session {
+            model,
+            state,
+            last_logits,
+            scratch: StepScratch::default(),
+        })
+    }
+
+    /// Logits of the most recently consumed position (`[vocab]`).
+    pub fn logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+
+    /// Tokens consumed so far (prompt + decoded).
+    pub fn pos(&self) -> usize {
+        self.state.pos
+    }
+
+    /// Measured decode-cache footprint in bytes.
+    pub fn cache_bytes(&self) -> usize {
+        self.state.cache.bytes()
+    }
+
+    /// Consume one token and return the logits it produces.  Fails once
+    /// the session's pinned target length is reached.
+    pub fn decode(&mut self, token: i32) -> Result<&[f32]> {
+        let logits = decode_batch(
+            self.model,
+            std::slice::from_mut(&mut self.state),
+            &[token],
+            &mut self.scratch,
+        )?;
+        self.last_logits = logits.data;
+        Ok(&self.last_logits)
+    }
+
+    /// Sample `n` tokens with `sampler`, feeding every sampled token
+    /// (including the last) back through the decode path, so the model
+    /// state always contains the returned stream and `generate` calls
+    /// compose: a follow-up `generate`/`decode` continues from exactly
+    /// the context the caller has seen.  Requires `prompt + n` to fit
+    /// the session's target length.
+    pub fn generate(
+        &mut self,
+        sampler: &crate::infer::Sampler,
+        rng: &mut crate::util::rng::Rng,
+        n: usize,
+    ) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = sampler.sample(&self.last_logits, rng) as i32;
+            out.push(t);
+            self.decode(t)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::infer::Sampler;
+    use crate::util::rng::Rng;
+
+    fn rc(model: &str, mode: Mode) -> RunConfig {
+        RunConfig {
+            model: model.into(),
+            mode,
+            seed: 5,
+            ..RunConfig::default()
+        }
+    }
+
+    fn fresh_model(model: &str, mode: Mode) -> InferModel {
+        let cfg = rc(model, mode);
+        let backend = NativeBackend::new();
+        let state = backend.init_state(&cfg).unwrap();
+        InferModel::new(&cfg, state).unwrap()
+    }
+
+    #[test]
+    fn prefill_plus_decode_matches_full_forward_spt() {
+        // The kernel-level parity statement, session-level: logits after
+        // prefill(p) + teacher-forced decode equal the training forward
+        // over the whole sequence, row by row, bit for bit.
+        let cfg = rc("spt-nano-l2", Mode::Spt);
+        let backend = NativeBackend::new();
+        let tstate = backend.init_state(&cfg).unwrap();
+        let model = InferModel::new(&cfg, tstate.clone()).unwrap();
+        let mut corpus = crate::data::SyntheticCorpus::new(model.vocab(), 4, 0.85, 3);
+        let toks: Vec<i32> = corpus.sequence(24).iter().map(|&t| t as i32).collect();
+        let full = backend.forward_logits(&cfg, &tstate, &toks).unwrap();
+        let p = 9;
+        let mut sess = Session::new(&model, &toks[..p], toks.len()).unwrap();
+        assert_eq!(sess.logits(), full.row(p - 1), "prefill row");
+        for (step, &t) in toks[p..].iter().enumerate() {
+            let got = sess.decode(t).unwrap();
+            assert_eq!(got, full.row(p + step), "decode row {}", p + step);
+        }
+        assert_eq!(sess.pos(), toks.len());
+        assert!(sess.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn session_rejects_bad_shapes() {
+        let model = fresh_model("spt-nano", Mode::Spt);
+        assert!(Session::new(&model, &[], 8).is_err(), "empty prompt");
+        assert!(Session::new(&model, &[1, 2, 3], 2).is_err(), "target < prompt");
+        let too_long = model.max_seq() + 1;
+        assert!(Session::new(&model, &[1, 2], too_long).is_err(), "target > max_seq");
+    }
+
+    #[test]
+    fn decode_stops_at_the_pinned_target_length() {
+        // L was pinned to the target; decoding past it would silently
+        // void the parity contract, so it must fail loudly instead.
+        let model = fresh_model("spt-nano", Mode::Spt);
+        let mut sess = Session::new(&model, &[1, 2], 3).unwrap();
+        sess.decode(5).unwrap(); // pos 2 -> 3 == target
+        let err = sess.decode(6).unwrap_err();
+        assert!(err.to_string().contains("target length"), "{err}");
+        assert_eq!(sess.pos(), 3);
+    }
+
+    #[test]
+    fn generate_composes_with_follow_up_generate() {
+        // Every sampled token is fed back, so two generate(6) calls see
+        // exactly the context of one generate(12) and produce the same
+        // stream (same RNG draws).
+        let model = fresh_model("spt-nano", Mode::Spt);
+        let sampler = Sampler::TopK { k: 16, temperature: 0.8 };
+        let mut one = Session::new(&model, &[1, 2, 3, 4], 16).unwrap();
+        let mut rng1 = Rng::new(7);
+        let whole = one.generate(&sampler, &mut rng1, 12).unwrap();
+        let mut two = Session::new(&model, &[1, 2, 3, 4], 16).unwrap();
+        let mut rng2 = Rng::new(7);
+        let mut split = two.generate(&sampler, &mut rng2, 6).unwrap();
+        split.extend(two.generate(&sampler, &mut rng2, 6).unwrap());
+        assert_eq!(whole, split);
+        assert_eq!(one.pos(), 16);
+        assert_eq!(two.pos(), 16);
+    }
+
+    #[test]
+    fn generate_is_deterministic_per_seed() {
+        for mode in Mode::ALL {
+            let model = fresh_model("spt-nano", mode);
+            let run = |seed: u64| {
+                let mut sess = Session::new(&model, &[1, 2, 3, 4], 20).unwrap();
+                let sampler = Sampler::TopK { k: 16, temperature: 0.8 };
+                let mut rng = Rng::new(seed);
+                sess.generate(&sampler, &mut rng, 12).unwrap()
+            };
+            assert_eq!(run(42), run(42), "{mode:?}: same seed must agree");
+            assert_ne!(run(42), run(43), "{mode:?}: seeds should diverge");
+        }
+    }
+
+    #[test]
+    fn checkpoint_identity_is_verified() {
+        let cfg = rc("spt-nano", Mode::Spt);
+        let backend = NativeBackend::new();
+        let state = backend.init_state(&cfg).unwrap();
+        let dir = std::env::temp_dir().join("spt_infer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("id.ckpt");
+        checkpoint::save_tagged(
+            &state,
+            &CkptMeta { model: "spt-nano".into(), mode: Mode::Spt, n_layers: 1 },
+            &path,
+        )
+        .unwrap();
+        assert!(InferModel::from_checkpoint(&cfg, &path).is_ok());
+        let wrong_mode = rc("spt-nano", Mode::Full);
+        let err = InferModel::from_checkpoint(&wrong_mode, &path).unwrap_err();
+        assert!(err.to_string().contains("spt"), "{err}");
+        let wrong_model = rc("spt-nano-l2", Mode::Spt);
+        assert!(InferModel::from_checkpoint(&wrong_model, &path).is_err());
+    }
+}

@@ -32,10 +32,19 @@
 //!   the off-by-default `xla` cargo feature (`--backend pjrt` on the
 //!   CLI); the bindings crate is stubbed so `--features xla` still
 //!   compiles without a PJRT toolchain.
+//!
+//! Inference is native too ([`infer`]): `spt generate` loads a
+//! checkpoint into an [`infer::InferModel`] and decodes with per-layer
+//! K/V + PQ-code caches (sparse top-L attention per new token, routed
+//! FFN per token batch), and `spt serve-bench` drives the
+//! continuous-batching [`infer::ServeDriver`].  Prefill + N decode
+//! steps reproduce the training forward over the full sequence bit for
+//! bit, at any thread count.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod infer;
 pub mod memmodel;
 pub mod metrics;
 pub mod runtime;

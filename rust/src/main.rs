@@ -1,26 +1,37 @@
 //! `spt` — the SPT fine-tuning coordinator CLI (L3 leader entrypoint).
 //!
 //! Subcommands:
-//!   train      LM fine-tuning run (loss curve, PPL) — paper Fig. 10 axis
-//!   train-qa   QA fine-tuning + accuracy (Table 3 MMLU surrogate)
-//!   trial      short sparsity trials across modes (paper §3)
-//!   profile    module-level time+memory (Tables 1/4)
-//!   blocks     per-block throughput/memory across configs (Fig. 8)
-//!   memplan    memory model: max-length search + seq sweeps (Table 3/Fig. 9)
-//!   goldens    numeric round-trip validation vs python outputs
-//!   artifacts  list the AOT manifest
+//!   train       LM fine-tuning run (loss curve, PPL) — paper Fig. 10 axis
+//!   train-qa    QA fine-tuning + accuracy (Table 3 MMLU surrogate)
+//!   trial       short sparsity trials across modes (paper §3)
+//!   generate    cached-decode generation from a checkpoint (native infer)
+//!   serve-bench continuous-batching throughput/latency vs one-at-a-time
+//!   profile     module-level time+memory (Tables 1/4)
+//!   blocks      per-block throughput/memory across configs (Fig. 8)
+//!   memplan     memory model: max-length search + seq sweeps (Table 3/Fig. 9)
+//!               (--decode adds the KV/code-cache serving tables)
+//!   goldens     numeric round-trip validation vs python outputs
+//!   artifacts   list the AOT manifest
 //!
-//! `train`, `train-qa`, and `trial` run on the native backend by default
-//! (no artifacts or PJRT toolchain needed); `--backend pjrt` selects the
-//! AOT path in a `--features xla` build.  Run `spt help` for flags.
+//! `train`, `train-qa`, `trial`, `generate`, and `serve-bench` run on
+//! the native backend by default (no artifacts or PJRT toolchain
+//! needed); `--backend pjrt` selects the AOT path in a `--features xla`
+//! build.  Run `spt help` for flags.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use spt::config::{presets, Mode, RunConfig};
+use spt::coordinator::checkpoint::CkptMeta;
 use spt::coordinator::{checkpoint, trial, Backend, NativeBackend, Trainer, TrainerOptions};
 use spt::coordinator::trial::TrialManager;
+use spt::data::SyntheticCorpus;
+use spt::infer::{InferModel, Request, Sampler, ServeConfig, ServeDriver, Session};
+use spt::infer::serve::ServeReport;
+use spt::util::json::Json;
+use spt::util::rng::Rng;
 #[cfg(feature = "xla")]
 use spt::coordinator::profile as prof;
 #[cfg(feature = "xla")]
@@ -135,6 +146,8 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => dispatch_train(&args, false),
         "train-qa" => dispatch_train(&args, true),
         "trial" => dispatch_trial(&args),
+        "generate" => cmd_generate(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         #[cfg(feature = "xla")]
         "profile" => cmd_profile(&args),
         #[cfg(feature = "xla")]
@@ -167,29 +180,46 @@ COMMANDS
   train       fine-tune on the synthetic LM corpus; prints loss curve + PPL
   train-qa    fine-tune + score the 4-choice QA task (MMLU surrogate)
   trial       short trials across full/lora/spt; recommends a mode
+  generate    cached-decode generation from a checkpoint (deterministic)
+  serve-bench continuous-batching decode throughput + latency percentiles
+              vs the one-sequence-at-a-time baseline (JSON artifact)
   profile     time+memory for mha/ffn module artifacts (Tables 1/4)
   blocks      throughput + peak memory per Table-2 block (Fig. 8)
-  memplan     analytic memory: max-seq search (Table 3), seq sweep (Fig. 9)
+  memplan     analytic memory: max-seq search (Table 3), seq sweep (Fig. 9);
+              --decode adds KV/code-cache + per-step serving tables
   goldens     validate artifacts against python-computed goldens
   artifacts   list the AOT manifest
 
 COMMON FLAGS
   --backend B           native (default, no artifacts needed) | pjrt
-  --model NAME          spt-tiny | spt-30m | spt-100m | spt-nano[-l2] | spt-mini-64[-l4]
+  --model NAME          spt-tiny | spt-30m | spt-100m | spt-nano[-l2] | spt-mini-64[-l2|-l4]
   --mode MODE           full | lora | spt
   --batch N  --seq N    workload shape (native backend)
   --steps N  --seed N   --eval_every N  --codebook_refresh_every N
   --lr X                AdamW learning rate (native backend)
   --config FILE         TOML run config (keys as above)
   --chunked             scan-of-8 fast dispatch (pjrt backend train)
-  --resume FILE         continue training from a checkpoint (train)
+  --resume FILE         checkpoint to continue training from (train) or to
+                        generate/serve from (generate, serve-bench); v2
+                        checkpoints verify their model/mode identity
   --save_ckpt FILE      write the final training state (train)
   --artifacts_dir DIR   (pjrt backend; default: artifacts)
 
+GENERATE / SERVE-BENCH FLAGS
+  --tokens N            new tokens per sequence (default 32)
+  --prompt_len N        synthetic-corpus prompt length (default 8 / 16)
+  --temperature X       sampling temperature (omit for greedy)
+  --top_k K             restrict sampling to the K best logits
+  --requests N          serve-bench: trace size (default 16)
+  --max_batch B         serve-bench: in-flight capacity (default 8)
+
 NOTE  the native backend trains the chosen preset's full n_layers-deep
-      pre-norm stack end-to-end on the rust sparse substrate.  `profile`,
-      `blocks`, `goldens`, and `artifacts` always need `--features xla`
-      plus AOT artifacts; `memplan` and `help` need nothing.
+      pre-norm stack end-to-end on the rust sparse substrate, and
+      `generate`/`serve-bench` decode on the same substrate with
+      per-layer KV + PQ-code caches (same seed -> same tokens at any
+      RAYON_NUM_THREADS).  `profile`, `blocks`, `goldens`, and
+      `artifacts` always need `--features xla` plus AOT artifacts;
+      `memplan` and `help` need nothing.
 ";
 
 fn dispatch_train(args: &Args, qa: bool) -> Result<()> {
@@ -242,7 +272,11 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
     let report = if qa {
         trainer.train_qa()?
     } else if let Some(path) = resume {
-        let state = checkpoint::load(&path)?;
+        let (state, meta) = checkpoint::load_tagged(&path)?;
+        if let Some(meta) = &meta {
+            let rc = trainer.run_config();
+            meta.verify(&rc.model, rc.mode)?;
+        }
         println!(
             "[spt] resumed from {path} at step {}",
             state.step.scalar()? as usize
@@ -277,8 +311,14 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
     if let Some(path) = save_ckpt {
         match &trainer.last_state {
             Some(state) => {
-                checkpoint::save(state, &path)?;
-                println!("[spt] checkpoint -> {path}");
+                let rc = trainer.run_config();
+                let meta = CkptMeta {
+                    model: rc.model.clone(),
+                    mode: rc.mode,
+                    n_layers: presets::model(&rc.model)?.n_layers.max(1),
+                };
+                checkpoint::save_tagged(state, &meta, &path)?;
+                println!("[spt] checkpoint -> {path} ({}/{})", meta.model, meta.mode.as_str());
             }
             None => println!("[spt] no final state to checkpoint"),
         }
@@ -306,6 +346,165 @@ fn cmd_trial<B: Backend>(backend: &B, args: &Args) -> Result<()> {
             best.label, best.secs_per_step, best.ppl
         );
     }
+    Ok(())
+}
+
+/// Load an [`InferModel`] from `--resume`, or fall back to a fresh
+/// (untrained) init so the command still demonstrates the decode path.
+fn infer_model(args: &Args, rc: &RunConfig) -> Result<InferModel> {
+    match args.get("resume") {
+        Some(path) => {
+            let m = InferModel::from_checkpoint(rc, path)?;
+            println!(
+                "[spt] loaded checkpoint {path} (model={} mode={} layers={})",
+                rc.model,
+                rc.mode.as_str(),
+                m.n_layers()
+            );
+            Ok(m)
+        }
+        None => {
+            println!("[spt] no --resume: decoding from a fresh (untrained) init");
+            let backend = NativeBackend::new();
+            let state = backend.init_state(rc)?;
+            InferModel::new(rc, state)
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let rc = args.run_config()?;
+    let tokens = args.usize_or("tokens", 32)?;
+    if tokens == 0 {
+        bail!("--tokens must be >= 1");
+    }
+    let prompt_len = args.usize_or("prompt_len", 8)?.max(1);
+    let temperature = match args.get("temperature") {
+        Some(v) => Some(v.parse::<f32>().context("--temperature")?),
+        None => None,
+    };
+    let top_k = match args.get("top_k") {
+        Some(v) => Some(v.parse::<usize>().context("--top_k")?),
+        None => None,
+    };
+    let sampler = Sampler::from_flags(temperature, top_k)?;
+    let model = infer_model(args, &rc)?;
+    if prompt_len >= model.max_seq() {
+        bail!("--prompt_len {prompt_len} leaves no room under max_seq {}", model.max_seq());
+    }
+    // Deterministic prompt from the synthetic corpus (this reproduction
+    // has no tokenizer): the same --seed gives the same prompt.
+    let mut corpus = SyntheticCorpus::new(model.vocab(), 4, 0.85, rc.seed);
+    let prompt: Vec<i32> = corpus
+        .sequence(prompt_len)
+        .iter()
+        .map(|&t| t as i32)
+        .collect();
+    let budget = model.max_seq() - prompt.len();
+    let n = tokens.min(budget);
+    if n < tokens {
+        println!("[spt] clamping --tokens {tokens} -> {n} (max_seq {})", model.max_seq());
+    }
+    let target = prompt.len() + n;
+    let mut sess = Session::new(&model, &prompt, target)?;
+    let mut rng = Rng::new(rc.seed ^ 0x5A3D_0DE5);
+    let t0 = Instant::now();
+    let out = sess.generate(&sampler, &mut rng, n)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[spt] generated {} tokens in {} ({:.1} tok/s, decode cache {})",
+        out.len(),
+        spt::util::fmt_duration(secs),
+        out.len() as f64 / secs.max(1e-9),
+        fmt_bytes(sess.cache_bytes() as u64),
+    );
+    println!("[spt] prompt:  {prompt:?}");
+    println!("[spt] output:  {out:?}");
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let rc = args.run_config()?;
+    let n_requests = args.usize_or("requests", 16)?.max(1);
+    let prompt_len = args.usize_or("prompt_len", 16)?.max(1);
+    let tokens = args.usize_or("tokens", 32)?.max(1);
+    let max_batch = args.usize_or("max_batch", 8)?.max(1);
+    let model = infer_model(args, &rc)?;
+    if prompt_len + tokens > model.max_seq() {
+        bail!(
+            "--prompt_len {prompt_len} + --tokens {tokens} exceeds max_seq {}",
+            model.max_seq()
+        );
+    }
+    // Synthetic request trace, deterministic per seed.
+    let mut corpus = SyntheticCorpus::new(model.vocab(), 4, 0.85, rc.seed);
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|id| Request {
+            id,
+            prompt: corpus.sequence(prompt_len).iter().map(|&t| t as i32).collect(),
+            max_new_tokens: tokens,
+        })
+        .collect();
+    let run = |mb: usize| -> Result<ServeReport> {
+        let cfg = ServeConfig { max_batch: mb, sampler: Sampler::Greedy, seed: rc.seed };
+        let mut driver = ServeDriver::new(&model, cfg)?;
+        for r in &reqs {
+            driver.submit(r.clone())?;
+        }
+        driver.run_to_completion()
+    };
+    println!(
+        "[spt] serve-bench: model={} mode={} requests={} prompt={} tokens={} max_batch={}",
+        rc.model,
+        rc.mode.as_str(),
+        n_requests,
+        prompt_len,
+        tokens,
+        max_batch
+    );
+    let batched = run(max_batch)?;
+    let baseline = run(1)?;
+    // Continuous batching must not change what any request generates.
+    for (b, s) in batched.completions.iter().zip(&baseline.completions) {
+        if b.tokens != s.tokens {
+            bail!("request {}: batched and serial decode disagree", b.id);
+        }
+    }
+    let speedup = batched.tokens_per_sec / baseline.tokens_per_sec.max(1e-9);
+    let mut table = spt::metrics::Table::new(
+        "Continuous batching vs one-sequence-at-a-time (native decode)",
+        &["Config", "tok/s", "steps", "p50 lat", "p99 lat", "speedup"],
+    );
+    for (name, r, s) in [
+        ("batched", &batched, format!("{speedup:.2}x")),
+        ("baseline (batch=1)", &baseline, "1.00x".into()),
+    ] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", r.tokens_per_sec),
+            r.decode_steps.to_string(),
+            spt::util::fmt_duration(r.latency_percentile(50.0)),
+            spt::util::fmt_duration(r.latency_percentile(99.0)),
+            s,
+        ]);
+    }
+    println!("{}", table.render());
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("decode_native".into()));
+    top.insert("model".into(), Json::Str(rc.model.clone()));
+    top.insert("mode".into(), Json::Str(rc.mode.as_str().into()));
+    top.insert("requests".into(), Json::Num(n_requests as f64));
+    top.insert("prompt_len".into(), Json::Num(prompt_len as f64));
+    top.insert("max_new_tokens".into(), Json::Num(tokens as f64));
+    top.insert("max_batch".into(), Json::Num(max_batch as f64));
+    top.insert("batched".into(), batched.to_json());
+    top.insert("baseline".into(), baseline.to_json());
+    top.insert("speedup".into(), Json::Num(speedup));
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir).ok();
+    let path = dir.join("BENCH_decode_native.json");
+    std::fs::write(&path, format!("{}\n", Json::Obj(top)))?;
+    println!("[spt] continuous batching speedup: {speedup:.2}x -> {}", path.display());
     Ok(())
 }
 
@@ -428,6 +627,37 @@ fn cmd_memplan(args: &Args) -> Result<()> {
             println!("--- {} breakdown (bs {batch}, seq 512) ---", mode.as_str());
             println!("{}", memmodel::block_peak(&cfg, mode, &wl).render());
         }
+    }
+
+    if args.has("decode") {
+        // Decode-time serving model: per-sequence KV/code caches, the
+        // per-step attention state (dense O(n) vs sparse O(L) — the
+        // Fig. 9 argument applied to the decode hot loop), and the peak
+        // with `batch` sequences in flight.
+        let mut t3 = Table::new(
+            &format!(
+                "Decode-time memory — {cfg_name}, {layers} layers, {batch} sequences in flight"
+            ),
+            &[
+                "Seq",
+                "KV cache/seq (dense)",
+                "KV+codes/seq (spt)",
+                "Step state (dense)",
+                "Step state (spt)",
+                "Peak @batch (spt)",
+            ],
+        );
+        for seq in [128usize, 256, 512, 1024, 2048] {
+            t3.row(&[
+                seq.to_string(),
+                fmt_bytes(memmodel::decode_cache_bytes(&cfg, Mode::Lora, seq, layers)),
+                fmt_bytes(memmodel::decode_cache_bytes(&cfg, Mode::Spt, seq, layers)),
+                fmt_bytes(memmodel::decode_step_state_bytes(&cfg, Mode::Lora, seq)),
+                fmt_bytes(memmodel::decode_step_state_bytes(&cfg, Mode::Spt, seq)),
+                fmt_bytes(memmodel::decode_peak(&cfg, Mode::Spt, batch, seq, layers, vocab)),
+            ]);
+        }
+        println!("{}", t3.render());
     }
     Ok(())
 }

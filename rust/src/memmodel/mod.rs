@@ -93,6 +93,71 @@ pub fn model_peak_offloaded(
     saved + working_set + transient + embed_act + 2 * logits
 }
 
+/// Per-sequence decode-cache bytes at `seq` cached positions: per layer
+/// and per head, cached K and V (f32) plus — spt mode — the PQ codes of
+/// every cached key (one `u8` per subspace), which is what lets each
+/// decode step select top-L from integer codes without touching floats.
+pub fn decode_cache_bytes(cfg: &BlockConfig, mode: Mode, seq: usize, n_layers: usize) -> u64 {
+    let d = cfg.d_model as u64;
+    let n = seq as u64;
+    let kv = 2 * n * d * 4;
+    let codes = match mode {
+        Mode::Spt => n * cfg.n_heads() as u64 * cfg.pq_m() as u64,
+        Mode::Full | Mode::Lora => 0,
+    };
+    n_layers as u64 * (kv + codes)
+}
+
+/// Transient attention state one decode step materializes for one new
+/// token (all heads of one layer — layers run serially): the dense path
+/// holds an O(n) softmax row per head, the sparse path O(L) values +
+/// selected indices — the paper's Fig. 9 memory argument applied to the
+/// decode hot loop, where it bounds *per-token serving state* instead of
+/// training activations.
+pub fn decode_step_state_bytes(cfg: &BlockConfig, mode: Mode, seq: usize) -> u64 {
+    let h = cfg.n_heads() as u64;
+    match mode {
+        Mode::Full | Mode::Lora => h * seq as u64 * 4,
+        Mode::Spt => {
+            let l = cfg.sparsity.topl(seq).min(seq) as u64;
+            h * l * (4 + 4)
+        }
+    }
+}
+
+/// Peak decode-time memory for `batch` concurrent sequences at `seq`
+/// cached positions: effective weights (plus the pack-once GEMM panels
+/// of the forward projections), embeddings, every sequence's cache, the
+/// per-step attention state, and the in-flight logits rows.  No
+/// gradients, moments, or saved activations — the structural reason
+/// serving fits where training OOMs.
+pub fn decode_peak(
+    cfg: &BlockConfig,
+    mode: Mode,
+    batch: usize,
+    seq: usize,
+    n_layers: usize,
+    vocab: usize,
+) -> u64 {
+    let d = cfg.d_model as u64;
+    let f = cfg.d_ffn as u64;
+    let nl = n_layers as u64;
+    let adapters = match mode {
+        Mode::Full => 0,
+        Mode::Lora => cfg.lora_params(),
+        Mode::Spt => cfg.lora_params() + cfg.spt_params(),
+    };
+    let weights = nl * (cfg.base_params() + adapters) * 4;
+    // Pack-once panels: q/k/v/o always; the dense FFN pair outside spt.
+    let packed_ffn = if mode == Mode::Spt { 0 } else { 2 * d * f };
+    let packed = nl * (4 * d * d + packed_ffn) * 4;
+    let embed = (vocab as u64 + seq as u64) * d * 4;
+    let caches = batch as u64 * decode_cache_bytes(cfg, mode, seq, n_layers);
+    let step_state = batch as u64 * decode_step_state_bytes(cfg, mode, seq);
+    let logits = (batch * vocab) as u64 * 4;
+    weights + packed + embed + caches + step_state + logits
+}
+
 /// Max sequence length under a byte budget, probing in `step` increments —
 /// the paper's Table 3 "Max Length" protocol (increments of 128 until OOM,
 /// with DeepSpeed offloading enabled).
@@ -162,6 +227,33 @@ mod tests {
         let lora = max_seq_under_budget(&cfg, Mode::Lora, 16, 32, 50272, budget, 128);
         let spt = max_seq_under_budget(&cfg, Mode::Spt, 16, 32, 50272, budget, 128);
         assert!(full > 0 && lora >= full && spt > lora, "{full} {lora} {spt}");
+    }
+
+    #[test]
+    fn decode_model_orders_as_expected() {
+        let cfg = presets::block("opt-2048").unwrap();
+        // Per-step attention state: sparse O(L) << dense O(n), and the
+        // gap widens with sequence length (Fig. 9, decode edition).
+        let gap = |seq: usize| {
+            decode_step_state_bytes(&cfg, Mode::Lora, seq) as i64
+                - decode_step_state_bytes(&cfg, Mode::Spt, seq) as i64
+        };
+        assert!(gap(512) > 0);
+        assert!(gap(2048) > 2 * gap(512), "{} vs {}", gap(2048), gap(512));
+        // The spt cache pays a small integer-code premium over dense KV.
+        let kv = decode_cache_bytes(&cfg, Mode::Lora, 512, 32);
+        let kv_spt = decode_cache_bytes(&cfg, Mode::Spt, 512, 32);
+        assert!(kv_spt > kv);
+        assert!(kv_spt < kv + kv / 10, "codes should be a small premium");
+        // Decode peak is far below the training peak (no grads, moments,
+        // or saved activations) and monotone in batch and seq.
+        let train = model_peak(&cfg, Mode::Spt, 16, 512, 32, 50272);
+        let serve = decode_peak(&cfg, Mode::Spt, 16, 512, 32, 50272);
+        assert!(serve < train / 2, "serve {serve} vs train {train}");
+        assert!(
+            decode_peak(&cfg, Mode::Spt, 32, 512, 32, 50272) > serve
+                && decode_peak(&cfg, Mode::Spt, 16, 1024, 32, 50272) > serve
+        );
     }
 
     #[test]

@@ -117,6 +117,136 @@ pub fn sparse_attention_masked(
     (y, a)
 }
 
+/// One query row of the sparse pipeline against a cached key/value set —
+/// the cached-decode hot path: SDDMM → causal re-mask → softmax → SpMM
+/// over a *fixed* selection `sel`, in exactly the per-row operation
+/// order of [`sparse_attention_masked`] (scale the query first, then
+/// ascending-dimension dots; softmax as in `Csr::softmax_rows`; SpMM
+/// skipping exact-zero weights as in `Csr::spmm`).  A decode step built
+/// on this kernel is therefore bit-identical to the corresponding row of
+/// a full-sequence forward (see `infer::session` for the selection-side
+/// argument).
+///
+/// `qs` (length `q.len()`) and `vals` (length `sel.len()`) are caller
+/// scratch; `out` (length `v.cols`) is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attend_row(
+    q: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    sel: &[u32],
+    causal_limit: Option<usize>,
+    qs: &mut [f32],
+    vals: &mut [f32],
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), k.cols, "q/K dim mismatch");
+    assert_eq!(k.rows, v.rows, "K/V row mismatch");
+    assert_eq!(qs.len(), q.len(), "qs scratch length");
+    assert_eq!(vals.len(), sel.len(), "vals scratch length");
+    assert_eq!(out.len(), v.cols, "out length");
+    let scale = 1.0 / (q.len() as f32).sqrt();
+    // SDDMM on the scaled query (the sparse pipeline scales Q up front).
+    for (s, &x) in qs.iter_mut().zip(q) {
+        *s = x * scale;
+    }
+    for (val, &j) in vals.iter_mut().zip(sel) {
+        let krow = k.row(j as usize);
+        *val = qs.iter().zip(krow).map(|(a, b)| a * b).sum();
+    }
+    // Causal re-mask: padding slots may reference future keys.
+    if let Some(limit) = causal_limit {
+        for (val, &j) in vals.iter_mut().zip(sel) {
+            if j as usize > limit {
+                *val = -1e30;
+            }
+        }
+    }
+    // Row softmax, same order as `Csr::softmax_rows`.
+    let mx = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in vals.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in vals.iter_mut() {
+        *x /= sum.max(1e-30);
+    }
+    // SpMM row, same order as `Csr::spmm`.
+    out.fill(0.0);
+    for (&w, &j) in vals.iter().zip(sel) {
+        if w == 0.0 {
+            continue;
+        }
+        let vrow = v.row(j as usize);
+        for (o, &x) in out.iter_mut().zip(vrow) {
+            *o += w * x;
+        }
+    }
+}
+
+/// One query row of the *dense* pipeline against cached K/V (the
+/// full/LoRA decode path): logits `(q · k_j) * scale` for every cached
+/// key, row softmax, probability-weighted V sum — in exactly the
+/// operation order [`dense_attention_ws`] uses for one row (the NT
+/// kernel's ascending dot product, then the scalar scale multiply, then
+/// `softmax_rows_inplace`, then the blocked GEMM's ascending-`j`
+/// accumulation with its exact-zero skip).  Causally-masked future
+/// columns of a full-sequence forward carry probability exactly 0 and
+/// sit past the cached prefix, so restricting to the cache preserves
+/// every bit.
+///
+/// `logits` is reusable caller scratch (resized to `k.rows`); `out`
+/// (length `v.cols`) is fully overwritten.
+pub fn dense_attend_row(
+    q: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    logits: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), k.cols, "q/K dim mismatch");
+    assert_eq!(k.rows, v.rows, "K/V row mismatch");
+    assert_eq!(out.len(), v.cols, "out length");
+    let scale = 1.0 / (q.len() as f32).sqrt();
+    logits.clear();
+    logits.resize(k.rows, 0.0);
+    // Logits: plain ascending dot (gemm_nt), then the scale multiply.
+    for (x, j) in logits.iter_mut().zip(0..k.rows) {
+        let krow = k.row(j);
+        let mut acc = 0.0f32;
+        for (a, b) in q.iter().zip(krow) {
+            acc += a * b;
+        }
+        *x = acc;
+    }
+    for x in logits.iter_mut() {
+        *x *= scale;
+    }
+    // Row softmax, same order as `Matrix::softmax_rows_inplace`.
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in logits.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in logits.iter_mut() {
+        *x /= sum.max(1e-30);
+    }
+    // P @ V row: ascending j, exact-zero probabilities skipped (the
+    // blocked GEMM's zero-A skip).
+    out.fill(0.0);
+    for (j, &w) in logits.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        let vrow = v.row(j);
+        for (o, &x) in out.iter_mut().zip(vrow) {
+            *o += w * x;
+        }
+    }
+}
+
 /// CDF of sorted softmax attention weights, averaged over queries
 /// (regenerates paper Fig. 3).  Returns exactly `points` entries of
 /// (fraction-kept, mass); the last is (1.0, total mass).
@@ -278,6 +408,53 @@ mod tests {
         let cdf = attention_weight_cdf(&q, &k, 50, true);
         assert_eq!(cdf.len(), 50);
         assert_eq!(cdf.last().unwrap().0, 1.0);
+    }
+
+    #[test]
+    fn sparse_attend_row_matches_full_forward_rows_bitwise() {
+        // Decode emulation: row i sees only keys 0..=i (the cache), with
+        // l_eff = min(L, i+1).  Every row must equal the full-sequence
+        // causal forward bit for bit.
+        let (q, k, v) = correlated_qkv(20, 16, 7);
+        let mut rng = Rng::new(17);
+        let mut cb = Codebooks::random(2, 4, 8, &mut rng);
+        pq::codebook_update(&k.data, &mut cb, 1.0);
+        let l = 6;
+        let (want, _) = sparse_attention(&q, &k, &v, &cb, l, true);
+        let mut qs = vec![0.0f32; 16];
+        let mut out = vec![0.0f32; 16];
+        let mut scratch = crate::sparse::topl::BucketScratch::default();
+        for i in 0..20 {
+            let kc = Matrix::from_vec(i + 1, 16, k.data[..(i + 1) * 16].to_vec());
+            let vc = Matrix::from_vec(i + 1, 16, v.data[..(i + 1) * 16].to_vec());
+            let ck = pq::quantize(&kc.data, &cb);
+            let l_eff = l.min(i + 1);
+            let mut qcodes = vec![0u8; cb.m];
+            pq::quantize_row(q.row(i), &cb, &mut qcodes);
+            let mut sel = vec![0u32; l_eff];
+            crate::sparse::topl::select_into(
+                &qcodes, &ck, l_eff, Some(i), &mut sel, &mut scratch,
+            );
+            let mut vals = vec![0.0f32; l_eff];
+            sparse_attend_row(
+                q.row(i), &kc, &vc, &sel, Some(i), &mut qs, &mut vals, &mut out,
+            );
+            assert_eq!(out.as_slice(), want.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn dense_attend_row_matches_full_forward_rows_bitwise() {
+        let (q, k, v) = correlated_qkv(18, 8, 8);
+        let want = dense_attention(&q, &k, &v, true);
+        let mut logits = Vec::new();
+        let mut out = vec![0.0f32; 8];
+        for i in 0..18 {
+            let kc = Matrix::from_vec(i + 1, 8, k.data[..(i + 1) * 8].to_vec());
+            let vc = Matrix::from_vec(i + 1, 8, v.data[..(i + 1) * 8].to_vec());
+            dense_attend_row(q.row(i), &kc, &vc, &mut logits, &mut out);
+            assert_eq!(out.as_slice(), want.row(i), "row {i}");
+        }
     }
 
     #[test]

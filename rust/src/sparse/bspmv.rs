@@ -49,13 +49,45 @@ pub struct BlockScratch {
 /// which restores the |score|-desc-then-index order the full-sort
 /// implementation produced, so gate values are bit-identical to it.
 pub fn route(scores: &Matrix, g_active: usize) -> Routing {
+    let mut out = Routing {
+        mask: Vec::new(),
+        gate: Vec::new(),
+        g: scores.cols,
+        g_active,
+    };
+    route_into(scores, g_active, &mut out);
+    out
+}
+
+/// [`route`] into a reusable [`Routing`] — the cached-decode hot loop
+/// calls the router once per layer per step, so reusing the mask/gate
+/// buffers keeps steady-state serving allocation-free.  Bit-identical to
+/// a freshly-allocated [`route`]: every row is reset to the no-selection
+/// state before the winners are written.
+pub fn route_into(scores: &Matrix, g_active: usize, out: &mut Routing) {
     let nt = scores.rows;
     let g = scores.cols;
     assert!(g_active >= 1 && g_active <= g);
-    let mut mask = vec![vec![false; g]; nt];
-    let mut gate = vec![vec![0.0f32; g]; nt];
+    out.g = g;
+    out.g_active = g_active;
+    out.mask.resize_with(nt, || vec![false; g]);
+    out.gate.resize_with(nt, || vec![0.0f32; g]);
     let mut order: Vec<usize> = Vec::with_capacity(g);
     for t in 0..nt {
+        let mrow = &mut out.mask[t];
+        if mrow.len() == g {
+            mrow.fill(false);
+        } else {
+            mrow.clear();
+            mrow.resize(g, false);
+        }
+        let grow = &mut out.gate[t];
+        if grow.len() == g {
+            grow.fill(0.0);
+        } else {
+            grow.clear();
+            grow.resize(g, 0.0);
+        }
         let row = scores.row(t);
         // top-G' by |score|, ties by lower index — a strict total order,
         // so the winner *set* of select_nth equals the full sort's.
@@ -75,11 +107,10 @@ pub fn route(scores: &Matrix, g_active: usize) -> Routing {
             denom += (row[j] - mx).exp();
         }
         for &j in sel.iter() {
-            mask[t][j] = true;
-            gate[t][j] = (row[j] - mx).exp() / denom.max(1e-30) * g_active as f32;
+            out.mask[t][j] = true;
+            out.gate[t][j] = (row[j] - mx).exp() / denom.max(1e-30) * g_active as f32;
         }
     }
-    Routing { mask, gate, g, g_active }
 }
 
 /// One block's contribution (paper Alg. 4 lines 2-5): the activated
@@ -472,6 +503,30 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn route_into_reuse_matches_fresh_route() {
+        // Reusing one Routing across differently-shaped calls must give
+        // the same bits as a fresh allocation every time.
+        let mut rng = Rng::new(31);
+        let mut r = Routing { mask: Vec::new(), gate: Vec::new(), g: 1, g_active: 1 };
+        for (nt, gg, ga) in [(5usize, 8usize, 3usize), (9, 4, 2), (3, 8, 8), (1, 4, 1)] {
+            let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+            route_into(&scores, ga, &mut r);
+            let fresh = route(&scores, ga);
+            assert_eq!(r.mask, fresh.mask, "{nt}x{gg} mask");
+            for t in 0..nt {
+                for j in 0..gg {
+                    assert_eq!(
+                        r.gate[t][j].to_bits(),
+                        fresh.gate[t][j].to_bits(),
+                        "{nt}x{gg} gate ({t},{j})"
+                    );
+                }
+            }
+            assert_eq!((r.g, r.g_active), (gg, ga));
+        }
     }
 
     #[test]

@@ -57,6 +57,64 @@ pub struct Workspace {
     pub(crate) attn2: Matrix,
 }
 
+/// A B operand packed once into the microkernel's column-panel layout
+/// (the output of [`pack_b`] over the whole matrix), so repeated
+/// `A @ B` products against the same B — every decode step's projection,
+/// every train step's per-item forward — skip the per-call packing pass.
+///
+/// [`gemm_packed_into`] consumes it and is bit-identical to
+/// [`gemm_into`] with the same operands: the panel layout and the
+/// per-element accumulation order are exactly the per-call path's.
+/// A `PackedB` is immutable; invalidation is by construction — callers
+/// rebuild it whenever the underlying weight changes (the native
+/// backend re-materializes its `Weights` after every optimizer update).
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    /// Rows of the packed B (the GEMM's K dimension).
+    pub k: usize,
+    /// Columns of the packed B (the GEMM's N dimension).
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack all of `b` once.  Equivalent to the packing [`gemm_into`]
+    /// performs internally on every call.
+    pub fn pack(b: &Matrix) -> Self {
+        let mut data = Vec::new();
+        pack_b(b.rows, b.cols, &b.data, b.cols, 0, &mut data);
+        PackedB { k: b.rows, n: b.cols, data }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Blocked GEMM against a pre-packed B: `out[m x n] = a[m x pb.k] @ B`.
+/// Bit-identical to [`gemm_into`] with the same logical operands — the
+/// same row-block kernel runs over the same panel layout, with the same
+/// parallelization threshold.
+pub fn gemm_packed_into(m: usize, a: &[f32], pb: &PackedB, out: &mut [f32]) {
+    let (k, n) = (pb.k, pb.n);
+    assert!(a.len() >= m * k, "gemm_packed: A too small");
+    assert_eq!(out.len(), m * n, "gemm_packed: C shape mismatch");
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let pack: &[f32] = &pb.data;
+    if m * k * n >= PAR_MATMUL_FLOPS {
+        out.par_chunks_mut(MC * n)
+            .enumerate()
+            .for_each(|(ci, chunk)| {
+                gemm_rows(ci * MC, chunk.len() / n, k, n, a, pack, chunk);
+            });
+    } else {
+        gemm_rows(0, m, k, n, a, pack, out);
+    }
+}
+
 /// Dense row-major matrix.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Matrix {
@@ -152,6 +210,22 @@ impl Matrix {
             &mut out.data,
             &mut ws.packb,
         );
+    }
+
+    /// `self @ B` against a B packed once with [`PackedB::pack`]
+    /// (weight-stationary hot paths: decode steps, per-item training
+    /// forwards).  Bit-identical to [`Self::matmul`] with the unpacked B.
+    pub fn matmul_packed(&self, pb: &PackedB) -> Matrix {
+        let mut out = Matrix::default();
+        self.matmul_packed_into(pb, &mut out);
+        out
+    }
+
+    /// [`Self::matmul_packed`] into a reusable output allocation.
+    pub fn matmul_packed_into(&self, pb: &PackedB, out: &mut Matrix) {
+        assert_eq!(self.cols, pb.k, "matmul_packed shape mismatch");
+        out.reset_any(self.rows, pb.n);
+        gemm_packed_into(self.rows, &self.data, pb, &mut out.data);
     }
 
     /// Elementwise sum (residual connections in the native model).
@@ -569,6 +643,25 @@ mod tests {
             let b = Matrix::randn(k, n, 1.0, &mut rng);
             a.matmul_into(&b, &mut out, &mut ws);
             assert_eq!(out, a.matmul(&b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_matches_per_call_packing_bits() {
+        // Pack-once must reproduce the per-call path exactly, across
+        // shapes straddling the panel/tile boundaries and under both the
+        // sequential and the row-parallel dispatch.
+        let mut rng = Rng::new(8);
+        for (m, k, n) in [(1, 1, 1), (5, 8, 3), (MC + 3, KC + 5, NR + 7), (64, 48, 64)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let pb = PackedB::pack(&b);
+            assert_eq!((pb.k, pb.n), (k, n));
+            let got = a.matmul_packed(&pb);
+            assert_eq!(got, a.matmul(&b), "{m}x{k}x{n}");
+            // Reusing the same pack for a second A is still exact.
+            let a2 = Matrix::randn(m, k, 1.0, &mut rng);
+            assert_eq!(a2.matmul_packed(&pb), a2.matmul(&b), "{m}x{k}x{n} reuse");
         }
     }
 

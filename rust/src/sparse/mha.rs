@@ -16,6 +16,7 @@
 use rayon::prelude::*;
 
 use super::bspmv::{self, Routing};
+use super::codes::Codes;
 use super::csr::Csr;
 use super::grad;
 use super::matrix::Matrix;
@@ -251,6 +252,97 @@ impl MultiHeadSparseAttention {
     }
 }
 
+/// Reusable per-worker scratch for [`decode_attend_row`]: query codes,
+/// the top-L selection, the scaled query, the SDDMM values, and the
+/// bucket-sort storage.  Contents never affect results — a fresh and a
+/// reused scratch produce identical bits.
+#[derive(Debug, Default, Clone)]
+pub struct DecodeScratch {
+    qcodes: Vec<u8>,
+    sel: Vec<u32>,
+    qs: Vec<f32>,
+    vals: Vec<f32>,
+    buckets: topl::BucketScratch,
+}
+
+/// One (head, new-query-row) unit of cached decode: PQ-quantize the new
+/// query against `cb`, bucket-sort top-`min(l, pos+1)` against the
+/// cached key codes `ck`, then run the SDDMM→softmax→SpMM row kernel
+/// against the cached K/V.  `l` is the *session's* sparsity strength —
+/// the L of the full target sequence length, pinned per sequence (so it
+/// rides alongside, not on, the shared per-layer codebooks).
+///
+/// Bit-identical to row `pos` of
+/// [`MultiHeadSparseAttention::forward_cached`] over the full sequence
+/// with the same `l`: the full forward's row-`pos` selection scans
+/// future keys into the sentinel bucket (drained last, probability
+/// exactly 0 after the causal re-mask, skipped by the SpMM's zero test),
+/// so restricting to the `pos + 1` cached keys — with the bucket
+/// capacity clamp `min(l, pos+1)`, which never truncates a bucket the
+/// full capacity wouldn't — preserves the kept set, its order, and every
+/// output bit.  `out` (length `v.cols`) is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attend_row(
+    cb: &Codebooks,
+    q_row: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    ck: &Codes,
+    pos: usize,
+    l: usize,
+    out: &mut [f32],
+    scratch: &mut DecodeScratch,
+) {
+    assert_eq!(q_row.len(), cb.d(), "query dim mismatch");
+    assert_eq!(k.rows, pos + 1, "key cache out of sync");
+    assert_eq!(ck.n, pos + 1, "code cache out of sync");
+    assert!(l >= 1, "need l >= 1");
+    let l_eff = l.min(pos + 1);
+    scratch.qcodes.resize(cb.m, 0);
+    pq::quantize_row(q_row, cb, &mut scratch.qcodes);
+    scratch.sel.resize(l_eff, 0);
+    topl::select_into(
+        &scratch.qcodes,
+        ck,
+        l_eff,
+        Some(pos),
+        &mut scratch.sel,
+        &mut scratch.buckets,
+    );
+    scratch.qs.resize(q_row.len(), 0.0);
+    scratch.vals.resize(l_eff, 0.0);
+    super::attention::sparse_attend_row(
+        q_row,
+        k,
+        v,
+        &scratch.sel,
+        Some(pos),
+        &mut scratch.qs,
+        &mut scratch.vals,
+        out,
+    );
+}
+
+/// Work threshold below which [`routed_ffn_auto`] stays sequential:
+/// decode-sized token batches (a handful of tokens × active blocks)
+/// finish faster than the rayon fan-out costs to schedule.
+const ROUTED_FFN_PAR_FLOPS: usize = 1 << 16;
+
+/// Routed-FFN entry for decode-sized batches: dispatches to the
+/// sequential [`bspmv::routed_ffn`] below [`ROUTED_FFN_PAR_FLOPS`]
+/// multiply-adds and to the block-parallel [`routed_ffn_par`] above it.
+/// The two paths are bit-identical by construction, so the cutover never
+/// changes results — only scheduling overhead.
+pub fn routed_ffn_auto(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing) -> Matrix {
+    let dg = w_i.cols / routing.g;
+    let flops = x.rows * routing.g_active * 4 * x.cols * dg;
+    if flops < ROUTED_FFN_PAR_FLOPS {
+        bspmv::routed_ffn(x, w_i, w_o, routing)
+    } else {
+        routed_ffn_par(x, w_i, w_o, routing)
+    }
+}
+
 /// Parallel routed FFN (paper Alg. 4, block-parallel): fan out over the
 /// G weight blocks — each task runs the shared
 /// [`bspmv::block_partial`] kernel (gather + two block GEMMs, the
@@ -468,6 +560,54 @@ mod tests {
         assert_eq!(dx_p, dx_s);
         assert_eq!(dwi_p, dwi_s);
         assert_eq!(dwo_p, dwo_s);
+    }
+
+    #[test]
+    fn decode_row_matches_forward_cached_rows_bitwise() {
+        // Grow the cache one key at a time and decode each new row; the
+        // outputs must equal the full-sequence forward_cached rows bit
+        // for bit (self.l equals the full-sequence L here).
+        let n = 21;
+        let (cbs, q, k, v) = head_workload(2, n, 2, 4, 11);
+        let mha = MultiHeadSparseAttention::new(cbs.clone(), 5, true);
+        let (want, _) = mha.forward_cached(&q, &k, &v);
+        let d = q[0].cols;
+        for h in 0..2 {
+            let mut scratch = DecodeScratch::default();
+            let mut kc = Matrix::zeros(0, d);
+            let mut vc = Matrix::zeros(0, d);
+            let mut ck = Codes::zeros(0, cbs[h].m);
+            let mut out = vec![0.0f32; d];
+            for pos in 0..n {
+                kc.rows += 1;
+                kc.data.extend_from_slice(k[h].row(pos));
+                vc.rows += 1;
+                vc.data.extend_from_slice(v[h].row(pos));
+                pq::quantize_append(k[h].row(pos), &cbs[h], &mut ck);
+                decode_attend_row(
+                    &cbs[h], q[h].row(pos), &kc, &vc, &ck, pos, mha.l, &mut out, &mut scratch,
+                );
+                assert_eq!(out.as_slice(), want[h].row(pos), "head {h} row {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn routed_ffn_auto_matches_both_paths() {
+        let mut rng = Rng::new(21);
+        let (d, gg, dg) = (6, 4, 3);
+        let wi = Matrix::randn(d, gg * dg, 0.3, &mut rng);
+        let wo = Matrix::randn(gg * dg, d, 0.3, &mut rng);
+        // A 1-token batch (sequential side of the cutover) and a large
+        // batch (parallel side) must both equal the sequential reference.
+        for nt in [1usize, 700] {
+            let x = Matrix::randn(nt, d, 1.0, &mut rng);
+            let scores = Matrix::randn(nt, gg, 1.0, &mut rng);
+            let routing = bspmv::route(&scores, 2);
+            let auto = routed_ffn_auto(&x, &wi, &wo, &routing);
+            let seq = bspmv::routed_ffn(&x, &wi, &wo, &routing);
+            assert_eq!(auto, seq, "nt={nt}");
+        }
     }
 
     #[test]

@@ -40,5 +40,5 @@ pub mod topl;
 
 pub use codes::{Codes, TopL};
 pub use csr::Csr;
-pub use matrix::{Matrix, Workspace};
+pub use matrix::{Matrix, PackedB, Workspace};
 pub use mha::MultiHeadSparseAttention;

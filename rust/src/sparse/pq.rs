@@ -70,6 +70,23 @@ pub fn quantize_row(v: &[f32], cb: &Codebooks, out: &mut [u8]) {
     }
 }
 
+/// Append the codes of `x` (one or more `d`-dim vectors) to an existing
+/// flat code matrix — the decode cache's incremental path.  Quantization
+/// is row-independent, so the grown matrix is bit-identical to a fresh
+/// [`quantize`] over the concatenated inputs.
+pub fn quantize_append(x: &[f32], cb: &Codebooks, codes: &mut Codes) {
+    let d = cb.d();
+    assert_eq!(x.len() % d, 0, "input not a multiple of d");
+    assert_eq!(codes.m, cb.m, "code width mismatch");
+    let n_new = x.len() / d;
+    let start = codes.n;
+    codes.n += n_new;
+    codes.data.resize(codes.n * codes.m, 0);
+    for i in 0..n_new {
+        quantize_row(&x[i * d..(i + 1) * d], cb, codes.row_mut(start + i));
+    }
+}
+
 /// Mean squared quantization error (per dimension) — the DKM signal.
 pub fn quantize_error(x: &[f32], cb: &Codebooks) -> f32 {
     let d = cb.d();
@@ -162,6 +179,26 @@ mod tests {
         }
         let e1 = quantize_error(&x, &cb);
         assert!(e1 < e0, "{e1} !< {e0}");
+    }
+
+    #[test]
+    fn quantize_append_matches_batch_quantize() {
+        check(25, |g| {
+            let m = g.usize_in(1, 6);
+            let e = g.usize_in(2, 8);
+            let dsub = g.usize_in(1, 6);
+            let n0 = g.usize_in(0, 12);
+            let n1 = g.usize_in(1, 12);
+            let mut rng = g.rng().fork();
+            let cb = Codebooks::random(m, e, dsub, &mut rng);
+            let x0 = rng.normal_vec(n0 * cb.d());
+            let x1 = rng.normal_vec(n1 * cb.d());
+            let mut grown = quantize(&x0, &cb);
+            quantize_append(&x1, &cb, &mut grown);
+            let mut all = x0.clone();
+            all.extend_from_slice(&x1);
+            prop_assert(grown == quantize(&all, &cb), "append != batch")
+        });
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! The inference subsystem's parity and determinism contracts:
+//!
+//! * **Prefill/decode parity** — `prefill(prompt)` + N teacher-forced
+//!   decode steps produce logits *bit-identical* to one training
+//!   forward over the `prompt + N`-token sequence, in every tuning mode
+//!   (the proptest randomizes sequence length, prompt split, and seed).
+//! * **Pool invariance** — the same holds under dedicated rayon pools
+//!   of 1, 2, and 8 threads, and the decoded bits agree across pools.
+//! * **Checkpoint round trip** — train → `save_tagged` → load →
+//!   generate is deterministic per seed, and identity mismatches fail
+//!   with a clear error instead of a shape panic.
+
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::checkpoint::{self, CkptMeta};
+use spt::coordinator::{Backend, NativeBackend, Trainer, TrainerOptions};
+use spt::data::SyntheticCorpus;
+use spt::infer::{InferModel, Sampler, Session};
+use spt::util::proptest::{check, prop_assert};
+use spt::util::rng::Rng;
+
+fn rc(model: &str, mode: Mode, seed: u64) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        mode,
+        seed,
+        eval_every: 0,
+        codebook_refresh_every: 0,
+        ..RunConfig::default()
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Decode logits rows `p-1 .. seq-1` via prefill + teacher-forced decode.
+fn decode_bits(model: &InferModel, toks: &[i32], p: usize) -> Vec<Vec<u32>> {
+    let mut sess = Session::new(model, &toks[..p], toks.len()).expect("prefill");
+    let mut rows = vec![bits(sess.logits())];
+    for &t in &toks[p..] {
+        rows.push(bits(sess.decode(t).expect("decode")));
+    }
+    rows
+}
+
+/// The parity assertion for one (model, mode, seed, seq, prompt) case.
+fn assert_parity(
+    model_name: &str,
+    mode: Mode,
+    seed: u64,
+    seq: usize,
+    p: usize,
+) -> Result<(), String> {
+    let cfg = rc(model_name, mode, seed);
+    let backend = NativeBackend::new();
+    let state = backend.init_state(&cfg).map_err(|e| e.to_string())?;
+    let model = InferModel::new(&cfg, state.clone()).map_err(|e| e.to_string())?;
+    let mut corpus = SyntheticCorpus::new(backend.vocab(&cfg).unwrap(), 4, 0.85, seed ^ 0xC0);
+    let toks: Vec<i32> = corpus.sequence(seq).iter().map(|&t| t as i32).collect();
+    let full = backend.forward_logits(&cfg, &state, &toks).map_err(|e| e.to_string())?;
+    let got = decode_bits(&model, &toks, p);
+    for (step, row) in got.iter().enumerate() {
+        let want = bits(full.row(p - 1 + step));
+        if row != &want {
+            return Err(format!(
+                "{model_name}/{mode:?} seed {seed} seq {seq} prompt {p}: \
+                 logits row {} diverges from the full forward",
+                p - 1 + step
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prefill_decode_parity_proptest_all_modes() {
+    // Randomized over sequence length, prompt split, and seed; every
+    // mode must reproduce the training forward bit for bit — including
+    // prompts shorter than the session L (the bucket-clamp edge) and
+    // 1-token prompts.
+    check(8, |g| {
+        let seq = g.usize_in(4, 32);
+        let p = g.usize_in(1, seq - 1);
+        let seed = g.rng().next_u64();
+        for mode in Mode::ALL {
+            assert_parity("spt-nano", mode, seed, seq, p).map_err(|e| e.to_string())?;
+        }
+        prop_assert(true, "unreachable")
+    });
+}
+
+#[test]
+fn prefill_decode_parity_multi_layer() {
+    // The 2-layer stack: inter-layer residuals flow through the decode
+    // caches of both layers.
+    for mode in Mode::ALL {
+        assert_parity("spt-nano-l2", mode, 11, 28, 9).unwrap();
+        // Prompt of 1 token: everything after the first position runs
+        // through the incremental path.
+        assert_parity("spt-nano-l2", mode, 12, 16, 1).unwrap();
+    }
+}
+
+#[test]
+fn parity_holds_at_pools_1_2_8() {
+    // Dedicated pools of 1, 2, and 8 threads: the decoded logits must
+    // agree with the single-thread reference bit for bit (and with the
+    // full forward, which assert_parity already pins per pool).
+    for mode in Mode::ALL {
+        let cfg = rc("spt-nano", mode, 21);
+        let backend = NativeBackend::new();
+        let state = backend.init_state(&cfg).unwrap();
+        let model = InferModel::new(&cfg, state).unwrap();
+        let mut corpus = SyntheticCorpus::new(512, 4, 0.85, 77);
+        let toks: Vec<i32> = corpus.sequence(20).iter().map(|&t| t as i32).collect();
+        let run_under = |threads: usize| {
+            let pool = rayon::ThreadPoolBuilder::new()
+                .num_threads(threads)
+                .build()
+                .expect("pool");
+            pool.install(|| decode_bits(&model, &toks, 7))
+        };
+        let reference = run_under(1);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                reference,
+                run_under(threads),
+                "{mode:?}: decode bits diverge between pools of 1 and {threads}"
+            );
+        }
+    }
+    // And the parity contract itself under an oversubscribed pool.
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(8).build().unwrap();
+    pool.install(|| {
+        for mode in Mode::ALL {
+            assert_parity("spt-nano", mode, 31, 24, 6).unwrap();
+        }
+    });
+}
+
+#[test]
+fn train_checkpoint_generate_roundtrip() {
+    // Short spt fine-tune -> tagged checkpoint -> load -> generate:
+    // deterministic per seed, and the checkpoint's embedded identity
+    // guards against loading under the wrong preset.
+    let cfg = rc("spt-nano", Mode::Spt, 4);
+    let backend = NativeBackend::new();
+    let mut train_cfg = cfg.clone();
+    train_cfg.steps = 3;
+    train_cfg.batch = 2;
+    train_cfg.seq = 24;
+    let mut trainer = Trainer::new(&backend, train_cfg, TrainerOptions::default());
+    trainer.train().expect("train");
+    let state = trainer.last_state.as_ref().expect("state");
+    let dir = std::env::temp_dir().join("spt_infer_roundtrip_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("gen.ckpt");
+    checkpoint::save_tagged(
+        state,
+        &CkptMeta { model: "spt-nano".into(), mode: Mode::Spt, n_layers: 1 },
+        &path,
+    )
+    .expect("save");
+
+    let gen = |seed: u64| {
+        let model = InferModel::from_checkpoint(&cfg, &path).expect("load");
+        let mut corpus = SyntheticCorpus::new(model.vocab(), 4, 0.85, 1);
+        let prompt: Vec<i32> = corpus.sequence(8).iter().map(|&t| t as i32).collect();
+        let mut sess = Session::new(&model, &prompt, prompt.len() + 16).expect("prefill");
+        let mut rng = Rng::new(seed);
+        sess.generate(&Sampler::TopK { k: 32, temperature: 0.9 }, &mut rng, 16)
+            .expect("generate")
+    };
+    let a = gen(5);
+    assert_eq!(a, gen(5), "same seed must reproduce the stream");
+    assert_eq!(a.len(), 16);
+    assert!(a.iter().all(|&t| (t as usize) < 512), "tokens in vocab");
+
+    // Wrong mode and wrong model fail up front with the identity error.
+    let wrong = rc("spt-nano", Mode::Lora, 4);
+    let err = InferModel::from_checkpoint(&wrong, &path).unwrap_err();
+    assert!(err.to_string().contains("mode"), "unexpected error: {err}");
+    let wrong_model = rc("spt-nano-l2", Mode::Spt, 4);
+    assert!(InferModel::from_checkpoint(&wrong_model, &path).is_err());
+}
