@@ -58,6 +58,23 @@ impl CkptMeta {
         }
         Ok(())
     }
+
+    /// [`Self::verify`] plus the layer count — for callers about to
+    /// materialize a model with a known depth (resume, `spt generate`,
+    /// serving), so a depth drift fails here with a clear message
+    /// instead of as a leaf-shape mismatch deep in materialization.
+    pub fn verify_layers(&self, model: &str, mode: Mode, n_layers: usize) -> Result<()> {
+        self.verify(model, mode)?;
+        if self.n_layers != n_layers {
+            bail!(
+                "checkpoint was trained with {} layers; model '{model}' ({}) builds {n_layers} \
+                 — pass the preset this checkpoint was trained on",
+                self.n_layers,
+                mode.as_str()
+            );
+        }
+        Ok(())
+    }
 }
 
 fn mode_code(mode: Mode) -> u8 {
@@ -88,7 +105,7 @@ fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
     };
     w.write_all(&[code])?;
     let shape = t.shape();
-    w.write_all(&(shape.len() as u32).to_le_bytes())?;
+    w.write_all(&(shape.len() as u32).to_le_bytes())?; // det: cast-bounded (ndim <= 16)
     for &d in shape {
         w.write_all(&(d as u64).to_le_bytes())?;
     }
@@ -160,13 +177,14 @@ fn save_inner(state: &TrainState, meta: Option<&CkptMeta>, path: &Path) -> Resul
         None => w.write_all(MAGIC_V1)?,
         Some(m) => {
             w.write_all(MAGIC_V2)?;
+            // det: cast-bounded (model name <= 4096 bytes, checked on load)
             w.write_all(&(m.model.len() as u32).to_le_bytes())?;
             w.write_all(m.model.as_bytes())?;
             w.write_all(&[mode_code(m.mode)])?;
             w.write_all(&(m.n_layers as u32).to_le_bytes())?;
         }
     }
-    w.write_all(&(state.params.len() as u32).to_le_bytes())?;
+    w.write_all(&(state.params.len() as u32).to_le_bytes())?; // det: cast-bounded (leaves)
     for group in [&state.params, &state.m, &state.v] {
         for t in group {
             write_tensor(&mut w, t)?;
@@ -316,6 +334,45 @@ mod tests {
         let (s2, meta) = load_tagged(&path).unwrap();
         assert_eq!(s.params, s2.params);
         assert!(meta.is_none());
+    }
+
+    #[test]
+    fn verify_layers_catches_depth_mismatch() {
+        let meta = CkptMeta { model: "spt-nano".into(), mode: Mode::Spt, n_layers: 2 };
+        meta.verify_layers("spt-nano", Mode::Spt, 2).unwrap();
+        let err = meta.verify_layers("spt-nano", Mode::Spt, 1).unwrap_err();
+        assert!(err.to_string().contains("2 layers"), "{err}");
+        assert!(err.to_string().contains("builds 1"), "{err}");
+        // Model/mode drift still fails through verify()'s message.
+        assert!(meta.verify_layers("spt-mini", Mode::Spt, 2).is_err());
+    }
+
+    #[test]
+    fn detects_truncation_inside_v2_header() {
+        let dir = std::env::temp_dir().join("spt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc_header.ckpt");
+        let meta = CkptMeta { model: "spt-nano-l2".into(), mode: Mode::Spt, n_layers: 2 };
+        save_tagged(&state(), &meta, &path).unwrap();
+        // Cut mid-way through the model name: magic (8) + name len (4) + 3.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..15]).unwrap();
+        assert!(load_tagged(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_mode_code() {
+        let dir = std::env::temp_dir().join("spt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("badmode.ckpt");
+        let meta = CkptMeta { model: "m".into(), mode: Mode::Lora, n_layers: 1 };
+        save_tagged(&state(), &meta, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // The mode code sits at magic (8) + name len (4) + name (1).
+        bytes[13] = 9;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_tagged(&path).unwrap_err();
+        assert!(err.to_string().contains("mode code 9"), "{err}");
     }
 
     #[test]

@@ -1215,6 +1215,7 @@ impl Backend for NativeBackend {
     ) -> Result<f32> {
         let (loss, acc) = self.grad_step(rc, state, tokens, targets)?;
         // AdamW update, host side.
+        // det: cast-bounded (step count, far below i32::MAX)
         let t = state.step.scalar()? as i32 + 1;
         state.step = HostTensor::scalar_i32(t);
         let hyper = AdamW { lr: rc.lr as f32, ..AdamW::default() };

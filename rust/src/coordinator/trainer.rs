@@ -21,7 +21,7 @@
 //! the restored step count), so the resumed loss curve is bit-identical
 //! — `tests/integration_native_train.rs` asserts this.
 
-use std::time::Instant;
+use std::time::Instant; // det: wall-clock (throughput metrics only)
 
 use anyhow::{bail, Result};
 
@@ -165,7 +165,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
         let mut losses = Vec::with_capacity(stop_at.saturating_sub(start));
         let mut evals = Vec::new();
         let mut refreshes = 0usize;
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // det: wall-clock (metrics)
         let mut step_i = start;
         while step_i < stop_at {
             if use_chunk && step_i + 8 <= stop_at {
@@ -301,7 +301,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
         let mut gen = QaTaskGen::new(vocab, 64, self.rc.seed);
         let mut losses = Vec::with_capacity(self.rc.steps);
         let mut refreshes = 0usize;
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // det: wall-clock (metrics)
         for step_i in 1..=self.rc.steps {
             let qb = gen.batch(batch, seq);
             let toks: Vec<i32> =

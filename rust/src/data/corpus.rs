@@ -35,7 +35,7 @@ impl SyntheticCorpus {
         }
         // Random successor sets; token ids permuted so ranks are scattered.
         let successors = (0..vocab)
-            .map(|_| (0..branch).map(|_| rng.below(vocab) as u32).collect())
+            .map(|_| (0..branch).map(|_| rng.below(vocab) as u32).collect()) // det: cast-bounded
             .collect();
         SyntheticCorpus { vocab, cum, successors, bigram_p, rng }
     }
@@ -49,7 +49,7 @@ impl SyntheticCorpus {
         let x = self.rng.f64() * total;
         // binary search the cumulative table
         match self.cum.binary_search_by(|c| c.total_cmp(&x)) {
-            Ok(i) | Err(i) => i.min(self.vocab - 1) as u32,
+            Ok(i) | Err(i) => i.min(self.vocab - 1) as u32, // det: cast-bounded (< vocab)
         }
     }
 
@@ -122,8 +122,8 @@ mod tests {
         // successor entropy must be far below ln(V).
         let mut c = SyntheticCorpus::new(256, 4, 1.0, 3);
         let seq = c.sequence(30_000);
-        let mut succ_sets: Vec<std::collections::HashSet<u32>> =
-            vec![std::collections::HashSet::new(); 256];
+        let mut succ_sets: Vec<std::collections::BTreeSet<u32>> =
+            vec![std::collections::BTreeSet::new(); 256];
         for w in seq.windows(2) {
             succ_sets[w[0] as usize].insert(w[1]);
         }

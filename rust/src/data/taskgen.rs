@@ -40,7 +40,7 @@ impl QaTaskGen {
     pub fn new(vocab: usize, n_subjects: usize, seed: u64) -> Self {
         assert!(vocab as u32 > SPECIALS + 4 + n_subjects as u32);
         let mut rng = Rng::new(seed);
-        let rule = (0..n_subjects).map(|_| rng.below(4) as u8).collect();
+        let rule = (0..n_subjects).map(|_| rng.below(4) as u8).collect(); // det: cast-bounded
         let answer_tokens = [3, 4, 5, 6]; // choice tokens A..D
         QaTaskGen { vocab, rule, answer_tokens, rng }
     }
@@ -65,6 +65,7 @@ impl QaTaskGen {
         // to key on the subject token).
         let filler = seq_len.saturating_sub(8).min(seq_len - 8);
         for _ in 0..filler {
+            // det: cast-bounded (below() result < vocab)
             let t = SPECIALS + 4 + self.rng.below(self.vocab - (SPECIALS + 4) as usize) as u32;
             toks.push(t);
         }
@@ -151,7 +152,7 @@ mod tests {
         let mut g = QaTaskGen::new(4096, 4, 2);
         let b1 = g.batch(64, 32);
         // group answers by subject token (first token)
-        let mut seen = std::collections::HashMap::new();
+        let mut seen = std::collections::BTreeMap::new();
         for i in 0..64 {
             let subj = b1.tokens[i][0];
             let e = seen.entry(subj).or_insert(b1.answer_tok[i]);

@@ -18,7 +18,7 @@
 //! below).
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::Instant; // det: wall-clock (latency metrics only)
 
 use anyhow::{bail, Result};
 
@@ -132,7 +132,7 @@ pub struct ServeDriver<'m> {
     /// Cross-step decode scratch (GEMM workspace + routing buffers),
     /// reused for the driver's whole lifetime.
     scratch: StepScratch,
-    epoch: Option<Instant>,
+    epoch: Option<Instant>, // det: wall-clock (latency metrics only)
     decode_steps: usize,
     generated_tokens: usize,
     peak_in_flight: usize,
@@ -191,7 +191,7 @@ impl<'m> ServeDriver<'m> {
     /// One scheduler step: admit → batched decode → sample → retire.
     /// Returns `false` once the queue and all slots are drained.
     pub fn step(&mut self) -> Result<bool> {
-        let epoch = *self.epoch.get_or_insert_with(Instant::now);
+        let epoch = *self.epoch.get_or_insert_with(Instant::now); // det: wall-clock (metrics)
         // Admit in submission order while capacity allows.  Prefill runs
         // here; the first token is sampled straight from its logits.
         while self.states.len() < self.cfg.max_batch {
@@ -209,8 +209,8 @@ impl<'m> ServeDriver<'m> {
                 max_new: req.max_new_tokens,
                 logits,
             };
-            let first = self.cfg.sampler.sample(&slot.logits, &mut slot.rng) as i32;
-            slot.out.push(first);
+            let first = self.cfg.sampler.sample(&slot.logits, &mut slot.rng);
+            slot.out.push(i32::try_from(first).expect("vocab fits i32"));
             self.generated_tokens += 1;
             if slot.out.len() >= slot.max_new {
                 self.finished.push(Completion {
@@ -240,8 +240,8 @@ impl<'m> ServeDriver<'m> {
         for (si, m) in self.meta.iter_mut().enumerate() {
             m.logits.clear();
             m.logits.extend_from_slice(logits.row(si));
-            let t = self.cfg.sampler.sample(&m.logits, &mut m.rng) as i32;
-            m.out.push(t);
+            let t = self.cfg.sampler.sample(&m.logits, &mut m.rng);
+            m.out.push(i32::try_from(t).expect("vocab fits i32"));
             self.generated_tokens += 1;
             if m.out.len() >= m.max_new {
                 done.push(si);
@@ -269,7 +269,7 @@ impl<'m> ServeDriver<'m> {
     /// (its first `step`), so the numbers stay consistent when manual
     /// `step()` calls preceded this.
     pub fn run_to_completion(&mut self) -> Result<ServeReport> {
-        let epoch = *self.epoch.get_or_insert_with(Instant::now);
+        let epoch = *self.epoch.get_or_insert_with(Instant::now); // det: wall-clock (metrics)
         while self.step()? {}
         let wall = epoch.elapsed().as_secs_f64();
         let mut completions = self.finished.clone();

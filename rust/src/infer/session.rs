@@ -35,7 +35,7 @@ use anyhow::{bail, Context, Result};
 use rayon::prelude::*;
 
 use crate::config::{Mode, RunConfig};
-use crate::coordinator::checkpoint::{self, CkptMeta};
+use crate::coordinator::checkpoint;
 use crate::coordinator::native::{ItemTrace, Layout, NativeBackend, Weights};
 use crate::coordinator::TrainState;
 use crate::infer::cache::{DecodeCache, LayerCache};
@@ -83,14 +83,8 @@ impl InferModel {
             meta.verify(&rc.model, rc.mode)?;
         }
         let model = Self::new(rc, state)?;
-        if let Some(CkptMeta { n_layers, .. }) = meta {
-            if n_layers != model.layout.layers.len() {
-                bail!(
-                    "checkpoint says {n_layers} layers, preset '{}' has {}",
-                    rc.model,
-                    model.layout.layers.len()
-                );
-            }
+        if let Some(meta) = &meta {
+            meta.verify_layers(&model.model, model.mode, model.layout.layers.len())?;
         }
         Ok(model)
     }
@@ -398,7 +392,8 @@ impl<'m> Session<'m> {
     ) -> Result<Vec<i32>> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
-            let t = sampler.sample(&self.last_logits, rng) as i32;
+            let sampled = sampler.sample(&self.last_logits, rng);
+            let t = i32::try_from(sampled).expect("vocab fits i32");
             out.push(t);
             self.decode(t)?;
         }
@@ -409,6 +404,7 @@ impl<'m> Session<'m> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::checkpoint::CkptMeta;
     use crate::coordinator::Backend;
     use crate::infer::Sampler;
     use crate::util::rng::Rng;
@@ -527,5 +523,26 @@ mod tests {
         assert!(err.to_string().contains("spt"), "{err}");
         let wrong_model = rc("spt-nano-l2", Mode::Spt);
         assert!(InferModel::from_checkpoint(&wrong_model, &path).is_err());
+    }
+
+    #[test]
+    fn checkpoint_layer_count_is_verified() {
+        // Same model/mode but a drifted depth tag: materialization can
+        // succeed (the leaves are the preset's), so the post-build
+        // verify_layers check is what must catch it.
+        let cfg = rc("spt-nano", Mode::Spt);
+        let backend = NativeBackend::new();
+        let state = backend.init_state(&cfg).unwrap();
+        let dir = std::env::temp_dir().join("spt_infer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("depth.ckpt");
+        checkpoint::save_tagged(
+            &state,
+            &CkptMeta { model: "spt-nano".into(), mode: Mode::Spt, n_layers: 2 },
+            &path,
+        )
+        .unwrap();
+        let err = InferModel::from_checkpoint(&cfg, &path).unwrap_err();
+        assert!(err.to_string().contains("2 layers"), "{err}");
     }
 }

@@ -13,7 +13,7 @@
 //!   only tokens/targets are uploaded per step and only the loss scalar is
 //!   fetched.  This is the fast path the trainer uses.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -36,8 +36,8 @@ pub struct ExecStats {
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    stats: Mutex<HashMap<String, ExecStats>>,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<BTreeMap<String, ExecStats>>,
 }
 
 impl Engine {
@@ -48,8 +48,8 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            cache: Mutex::new(HashMap::new()),
-            stats: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(BTreeMap::new()),
         })
     }
 

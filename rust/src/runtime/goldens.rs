@@ -43,7 +43,7 @@ fn tensor_from_json(spec_j: &Json, data_j: &Json) -> Result<HostTensor> {
         ),
         DType::I32 | DType::U32 | DType::Bool => HostTensor::i32(
             shape,
-            flat.iter().map(|x| x.as_i64().unwrap_or(0) as i32).collect(),
+            flat.iter().map(|x| x.as_i64().unwrap_or(0) as i32).collect(), // det: cast-bounded
         ),
     })
 }

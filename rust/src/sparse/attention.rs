@@ -129,7 +129,6 @@ pub fn sparse_attention_masked(
 ///
 /// `qs` (length `q.len()`) and `vals` (length `sel.len()`) are caller
 /// scratch; `out` (length `v.cols`) is fully overwritten.
-#[allow(clippy::too_many_arguments)]
 pub fn sparse_attend_row(
     q: &[f32],
     k: &Matrix,

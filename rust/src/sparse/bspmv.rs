@@ -27,6 +27,37 @@ pub struct Routing {
     pub g_active: usize,
 }
 
+impl Routing {
+    /// Debug-build contract check: mask/gate rows are `G` wide, every
+    /// token selects exactly `G'` blocks, gates are non-negative, live
+    /// only on selected blocks, and sum to `G'` (softmax × G').  Called
+    /// after routing and at FFN kernel entry; compiles to nothing in
+    /// release builds.
+    #[inline]
+    pub fn debug_validate(&self) {
+        if cfg!(debug_assertions) {
+            debug_assert_eq!(self.mask.len(), self.gate.len(), "mask/gate row count");
+            debug_assert!(self.g_active >= 1 && self.g_active <= self.g, "G' in 1..=G");
+            for (t, (mrow, grow)) in self.mask.iter().zip(&self.gate).enumerate() {
+                debug_assert_eq!(mrow.len(), self.g, "token {t}: mask width");
+                debug_assert_eq!(grow.len(), self.g, "token {t}: gate width");
+                let active = mrow.iter().filter(|&&b| b).count();
+                debug_assert_eq!(active, self.g_active, "token {t}: selection count");
+                let mut sum = 0.0f32;
+                for (j, (&m, &gv)) in mrow.iter().zip(grow).enumerate() {
+                    debug_assert!(m || gv == 0.0, "token {t}: gate {j} outside mask");
+                    debug_assert!(gv >= 0.0, "token {t}: negative gate {j}");
+                    sum += gv;
+                }
+                debug_assert!(
+                    (sum - self.g_active as f32).abs() < 1e-3 * self.g_active as f32,
+                    "token {t}: gate sum {sum}"
+                );
+            }
+        }
+    }
+}
+
 /// Reusable per-task buffers for [`block_partial`] / [`block_backward`]:
 /// the token gathers, the hidden activations, and the GEMM workspace.
 /// Contents are meaningless between calls — a fresh and a reused scratch
@@ -111,6 +142,7 @@ pub fn route_into(scores: &Matrix, g_active: usize, out: &mut Routing) {
             out.gate[t][j] = (row[j] - mx).exp() / denom.max(1e-30) * g_active as f32;
         }
     }
+    out.debug_validate();
 }
 
 /// One block's contribution (paper Alg. 4 lines 2-5): the activated
@@ -291,6 +323,7 @@ pub fn routed_ffn_backward(
     routing: &Routing,
     dy: &Matrix,
 ) -> (Matrix, Matrix, Matrix) {
+    routing.debug_validate();
     let nt = x.rows;
     let d = x.cols;
     assert_eq!(w_i.cols % routing.g, 0);
@@ -317,7 +350,6 @@ pub fn routed_ffn_backward(
 /// buffers (ascending-block call order keeps the token scatter-add
 /// deterministic; the W_I/W_O slices are disjoint per block).  Shared
 /// with the parallel reduce in `sparse::mha`.
-#[allow(clippy::too_many_arguments)]
 pub(crate) fn scatter_block_grads(
     dx: &mut Matrix,
     dwi: &mut Matrix,
@@ -349,6 +381,7 @@ pub(crate) fn scatter_block_grads(
 /// row blocks.  For each block g: gather tokens with `mask[t][g]`, compute
 /// `relu(X_g W_I[g]) * gate` then `@ W_O[g]`, scatter-add into Y.
 pub fn routed_ffn(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing) -> Matrix {
+    routing.debug_validate();
     let nt = x.rows;
     let d = x.cols;
     assert_eq!(w_i.cols % routing.g, 0);
@@ -593,6 +626,15 @@ mod tests {
                 assert!(dwo.row(r).iter().all(|&v| v == 0.0));
             }
         }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "gate 3 outside mask")]
+    fn debug_validate_catches_gate_outside_mask() {
+        let mut r = route(&Matrix::zeros(2, 4), 2);
+        r.gate[0][3] = 0.5;
+        r.debug_validate();
     }
 
     #[test]

@@ -60,6 +60,22 @@ impl Codes {
     pub fn bytes(&self) -> usize {
         self.data.len()
     }
+
+    /// Debug-build contract check: the buffer is exactly `n × m` and
+    /// every code id addresses one of the `e` codewords.  Called after
+    /// quantization fills a code matrix; compiles to nothing in release
+    /// builds.
+    #[inline]
+    pub fn debug_validate(&self, e: usize) {
+        if cfg!(debug_assertions) {
+            debug_assert_eq!(self.data.len(), self.n * self.m, "Codes buffer shape");
+            for (i, row) in self.rows().enumerate() {
+                for &c in row {
+                    debug_assert!((c as usize) < e, "Codes row {i}: code {c} >= E={e}");
+                }
+            }
+        }
+    }
 }
 
 /// Top-L key selections for `n` queries, row-major: exactly `l` unique
@@ -114,6 +130,23 @@ impl TopL {
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
     }
+
+    /// Debug-build contract check: the buffer is exactly `n × l` and
+    /// every row holds `l` unique key ids below `n_keys`.  Called after
+    /// top-L selection fills a matrix; compiles to nothing in release
+    /// builds.
+    #[inline]
+    pub fn debug_validate(&self, n_keys: usize) {
+        if cfg!(debug_assertions) {
+            debug_assert_eq!(self.data.len(), self.n * self.l, "TopL buffer shape");
+            for (i, row) in self.rows().enumerate() {
+                for (p, &j) in row.iter().enumerate() {
+                    debug_assert!((j as usize) < n_keys, "TopL row {i}: key {j} >= {n_keys}");
+                    debug_assert!(!row[..p].contains(&j), "TopL row {i}: duplicate key {j}");
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -152,5 +185,27 @@ mod tests {
     #[should_panic(expected = "ragged")]
     fn topl_rejects_ragged_rows() {
         TopL::from_rows(&[vec![0u32], vec![1, 2]]);
+    }
+
+    #[test]
+    fn debug_validate_accepts_well_formed() {
+        let c = Codes::from_rows(&[vec![0u8, 3], vec![1, 2]]);
+        c.debug_validate(4);
+        let t = TopL::from_rows(&[vec![3u32, 0], vec![1, 2]]);
+        t.debug_validate(4);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "code 3 >= E=3")]
+    fn debug_validate_catches_out_of_range_code() {
+        Codes::from_rows(&[vec![0u8, 3]]).debug_validate(3);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "duplicate key")]
+    fn debug_validate_catches_duplicate_selection() {
+        TopL::from_rows(&[vec![2u32, 2]]).debug_validate(4);
     }
 }

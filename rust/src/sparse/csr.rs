@@ -28,14 +28,18 @@ impl Csr {
     pub fn from_topl(sel: &TopL, cols: usize) -> Self {
         let rows = sel.n;
         let l = sel.l;
-        let indptr = (0..=rows).map(|r| (r * l) as u32).collect();
-        Csr {
+        let indptr = (0..=rows)
+            .map(|r| u32::try_from(r * l).expect("nnz fits u32"))
+            .collect();
+        let csr = Csr {
             rows,
             cols,
             indptr,
             indices: sel.data.clone(),
             values: vec![0.0; rows * l],
-        }
+        };
+        csr.debug_validate();
+        csr
     }
 
     /// Build from per-row index lists (general, possibly ragged — the
@@ -47,10 +51,12 @@ impl Csr {
         indptr.push(0u32);
         for row in indices {
             flat.extend_from_slice(row);
-            indptr.push(flat.len() as u32);
+            indptr.push(u32::try_from(flat.len()).expect("nnz fits u32"));
         }
         let nnz = flat.len();
-        Csr { rows, cols, indptr, indices: flat, values: vec![0.0; nnz] }
+        let csr = Csr { rows, cols, indptr, indices: flat, values: vec![0.0; nnz] };
+        csr.debug_validate();
+        csr
     }
 
     pub fn nnz(&self) -> usize {
@@ -83,8 +89,28 @@ impl Csr {
         self.indptr[r] as usize..self.indptr[r + 1] as usize
     }
 
+    /// Debug-build contract check: [`Self::validate`] plus per-row
+    /// uniqueness of column ids — the invariants every CSR kernel
+    /// assumes.  Called at construction and at kernel entry; compiles
+    /// to nothing in release builds.  Rows are ordered by selection
+    /// rank (score-descending, then index), not by column id, so column
+    /// sortedness is deliberately not part of the contract.
+    #[inline]
+    pub fn debug_validate(&self) {
+        if cfg!(debug_assertions) {
+            self.validate().expect("Csr contract");
+            for r in 0..self.rows {
+                let row = &self.indices[self.row_range(r)];
+                for (p, &c) in row.iter().enumerate() {
+                    debug_assert!(!row[..p].contains(&c), "Csr row {r}: duplicate column {c}");
+                }
+            }
+        }
+    }
+
     /// SDDMM: `values[i,l] = q_i . k_{indices[i,l]}` (paper §5.1).
     pub fn sddmm(&mut self, q: &Matrix, k: &Matrix) {
+        self.debug_validate();
         assert_eq!(q.rows, self.rows);
         assert_eq!(k.rows, self.cols);
         assert_eq!(q.cols, k.cols);
@@ -120,6 +146,7 @@ impl Csr {
 
     /// SpMM: `Y = self @ V` (paper §5.1).
     pub fn spmm(&self, v: &Matrix) -> Matrix {
+        self.debug_validate();
         assert_eq!(v.rows, self.cols);
         let mut out = Matrix::zeros(self.rows, v.cols);
         for r in 0..self.rows {
@@ -251,6 +278,15 @@ mod tests {
         let mut b = Csr::from_rows(&idx, 2);
         b.indptr[1] = 7;
         assert!(b.validate().is_err());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "duplicate column")]
+    fn debug_validate_catches_duplicate_columns() {
+        let mut a = Csr::from_rows(&[vec![0u32, 1]], 2);
+        a.indices[1] = 0;
+        a.debug_validate();
     }
 
     #[test]

@@ -83,11 +83,24 @@ impl PackedB {
     pub fn pack(b: &Matrix) -> Self {
         let mut data = Vec::new();
         pack_b(b.rows, b.cols, &b.data, b.cols, 0, &mut data);
-        PackedB { k: b.rows, n: b.cols, data }
+        let pb = PackedB { k: b.rows, n: b.cols, data };
+        pb.debug_validate();
+        pb
     }
 
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
+    }
+
+    /// Debug-build contract check: the panel buffer holds exactly the
+    /// `k × n` floats [`pack_b`] lays out (full column panels of [`NR`]
+    /// floats, each spanning all `k` rows).  Called at construction and
+    /// at kernel entry; compiles to nothing in release builds.
+    #[inline]
+    pub fn debug_validate(&self) {
+        if cfg!(debug_assertions) {
+            debug_assert_eq!(self.data.len(), self.k * self.n, "PackedB panel geometry");
+        }
     }
 }
 
@@ -96,6 +109,7 @@ impl PackedB {
 /// same row-block kernel runs over the same panel layout, with the same
 /// parallelization threshold.
 pub fn gemm_packed_into(m: usize, a: &[f32], pb: &PackedB, out: &mut [f32]) {
+    pb.debug_validate();
     let (k, n) = (pb.k, pb.n);
     assert!(a.len() >= m * k, "gemm_packed: A too small");
     assert_eq!(out.len(), m * n, "gemm_packed: C shape mismatch");
@@ -383,7 +397,6 @@ fn gemm_rows(
 /// `b_stride`.  `out` is fully overwritten.  Row-parallel above
 /// [`PAR_MATMUL_FLOPS`]; bit-identical at any thread count (see the
 /// module docs).  `pack` is the reusable packed-B scratch.
-#[allow(clippy::too_many_arguments)]
 pub fn gemm_into(
     m: usize,
     k: usize,
@@ -423,7 +436,6 @@ pub fn gemm_into(
 /// The per-row-block kernel of [`gemm_nt_into`]: each output element is
 /// one ascending-order dot product, with B processed in [`NJ`]-row
 /// blocks so a block is reused across the chunk's rows.
-#[allow(clippy::too_many_arguments)]
 fn gemm_nt_rows(
     row0: usize,
     rows: usize,
@@ -459,7 +471,6 @@ fn gemm_nt_rows(
 /// block of a larger row-major matrix, multiplied without materializing
 /// the transpose.  `out` is fully overwritten; row-parallel above
 /// [`PAR_MATMUL_FLOPS`] and bit-identical at any thread count.
-#[allow(clippy::too_many_arguments)]
 pub fn gemm_nt_into(
     m: usize,
     kdim: usize,

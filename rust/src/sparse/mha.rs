@@ -281,7 +281,6 @@ pub struct DecodeScratch {
 /// capacity clamp `min(l, pos+1)`, which never truncates a bucket the
 /// full capacity wouldn't — preserves the kept set, its order, and every
 /// output bit.  `out` (length `v.cols`) is fully overwritten.
-#[allow(clippy::too_many_arguments)]
 pub fn decode_attend_row(
     cb: &Codebooks,
     q_row: &[f32],
@@ -351,6 +350,7 @@ pub fn routed_ffn_auto(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing
 /// order as the sequential [`bspmv::routed_ffn`], so the result is
 /// bit-identical and deterministic regardless of thread schedule.
 pub fn routed_ffn_par(x: &Matrix, w_i: &Matrix, w_o: &Matrix, routing: &Routing) -> Matrix {
+    routing.debug_validate();
     let nt = x.rows;
     let d = x.cols;
     assert_eq!(w_i.cols % routing.g, 0);
@@ -388,6 +388,7 @@ pub fn routed_ffn_backward_par(
     routing: &Routing,
     dy: &Matrix,
 ) -> (Matrix, Matrix, Matrix) {
+    routing.debug_validate();
     let nt = x.rows;
     let d = x.cols;
     assert_eq!(w_i.cols % routing.g, 0);

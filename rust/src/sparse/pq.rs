@@ -42,6 +42,7 @@ pub fn quantize(x: &[f32], cb: &Codebooks) -> Codes {
     for (i, code_row) in codes.data.chunks_exact_mut(cb.m).enumerate() {
         quantize_row(&x[i * d..(i + 1) * d], cb, code_row);
     }
+    codes.debug_validate(cb.e);
     codes
 }
 
@@ -85,6 +86,7 @@ pub fn quantize_append(x: &[f32], cb: &Codebooks, codes: &mut Codes) {
     for i in 0..n_new {
         quantize_row(&x[i * d..(i + 1) * d], cb, codes.row_mut(start + i));
     }
+    codes.debug_validate(cb.e);
 }
 
 /// Mean squared quantization error (per dimension) — the DKM signal.
@@ -146,7 +148,7 @@ pub fn codebook_update(x: &[f32], cb: &mut Codebooks, lr: f32) {
 /// Integer similarity (paper Eq. 6): number of matching codewords.
 #[inline]
 pub fn match_score(a: &[u8], b: &[u8]) -> u32 {
-    a.iter().zip(b).map(|(x, y)| (x == y) as u32).sum()
+    a.iter().zip(b).map(|(x, y)| u32::from(x == y)).sum()
 }
 
 #[cfg(test)]

@@ -59,7 +59,7 @@ pub fn select_into(
         let c = scratch.counts[s] as usize;
         if c < l {
             scratch.slots[s * l + c] = j as u32;
-            scratch.counts[s] = (c + 1) as u32;
+            scratch.counts[s] += 1;
         }
         // Overflow: drop (paper Alg. 3 line 7 instead overwrites the last
         // slot to bound shared memory; keeping the *first* L of a bucket is
@@ -111,6 +111,7 @@ pub fn select(codes_q: &Codes, codes_k: &Codes, l: usize, causal: bool) -> TopL 
     for (i, row) in out.data.chunks_exact_mut(l).enumerate() {
         select_into(codes_q.row(i), codes_k, l, causal.then_some(i), row, &mut scratch);
     }
+    out.debug_validate(codes_k.n);
     out
 }
 
@@ -150,7 +151,7 @@ mod tests {
     ) -> Codes {
         let mut c = Codes::zeros(n, m);
         for x in c.data.iter_mut() {
-            *x = g.usize_in(0, e - 1) as u8;
+            *x = u8::try_from(g.usize_in(0, e - 1)).unwrap();
         }
         c
     }

@@ -1,0 +1,178 @@
+//! Pure-kernel tests sized for the Miri CI job
+//! (`cargo +nightly miri test --test miri_kernels`).
+//!
+//! Every test here is single-threaded by construction: all shapes sit
+//! below the kernels' parallelism thresholds (`PAR_MATMUL_FLOPS` and
+//! friends), so rayon never spawns, and only the sequential
+//! cross-validation paths run.  No test touches files, clocks, the
+//! environment, or randomness beyond the repo's own seeded [`Rng`] —
+//! Miri runs with isolation on.  The same file runs under plain
+//! `cargo test` as an ordinary integration suite.
+
+use spt::sparse::bspmv::{self, Routing};
+use spt::sparse::pq::{self, Codebooks};
+use spt::sparse::topl;
+use spt::sparse::{Codes, Csr, Matrix, PackedB};
+use spt::util::rng::Rng;
+
+/// Naive triple-loop `A @ B` with ascending-k accumulation — the order
+/// the blocked microkernel is documented to reproduce bit-for-bit.
+fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0.0f32;
+            for k in 0..a.cols {
+                let av = a.at(i, k);
+                if av != 0.0 {
+                    acc += av * b.at(k, j);
+                }
+            }
+            *out.at_mut(i, j) = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn blocked_gemm_matches_naive_bitwise() {
+    let mut rng = Rng::new(11);
+    // 13*17*11 multiply-adds: far below the parallel threshold, and odd
+    // dims exercise every partial-tile edge of the blocked kernel.
+    let a = Matrix::randn(13, 17, 1.0, &mut rng);
+    let b = Matrix::randn(17, 11, 1.0, &mut rng);
+    let got = a.matmul(&b);
+    let want = naive_matmul(&a, &b);
+    assert_eq!(got.data, want.data, "blocked GEMM diverged from naive");
+}
+
+#[test]
+fn packed_gemm_matches_per_call_packing_bitwise() {
+    let mut rng = Rng::new(12);
+    let a = Matrix::randn(9, 24, 1.0, &mut rng);
+    let b = Matrix::randn(24, 14, 1.0, &mut rng);
+    let pb = PackedB::pack(&b);
+    assert_eq!(a.matmul_packed(&pb).data, a.matmul(&b).data);
+}
+
+#[test]
+fn bucket_topl_matches_sort_reference() {
+    let mut rng = Rng::new(13);
+    let (n, m, e, l) = (24usize, 4usize, 8usize, 6usize);
+    let mut codes_q = Codes::zeros(n, m);
+    let mut codes_k = Codes::zeros(n, m);
+    for c in codes_q.data.iter_mut().chain(codes_k.data.iter_mut()) {
+        *c = u8::try_from(rng.below(e)).unwrap();
+    }
+    for causal in [false, true] {
+        let sel = topl::select(&codes_q, &codes_k, l, causal);
+        for i in 0..n {
+            let want =
+                topl::select_by_sort(codes_q.row(i), &codes_k, l, causal.then_some(i));
+            // Causal rows shorter than L are padded with arbitrary unseen
+            // ids; compare only the genuinely ranked prefix.
+            let ranked = if causal { l.min(i + 1) } else { l };
+            assert_eq!(
+                &sel.row(i)[..ranked],
+                &want[..ranked],
+                "row {i} causal={causal}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantize_append_matches_batch_quantize() {
+    let mut rng = Rng::new(14);
+    let cb = Codebooks::random(4, 8, 4, &mut rng);
+    let x0 = rng.normal_vec(10 * cb.d());
+    let x1 = rng.normal_vec(6 * cb.d());
+    let mut grown = pq::quantize(&x0, &cb);
+    pq::quantize_append(&x1, &cb, &mut grown);
+    let mut all = x0;
+    all.extend_from_slice(&x1);
+    assert_eq!(grown, pq::quantize(&all, &cb));
+}
+
+#[test]
+fn csr_attention_pipeline_matches_gather_reference() {
+    let mut rng = Rng::new(15);
+    let (n, dh, l) = (12usize, 8usize, 4usize);
+    let q = Matrix::randn(n, dh, 1.0, &mut rng);
+    let k = Matrix::randn(n, dh, 1.0, &mut rng);
+    let v = Matrix::randn(n, dh, 1.0, &mut rng);
+    let sel_rows: Vec<Vec<u32>> = (0..n)
+        .map(|i| {
+            let mut row = Vec::with_capacity(l);
+            let mut j = u32::try_from(i % 3).unwrap();
+            while row.len() < l {
+                if !row.contains(&j) {
+                    row.push(j);
+                }
+                j = (j + 3) % u32::try_from(n).unwrap();
+            }
+            row
+        })
+        .collect();
+    let mut csr = Csr::from_rows(&sel_rows, n);
+    csr.sddmm(&q, &k);
+    csr.softmax_rows();
+    let got = csr.spmm(&v);
+    // Reference: the same gather/softmax/weighted-sum arithmetic, row by
+    // row, in the kernels' own operation order — so equality is bitwise.
+    for (i, sel) in sel_rows.iter().enumerate() {
+        let mut logits: Vec<f32> = sel
+            .iter()
+            .map(|&j| {
+                q.row(i)
+                    .iter()
+                    .zip(k.row(j as usize))
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect();
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in logits.iter_mut() {
+            *x = (*x - mx).exp();
+            sum += *x;
+        }
+        for x in logits.iter_mut() {
+            *x /= sum.max(1e-30);
+        }
+        let mut want = vec![0.0f32; dh];
+        for (&j, &w) in sel.iter().zip(&logits) {
+            if w == 0.0 {
+                continue;
+            }
+            for (o, &x) in want.iter_mut().zip(v.row(j as usize)) {
+                *o += w * x;
+            }
+        }
+        assert_eq!(got.row(i), &want[..], "attention row {i}");
+    }
+}
+
+#[test]
+fn routed_ffn_matches_dense_gated_reference() {
+    let mut rng = Rng::new(16);
+    let (nt, d, g, dg, g_active) = (10usize, 6usize, 4usize, 5usize, 2usize);
+    let x = Matrix::randn(nt, d, 1.0, &mut rng);
+    let wi = Matrix::randn(d, g * dg, 0.3, &mut rng);
+    let wo = Matrix::randn(g * dg, d, 0.3, &mut rng);
+    let scores = Matrix::randn(nt, g, 1.0, &mut rng);
+    let mut routing = Routing { mask: Vec::new(), gate: Vec::new(), g, g_active };
+    bspmv::route_into(&scores, g_active, &mut routing);
+    for (t, mrow) in routing.mask.iter().enumerate() {
+        assert_eq!(
+            mrow.iter().filter(|&&b| b).count(),
+            g_active,
+            "token {t} selection count"
+        );
+    }
+    let y1 = bspmv::routed_ffn(&x, &wi, &wo, &routing);
+    let y2 = bspmv::dense_gated_ffn(&x, &wi, &wo, &routing);
+    let diff = y1.max_abs_diff(&y2);
+    assert!(diff < 1e-4, "BSpMV vs dense gated FFN diff {diff}");
+}

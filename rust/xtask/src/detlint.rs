@@ -1,0 +1,425 @@
+//! The determinism lint pass (`cargo xtask detlint`).
+//!
+//! The repo's signature property is that gradients, params, and decode
+//! streams are bit-identical at any rayon pool size.  That contract is
+//! easy to break silently — one unordered map iteration or reordered
+//! float reduction — so this pass turns it into machine-checked rules
+//! over the spt crate's sources:
+//!
+//! * `hash-order` — `HashMap`/`HashSet` anywhere in `src/`: their
+//!   iteration order is hash-seeded, so any use risks order reaching an
+//!   output.  Use `BTreeMap`/`BTreeSet` or collect-and-sort; justify a
+//!   genuinely order-free use with `// det: hash-ok`.
+//! * `par-merge-order` — `.reduce(`/`.fold(` chained onto a parallel
+//!   iterator: the merge tree is the scheduler's, so the result depends
+//!   on thread count unless the operation is exactly associative.
+//!   Justify with `// det: merge-order`.  Sequential folds, including
+//!   ones inside the body of a parallel closure, are not flagged: only
+//!   the statement that starts the parallel chain is scanned.
+//! * `wall-clock` — `Instant`/`SystemTime`/`thread_rng` in kernel code
+//!   (`sparse/`, `infer/`, `coordinator/`): time and ambient randomness
+//!   are nondeterministic inputs.  Timing that only reaches reports is
+//!   fine — justify with `// det: wall-clock`.
+//! * `trunc-cast` — `as u8/u16/u32/i8/i16/i32` applied to a computed
+//!   expression (a `)`, `]`, or `?` immediately before the cast):
+//!   silent truncation on index arithmetic corrupts sparse structures
+//!   three kernels away from the cause.  Prefer `try_from`; justify a
+//!   provably bounded cast with `// det: cast-bounded`.  Casts of plain
+//!   identifiers and all widening/float casts are exempt.
+//!
+//! A marker counts on the offending line or on either of the two lines
+//! above it.  The rules are lexical by design — no syn, no build, runs
+//! in milliseconds — and the fixture tests below pin each rule's
+//! behavior, including marker suppression and string/comment stripping.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories whose sources count as kernel code for the wall-clock
+/// rule: the hot paths where ambient time or randomness could reach
+/// results.
+const KERNEL_DIRS: [&str; 3] = ["sparse", "infer", "coordinator"];
+
+/// Tokens that start a parallel iterator chain.
+const PAR_TRIGGERS: [&str; 5] = [
+    "par_iter(",
+    "into_par_iter(",
+    "par_chunks(",
+    "par_chunks_mut(",
+    "par_bridge(",
+];
+
+/// Order-sensitive merge adaptors (checked only inside a parallel chain).
+const MERGE_OPS: [&str; 2] = [".reduce(", ".fold("];
+
+/// Wall-clock / ambient-randomness tokens (kernel code only).
+const CLOCK_TOKENS: [&str; 4] = ["Instant", "SystemTime", "thread_rng", "rand::random"];
+
+/// Hash-seeded containers (flagged anywhere).
+const HASH_TOKENS: [&str; 2] = ["HashMap", "HashSet"];
+
+/// Truncating integer cast targets.  `usize`/`u64`/`i64` and the float
+/// types are exempt: on 64-bit targets they cannot truncate the index
+/// arithmetic this rule is after.
+const CAST_TARGETS: [&str; 6] = [" as u8", " as u16", " as u32", " as i8", " as i16", " as i32"];
+
+pub const MARKER_HASH: &str = "det: hash-ok";
+pub const MARKER_MERGE: &str = "det: merge-order";
+pub const MARKER_CLOCK: &str = "det: wall-clock";
+pub const MARKER_CAST: &str = "det: cast-bounded";
+
+/// How many lines above a violation its `// det:` marker may sit.
+const MARKER_WINDOW: usize = 2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    HashOrder,
+    ParMergeOrder,
+    WallClock,
+    TruncCast,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HashOrder => "hash-order",
+            Rule::ParMergeOrder => "par-merge-order",
+            Rule::WallClock => "wall-clock",
+            Rule::TruncCast => "trunc-cast",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    /// The offending line, trimmed, for the report.
+    pub excerpt: String,
+}
+
+/// Run the pass over `paths` (files or directories; empty means the spt
+/// crate's `src/`).  Prints violations and returns the exit code.
+pub fn run(paths: &[PathBuf]) -> ExitCode {
+    let roots: Vec<PathBuf> = if paths.is_empty() {
+        let xtask_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        vec![xtask_dir.parent().expect("xtask has a parent dir").join("src")]
+    } else {
+        paths.to_vec()
+    };
+    let mut files = Vec::new();
+    for root in &roots {
+        collect_rs_files(root, &mut files);
+    }
+    files.sort();
+    files.dedup();
+    let mut total = 0usize;
+    for file in &files {
+        let src = match std::fs::read_to_string(file) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("detlint: cannot read {}: {e}", file.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        for v in lint_source(&src, is_kernel_path(file)) {
+            println!("{}:{}: [{}] {}", file.display(), v.line, v.rule.name(), v.excerpt);
+            total += 1;
+        }
+    }
+    if total == 0 {
+        println!("detlint: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("detlint: {total} violation(s)");
+        ExitCode::FAILURE
+    }
+}
+
+/// Whether `path` falls under one of the kernel directories.
+fn is_kernel_path(path: &Path) -> bool {
+    path.components()
+        .any(|c| KERNEL_DIRS.iter().any(|d| c.as_os_str() == *d))
+}
+
+/// Recursively collect `.rs` files, visiting entries in sorted order so
+/// the report itself is deterministic.
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return;
+    }
+    let Ok(entries) = std::fs::read_dir(root) else {
+        return;
+    };
+    let mut children: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    children.sort();
+    for child in children {
+        collect_rs_files(&child, out);
+    }
+}
+
+/// Lint one source file.  `kernel` enables the wall-clock rule.
+pub fn lint_source(src: &str, kernel: bool) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    // True while inside the statement that started a parallel chain;
+    // cleared when that statement ends.
+    let mut par_chain = false;
+    for (ix, raw) in lines.iter().enumerate() {
+        let code = strip_strings_and_comments(raw);
+        if HASH_TOKENS.iter().any(|t| code.contains(t)) && !marked(&lines, ix, MARKER_HASH) {
+            out.push(violation(ix, raw, Rule::HashOrder));
+        }
+        if kernel
+            && CLOCK_TOKENS.iter().any(|t| code.contains(t))
+            && !marked(&lines, ix, MARKER_CLOCK)
+        {
+            out.push(violation(ix, raw, Rule::WallClock));
+        }
+        // par-merge-order: a reduce/fold anywhere between a parallel
+        // trigger and the end of that statement.  On the trigger line
+        // itself, only positions at or after the trigger count, so a
+        // sequential fold earlier on the line stays exempt.
+        let trigger_at = PAR_TRIGGERS.iter().filter_map(|t| code.find(t)).min();
+        let scan_from = if par_chain { Some(0) } else { trigger_at };
+        if let Some(from) = scan_from {
+            if MERGE_OPS.iter().any(|t| code[from..].contains(t))
+                && !marked(&lines, ix, MARKER_MERGE)
+            {
+                out.push(violation(ix, raw, Rule::ParMergeOrder));
+            }
+        }
+        if trigger_at.is_some() {
+            par_chain = true;
+        }
+        if par_chain && statement_ends(code.trim_end()) {
+            par_chain = false;
+        }
+        for t in CAST_TARGETS {
+            for (at, _) in code.match_indices(t) {
+                let next = code[at + t.len()..].chars().next();
+                if matches!(next, Some(c) if c.is_ascii_alphanumeric() || c == '_') {
+                    continue; // longer identifier, not a cast to this type
+                }
+                let prev = code[..at].trim_end().chars().last();
+                if matches!(prev, Some(')' | ']' | '?')) && !marked(&lines, ix, MARKER_CAST) {
+                    out.push(violation(ix, raw, Rule::TruncCast));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn violation(ix: usize, raw: &str, rule: Rule) -> Violation {
+    Violation { line: ix + 1, rule, excerpt: raw.trim().to_string() }
+}
+
+/// Whether `marker` appears on line `ix` or within the window above it.
+fn marked(lines: &[&str], ix: usize, marker: &str) -> bool {
+    let lo = ix.saturating_sub(MARKER_WINDOW);
+    lines[lo..=ix].iter().any(|l| l.contains(marker))
+}
+
+/// A parallel chain's statement is over at `;`, or at a closing brace
+/// ending a block-expression statement.
+fn statement_ends(code: &str) -> bool {
+    code.ends_with(';') || code.ends_with('}')
+}
+
+/// Strip string literals and the trailing `//` comment from one line so
+/// rule tokens inside strings or prose never fire.  Lexically
+/// approximate — multi-line and raw strings are not tracked — which is
+/// fine here: no rule token legitimately spans lines in this codebase.
+fn strip_strings_and_comments(line: &str) -> String {
+    let mut out = String::with_capacity(line.len());
+    let mut chars = line.chars().peekable();
+    let mut in_str = false;
+    while let Some(c) = chars.next() {
+        if in_str {
+            match c {
+                '\\' => {
+                    chars.next();
+                }
+                '"' => in_str = false,
+                _ => {}
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '/' if chars.peek() == Some(&'/') => break,
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(src: &str, kernel: bool) -> Vec<Rule> {
+        lint_source(src, kernel).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn hash_container_is_flagged_anywhere() {
+        let src = "use std::collections::HashMap;\nlet m = HashSet::new();\n";
+        assert_eq!(rules(src, false), vec![Rule::HashOrder, Rule::HashOrder]);
+    }
+
+    #[test]
+    fn hash_marker_suppresses() {
+        let src = "let m = HashMap::new(); // det: hash-ok (lookup only)\n";
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn hash_in_string_or_comment_is_ignored() {
+        let src = "// a HashMap would break this\nlet s = \"HashMap\";\n";
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn par_fold_same_line_is_flagged() {
+        let src = "let s = xs.par_iter().fold(|| 0.0f32, |a, &b| a + b);\n";
+        assert_eq!(rules(src, false), vec![Rule::ParMergeOrder]);
+    }
+
+    #[test]
+    fn par_reduce_across_chain_lines_is_flagged() {
+        let src = "let s = xs\n    .par_iter()\n    .map(|x| x * 2.0)\n    .reduce(|| 0.0, f32::max);\n";
+        assert_eq!(rules(src, false), vec![Rule::ParMergeOrder]);
+    }
+
+    #[test]
+    fn par_merge_marker_suppresses() {
+        let src =
+            "// det: merge-order (max is associative)\nlet s = xs.par_iter().reduce(|| 0.0, f32::max);\n";
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn sequential_fold_is_fine() {
+        let src = "let mx = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);\n";
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn fold_after_par_statement_ends_is_fine() {
+        // The chain's statement ended; a later sequential fold in the
+        // same function must not inherit the parallel context.
+        let src = "ys.par_iter().for_each(|y| sink(y));\nlet mx = vals.iter().fold(0.0f32, f32::max);\n";
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn sequential_fold_inside_par_closure_body_is_fine() {
+        // Mirrors the attention kernels: a par_chunks_mut loop whose
+        // per-chunk body runs an ordered sequential fold.
+        let src = "out.par_chunks_mut(n)\n    .enumerate()\n    .for_each(|(ci, chunk)| {\n        let row0 = ci * n;\n        let mx = chunk.iter().cloned().fold(f32::MIN, f32::max);\n        chunk[0] = mx + row0 as f32;\n    });\n";
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_flagged_in_kernel_code_only() {
+        let src = "let t0 = Instant::now();\n";
+        assert_eq!(rules(src, true), vec![Rule::WallClock]);
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_marker_suppresses() {
+        let src = "let t0 = Instant::now(); // det: wall-clock (report timing)\n";
+        assert!(rules(src, true).is_empty());
+    }
+
+    #[test]
+    fn thread_rng_is_flagged_in_kernel_code() {
+        let src = "let x = rand::thread_rng().gen::<f32>();\n";
+        assert_eq!(rules(src, true), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn computed_truncating_cast_is_flagged() {
+        for line in [
+            "let p = (r * l) as u32;",
+            "let n = flat.len() as u32;",
+            "let t = sampler.sample(&logits, rng) as i32;",
+            "let c = idx[i] as u16;",
+            "let s = total()? as i8;",
+        ] {
+            assert_eq!(rules(line, false), vec![Rule::TruncCast], "{line}");
+        }
+    }
+
+    #[test]
+    fn plain_variable_and_widening_casts_are_fine() {
+        for line in [
+            "let p = j as u32;",
+            "let w = x as f32;",
+            "let u = idx.len() as u64;",
+            "let z = n.min(m) as usize;",
+            "let q = (a + b) as usize;",
+            "let s = score(q, k) as i64;",
+        ] {
+            assert!(rules(line, false).is_empty(), "{line}");
+        }
+    }
+
+    #[test]
+    fn cast_marker_suppresses() {
+        let src = "// det: cast-bounded (e <= 256)\nlet c = pick(e) as u8;\n";
+        assert!(rules(src, false).is_empty());
+    }
+
+    #[test]
+    fn marker_window_is_two_lines() {
+        let src = "// det: cast-bounded\n//\n//\nlet c = pick(e) as u8;\n";
+        assert_eq!(rules(src, false), vec![Rule::TruncCast]);
+    }
+
+    #[test]
+    fn violation_reports_line_and_excerpt() {
+        let src = "let ok = 1;\nlet bad = items.len() as u32;\n";
+        let vs = lint_source(src, false);
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].line, 2);
+        assert_eq!(vs[0].excerpt, "let bad = items.len() as u32;");
+    }
+
+    #[test]
+    fn kernel_path_detection() {
+        assert!(is_kernel_path(Path::new("src/sparse/csr.rs")));
+        assert!(is_kernel_path(Path::new("/abs/src/infer/serve.rs")));
+        assert!(is_kernel_path(Path::new("src/coordinator/native.rs")));
+        assert!(!is_kernel_path(Path::new("src/runtime/engine.rs")));
+        assert!(!is_kernel_path(Path::new("src/data/corpus.rs")));
+    }
+
+    #[test]
+    fn repo_sources_are_clean() {
+        // The real tree must hold the contract the fixtures above pin
+        // down: run the production path over `../src`.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("workspace root")
+            .join("src");
+        let mut files = Vec::new();
+        collect_rs_files(&root, &mut files);
+        assert!(files.len() > 20, "expected the spt sources under {}", root.display());
+        let mut bad = Vec::new();
+        for f in files {
+            let src = std::fs::read_to_string(&f).expect("readable source");
+            for v in lint_source(&src, is_kernel_path(&f)) {
+                bad.push(format!("{}:{}: [{}] {}", f.display(), v.line, v.rule.name(), v.excerpt));
+            }
+        }
+        assert!(bad.is_empty(), "detlint violations:\n{}", bad.join("\n"));
+    }
+}

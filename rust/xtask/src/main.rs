@@ -1,0 +1,27 @@
+//! `cargo xtask` — workspace automation, wired up through the alias in
+//! `rust/.cargo/config.toml`.
+//!
+//! One task so far: `detlint`, the determinism lint pass described in
+//! `detlint.rs` and in README's "Determinism contract" section.  Run it
+//! as `cargo xtask detlint` (defaults to the spt crate's `src/`) or
+//! `cargo xtask detlint path/to/file.rs dir/` to lint specific paths.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+mod detlint;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let Some(cmd) = args.next() else {
+        eprintln!("usage: cargo xtask detlint [paths...]");
+        return ExitCode::FAILURE;
+    };
+    match cmd.as_str() {
+        "detlint" => detlint::run(&args.map(PathBuf::from).collect::<Vec<_>>()),
+        other => {
+            eprintln!("unknown xtask '{other}' (available: detlint)");
+            ExitCode::FAILURE
+        }
+    }
+}
