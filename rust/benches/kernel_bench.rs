@@ -1,0 +1,248 @@
+//! Kernel-level bench for the register-blocked microkernel: gemm /
+//! gemm_nt / CSR spmm / routed FFN at the `spt-mini-64` preset shapes
+//! (d_model=64, d_head=16, d_ffn=256, 8 FFN groups with G'=4,
+//! vocab=2048, seq=128, L=seq/4), emitting
+//! `bench_out/BENCH_kernels_native.json` — the perf trajectory's first
+//! kernel-level datapoints.
+//!
+//! Each GEMM shape is also timed against a scalar reference that
+//! reproduces the pre-register-blocking inner loop (one-row axpy with
+//! the `a == 0.0` branch; per-element dots for NT), so the JSON records
+//! `speedup_vs_scalar` per shape.  All kernel timings run on a dedicated
+//! 1-thread pool: the point is single-core kernel throughput, not rayon
+//! scaling (table3/table5 cover that).
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use spt::metrics::{bench, Table};
+use spt::sparse::{bspmv, matrix, Csr, Matrix, Workspace};
+use spt::util::fmt_duration;
+use spt::util::json::Json;
+use spt::util::rng::Rng;
+
+/// The pre-PR dense kernel's arithmetic: scalar one-row axpy over
+/// ascending k, zero-`a` terms skipped.
+fn scalar_gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// The pre-PR NT kernel's arithmetic: one scalar ascending dot per
+/// output element.
+fn scalar_gemm_nt_ref(m: usize, kd: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * kd..(i + 1) * kd];
+        for j in 0..n {
+            let brow = &b[j * kd..(j + 1) * kd];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+struct KernelRecord {
+    kernel: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    median_s: f64,
+    flops: f64,
+    speedup_vs_scalar: Option<f64>,
+}
+
+impl KernelRecord {
+    fn gflops(&self) -> f64 {
+        self.flops / self.median_s / 1e9
+    }
+}
+
+fn main() {
+    let (w, s) = (common::warmup().max(1), common::samples().max(3));
+    let mut rng = Rng::new(0x64);
+    // spt-mini-64 preset shapes.
+    let (seq, d, d_head, dff) = (128usize, 64usize, 16usize, 256usize);
+    let (vocab, g, ga) = (2048usize, 8usize, 4usize);
+    let l = seq / 4;
+    let pool = common::pool(1);
+    let mut records: Vec<KernelRecord> = Vec::new();
+
+    // Dense GEMM shapes: QKV/O projection, FFN up, plus the NT readout
+    // and FFN-dX shapes the training backward runs.
+    let gemm_shapes: [(&'static str, usize, usize, usize); 2] =
+        [("gemm_proj", seq, d, d), ("gemm_ffn", seq, d, dff)];
+    let mut ws = Workspace::default();
+    for (name, m, k, n) in gemm_shapes {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut out = vec![0.0f32; m * n];
+        let r = bench(name, w, s, || {
+            pool.install(|| {
+                matrix::gemm_into(m, k, n, &a.data, &b.data, n, 0, &mut out, &mut ws.packb);
+            });
+            std::hint::black_box(&out);
+        });
+        let rref = bench("scalar_ref", w, s, || {
+            scalar_gemm_ref(m, k, n, &a.data, &b.data, &mut out);
+            std::hint::black_box(&out);
+        });
+        records.push(KernelRecord {
+            kernel: name,
+            m,
+            k,
+            n,
+            median_s: r.median(),
+            flops: 2.0 * (m * k * n) as f64,
+            speedup_vs_scalar: Some(rref.median() / r.median()),
+        });
+    }
+
+    // NT shapes: per-head attention logits (Q Kᵀ) and the tied readout
+    // (xf tokᵀ — the widest product in the step).
+    let nt_shapes: [(&'static str, usize, usize, usize); 2] =
+        [("gemm_nt_logits", seq, d_head, seq), ("gemm_nt_readout", seq, d, vocab)];
+    for (name, m, kd, n) in nt_shapes {
+        let a = Matrix::randn(m, kd, 1.0, &mut rng);
+        let b = Matrix::randn(n, kd, 1.0, &mut rng);
+        let mut out = vec![0.0f32; m * n];
+        let mut pack = Vec::new();
+        let r = bench(name, w, s, || {
+            pool.install(|| {
+                matrix::gemm_nt_into(m, kd, n, &a.data, &b.data, kd, 0, &mut out, &mut pack);
+            });
+            std::hint::black_box(&out);
+        });
+        let rref = bench("scalar_nt_ref", w, s, || {
+            scalar_gemm_nt_ref(m, kd, n, &a.data, &b.data, &mut out);
+            std::hint::black_box(&out);
+        });
+        records.push(KernelRecord {
+            kernel: name,
+            m,
+            k: kd,
+            n,
+            median_s: r.median(),
+            flops: 2.0 * (m * kd * n) as f64,
+            speedup_vs_scalar: Some(rref.median() / r.median()),
+        });
+    }
+
+    // CSR sparse attention tail (SDDMM + softmax + SpMM) at L = seq/4.
+    {
+        let q = Matrix::randn(seq, d_head, 1.0, &mut rng);
+        let k = Matrix::randn(seq, d_head, 1.0, &mut rng);
+        let v = Matrix::randn(seq, d_head, 1.0, &mut rng);
+        let sel_rows: Vec<Vec<u32>> = (0..seq)
+            .map(|i| {
+                let mut row = Vec::with_capacity(l);
+                let mut j = u32::try_from(i % 7).unwrap();
+                while row.len() < l {
+                    if !row.contains(&j) {
+                        row.push(j);
+                    }
+                    j = (j + 5) % u32::try_from(seq).unwrap();
+                }
+                row
+            })
+            .collect();
+        let proto = Csr::from_rows(&sel_rows, seq);
+        let r = bench("spmm_attn", w, s, || {
+            pool.install(|| {
+                let mut csr = proto.clone();
+                csr.sddmm(&q, &k);
+                csr.softmax_rows();
+                std::hint::black_box(csr.spmm(&v));
+            });
+        });
+        records.push(KernelRecord {
+            kernel: "spmm_attn",
+            m: seq,
+            k: d_head,
+            n: l,
+            // SDDMM + SpMM multiply-adds over the L kept entries per row.
+            flops: 2.0 * (2 * seq * l * d_head) as f64,
+            median_s: r.median(),
+            speedup_vs_scalar: None,
+        });
+    }
+
+    // Routed FFN at beta = G'/G = 1/2 (the block GEMMs ride the same
+    // microkernel through gemm_into's column-block addressing).
+    {
+        let x = Matrix::randn(seq, d, 1.0, &mut rng);
+        let wi = Matrix::randn(d, dff, 0.2, &mut rng);
+        let wo = Matrix::randn(dff, d, 0.2, &mut rng);
+        let routing = bspmv::route(&Matrix::randn(seq, g, 1.0, &mut rng), ga);
+        let r = bench("routed_ffn", w, s, || {
+            pool.install(|| {
+                std::hint::black_box(bspmv::routed_ffn(&x, &wi, &wo, &routing));
+            });
+        });
+        records.push(KernelRecord {
+            kernel: "routed_ffn",
+            m: seq,
+            k: d,
+            n: dff,
+            // Active fraction G'/G of the dense 2*(x@Wi + h@Wo) FLOPs.
+            flops: 2.0 * (2 * seq * d * dff) as f64 * (ga as f64 / g as f64),
+            median_s: r.median(),
+            speedup_vs_scalar: None,
+        });
+    }
+
+    let mut table = Table::new(
+        "Kernel bench — register-blocked microkernel at spt-mini-64 shapes (1 thread)",
+        &["Kernel", "m x k x n", "Median", "GFLOP/s", "Speedup vs scalar"],
+    );
+    for rec in &records {
+        table.row(&[
+            rec.kernel.to_string(),
+            format!("{}x{}x{}", rec.m, rec.k, rec.n),
+            fmt_duration(rec.median_s),
+            format!("{:.2}", rec.gflops()),
+            rec.speedup_vs_scalar
+                .map(|x| format!("{x:.2}x"))
+                .unwrap_or_default(),
+        ]);
+    }
+    common::emit("kernel_bench", &table);
+
+    let kernels: Vec<Json> = records
+        .iter()
+        .map(|rec| {
+            let mut o = BTreeMap::new();
+            o.insert("kernel".to_string(), Json::Str(rec.kernel.to_string()));
+            o.insert("m".to_string(), Json::Num(rec.m as f64));
+            o.insert("k".to_string(), Json::Num(rec.k as f64));
+            o.insert("n".to_string(), Json::Num(rec.n as f64));
+            o.insert("ms_median".to_string(), Json::Num(rec.median_s * 1e3));
+            o.insert("gflops".to_string(), Json::Num(rec.gflops()));
+            if let Some(sp) = rec.speedup_vs_scalar {
+                o.insert("speedup_vs_scalar".to_string(), Json::Num(sp));
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("kernel_bench".to_string()));
+    top.insert("model".to_string(), Json::Str("spt-mini-64".to_string()));
+    top.insert("threads".to_string(), Json::Num(1.0));
+    top.insert("kernels".to_string(), Json::Arr(kernels));
+    common::emit_json("BENCH_kernels_native", &Json::Obj(top));
+}

@@ -631,7 +631,7 @@ impl GradAcc {
         match (&lx.lora, &lw.lora) {
             (Some(ixs), Some(mats)) => {
                 let (a, b) = &mats[slot];
-                self.add(ixs[slot].a, &grad::matmul_dx(dw, b));
+                self.add(ixs[slot].a, &grad::matmul_dx_ws(dw, b, ws));
                 self.add(ixs[slot].b, &grad::matmul_dw_ws(a, dw, ws));
             }
             _ => self.add(base_ix, dw),
@@ -948,7 +948,7 @@ impl NativeBackend {
         ws: &mut Workspace,
     ) -> Result<(ItemTrace, Matrix)> {
         let trace = self.forward_model(layout, w, state, tok, sparse, ws)?;
-        let logits = grad::matmul_dx(&trace.xf, &w.tok);
+        let logits = grad::matmul_dx_ws(&trace.xf, &w.tok, ws);
         Ok((trace, logits))
     }
 
@@ -987,9 +987,9 @@ impl NativeBackend {
             } else {
                 let h1 = lt.h1.as_ref().context("missing ffn trace")?;
                 let dwo2 = grad::matmul_dw_ws(h1, &dx, ws);
-                let dpre = grad::relu_backward(h1, &grad::matmul_dx(&dx, &lw.wo2));
+                let dpre = grad::relu_backward(h1, &grad::matmul_dx_ws(&dx, &lw.wo2, ws));
                 let dwi = grad::matmul_dw_ws(&lt.f_in, &dpre, ws);
-                let dff = grad::matmul_dx(&dpre, &lw.wi);
+                let dff = grad::matmul_dx_ws(&dpre, &lw.wi, ws);
                 (dff, dwi, dwo2)
             };
             acc.add_weight(lx, lw, SLOT_WI, lx.wi, &dwi_eff, ws);
@@ -1002,8 +1002,11 @@ impl NativeBackend {
             // Attention output projection: x_mid = x_in + attn_out · W_O.
             let dwo_eff = grad::matmul_dw_ws(&lt.attn_out, &dx_mid, ws);
             acc.add_weight(lx, lw, SLOT_O, lx.wo, &dwo_eff, ws);
-            let dy_heads =
-                split_heads(&grad::matmul_dx(&dx_mid, &lw.wo), layout.heads, layout.d_head);
+            let dy_heads = split_heads(
+                &grad::matmul_dx_ws(&dx_mid, &lw.wo, ws),
+                layout.heads,
+                layout.d_head,
+            );
             // Attention core.
             let (dq_h, dk_h, dv_h) = if layout.mode == Mode::Spt {
                 let layer = &sparse.context("spt mode without sparse layers")?[li];
@@ -1031,9 +1034,9 @@ impl NativeBackend {
             acc.add_weight(lx, lw, SLOT_V, lx.wv, &dwv_eff, ws);
             // Back through ln1 into this layer's residual input (the
             // effective weights carry the LoRA path too).
-            let mut da_in = grad::matmul_dx(&dq, &lw.wq);
-            da_in.add_assign(&grad::matmul_dx(&dk, &lw.wk));
-            da_in.add_assign(&grad::matmul_dx(&dv, &lw.wv));
+            let mut da_in = grad::matmul_dx_ws(&dq, &lw.wq, ws);
+            da_in.add_assign(&grad::matmul_dx_ws(&dk, &lw.wk, ws));
+            da_in.add_assign(&grad::matmul_dx_ws(&dv, &lw.wv, ws));
             let (dx_ln1, dln1_s, dln1_b) =
                 grad::layer_norm_backward(&lt.x_in, &lw.ln1_scale, &da_in);
             acc.add(lx.ln1_scale, &dln1_s);

@@ -324,7 +324,7 @@ pub(crate) fn decode_batch(
         st.pos += 1;
     }
     // Tied readout for every in-flight row (NT kernel, row-local).
-    Ok(grad::matmul_dx(&xf, &model.weights.tok))
+    Ok(grad::matmul_dx_ws(&xf, &model.weights.tok, ws))
 }
 
 /// One generation stream over an [`InferModel`].

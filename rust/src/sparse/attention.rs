@@ -10,6 +10,7 @@
 
 use super::codes::TopL;
 use super::csr::Csr;
+use super::kernel;
 use super::matrix::{self, Matrix, Workspace};
 use super::pq::{self, Codebooks};
 use super::topl;
@@ -34,34 +35,35 @@ pub fn dense_attention_ws(
     assert_eq!(q.cols, k.cols, "Q/K dim mismatch");
     assert_eq!(k.rows, v.rows, "K/V row mismatch");
     let scale = 1.0 / (q.cols as f32).sqrt();
-    ws.attn.reset_any(q.rows, k.rows);
+    // Field-split borrows: the logits live in ws.attn while the pack
+    // buffer packs K (and later V).
+    let Workspace { packb, attn, .. } = ws;
+    attn.reset_any(q.rows, k.rows);
     matrix::gemm_nt_into(
-        q.rows, q.cols, k.rows, &q.data, &k.data, k.cols, 0, &mut ws.attn.data,
+        q.rows, q.cols, k.rows, &q.data, &k.data, k.cols, 0, &mut attn.data, packb,
     );
-    for x in ws.attn.data.iter_mut() {
+    for x in attn.data.iter_mut() {
         *x *= scale;
     }
     if causal {
-        for i in 0..ws.attn.rows {
-            for j in (i + 1)..ws.attn.cols {
-                *ws.attn.at_mut(i, j) = -1e30;
+        for i in 0..attn.rows {
+            for j in (i + 1)..attn.cols {
+                *attn.at_mut(i, j) = -1e30;
             }
         }
     }
-    ws.attn.softmax_rows_inplace();
-    // P @ V — field-split borrows: the probabilities read from ws.attn
-    // while the pack buffer packs V.
+    attn.softmax_rows_inplace();
     let mut out = Matrix::zeros(q.rows, v.cols);
     matrix::gemm_into(
         q.rows,
         k.rows,
         v.cols,
-        &ws.attn.data,
+        &attn.data,
         &v.data,
         v.cols,
         0,
         &mut out.data,
-        &mut ws.packb,
+        packb,
     );
     out
 }
@@ -151,7 +153,7 @@ pub fn sparse_attend_row(
     }
     for (val, &j) in vals.iter_mut().zip(sel) {
         let krow = k.row(j as usize);
-        *val = qs.iter().zip(krow).map(|(a, b)| a * b).sum();
+        *val = kernel::dot(qs, krow);
     }
     // Causal re-mask: padding slots may reference future keys.
     if let Some(limit) = causal_limit {
@@ -171,16 +173,14 @@ pub fn sparse_attend_row(
     for x in vals.iter_mut() {
         *x /= sum.max(1e-30);
     }
-    // SpMM row, same order as `Csr::spmm`.
+    // SpMM row, same order as `Csr::spmm` (zero-weight skip kept: the
+    // sparse operand skips whole V rows).
     out.fill(0.0);
     for (&w, &j) in vals.iter().zip(sel) {
         if w == 0.0 {
             continue;
         }
-        let vrow = v.row(j as usize);
-        for (o, &x) in out.iter_mut().zip(vrow) {
-            *o += w * x;
-        }
+        kernel::axpy(out, w, v.row(j as usize));
     }
 }
 
@@ -189,11 +189,13 @@ pub fn sparse_attend_row(
 /// key, row softmax, probability-weighted V sum — in exactly the
 /// operation order [`dense_attention_ws`] uses for one row (the NT
 /// kernel's ascending dot product, then the scalar scale multiply, then
-/// `softmax_rows_inplace`, then the blocked GEMM's ascending-`j`
-/// accumulation with its exact-zero skip).  Causally-masked future
+/// `softmax_rows_inplace`, then the register-blocked GEMM's
+/// ascending-`j` accumulation, no zero skip — matching the dense GEMM,
+/// which dropped its `a == 0.0` branch).  Causally-masked future
 /// columns of a full-sequence forward carry probability exactly 0 and
-/// sit past the cached prefix, so restricting to the cache preserves
-/// every bit.
+/// sit past the cached prefix; adding `±0.0 * v` terms is bitwise inert
+/// (see the [`super::matrix`] module docs), so restricting to the cache
+/// preserves every bit.
 ///
 /// `logits` is reusable caller scratch (resized to `k.rows`); `out`
 /// (length `v.cols`) is fully overwritten.
@@ -212,12 +214,7 @@ pub fn dense_attend_row(
     logits.resize(k.rows, 0.0);
     // Logits: plain ascending dot (gemm_nt), then the scale multiply.
     for (x, j) in logits.iter_mut().zip(0..k.rows) {
-        let krow = k.row(j);
-        let mut acc = 0.0f32;
-        for (a, b) in q.iter().zip(krow) {
-            acc += a * b;
-        }
-        *x = acc;
+        *x = kernel::dot(q, k.row(j));
     }
     for x in logits.iter_mut() {
         *x *= scale;
@@ -232,17 +229,11 @@ pub fn dense_attend_row(
     for x in logits.iter_mut() {
         *x /= sum.max(1e-30);
     }
-    // P @ V row: ascending j, exact-zero probabilities skipped (the
-    // blocked GEMM's zero-A skip).
+    // P @ V row: ascending j, no zero skip — op-for-op the dense GEMM's
+    // row accumulation.
     out.fill(0.0);
     for (j, &w) in logits.iter().enumerate() {
-        if w == 0.0 {
-            continue;
-        }
-        let vrow = v.row(j);
-        for (o, &x) in out.iter_mut().zip(vrow) {
-            *o += w * x;
-        }
+        kernel::axpy(out, w, v.row(j));
     }
 }
 

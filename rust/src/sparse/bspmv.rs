@@ -282,6 +282,7 @@ pub fn block_backward(
         d,
         0,
         &mut scratch.dh.data,
+        &mut scratch.ws.packb,
     );
     for (r, &t) in tokens.iter().enumerate() {
         let gate = routing.gate[t][gi];
@@ -309,6 +310,7 @@ pub fn block_backward(
         w_i.cols,
         gi * dg,
         &mut dxg.data,
+        &mut scratch.ws.packb,
     );
     Some((tokens, dxg, dwi_g, dwo_g))
 }

@@ -8,6 +8,7 @@
 use anyhow::{bail, Result};
 
 use super::codes::TopL;
+use super::kernel;
 use super::matrix::Matrix;
 
 /// Compressed sparse row matrix.
@@ -118,7 +119,7 @@ impl Csr {
             let qrow = q.row(r);
             for p in self.row_range(r) {
                 let krow = k.row(self.indices[p] as usize);
-                self.values[p] = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                self.values[p] = kernel::dot(qrow, krow);
             }
         }
     }
@@ -152,14 +153,13 @@ impl Csr {
         for r in 0..self.rows {
             for p in self.row_range(r) {
                 let w = self.values[p];
+                // Genuinely sparse operand: a zero weight skips a whole
+                // V row (unlike the dense GEMM, which dropped its skip).
                 if w == 0.0 {
                     continue;
                 }
                 let vrow = v.row(self.indices[p] as usize);
-                let orow = out.row_mut(r);
-                for (o, &x) in orow.iter_mut().zip(vrow) {
-                    *o += w * x;
-                }
+                kernel::axpy(out.row_mut(r), w, vrow);
             }
         }
         out

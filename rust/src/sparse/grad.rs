@@ -23,19 +23,35 @@ use super::matrix::{self, Matrix, Workspace};
 ///
 /// `dy` is `[n, p]`, `w` is the forward weight `[m, p]`, result is
 /// `[n, m]`.  Runs on the NT microkernel — each output element is one
-/// ascending-order dot product, so no workspace is needed.
+/// ascending-order dot product.  Allocates a transient workspace for
+/// the transpose-pack pass; hot paths should prefer
+/// [`matmul_dx_ws`] / [`matmul_dx_into`] with a reused [`Workspace`]
+/// (bit-identical either way).
 pub fn matmul_dx(dy: &Matrix, w: &Matrix) -> Matrix {
+    matmul_dx_ws(dy, w, &mut Workspace::default())
+}
+
+/// [`matmul_dx`] reusing `ws` for the NT transpose-pack scratch.
+pub fn matmul_dx_ws(dy: &Matrix, w: &Matrix, ws: &mut Workspace) -> Matrix {
     let mut out = Matrix::default();
-    matmul_dx_into(dy, w, &mut out);
+    matmul_dx_into(dy, w, &mut out, ws);
     out
 }
 
 /// [`matmul_dx`] into a reusable output matrix.
-pub fn matmul_dx_into(dy: &Matrix, w: &Matrix, out: &mut Matrix) {
+pub fn matmul_dx_into(dy: &Matrix, w: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
     assert_eq!(dy.cols, w.cols, "matmul_dx: dY/W inner dim mismatch");
     out.reset_any(dy.rows, w.rows);
     matrix::gemm_nt_into(
-        dy.rows, dy.cols, w.rows, &dy.data, &w.data, w.cols, 0, &mut out.data,
+        dy.rows,
+        dy.cols,
+        w.rows,
+        &dy.data,
+        &w.data,
+        w.cols,
+        0,
+        &mut out.data,
+        &mut ws.packb,
     );
 }
 
@@ -273,35 +289,35 @@ pub fn dense_attention_backward_ws(
     assert_eq!(dy.cols, v.cols, "dY/V col mismatch");
     let scale = 1.0 / (q.cols as f32).sqrt();
     let (n, nk) = (q.rows, k.rows);
+    // Field-split borrows: attn/attn2 hold the O(n²) transients while
+    // packb/tmp serve the pack and transpose passes.
+    let Workspace { packb, tmp, attn, attn2 } = ws;
     // P = softmax(scale * Q K^T) in ws.attn — NT kernel, no transposed
     // K materialized.
-    ws.attn.reset_any(n, nk);
-    matrix::gemm_nt_into(n, q.cols, nk, &q.data, &k.data, k.cols, 0, &mut ws.attn.data);
-    for x in ws.attn.data.iter_mut() {
+    attn.reset_any(n, nk);
+    matrix::gemm_nt_into(n, q.cols, nk, &q.data, &k.data, k.cols, 0, &mut attn.data, packb);
+    for x in attn.data.iter_mut() {
         *x *= scale;
     }
     if causal {
         for i in 0..n {
             for j in (i + 1)..nk {
-                *ws.attn.at_mut(i, j) = -1e30;
+                *attn.at_mut(i, j) = -1e30;
             }
         }
     }
-    ws.attn.softmax_rows_inplace();
-    // dV = P^T dY: transpose P into ws.tmp, then the packed kernel
-    // (field-split borrows keep P readable while packb packs dY).
+    attn.softmax_rows_inplace();
+    // dV = P^T dY: transpose P into ws.tmp, then the packed kernel.
     let mut dv = Matrix::zeros(nk, dy.cols);
-    matrix::transpose_slice(n, nk, &ws.attn.data, &mut ws.tmp);
-    matrix::gemm_into(
-        nk, n, dy.cols, &ws.tmp, &dy.data, dy.cols, 0, &mut dv.data, &mut ws.packb,
-    );
+    matrix::transpose_slice(n, nk, &attn.data, tmp);
+    matrix::gemm_into(nk, n, dy.cols, tmp, &dy.data, dy.cols, 0, &mut dv.data, packb);
     // dP = dY V^T into ws.attn2, then softmax backward overwrites it in
     // place with dS = P ⊙ (dP - sum_j P dP).
-    ws.attn2.reset_any(n, nk);
-    matrix::gemm_nt_into(n, dy.cols, nk, &dy.data, &v.data, v.cols, 0, &mut ws.attn2.data);
+    attn2.reset_any(n, nk);
+    matrix::gemm_nt_into(n, dy.cols, nk, &dy.data, &v.data, v.cols, 0, &mut attn2.data, packb);
     for r in 0..n {
-        let p_row = ws.attn.row(r);
-        let dp_row = ws.attn2.row_mut(r);
+        let p_row = attn.row(r);
+        let dp_row = attn2.row_mut(r);
         let dot: f32 = p_row.iter().zip(dp_row.iter()).map(|(a, b)| a * b).sum();
         for (o, &pv) in dp_row.iter_mut().zip(p_row) {
             *o = pv * (*o - dot);
@@ -309,17 +325,13 @@ pub fn dense_attention_backward_ws(
     }
     // dQ = scale * dS K;  dK = scale * dS^T Q.
     let mut dq = Matrix::zeros(n, k.cols);
-    matrix::gemm_into(
-        n, nk, k.cols, &ws.attn2.data, &k.data, k.cols, 0, &mut dq.data, &mut ws.packb,
-    );
+    matrix::gemm_into(n, nk, k.cols, &attn2.data, &k.data, k.cols, 0, &mut dq.data, packb);
     for x in dq.data.iter_mut() {
         *x *= scale;
     }
     let mut dk = Matrix::zeros(nk, q.cols);
-    matrix::transpose_slice(n, nk, &ws.attn2.data, &mut ws.tmp);
-    matrix::gemm_into(
-        nk, n, q.cols, &ws.tmp, &q.data, q.cols, 0, &mut dk.data, &mut ws.packb,
-    );
+    matrix::transpose_slice(n, nk, &attn2.data, tmp);
+    matrix::gemm_into(nk, n, q.cols, tmp, &q.data, q.cols, 0, &mut dk.data, packb);
     for x in dk.data.iter_mut() {
         *x *= scale;
     }
@@ -381,10 +393,11 @@ mod tests {
         let dy = Matrix::randn(21, 33, 1.0, &mut rng);
         let w = Matrix::randn(17, 33, 1.0, &mut rng);
         let want = matmul_dx(&dy, &w);
-        let mut out = Matrix::default();
-        matmul_dx_into(&dy, &w, &mut out);
-        assert_eq!(out, want);
         let mut ws = Workspace::default();
+        let mut out = Matrix::default();
+        matmul_dx_into(&dy, &w, &mut out, &mut ws);
+        assert_eq!(out, want);
+        assert_eq!(matmul_dx_ws(&dy, &w, &mut ws), want);
         let x = Matrix::randn(21, 17, 1.0, &mut rng);
         let want_dw = matmul_dw(&x, &dy);
         assert_eq!(matmul_dw_ws(&x, &dy, &mut ws), want_dw);

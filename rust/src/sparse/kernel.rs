@@ -1,0 +1,287 @@
+//! Register-blocked GEMM microkernel and the shared axpy/dot helpers.
+//!
+//! The kernel multiplies MR rows of A against one packed-B panel at a
+//! time, keeping the partial products in fixed-width `[f32; LANES]`
+//! accumulator arrays so the compiler can hold them in vector registers
+//! and autovectorize the lane loop (the workspace forbids `unsafe`, so
+//! there are no intrinsics here — the shape of the code is the whole
+//! optimization).
+//!
+//! Determinism contract: vectorization runs across the *column*
+//! dimension only.  Every output element `out[i][j]` is the plain
+//! ascending-`k` sum `Σ a[i][k] * b[k][j]`, with the multiply and the
+//! add kept as separate statements so LLVM does not contract them into
+//! an FMA (Rust never does so by default).  Splitting the columns into
+//! lane strips never reorders any single element's addition chain, so
+//! the result is bit-identical to the naive triple loop by
+//! construction, at any blocking and any thread count.
+//!
+//! Accumulators are loaded from and stored back to `out` at K-block
+//! boundaries; an f32 store/load roundtrip is exact, so carrying the
+//! partial sums through `out` between KC blocks preserves the single
+//! ascending-`k` chain.
+
+/// Rows of A processed together by the register-blocked kernel.
+pub const MR: usize = 4;
+
+/// Width of one accumulator vector.  Eight f32 lanes fill one AVX2
+/// register (256 bits) and two NEON registers — a shape current
+/// autovectorizers handle reliably.
+pub const LANES: usize = 8;
+
+/// One register tile: `R` rows of A against a `V * LANES`-wide column
+/// strip of the packed panel, accumulating `kb..kend` in ascending
+/// order.  `panel` is the packed B block (row-major `w`-wide rows per
+/// packed `k`), `j` the column offset of the strip inside the panel,
+/// and `out` the full output matrix (row stride `n`, panel origin
+/// column `p0`).
+fn tile<const R: usize, const V: usize>(
+    arows: &[&[f32]; R],
+    panel: &[f32],
+    w: usize,
+    j: usize,
+    kb: usize,
+    kend: usize,
+    out: &mut [f32],
+    n: usize,
+    p0: usize,
+) {
+    let mut acc = [[[0.0f32; LANES]; V]; R];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        let base = r * n + p0 + j;
+        for (v, lane) in accr.iter_mut().enumerate() {
+            lane.copy_from_slice(&out[base + v * LANES..base + (v + 1) * LANES]);
+        }
+    }
+    for kk in kb..kend {
+        let brow = &panel[kk * w + j..kk * w + j + V * LANES];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = arows[r][kk];
+            for (v, lane) in accr.iter_mut().enumerate() {
+                for (o, &bv) in lane.iter_mut().zip(&brow[v * LANES..(v + 1) * LANES]) {
+                    let prod = av * bv;
+                    *o += prod;
+                }
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let base = r * n + p0 + j;
+        for (v, lane) in accr.iter().enumerate() {
+            out[base + v * LANES..base + (v + 1) * LANES].copy_from_slice(lane);
+        }
+    }
+}
+
+/// Scalar column tail for strips narrower than one vector: each
+/// remaining output element accumulates its own ascending-`k` chain.
+fn tail_cols<const R: usize>(
+    arows: &[&[f32]; R],
+    panel: &[f32],
+    w: usize,
+    j0: usize,
+    kb: usize,
+    kend: usize,
+    out: &mut [f32],
+    n: usize,
+    p0: usize,
+) {
+    for (r, arow) in arows.iter().enumerate() {
+        for j in j0..w {
+            let mut acc = out[r * n + p0 + j];
+            for kk in kb..kend {
+                let prod = arow[kk] * panel[kk * w + j];
+                acc += prod;
+            }
+            out[r * n + p0 + j] = acc;
+        }
+    }
+}
+
+/// Sweep one group of `R` A-rows across the full panel width: two
+/// vectors at a time, then one, then the scalar tail.
+fn row_group<const R: usize>(
+    arows: &[&[f32]; R],
+    panel: &[f32],
+    w: usize,
+    kb: usize,
+    kend: usize,
+    out: &mut [f32],
+    n: usize,
+    p0: usize,
+) {
+    let mut j = 0;
+    while j + 2 * LANES <= w {
+        tile::<R, 2>(arows, panel, w, j, kb, kend, out, n, p0);
+        j += 2 * LANES;
+    }
+    if j + LANES <= w {
+        tile::<R, 1>(arows, panel, w, j, kb, kend, out, n, p0);
+        j += LANES;
+    }
+    if j < w {
+        tail_cols::<R>(arows, panel, w, j, kb, kend, out, n, p0);
+    }
+}
+
+/// Register-blocked block GEMM: accumulate `a[0..rows] x panel` over
+/// `kb..kend` into `out`.  `a` holds exactly `rows` rows of stride `k`;
+/// `panel` is one packed B panel of width `w` whose packed rows run
+/// over the full `k` range; `out` is the caller's output block with row
+/// stride `n` and the panel's columns starting at `p0`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_block(
+    rows: usize,
+    k: usize,
+    kb: usize,
+    kend: usize,
+    n: usize,
+    p0: usize,
+    w: usize,
+    a: &[f32],
+    panel: &[f32],
+    out: &mut [f32],
+) {
+    let mut i = 0;
+    while i + MR <= rows {
+        let arows: [&[f32]; MR] = [
+            &a[i * k..(i + 1) * k],
+            &a[(i + 1) * k..(i + 2) * k],
+            &a[(i + 2) * k..(i + 3) * k],
+            &a[(i + 3) * k..(i + 4) * k],
+        ];
+        row_group::<MR>(&arows, panel, w, kb, kend, &mut out[i * n..], n, p0);
+        i += MR;
+    }
+    while i < rows {
+        let arows: [&[f32]; 1] = [&a[i * k..(i + 1) * k]];
+        row_group::<1>(&arows, panel, w, kb, kend, &mut out[i * n..], n, p0);
+        i += 1;
+    }
+}
+
+/// `acc += a * x`, element-wise, in lane strips of [`LANES`].  Each
+/// output element sees exactly one multiply and one add, in the same
+/// order as the plain zip loop, so this is bit-identical to the scalar
+/// version — the strip split only helps the autovectorizer.
+pub fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (astrip, xstrip) in ac.by_ref().zip(xc.by_ref()) {
+        for (o, &xv) in astrip.iter_mut().zip(xstrip) {
+            let prod = a * xv;
+            *o += prod;
+        }
+    }
+    for (o, &xv) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        let prod = a * xv;
+        *o += prod;
+    }
+}
+
+/// Ascending-order dot product.  Deliberately scalar: splitting a
+/// reduction into lanes would change the summation order and break bit
+/// identity with the reference `Σ a[i] * b[i]` chain, so the only
+/// freedom here is what the compiler can prove without reassociation.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&av, &bv) in a.iter().zip(b) {
+        let prod = av * bv;
+        acc += prod;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Naive ascending-k reference for one packed panel.
+    fn naive_block(
+        rows: usize,
+        k: usize,
+        kb: usize,
+        kend: usize,
+        n: usize,
+        p0: usize,
+        w: usize,
+        a: &[f32],
+        panel: &[f32],
+        out: &mut [f32],
+    ) {
+        for i in 0..rows {
+            for j in 0..w {
+                let mut acc = out[i * n + p0 + j];
+                for kk in kb..kend {
+                    acc += a[i * k + kk] * panel[kk * w + j];
+                }
+                out[i * n + p0 + j] = acc;
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_block_matches_naive_bitwise_over_ragged_shapes() {
+        let mut rng = Rng::new(71);
+        // Row counts around MR, widths around the 2-vector/1-vector/
+        // scalar strip boundaries, and split k ranges.
+        for &(rows, k, w) in &[
+            (1usize, 5usize, 1usize),
+            (3, 9, 7),
+            (4, 16, 8),
+            (5, 33, 16),
+            (6, 40, 17),
+            (9, 21, 24),
+            (11, 64, 37),
+        ] {
+            let n = w + 3; // out wider than the panel: p0 offset in play
+            let p0 = 2;
+            let a = rng.normal_vec(rows * k);
+            let panel = rng.normal_vec(k * w);
+            let mut got = rng.normal_vec(rows * n);
+            let mut want = got.clone();
+            // Two K blocks to exercise the load/accumulate/store path.
+            let kmid = k / 2;
+            gemm_block(rows, k, 0, kmid, n, p0, w, &a, &panel, &mut got);
+            gemm_block(rows, k, kmid, k, n, p0, w, &a, &panel, &mut got);
+            naive_block(rows, k, 0, kmid, n, p0, w, &a, &panel, &mut want);
+            naive_block(rows, k, kmid, k, n, p0, w, &a, &panel, &mut want);
+            let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "rows={rows} k={k} w={w}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_loop_bitwise() {
+        let mut rng = Rng::new(72);
+        for &len in &[1usize, 7, 8, 9, 31, 64, 100] {
+            let x = rng.normal_vec(len);
+            let base = rng.normal_vec(len);
+            let a = 0.37f32;
+            let mut got = base.clone();
+            axpy(&mut got, a, &x);
+            let mut want = base;
+            for (o, &xv) in want.iter_mut().zip(&x) {
+                *o += a * xv;
+            }
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "len={len}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_iterator_sum_bitwise() {
+        let mut rng = Rng::new(73);
+        for &len in &[0usize, 1, 8, 13, 100] {
+            let a = rng.normal_vec(len);
+            let b = rng.normal_vec(len);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(dot(&a, &b).to_bits(), want.to_bits(), "len={len}");
+        }
+    }
+}

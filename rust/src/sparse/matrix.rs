@@ -1,18 +1,38 @@
 //! Dense row-major f32 matrix — the substrate's working representation —
-//! plus the blocked GEMM microkernel the training hot paths run on.
+//! plus the blocked GEMM layer the training hot paths run on.
 //!
 //! ## The microkernel
 //!
 //! [`gemm_into`] computes `C = A @ B` with the B operand packed once per
 //! call into column panels of [`NR`] floats, then tiled over (M, N, K)
 //! with [`MC`]-row × [`KC`]-deep blocks so one panel tile stays cache
-//! resident while a row block streams over it.  The per-output-element
-//! accumulation order is exactly the naive kernel's — ascending `k`,
-//! zero `a` terms skipped — so the blocked, rayon-parallel product is
-//! bit-identical to a sequential naive loop at any thread count (the
-//! property all substrate parallelism maintains).  [`gemm_nt_into`]
-//! (`C = A @ B^T`) keeps each output element a single ascending-order
-//! dot product for the same reason.
+//! resident while a row block streams over it.  Inside a block the work
+//! runs through the register-blocked microkernel in [`super::kernel`]:
+//! [`kernel::MR`] rows of A at a time against [`kernel::LANES`]-wide
+//! column strips of the panel, with the partial sums held in fixed-width
+//! accumulator arrays the compiler keeps in vector registers (safe,
+//! autovectorizable code — the workspace forbids `unsafe`).
+//!
+//! Vectorization runs across the column dimension only, so every output
+//! element still accumulates in plain ascending-`k` order with separate
+//! mul and add (no FMA contraction) — bit-identical to the naive triple
+//! loop at any blocking and any thread count (the property all substrate
+//! parallelism maintains).  Unlike the pre-register-blocked kernel, the
+//! dense path no longer branches on `a == 0.0`: for finite operands,
+//! adding `±0.0 * b` is an identity on an accumulator that starts at
+//! `+0.0` and can never become `-0.0` under round-to-nearest-even, so
+//! dropping the skip is bitwise neutral while removing a per-`k` branch
+//! from the inner loop.  (Genuinely sparse consumers — CSR `spmm`, the
+//! decode attention rows — keep their skip, where it means skipping
+//! whole rows of work, not single scalars.)
+//!
+//! [`gemm_nt_into`] (`C = A @ B^T`) rides the same microkernel: the B
+//! block is transpose-packed by [`pack_bt`] into the identical panel
+//! layout, which preserves each output element's single ascending-order
+//! dot product.  Tiny row counts (below [`NT_PACK_MIN_ROWS`], e.g. the
+//! decode path's one-row readout) skip the packing pass and run the
+//! per-row dot kernel directly — both paths are bit-identical, so the
+//! threshold is a pure performance knob.
 //!
 //! Both kernels address B as `row * stride + column offset`, so callers
 //! can multiply against a column block or row block of a larger matrix
@@ -28,6 +48,7 @@
 
 use rayon::prelude::*;
 
+use super::kernel;
 use crate::util::rng::Rng;
 
 /// Below this many multiply-adds the GEMMs stay sequential (forking the
@@ -41,8 +62,14 @@ const NR: usize = 64;
 const KC: usize = 128;
 /// Rows of C per cache block and per parallel task.
 const MC: usize = 32;
-/// B rows per block of the NT kernel (reused across a C row block).
+/// B rows per block of the small-m NT fallback kernel (reused across a
+/// C row block).
 const NJ: usize = 32;
+/// Below this many A rows, [`gemm_nt_into`] skips the transpose-packing
+/// pass and runs the per-row dot kernel directly (packing `k x n` floats
+/// to feed one or two rows costs more than it saves).  Both paths are
+/// bit-identical, so the threshold cannot affect results.
+const NT_PACK_MIN_ROWS: usize = 4;
 
 /// Reusable scratch for the blocked GEMM kernels: the packed-B buffer,
 /// a transpose scratch, and two matrix slots for O(n²) attention
@@ -350,11 +377,14 @@ fn pack_b(k: usize, n: usize, b: &[f32], b_stride: usize, b_col0: usize, pack: &
     }
 }
 
-/// The per-row-block kernel of [`gemm_into`]: accumulate rows
-/// `[row0, row0 + rows)` of C against the packed B panels.  The K-block
-/// loop is outermost and ascending, and within a block `kk` ascends, so
-/// every output element accumulates in plain ascending-`k` order —
-/// identical to the naive loop, independent of tiling.
+/// The per-row-block driver of [`gemm_into`]: accumulate rows
+/// `[row0, row0 + rows)` of C against the packed B panels through the
+/// register-blocked [`kernel::gemm_block`].  The K-block loop is
+/// outermost and ascending, and within a block `kk` ascends, so every
+/// output element accumulates in plain ascending-`k` order — identical
+/// to the naive loop, independent of tiling.  (Accumulators round-trip
+/// through `out` at K-block boundaries; the f32 store/load is exact, so
+/// the chain is unbroken.)
 fn gemm_rows(
     row0: usize,
     rows: usize,
@@ -364,6 +394,7 @@ fn gemm_rows(
     pack: &[f32],
     out: &mut [f32],
 ) {
+    let a_block = &a[row0 * k..row0 * k + rows * k];
     let mut kb = 0;
     while kb < k {
         let kw = KC.min(k - kb);
@@ -372,20 +403,7 @@ fn gemm_rows(
             let w = NR.min(n - p0);
             // Panel p0 starts after p0 full columns of k rows each.
             let panel = &pack[p0 * k..p0 * k + k * w];
-            for i in 0..rows {
-                let a_row = &a[(row0 + i) * k..(row0 + i) * k + k];
-                let seg = &mut out[i * n + p0..i * n + p0 + w];
-                for kk in kb..kb + kw {
-                    let av = a_row[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &panel[kk * w..kk * w + w];
-                    for (o, &bv) in seg.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
-            }
+            kernel::gemm_block(rows, k, kb, kb + kw, n, p0, w, a_block, panel, out);
             p0 += w;
         }
         kb += kw;
@@ -433,9 +451,44 @@ pub fn gemm_into(
     }
 }
 
-/// The per-row-block kernel of [`gemm_nt_into`]: each output element is
-/// one ascending-order dot product, with B processed in [`NJ`]-row
-/// blocks so a block is reused across the chunk's rows.
+/// Transpose-pack rows `[0, n)` of the NT operand (row `j` of B at
+/// `b[j * b_stride + b_col0 ..][..kdim]`) into the same column-panel
+/// layout [`pack_b`] produces for `B^T`: panel `p` holds packed rows
+/// `0..kdim`, each a `w`-wide strip of B-rows `p0..p0 + w`.  After this
+/// pass [`gemm_rows`] runs unchanged, and each output element is still
+/// the single ascending-order dot `Σ a[i][kk] * b[j][kk]`.
+fn pack_bt(
+    kdim: usize,
+    n: usize,
+    b: &[f32],
+    b_stride: usize,
+    b_col0: usize,
+    pack: &mut Vec<f32>,
+) {
+    // Every element is overwritten below; only grow/shrink zero-fills.
+    if pack.len() != kdim * n {
+        pack.clear();
+        pack.resize(kdim * n, 0.0);
+    }
+    let mut base = 0;
+    let mut p0 = 0;
+    while p0 < n {
+        let w = NR.min(n - p0);
+        for jj in 0..w {
+            let off = (p0 + jj) * b_stride + b_col0;
+            let b_row = &b[off..off + kdim];
+            for (kk, &v) in b_row.iter().enumerate() {
+                pack[base + kk * w + jj] = v;
+            }
+        }
+        base += kdim * w;
+        p0 += w;
+    }
+}
+
+/// The small-m kernel of [`gemm_nt_into`]: each output element is one
+/// ascending-order dot product, with B processed in [`NJ`]-row blocks so
+/// a block is reused across the chunk's rows.
 fn gemm_nt_rows(
     row0: usize,
     rows: usize,
@@ -455,11 +508,7 @@ fn gemm_nt_rows(
             for j in j0..j0 + jw {
                 let off = j * b_stride + b_col0;
                 let b_row = &b[off..off + kdim];
-                let mut acc = 0.0f32;
-                for (x, y) in a_row.iter().zip(b_row) {
-                    acc += x * y;
-                }
-                out[i * n + j] = acc;
+                out[i * n + j] = kernel::dot(a_row, b_row);
             }
         }
         j0 += jw;
@@ -471,6 +520,14 @@ fn gemm_nt_rows(
 /// block of a larger row-major matrix, multiplied without materializing
 /// the transpose.  `out` is fully overwritten; row-parallel above
 /// [`PAR_MATMUL_FLOPS`] and bit-identical at any thread count.
+///
+/// At [`NT_PACK_MIN_ROWS`] rows or more, the B block is transpose-packed
+/// by [`pack_bt`] into `pack` and the product runs through the same
+/// register-blocked kernel as [`gemm_into`]; below it, the per-row dot
+/// kernel runs directly.  Each output element is the ascending-order dot
+/// `Σ a[i][kk] * b[j][kk]` on both paths, so the results are
+/// bit-identical.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_nt_into(
     m: usize,
     kdim: usize,
@@ -480,6 +537,7 @@ pub fn gemm_nt_into(
     b_stride: usize,
     b_col0: usize,
     out: &mut [f32],
+    pack: &mut Vec<f32>,
 ) {
     assert!(a.len() >= m * kdim, "gemm_nt: A too small");
     assert_eq!(out.len(), m * n, "gemm_nt: C shape mismatch");
@@ -493,24 +551,23 @@ pub fn gemm_nt_into(
     if m == 0 || n == 0 || kdim == 0 {
         return;
     }
+    if m < NT_PACK_MIN_ROWS {
+        // Tiny row counts (decode readouts, single-row probes) never hit
+        // the parallel threshold's MC-row chunking anyway: run the dot
+        // kernel sequentially and skip the packing pass.
+        gemm_nt_rows(0, m, kdim, n, a, b, b_stride, b_col0, out);
+        return;
+    }
+    pack_bt(kdim, n, b, b_stride, b_col0, pack);
+    let pack: &[f32] = pack;
     if m * kdim * n >= PAR_MATMUL_FLOPS {
         out.par_chunks_mut(MC * n)
             .enumerate()
             .for_each(|(ci, chunk)| {
-                gemm_nt_rows(
-                    ci * MC,
-                    chunk.len() / n,
-                    kdim,
-                    n,
-                    a,
-                    b,
-                    b_stride,
-                    b_col0,
-                    chunk,
-                );
+                gemm_rows(ci * MC, chunk.len() / n, kdim, n, a, pack, chunk);
             });
     } else {
-        gemm_nt_rows(0, m, kdim, n, a, b, b_stride, b_col0, out);
+        gemm_rows(0, m, kdim, n, a, pack, out);
     }
 }
 
@@ -547,7 +604,11 @@ mod tests {
 
     /// The pre-microkernel reference: plain triple loop, ascending k,
     /// zero-`a` terms skipped — the order the blocked kernel must match
-    /// bit for bit.
+    /// bit for bit.  (The register-blocked kernel no longer skips zero
+    /// terms, but for finite B that is bitwise inert: the accumulator
+    /// starts at `+0.0`, can never turn `-0.0` under round-to-nearest-
+    /// even, and `acc + ±0.0` is then the identity — so this reference,
+    /// skip and all, still pins the exact bits.)
     fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
         assert_eq!(a.cols, b.rows);
         let mut out = Matrix::zeros(a.rows, b.cols);
@@ -630,17 +691,47 @@ mod tests {
     }
 
     #[test]
-    fn gemm_nt_matches_explicit_transpose() {
+    fn gemm_nt_matches_explicit_transpose_bits() {
+        // Shapes cover both NT paths: below NT_PACK_MIN_ROWS (per-row
+        // dot kernel) and at/above it (transpose-pack + register-blocked
+        // kernel), with kd crossing the KC boundary.
         let mut rng = Rng::new(5);
-        for (m, kd, n) in [(3, 5, 4), (40, 70, 45), (65, 129, 33)] {
+        let mut pack = Vec::new();
+        for (m, kd, n) in [(1, 9, 6), (3, 5, 4), (4, 17, 9), (40, 70, 45), (65, 129, 33)] {
             let a = Matrix::randn(m, kd, 1.0, &mut rng);
             let b = Matrix::randn(n, kd, 1.0, &mut rng);
             let want = a.matmul(&b.transpose());
             let mut out = vec![0.0f32; m * n];
-            gemm_nt_into(m, kd, n, &a.data, &b.data, b.cols, 0, &mut out);
-            let got = Matrix::from_vec(m, n, out);
-            let diff = got.max_abs_diff(&want);
-            assert!(diff < 1e-5, "{m}x{kd}x{n}: diff {diff}");
+            gemm_nt_into(m, kd, n, &a.data, &b.data, b.cols, 0, &mut out, &mut pack);
+            // Both sides are the same ascending-k chain per element, so
+            // equality is bitwise, not approximate.
+            let gb: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = want.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "{m}x{kd}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_column_block_matches_materialized_slice() {
+        // NT against a column block of a wider B (the routed FFN's
+        // per-group W_I slices) must equal NT against a copied-out slice,
+        // on both the dot path and the packed path.
+        let mut rng = Rng::new(9);
+        let (kd, n_full, col0) = (21, 40, 7);
+        let b = Matrix::randn(n_full, 33, 1.0, &mut rng);
+        let mut b_slice = Matrix::zeros(12, kd);
+        for r in 0..12 {
+            b_slice
+                .row_mut(r)
+                .copy_from_slice(&b.row(r)[col0..col0 + kd]);
+        }
+        let mut pack = Vec::new();
+        for m in [2usize, 10] {
+            let a = Matrix::randn(m, kd, 1.0, &mut rng);
+            let want = a.matmul(&b_slice.transpose());
+            let mut out = vec![0.0f32; m * 12];
+            gemm_nt_into(m, kd, 12, &a.data, &b.data, b.cols, col0, &mut out, &mut pack);
+            assert_eq!(out, want.data, "m={m}");
         }
     }
 

@@ -19,6 +19,7 @@ use super::bspmv::{self, Routing};
 use super::codes::Codes;
 use super::csr::Csr;
 use super::grad;
+use super::kernel;
 use super::matrix::Matrix;
 use super::pq::{self, Codebooks};
 use super::topl;
@@ -213,7 +214,7 @@ impl MultiHeadSparseAttention {
                     }
                     for (val, &j) in vals.iter_mut().zip(sel.iter()) {
                         let krow = k.row(j as usize);
-                        *val = qs.iter().zip(krow).map(|(a, b)| a * b).sum();
+                        *val = kernel::dot(&qs, krow);
                     }
                     // Causal re-mask: padding slots may reference future
                     // keys (same as the sequential pipeline).
@@ -234,17 +235,15 @@ impl MultiHeadSparseAttention {
                     for x in vals.iter_mut() {
                         *x /= sum.max(1e-30);
                     }
-                    // SpMM row, same order as `Csr::spmm`.
+                    // SpMM row, same order as `Csr::spmm` (zero-weight
+                    // skip kept: the sparse operand skips whole V rows).
                     let orow = &mut out_chunk[r * d_out..(r + 1) * d_out];
                     for (p, &j) in sel.iter().enumerate() {
                         let w = vals[p];
                         if w == 0.0 {
                             continue;
                         }
-                        let vrow = v.row(j as usize);
-                        for (o, &x) in orow.iter_mut().zip(vrow) {
-                            *o += w * x;
-                        }
+                        kernel::axpy(orow, w, v.row(j as usize));
                     }
                 }
             });

@@ -31,6 +31,7 @@ pub mod bsr;
 pub mod codes;
 pub mod csr;
 pub mod grad;
+pub mod kernel;
 pub mod matrix;
 pub mod mha;
 pub mod naive_pq;

@@ -48,6 +48,53 @@ fn blocked_gemm_matches_naive_bitwise() {
 }
 
 #[test]
+fn register_blocked_tails_match_naive_bitwise() {
+    // Shape chosen to drive every edge of the register-blocked kernel
+    // under Miri's sequential interpreter: 6 rows = one MR=4 group plus
+    // two single-row tails; k = 130 crosses the KC=128 block boundary
+    // (accumulators round-trip through `out` between K blocks); n = 27
+    // = one 16-wide two-vector tile + one 8-wide tile + a 3-column
+    // scalar tail.  6*130*27 multiply-adds stays far below the parallel
+    // threshold.
+    let mut rng = Rng::new(17);
+    let mut a = Matrix::randn(6, 130, 1.0, &mut rng);
+    for (i, v) in a.data.iter_mut().enumerate() {
+        if i % 5 == 0 {
+            *v = 0.0; // exact zeros: the kernel no longer branches on them
+        }
+    }
+    let b = Matrix::randn(130, 27, 1.0, &mut rng);
+    let got = a.matmul(&b);
+    let want = naive_matmul(&a, &b);
+    assert_eq!(got.data, want.data, "register-blocked GEMM diverged");
+}
+
+#[test]
+fn gemm_nt_both_paths_match_naive_bitwise() {
+    // m = 2 runs the per-row dot kernel; m = 6 the transpose-pack +
+    // register-blocked path.  Both must equal per-element ascending dots.
+    let mut rng = Rng::new(18);
+    let b = Matrix::randn(13, 21, 1.0, &mut rng);
+    let mut pack = Vec::new();
+    for m in [2usize, 6] {
+        let a = Matrix::randn(m, 21, 1.0, &mut rng);
+        let mut out = vec![0.0f32; m * 13];
+        spt::sparse::matrix::gemm_nt_into(
+            m, 21, 13, &a.data, &b.data, b.cols, 0, &mut out, &mut pack,
+        );
+        for i in 0..m {
+            for j in 0..13 {
+                let mut acc = 0.0f32;
+                for (x, y) in a.row(i).iter().zip(b.row(j)) {
+                    acc += x * y;
+                }
+                assert_eq!(out[i * 13 + j], acc, "m={m} element ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
 fn packed_gemm_matches_per_call_packing_bitwise() {
     let mut rng = Rng::new(12);
     let a = Matrix::randn(9, 24, 1.0, &mut rng);

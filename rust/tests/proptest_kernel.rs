@@ -1,0 +1,204 @@
+//! Bitwise-equality property tests for the register-blocked microkernel:
+//! every GEMM entry point (`gemm_into`, `gemm_packed_into`,
+//! `gemm_nt_into`) against the naive ascending-`k` triple loop, across
+//! ragged shapes (M, K, N deliberately not multiples of MR/NR/KC), plus
+//! a pool-1/2/8 determinism check through `train_step`.
+//!
+//! Equality is asserted on `to_bits()` — the kernels' contract is exact
+//! bit reproduction of the naive accumulation order, not approximate
+//! agreement.
+
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::{Backend, NativeBackend, TrainState};
+use spt::data::SyntheticCorpus;
+use spt::sparse::{matrix, Matrix, PackedB};
+use spt::util::proptest::{check, prop_assert};
+
+/// Naive triple-loop `A @ B`, ascending k, zero-`a` terms skipped (the
+/// pre-register-blocking kernel's order; the skip is bitwise inert for
+/// finite B — see `sparse::matrix`'s module docs).
+fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for (k, &av) in a.row(i).iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            for (o, &bv) in out.row_mut(i).iter_mut().zip(b.row(k)) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Naive `A @ B^T`: one scalar ascending dot per output element.
+fn matmul_nt_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols);
+    let mut out = Matrix::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            let mut acc = 0.0f32;
+            for (x, y) in a.row(i).iter().zip(b.row(j)) {
+                acc += x * y;
+            }
+            *out.at_mut(i, j) = acc;
+        }
+    }
+    out
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random matrix with exact zeros sprinkled in (the old kernel branched
+/// on them; the new one must not need the branch to stay exact).
+fn ragged_operand(g: &mut spt::util::proptest::Gen, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::from_vec(rows, cols, g.vec_f32(rows * cols));
+    let step = g.usize_in(3, 11);
+    for (i, v) in m.data.iter_mut().enumerate() {
+        if i % step == 0 {
+            *v = 0.0;
+        }
+    }
+    m
+}
+
+#[test]
+fn gemm_into_matches_naive_bits_on_ragged_shapes() {
+    let mut pack = Vec::new();
+    check(60, |g| {
+        let (m, k, n) = (g.usize_in(1, 70), g.usize_in(1, 300), g.usize_in(1, 150));
+        let a = ragged_operand(g, m, k);
+        let b = Matrix::from_vec(k, n, g.vec_f32(k * n));
+        let mut out = vec![0.0f32; m * n];
+        matrix::gemm_into(m, k, n, &a.data, &b.data, n, 0, &mut out, &mut pack);
+        let want = matmul_naive(&a, &b);
+        prop_assert(
+            bits(&out) == bits(&want.data),
+            format!("gemm {m}x{k}x{n} diverged from naive"),
+        )
+    });
+}
+
+#[test]
+fn gemm_packed_into_matches_naive_bits_on_ragged_shapes() {
+    check(40, |g| {
+        let (m, k, n) = (g.usize_in(1, 50), g.usize_in(1, 200), g.usize_in(1, 140));
+        let a = ragged_operand(g, m, k);
+        let b = Matrix::from_vec(k, n, g.vec_f32(k * n));
+        let pb = PackedB::pack(&b);
+        let mut out = vec![0.0f32; m * n];
+        matrix::gemm_packed_into(m, &a.data, &pb, &mut out);
+        let want = matmul_naive(&a, &b);
+        prop_assert(
+            bits(&out) == bits(&want.data),
+            format!("gemm_packed {m}x{k}x{n} diverged from naive"),
+        )
+    });
+}
+
+#[test]
+fn gemm_nt_into_matches_naive_bits_on_both_paths() {
+    // m spans 1..=40: below NT_PACK_MIN_ROWS the per-row dot kernel
+    // runs, at or above it the transpose-pack + register-blocked path —
+    // both must reproduce the naive dots exactly.
+    let mut pack = Vec::new();
+    check(60, |g| {
+        let (m, kd, n) = (g.usize_in(1, 40), g.usize_in(1, 260), g.usize_in(1, 90));
+        let a = ragged_operand(g, m, kd);
+        let b = Matrix::from_vec(n, kd, g.vec_f32(n * kd));
+        let mut out = vec![0.0f32; m * n];
+        matrix::gemm_nt_into(m, kd, n, &a.data, &b.data, b.cols, 0, &mut out, &mut pack);
+        let want = matmul_nt_naive(&a, &b);
+        prop_assert(
+            bits(&out) == bits(&want.data),
+            format!("gemm_nt {m}x{kd}x{n} diverged from naive"),
+        )
+    });
+}
+
+#[test]
+fn gemm_nt_into_column_block_matches_naive_bits() {
+    // The strided/offset B addressing (routed-FFN W_I column blocks).
+    let mut pack = Vec::new();
+    check(30, |g| {
+        let kd = g.usize_in(1, 120);
+        let extra = g.usize_in(0, 30);
+        let col0 = g.usize_in(0, extra);
+        let n = g.usize_in(1, 50);
+        let m = g.usize_in(1, 24);
+        let b_full = Matrix::from_vec(n, kd + extra, g.vec_f32(n * (kd + extra)));
+        let mut b_slice = Matrix::zeros(n, kd);
+        for r in 0..n {
+            b_slice
+                .row_mut(r)
+                .copy_from_slice(&b_full.row(r)[col0..col0 + kd]);
+        }
+        let a = ragged_operand(g, m, kd);
+        let mut out = vec![0.0f32; m * n];
+        matrix::gemm_nt_into(
+            m, kd, n, &a.data, &b_full.data, b_full.cols, col0, &mut out, &mut pack,
+        );
+        let want = matmul_nt_naive(&a, &b_slice);
+        prop_assert(
+            bits(&out) == bits(&want.data),
+            format!("gemm_nt block {m}x{kd}x{n}+{col0} diverged"),
+        )
+    });
+}
+
+/// Two `train_step`s plus the final state under a dedicated pool.
+fn train_under_pool(threads: usize) -> (Vec<u32>, TrainState) {
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("pool");
+    pool.install(|| {
+        let backend = NativeBackend::new();
+        let cfg = RunConfig {
+            model: "spt-nano".into(),
+            mode: Mode::Spt,
+            batch: 8,
+            seq: 32,
+            seed: 123,
+            lr: 5e-3,
+            eval_every: 0,
+            codebook_refresh_every: 0,
+            ..RunConfig::default()
+        };
+        let (batch, seq) = backend.workload(&cfg).unwrap();
+        let vocab = backend.vocab(&cfg).unwrap();
+        let mut corpus = SyntheticCorpus::new(vocab, 4, 0.85, cfg.seed);
+        let mut tokens = Vec::new();
+        let mut targets = Vec::new();
+        for _ in 0..batch {
+            let (x, y) = corpus.lm_pair(seq);
+            tokens.extend(x.iter().map(|&t| t as i32));
+            targets.extend(y.iter().map(|&t| t as i32));
+        }
+        let mut state = backend.init_state(&cfg).unwrap();
+        let mut lbits = Vec::new();
+        for _ in 0..2 {
+            let loss = backend
+                .train_step(&cfg, &mut state, &tokens, &targets)
+                .unwrap();
+            lbits.push(loss.to_bits());
+        }
+        (lbits, state)
+    })
+}
+
+#[test]
+fn train_step_on_register_blocked_kernel_is_pool_invariant() {
+    let (bits1, state1) = train_under_pool(1);
+    for threads in [2usize, 8] {
+        let (bits_t, state_t) = train_under_pool(threads);
+        assert_eq!(bits1, bits_t, "losses diverge at pool size {threads}");
+        assert_eq!(state1.params, state_t.params, "params diverge at pool size {threads}");
+        assert_eq!(state1.m, state_t.m, "AdamW m diverges at pool size {threads}");
+        assert_eq!(state1.v, state_t.v, "AdamW v diverges at pool size {threads}");
+    }
+}

@@ -394,8 +394,37 @@ mod tests {
     }
 
     #[test]
+    fn register_blocked_kernel_fixture() {
+        // The register-blocked microkernel's shape (sparse/kernel.rs):
+        // fixed-width accumulator tiles, ascending-k loop, separate
+        // mul/add — clean under the kernel rules as written.
+        let clean = "let mut acc = [[0.0f32; LANES]; MR];\n\
+                     for kk in kb..kend {\n\
+                         let brow = &panel[kk * w + j..kk * w + j + LANES];\n\
+                         for (o, &bv) in acc[0].iter_mut().zip(brow) {\n\
+                             let prod = av * bv;\n\
+                             *o += prod;\n\
+                         }\n\
+                     }\n";
+        assert!(rules(clean, true).is_empty());
+        // The truncating-cast rule still bites on computed panel
+        // arithmetic in the same loop shape, and the marker suppresses.
+        let cast = "let lane = (kk * w + j) as u32;\n";
+        assert_eq!(rules(cast, true), vec![Rule::TruncCast]);
+        let suppressed =
+            "// det: cast-bounded (panel index fits u32)\nlet lane = (kk * w + j) as u32;\n";
+        assert!(rules(suppressed, true).is_empty());
+        // A parallel merge over kernel tiles without a marker is flagged:
+        // tile results must combine in a fixed order.
+        let par =
+            "let s = tiles.par_iter().map(run_tile).reduce(|| 0.0f32, |a, b| a + b);\n";
+        assert_eq!(rules(par, true), vec![Rule::ParMergeOrder]);
+    }
+
+    #[test]
     fn kernel_path_detection() {
         assert!(is_kernel_path(Path::new("src/sparse/csr.rs")));
+        assert!(is_kernel_path(Path::new("src/sparse/kernel.rs")));
         assert!(is_kernel_path(Path::new("/abs/src/infer/serve.rs")));
         assert!(is_kernel_path(Path::new("src/coordinator/native.rs")));
         assert!(!is_kernel_path(Path::new("src/runtime/engine.rs")));
