@@ -77,8 +77,14 @@ fn main() {
     let _ = run(max_batch);
     let batched = run(max_batch);
     let baseline = run(1);
+    // Overload probe: the whole trace contends for 2 slots, so the
+    // queue-wait percentiles measure time waiting for admission.
+    let overload = run(2.min(max_batch));
     for (b, s) in batched.completions.iter().zip(&baseline.completions) {
         assert_eq!(b.tokens, s.tokens, "request {}: batching changed the tokens", b.id);
+    }
+    for (o, s) in overload.completions.iter().zip(&baseline.completions) {
+        assert_eq!(o.tokens, s.tokens, "request {}: overload changed the tokens", o.id);
     }
     let speedup = batched.tokens_per_sec / baseline.tokens_per_sec.max(1e-9);
 
@@ -88,10 +94,11 @@ fn main() {
              {tokens} new tokens, max_batch {max_batch})",
             mode.as_str()
         ),
-        &["Config", "tok/s", "steps", "p50 lat", "p99 lat", "speedup"],
+        &["Config", "tok/s", "steps", "p50 lat", "p99 lat", "queue p50", "queue p99", "speedup"],
     );
     for (name, r, s) in [
         ("continuous batching", &batched, format!("{speedup:.2}x")),
+        ("overload (batch=2)", &overload, String::new()),
         ("one-at-a-time", &baseline, "1.00x".to_string()),
     ] {
         table.row(&[
@@ -100,6 +107,8 @@ fn main() {
             r.decode_steps.to_string(),
             fmt_duration(r.latency_percentile(50.0)),
             fmt_duration(r.latency_percentile(99.0)),
+            fmt_duration(r.queue_wait_percentile(50.0)),
+            fmt_duration(r.queue_wait_percentile(99.0)),
             s,
         ]);
     }
@@ -114,6 +123,7 @@ fn main() {
     top.insert("max_new_tokens".into(), Json::Num(tokens as f64));
     top.insert("max_batch".into(), Json::Num(max_batch as f64));
     top.insert("batched".into(), batched.to_json());
+    top.insert("overload".into(), overload.to_json());
     top.insert("baseline".into(), baseline.to_json());
     top.insert("speedup".into(), Json::Num(speedup));
     common::emit_json("BENCH_decode_native", &Json::Obj(top));

@@ -1,39 +1,64 @@
-//! Binary checkpointing of training state (no external format crates:
-//! a simple length-prefixed container with a magic header and version).
+//! Crash-safe binary checkpointing of training state (no external
+//! format crates: a length-prefixed container with a magic header,
+//! version, and per-tensor CRC-32).
 //!
-//! Layout (little-endian):
+//! v3 layout (little-endian):
 //! ```text
-//! magic "SPTCKPT2" | u32 model_len | model bytes | u8 mode | u32 n_layers
+//! magic "SPTCKPT3" | u32 model_len | model bytes | u8 mode | u32 n_layers
 //!                  | u32 n_leaves
 //! per leaf: u8 dtype | u32 ndim | u64 dims... | u64 byte_len | payload
+//!           | u32 crc32(payload)
 //! repeated for: params, m, v, then step (i32)
+//! footer: u64 paths_len | paths | u32 crc32(paths)
 //! ```
 //!
-//! v2 embeds the model identity ([`CkptMeta`]: model name, tuning mode,
-//! layer count) so `--resume` and `spt generate` can fail fast with a
-//! clear error instead of a leaf-shape mismatch deep in materialization.
-//! Legacy v1 files ("SPTCKPT1", no identity block) still load — they
-//! just carry no metadata to verify against.
+//! v3 adds the per-payload CRC-32 ([`crate::util::crc`]) so bit-flips on
+//! disk fail the load with a clear error instead of materializing as
+//! silently-wrong weights.  v2 ("SPTCKPT2": identity header, no
+//! checksums) and legacy v1 ("SPTCKPT1": neither) still load.
 //!
-//! The format is leaf-count generic, so the native backend's multi-layer
-//! states (one leaf group per transformer layer) round-trip without any
-//! format changes — `tests/integration_native_train.rs` asserts a
-//! mid-run resume on an `n_layers = 2` preset is bit-identical to an
-//! uninterrupted run.
+//! **Write protocol (crash safety):** every save goes write-tmp →
+//! fsync → rename.  The payload streams into `<name>.tmp` beside the
+//! target, is fsynced, and only then renamed over the final path (plus a
+//! best-effort directory fsync), so a crash at *any* byte leaves either
+//! the complete previous checkpoint or a `.tmp` orphan that loaders and
+//! [`find_latest_valid`] ignore — never a torn file under the real
+//! name.  Transient write errors are retried with deterministic capped
+//! backoff ([`crate::util::retry`]); injected crashes
+//! ([`crate::util::fault`], site `ckpt_crash`) abort mid-write exactly
+//! like `kill -9`, which is what `tests/crash_safety.rs` exercises.
+//!
+//! [`find_latest_valid`] scans a checkpoint directory for `*.ckpt`
+//! files, skips corrupt/truncated ones with a warning, and returns the
+//! newest valid state by step count — the `spt train --auto-resume`
+//! entry point.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use super::state::TrainState;
 use crate::config::Mode;
 use crate::runtime::HostTensor;
+use crate::util::crc::Crc32;
+use crate::util::fault::{self, FaultPlan};
+use crate::util::retry::{self, Backoff};
 
 const MAGIC_V1: &[u8; 8] = b"SPTCKPT1";
 const MAGIC_V2: &[u8; 8] = b"SPTCKPT2";
+const MAGIC_V3: &[u8; 8] = b"SPTCKPT3";
 
-/// Model identity embedded in v2 checkpoint headers.
+/// On-disk format version (v1/v2 are written only by tests; all
+/// production saves are v3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Format {
+    V1,
+    V2,
+    V3,
+}
+
+/// Model identity embedded in v2/v3 checkpoint headers.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CkptMeta {
     pub model: String,
@@ -94,7 +119,7 @@ fn mode_from_code(code: u8) -> Result<Mode> {
     })
 }
 
-fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
+fn write_tensor(w: &mut impl Write, t: &HostTensor, checksum: bool) -> Result<()> {
     let (code, bytes): (u8, Vec<u8>) = match t {
         HostTensor::F32 { data, .. } => {
             (0, data.iter().flat_map(|x| x.to_le_bytes()).collect())
@@ -111,10 +136,15 @@ fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
     }
     w.write_all(&(bytes.len() as u64).to_le_bytes())?;
     w.write_all(&bytes)?;
+    if checksum {
+        let mut crc = Crc32::new();
+        crc.update(&bytes);
+        w.write_all(&crc.finish().to_le_bytes())?;
+    }
     Ok(())
 }
 
-fn read_tensor(r: &mut impl Read) -> Result<HostTensor> {
+fn read_tensor(r: &mut impl Read, checksum: bool) -> Result<HostTensor> {
     let mut code = [0u8; 1];
     r.read_exact(&mut code)?;
     let mut ndim = [0u8; 4];
@@ -138,6 +168,20 @@ fn read_tensor(r: &mut impl Read) -> Result<HostTensor> {
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
+    if checksum {
+        let mut stored = [0u8; 4];
+        r.read_exact(&mut stored)?;
+        let stored = u32::from_le_bytes(stored);
+        let mut crc = Crc32::new();
+        crc.update(&payload);
+        let computed = crc.finish();
+        if computed != stored {
+            bail!(
+                "corrupt checkpoint: tensor crc mismatch \
+                 (stored {stored:#010x}, computed {computed:#010x})"
+            );
+        }
+    }
     Ok(match code[0] {
         0 => HostTensor::f32(
             shape,
@@ -157,26 +201,171 @@ fn read_tensor(r: &mut impl Read) -> Result<HostTensor> {
     })
 }
 
-/// Save a training state (params + optimizer) to disk in the legacy v1
-/// format (no model identity).  Prefer [`save_tagged`], which stamps the
-/// checkpoint with its [`CkptMeta`] so later loads can verify it.
+/// A writer that simulates a mid-write crash: after `crash_after` bytes
+/// it refuses further writes with a [`fault::Crash`]-marked I/O error —
+/// the on-disk effect of `kill -9` between two `write(2)` calls.
+struct FaultWriter<W: Write> {
+    inner: W,
+    written: u64,
+    crash_after: Option<u64>,
+}
+
+impl<W: Write> FaultWriter<W> {
+    fn new(inner: W, crash_after: Option<u64>) -> Self {
+        FaultWriter { inner, written: 0, crash_after }
+    }
+
+    fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for FaultWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let allowed = match self.crash_after {
+            None => buf.len(),
+            Some(limit) => {
+                let remain = limit.saturating_sub(self.written);
+                if remain == 0 {
+                    return Err(std::io::Error::other(fault::Crash {
+                        site: "ckpt_crash".into(),
+                    }));
+                }
+                buf.len().min(remain as usize)
+            }
+        };
+        let n = self.inner.write(&buf[..allowed])?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Save a training state (params + optimizer) in the legacy v1 format
+/// (no identity, no checksums) — kept for format-compat tests.  Prefer
+/// [`save_tagged`], which stamps identity and per-tensor CRCs.  Still
+/// uses the atomic write-tmp → fsync → rename protocol.
 pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
-    save_inner(state, None, path.as_ref())
+    save_with(state, None, path.as_ref(), Format::V1, None)
 }
 
-/// Save a training state stamped with its model identity (v2 header).
+/// Save a training state stamped with its model identity and per-tensor
+/// CRC-32 (v3 header), atomically, retrying transient I/O errors.
 pub fn save_tagged(state: &TrainState, meta: &CkptMeta, path: impl AsRef<Path>) -> Result<()> {
-    save_inner(state, Some(meta), path.as_ref())
+    save_with(state, Some(meta), path.as_ref(), Format::V3, None)
 }
 
-fn save_inner(state: &TrainState, meta: Option<&CkptMeta>, path: &Path) -> Result<()> {
-    let mut w = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
-    );
-    match meta {
-        None => w.write_all(MAGIC_V1)?,
-        Some(m) => {
-            w.write_all(MAGIC_V2)?;
+/// [`save_tagged`] with a fault plan threaded through the write path
+/// (sites `ckpt_write_err`, `ckpt_crash`, `ckpt_crash_bytes`).
+pub fn save_tagged_with(
+    state: &TrainState,
+    meta: &CkptMeta,
+    path: impl AsRef<Path>,
+    plan: Option<&FaultPlan>,
+) -> Result<()> {
+    save_with(state, Some(meta), path.as_ref(), Format::V3, plan)
+}
+
+/// v2 writer for backward-compat tests (nothing in production writes
+/// v2 anymore).
+#[cfg(test)]
+fn save_tagged_v2(state: &TrainState, meta: &CkptMeta, path: &Path) -> Result<()> {
+    save_with(state, Some(meta), path, Format::V2, None)
+}
+
+fn save_with(
+    state: &TrainState,
+    meta: Option<&CkptMeta>,
+    path: &Path,
+    fmt: Format,
+    plan: Option<&FaultPlan>,
+) -> Result<()> {
+    retry::retry(&Backoff::default(), &format!("saving checkpoint {path:?}"), |_attempt| {
+        save_once(state, meta, path, fmt, plan)
+    })
+}
+
+/// One atomic save attempt: stream to `<name>.tmp`, fsync, rename over
+/// the target, best-effort fsync the directory.  A failure at any point
+/// leaves the previous checkpoint (if any) untouched.
+fn save_once(
+    state: &TrainState,
+    meta: Option<&CkptMeta>,
+    path: &Path,
+    fmt: Format,
+    plan: Option<&FaultPlan>,
+) -> Result<()> {
+    if fault::fire(plan, "ckpt_write_err") {
+        return Err(anyhow::Error::from(std::io::Error::other(
+            "injected transient write error (fault site ckpt_write_err)",
+        )))
+        .with_context(|| format!("creating {path:?}"));
+    }
+    let crash_after = if fault::fire(plan, "ckpt_crash") {
+        Some(plan.map(FaultPlan::crash_bytes).unwrap_or(256))
+    } else {
+        None
+    };
+    let tmp = tmp_path(path);
+    let result = write_and_rename(state, meta, path, &tmp, fmt, crash_after);
+    // Clean up the .tmp of an ordinary failure; a simulated crash leaves
+    // its torn .tmp on disk, exactly as a real crash would — recovery
+    // must cope with the orphan.
+    if result.is_err() && crash_after.is_none() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result.with_context(|| format!("saving checkpoint {path:?}"))
+}
+
+fn write_and_rename(
+    state: &TrainState,
+    meta: Option<&CkptMeta>,
+    path: &Path,
+    tmp: &Path,
+    fmt: Format,
+    crash_after: Option<u64>,
+) -> Result<()> {
+    let file = std::fs::File::create(tmp).with_context(|| format!("creating {tmp:?}"))?;
+    let mut w = std::io::BufWriter::new(FaultWriter::new(file, crash_after));
+    write_body(&mut w, state, meta, fmt)?;
+    w.flush()?;
+    let file = w
+        .into_inner()
+        .map_err(|e| anyhow::anyhow!("flushing {tmp:?}: {e}"))?
+        .into_inner();
+    file.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+    drop(file);
+    std::fs::rename(tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    // Make the rename itself durable where the platform allows it.
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
+        }
+    }
+    Ok(())
+}
+
+/// Sibling temp path: `dir/name.ckpt` -> `dir/name.ckpt.tmp` (same
+/// filesystem, so the final rename is atomic).
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+fn write_body(
+    w: &mut impl Write,
+    state: &TrainState,
+    meta: Option<&CkptMeta>,
+    fmt: Format,
+) -> Result<()> {
+    match (fmt, meta) {
+        (Format::V1, _) | (_, None) => w.write_all(MAGIC_V1)?,
+        (fmt, Some(m)) => {
+            w.write_all(if fmt == Format::V3 { MAGIC_V3 } else { MAGIC_V2 })?;
             // det: cast-bounded (model name <= 4096 bytes, checked on load)
             w.write_all(&(m.model.len() as u32).to_le_bytes())?;
             w.write_all(m.model.as_bytes())?;
@@ -184,29 +373,36 @@ fn save_inner(state: &TrainState, meta: Option<&CkptMeta>, path: &Path) -> Resul
             w.write_all(&(m.n_layers as u32).to_le_bytes())?;
         }
     }
+    let checksum = fmt == Format::V3 && meta.is_some();
     w.write_all(&(state.params.len() as u32).to_le_bytes())?; // det: cast-bounded (leaves)
     for group in [&state.params, &state.m, &state.v] {
         for t in group {
-            write_tensor(&mut w, t)?;
+            write_tensor(w, t, checksum)?;
         }
     }
-    write_tensor(&mut w, &state.step)?;
+    write_tensor(w, &state.step, checksum)?;
     // Paths footer for leaf lookup after restore.
     let paths = state.param_paths.join("\n");
     w.write_all(&(paths.len() as u64).to_le_bytes())?;
     w.write_all(paths.as_bytes())?;
+    if checksum {
+        let mut crc = Crc32::new();
+        crc.update(paths.as_bytes());
+        w.write_all(&crc.finish().to_le_bytes())?;
+    }
     Ok(())
 }
 
-/// Restore a training state from disk (either header version),
-/// discarding any identity metadata.  Use [`load_tagged`] when the
-/// caller wants to verify the checkpoint against a run configuration.
+/// Restore a training state from disk (any header version), discarding
+/// identity metadata.  Use [`load_tagged`] when the caller wants to
+/// verify the checkpoint against a run configuration.
 pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
     Ok(load_tagged(path)?.0)
 }
 
 /// Restore a training state plus its identity metadata (`None` for
-/// legacy v1 checkpoints, which carry none).
+/// legacy v1 checkpoints, which carry none).  v3 files verify every
+/// tensor's CRC-32 while reading.
 pub fn load_tagged(path: impl AsRef<Path>) -> Result<(TrainState, Option<CkptMeta>)> {
     let mut r = std::io::BufReader::new(
         std::fs::File::open(path.as_ref())
@@ -214,9 +410,9 @@ pub fn load_tagged(path: impl AsRef<Path>) -> Result<(TrainState, Option<CkptMet
     );
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    let meta = if &magic == MAGIC_V1 {
-        None
-    } else if &magic == MAGIC_V2 {
+    let (meta, checksum) = if &magic == MAGIC_V1 {
+        (None, false)
+    } else if &magic == MAGIC_V2 || &magic == MAGIC_V3 {
         let mut mlen = [0u8; 4];
         r.read_exact(&mut mlen)?;
         let mlen = u32::from_le_bytes(mlen) as usize;
@@ -231,7 +427,10 @@ pub fn load_tagged(path: impl AsRef<Path>) -> Result<(TrainState, Option<CkptMet
         let mode = mode_from_code(code[0])?;
         let mut nl = [0u8; 4];
         r.read_exact(&mut nl)?;
-        Some(CkptMeta { model, mode, n_layers: u32::from_le_bytes(nl) as usize })
+        (
+            Some(CkptMeta { model, mode, n_layers: u32::from_le_bytes(nl) as usize }),
+            &magic == MAGIC_V3,
+        )
     } else {
         bail!("not an SPT checkpoint (bad magic)");
     };
@@ -241,23 +440,86 @@ pub fn load_tagged(path: impl AsRef<Path>) -> Result<(TrainState, Option<CkptMet
     if n > 1_000_000 {
         bail!("corrupt checkpoint: {n} leaves");
     }
-    fn read_group(r: &mut impl Read, n: usize) -> Result<Vec<HostTensor>> {
-        (0..n).map(|_| read_tensor(r)).collect()
+    fn read_group(r: &mut impl Read, n: usize, checksum: bool) -> Result<Vec<HostTensor>> {
+        (0..n).map(|_| read_tensor(r, checksum)).collect()
     }
-    let params = read_group(&mut r, n)?;
-    let m = read_group(&mut r, n)?;
-    let v = read_group(&mut r, n)?;
-    let step = read_tensor(&mut r)?;
+    let params = read_group(&mut r, n, checksum)?;
+    let m = read_group(&mut r, n, checksum)?;
+    let v = read_group(&mut r, n, checksum)?;
+    let step = read_tensor(&mut r, checksum)?;
     let mut plen = [0u8; 8];
     r.read_exact(&mut plen)?;
     let plen = u64::from_le_bytes(plen) as usize;
+    if plen > (1 << 26) {
+        bail!("corrupt checkpoint: paths footer {plen} bytes");
+    }
     let mut pbuf = vec![0u8; plen];
     r.read_exact(&mut pbuf)?;
+    if checksum {
+        let mut stored = [0u8; 4];
+        r.read_exact(&mut stored)?;
+        let stored = u32::from_le_bytes(stored);
+        let mut crc = Crc32::new();
+        crc.update(&pbuf);
+        if crc.finish() != stored {
+            bail!("corrupt checkpoint: paths footer crc mismatch");
+        }
+    }
     let param_paths = String::from_utf8(pbuf)?
         .split('\n')
         .map(str::to_string)
         .collect();
     Ok((TrainState { params, m, v, step, param_paths }, meta))
+}
+
+/// The newest valid checkpoint in a directory.
+#[derive(Debug)]
+pub struct LatestCkpt {
+    pub path: PathBuf,
+    pub state: TrainState,
+    pub meta: Option<CkptMeta>,
+    pub step: usize,
+}
+
+/// Scan `dir` for `*.ckpt` files, skip corrupt/truncated ones with a
+/// warning on stderr (and `.tmp` orphans silently — those are torn
+/// writes by construction), and return the valid checkpoint with the
+/// highest step count (ties: lexicographically last path).  `Ok(None)`
+/// when the directory is empty or holds nothing loadable.
+pub fn find_latest_valid(dir: impl AsRef<Path>) -> Result<Option<LatestCkpt>> {
+    let dir = dir.as_ref();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning checkpoint dir {dir:?}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("ckpt"))
+        .collect();
+    paths.sort();
+    let mut best: Option<LatestCkpt> = None;
+    for path in paths {
+        let (state, meta) = match load_tagged(&path) {
+            Ok(loaded) => loaded,
+            Err(e) => {
+                eprintln!("[spt] skipping corrupt checkpoint {path:?}: {e:#}");
+                continue;
+            }
+        };
+        let step = match state.step.scalar() {
+            Ok(s) if s >= 0 => s as usize,
+            _ => {
+                eprintln!("[spt] skipping checkpoint {path:?}: unreadable step counter");
+                continue;
+            }
+        };
+        // `>=` so a later path wins a step tie (paths are sorted).
+        let better = match &best {
+            Some(b) => step >= b.step,
+            None => true,
+        };
+        if better {
+            best = Some(LatestCkpt { path, state, meta, step });
+        }
+    }
+    Ok(best)
 }
 
 #[cfg(test)]
@@ -283,10 +545,20 @@ mod tests {
         }
     }
 
+    fn meta() -> CkptMeta {
+        CkptMeta { model: "spt-nano-l2".into(), mode: Mode::Spt, n_layers: 2 }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("spt_ckpt_test").join(name);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join("spt_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("v1_roundtrip");
         let path = dir.join("s.ckpt");
         let s = state();
         save(&s, &path).unwrap();
@@ -300,16 +572,15 @@ mod tests {
 
     #[test]
     fn tagged_roundtrip_preserves_meta_and_state() {
-        let dir = std::env::temp_dir().join("spt_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("v3_roundtrip");
         let path = dir.join("tagged.ckpt");
         let s = state();
-        let meta = CkptMeta {
-            model: "spt-nano-l2".into(),
-            mode: Mode::Spt,
-            n_layers: 2,
-        };
+        let meta = meta();
         save_tagged(&s, &meta, &path).unwrap();
+        // v3 on disk, and no .tmp orphan after a clean save.
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V3);
+        assert!(!tmp_path(&path).exists());
         let (s2, m2) = load_tagged(&path).unwrap();
         assert_eq!(s.params, s2.params);
         assert_eq!(s.step, s2.step);
@@ -326,14 +597,30 @@ mod tests {
 
     #[test]
     fn legacy_v1_loads_with_no_meta() {
-        let dir = std::env::temp_dir().join("spt_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("v1_legacy");
         let path = dir.join("legacy.ckpt");
         let s = state();
         save(&s, &path).unwrap();
         let (s2, meta) = load_tagged(&path).unwrap();
         assert_eq!(s.params, s2.params);
         assert!(meta.is_none());
+    }
+
+    #[test]
+    fn legacy_v2_still_loads_and_truncation_errors_cleanly() {
+        let dir = tmp_dir("v2_compat");
+        let path = dir.join("v2.ckpt");
+        let s = state();
+        save_tagged_v2(&s, &meta(), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V2);
+        let (s2, m2) = load_tagged(&path).unwrap();
+        assert_eq!(s.params, s2.params);
+        assert_eq!(m2, Some(meta()));
+        // Mid-tensor truncation on the checksum-free format still fails
+        // (read_exact hits EOF) — just without a CRC message.
+        std::fs::write(&path, &bytes[..bytes.len() * 3 / 5]).unwrap();
+        assert!(load_tagged(&path).is_err());
     }
 
     #[test]
@@ -348,12 +635,10 @@ mod tests {
     }
 
     #[test]
-    fn detects_truncation_inside_v2_header() {
-        let dir = std::env::temp_dir().join("spt_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+    fn detects_truncation_inside_header() {
+        let dir = tmp_dir("trunc_header");
         let path = dir.join("trunc_header.ckpt");
-        let meta = CkptMeta { model: "spt-nano-l2".into(), mode: Mode::Spt, n_layers: 2 };
-        save_tagged(&state(), &meta, &path).unwrap();
+        save_tagged(&state(), &meta(), &path).unwrap();
         // Cut mid-way through the model name: magic (8) + name len (4) + 3.
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..15]).unwrap();
@@ -362,8 +647,7 @@ mod tests {
 
     #[test]
     fn rejects_corrupt_mode_code() {
-        let dir = std::env::temp_dir().join("spt_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("badmode");
         let path = dir.join("badmode.ckpt");
         let meta = CkptMeta { model: "m".into(), mode: Mode::Lora, n_layers: 1 };
         save_tagged(&state(), &meta, &path).unwrap();
@@ -377,21 +661,97 @@ mod tests {
 
     #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("spt_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("garbage");
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(load(&path).is_err());
     }
 
     #[test]
-    fn detects_truncation() {
-        let dir = std::env::temp_dir().join("spt_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+    fn detects_mid_tensor_truncation() {
+        let dir = tmp_dir("trunc_tensor");
         let path = dir.join("trunc.ckpt");
-        save(&state(), &path).unwrap();
+        save_tagged(&state(), &meta(), &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load(&path).is_err());
+        // Cut inside the first tensor's payload: the v3 header for
+        // model "spt-nano-l2" is 8+4+11+1+4 = 28 bytes, +4 n_leaves,
+        // +1 dtype +4 ndim +16 dims +8 len = 61; payload starts at 61.
+        std::fs::write(&path, &bytes[..65]).unwrap();
+        assert!(load_tagged(&path).is_err());
+    }
+
+    #[test]
+    fn v3_crc_catches_payload_bit_flip() {
+        let dir = tmp_dir("bitflip");
+        let path = dir.join("flip.ckpt");
+        save_tagged(&state(), &meta(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // First tensor payload (f32 [2,3]) spans bytes 61..85 (see
+        // detects_mid_tensor_truncation for the offset arithmetic).
+        // A single flipped bit must fail the CRC, not load silently.
+        bytes[70] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_tagged(&path).unwrap_err();
+        assert!(err.to_string().contains("crc mismatch"), "{err}");
+    }
+
+    #[test]
+    fn interrupted_save_leaves_previous_checkpoint_intact() {
+        let dir = tmp_dir("crash");
+        let path = dir.join("s.ckpt");
+        let mut s = state();
+        save_tagged(&s, &meta(), &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Second save crashes mid-write (after 64 bytes).
+        s.step = HostTensor::scalar_i32(43);
+        let plan = FaultPlan::new().with("ckpt_crash", 1).with("ckpt_crash_bytes", 64);
+        let err = save_tagged_with(&s, &meta(), &path, Some(&plan)).unwrap_err();
+        assert!(fault::is_crash(&err), "{err:#}");
+        // The real path still holds the previous complete checkpoint;
+        // the torn bytes live only in the .tmp orphan.
+        assert_eq!(std::fs::read(&path).unwrap(), good);
+        let torn = tmp_path(&path);
+        assert!(torn.exists());
+        assert_eq!(std::fs::metadata(&torn).unwrap().len(), 64);
+        let (s2, _) = load_tagged(&path).unwrap();
+        assert_eq!(s2.step, HostTensor::scalar_i32(42));
+    }
+
+    #[test]
+    fn transient_write_error_is_retried() {
+        let dir = tmp_dir("transient");
+        let path = dir.join("s.ckpt");
+        let plan = FaultPlan::new().with("ckpt_write_err", 1);
+        save_tagged_with(&state(), &meta(), &path, Some(&plan)).unwrap();
+        assert_eq!(plan.probes("ckpt_write_err"), 2, "failed once, succeeded once");
+        let (s2, _) = load_tagged(&path).unwrap();
+        assert_eq!(s2.params, state().params);
+    }
+
+    #[test]
+    fn find_latest_valid_skips_corruption_and_orphans() {
+        let dir = tmp_dir("latest");
+        let mut s = state();
+        // Steps 10 and 20 saved cleanly; step 30 corrupted afterwards.
+        for step in [10, 20, 30] {
+            s.step = HostTensor::scalar_i32(step);
+            save_tagged(&s, &meta(), &dir.join(format!("step-{step:08}.ckpt"))).unwrap();
+        }
+        let p30 = dir.join("step-00000030.ckpt");
+        let bytes = std::fs::read(&p30).unwrap();
+        std::fs::write(&p30, &bytes[..bytes.len() / 2]).unwrap();
+        // Plus a torn .tmp orphan and a non-checkpoint file.
+        std::fs::write(dir.join("step-00000040.ckpt.tmp"), b"torn").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"hi").unwrap();
+        let best = find_latest_valid(&dir).unwrap().expect("a valid checkpoint");
+        assert_eq!(best.step, 20);
+        assert_eq!(best.path, dir.join("step-00000020.ckpt"));
+        assert_eq!(best.meta, Some(meta()));
+        assert_eq!(best.state.step, HostTensor::scalar_i32(20));
+
+        // An empty directory yields None, a missing one errors.
+        let empty = tmp_dir("latest_empty");
+        assert!(find_latest_valid(&empty).unwrap().is_none());
+        assert!(find_latest_valid(empty.join("nope")).is_err());
     }
 }

@@ -21,15 +21,18 @@
 //! the restored step count), so the resumed loss curve is bit-identical
 //! — `tests/integration_native_train.rs` asserts this.
 
+use std::sync::Arc;
 use std::time::Instant; // det: wall-clock (throughput metrics only)
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::backend::Backend;
+use super::checkpoint::{self, CkptMeta};
 use super::state::TrainState;
-use crate::config::{Mode, RunConfig};
+use crate::config::{presets, Mode, RunConfig};
 use crate::data::{Batcher, QaTaskGen, SyntheticCorpus};
 use crate::metrics::Counters;
+use crate::util::fault::{self, FaultPlan};
 
 /// Trainer options beyond the run config.
 #[derive(Debug, Clone)]
@@ -44,6 +47,15 @@ pub struct TrainerOptions {
     /// Halt after this many optimizer steps *this run* (checkpoint /
     /// resume workflows; `None` runs to `rc.steps`).
     pub stop_after: Option<usize>,
+    /// Periodic crash-safe checkpointing: every `ckpt_every` optimizer
+    /// steps, write `step-{step:08}.ckpt` into `ckpt_dir` atomically
+    /// (v3, per-tensor CRC).  `--auto-resume` scans the same directory.
+    pub ckpt_dir: Option<std::path::PathBuf>,
+    pub ckpt_every: usize,
+    /// Fault plan threaded through checkpoint I/O (chaos tests / the
+    /// `SPT_FAULT_PLAN` env var).  Recoverable faults never change what
+    /// the trainer computes — only crash faults abort the run.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for TrainerOptions {
@@ -54,6 +66,9 @@ impl Default for TrainerOptions {
             corpus_branch: 4,
             corpus_bigram_p: 0.85,
             stop_after: None,
+            ckpt_dir: None,
+            ckpt_every: 0,
+            fault: None,
         }
     }
 }
@@ -147,6 +162,12 @@ impl<'b, B: Backend> Trainer<'b, B> {
     /// an uninterrupted run would have used.
     pub fn train_from(&mut self, mut state: TrainState) -> Result<TrainReport> {
         let (batch, seq) = self.backend.workload(&self.rc)?;
+        if self.rc.steps == 0 {
+            bail!("nothing to train: --steps is 0 (set --steps >= 1)");
+        }
+        if batch == 0 || seq == 0 {
+            bail!("empty workload: batch {batch} x seq {seq} (both must be >= 1)");
+        }
         let use_chunk =
             self.opts.chunked && self.backend.supports_chunked(&self.rc);
         let start = state.step.scalar()? as usize;
@@ -205,14 +226,29 @@ impl<'b, B: Backend> Trainer<'b, B> {
             }
 
             if self.rc.eval_every > 0 && step_i % self.rc.eval_every == 0 {
+                let Some(&train_loss) = losses.last() else {
+                    bail!(
+                        "eval fired at step {step_i} with no training loss recorded \
+                         (resumed at {start}, stop_after {:?})",
+                        self.opts.stop_after
+                    );
+                };
                 let eval_loss = self.eval_loss(&state, &mut eval_batcher)?;
                 evals.push(EvalPoint {
                     step: step_i,
-                    train_loss: *losses.last().unwrap(),
+                    train_loss,
                     eval_loss,
                     ppl: eval_loss.exp(),
                     elapsed_secs: t0.elapsed().as_secs_f64(),
                 });
+            }
+
+            // Periodic crash-safe checkpoint (after refresh/eval, so a
+            // resumed run replays the identical schedule from here).
+            if self.opts.ckpt_every > 0 && step_i % self.opts.ckpt_every == 0 {
+                if let Some(dir) = self.opts.ckpt_dir.clone() {
+                    self.save_periodic(&dir, step_i, &state)?;
+                }
             }
         }
         let total = t0.elapsed().as_secs_f64();
@@ -229,6 +265,42 @@ impl<'b, B: Backend> Trainer<'b, B> {
         };
         self.last_state = Some(state);
         Ok(report)
+    }
+
+    /// Identity stamped into checkpoints this trainer writes.
+    pub fn ckpt_meta(&self) -> Result<CkptMeta> {
+        Ok(CkptMeta {
+            model: self.rc.model.clone(),
+            mode: self.rc.mode,
+            n_layers: presets::model(&self.rc.model)?.n_layers.max(1),
+        })
+    }
+
+    /// One periodic crash-safe checkpoint.  A recoverable save failure
+    /// (post-retry) is warned and skipped — losing one checkpoint must
+    /// not kill a training run; an injected crash fault aborts exactly
+    /// like the process dying mid-write.
+    fn save_periodic(
+        &self,
+        dir: &std::path::Path,
+        step_i: usize,
+        state: &TrainState,
+    ) -> Result<()> {
+        let path = dir.join(format!("step-{step_i:08}.ckpt"));
+        let meta = self.ckpt_meta()?;
+        let result = std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {dir:?}"))
+            .and_then(|()| {
+                checkpoint::save_tagged_with(state, &meta, &path, self.opts.fault.as_deref())
+            });
+        match result {
+            Ok(()) => Ok(()),
+            Err(e) if fault::is_crash(&e) => Err(e),
+            Err(e) => {
+                eprintln!("[spt] warning: periodic checkpoint failed, continuing: {e:#}");
+                Ok(())
+            }
+        }
     }
 
     /// Whether the codebook refresh fires after step `step_i`.
@@ -296,6 +368,12 @@ impl<'b, B: Backend> Trainer<'b, B> {
     /// QA fine-tune + accuracy eval (Table 3's MMLU surrogate).
     pub fn train_qa(&mut self) -> Result<TrainReport> {
         let (batch, seq) = self.backend.workload(&self.rc)?;
+        if self.rc.steps == 0 {
+            bail!("nothing to train: --steps is 0 (set --steps >= 1)");
+        }
+        if batch == 0 || seq == 0 {
+            bail!("empty workload: batch {batch} x seq {seq} (both must be >= 1)");
+        }
         let vocab = self.backend.vocab(&self.rc)?;
         let mut state = self.backend.init_state(&self.rc)?;
         let mut gen = QaTaskGen::new(vocab, 64, self.rc.seed);

@@ -1,0 +1,710 @@
+//! Crash-safe serving daemon: an NDJSON request/stream protocol around
+//! [`ServeDriver`] with bounded admission, memory-budget accounting,
+//! step-counted deadlines, and graceful drain.
+//!
+//! ## Protocol (one JSON object per line, both directions)
+//!
+//! Requests:
+//! - `{"op":"submit","id":N,"prompt":[t,...],"max_new_tokens":M}`
+//! - `{"op":"status"}`
+//! - `{"op":"drain"}` — stop admitting, finish in-flight work, emit the
+//!   final `{"event":"report",...}` and exit.
+//!
+//! Events:
+//! - `{"event":"accepted","id":N,"cost_bytes":C,"queued":Q}`
+//! - `{"event":"rejected","id":N,"code":"queue_full|mem_budget|invalid|draining","reason":..}`
+//! - `{"event":"done","id":N,"tokens":[..],"latency_s":..,"queue_wait_s":..[,"error":..]}`
+//! - `{"event":"status",...}` / `{"event":"report",...}` /
+//!   `{"event":"error","reason":..}` (malformed input degrades that
+//!   line, never the daemon).
+//!
+//! ## Admission control
+//!
+//! Every request is charged its *target-length* footprint up front —
+//! [`crate::memmodel::decode_request_bytes`] at `prompt + max_new`
+//! tokens — so the sum of charges over in-flight requests is a provable
+//! upper bound on their cache bytes at any step.  A request is fed to
+//! the driver only while `committed + cost <= mem_budget`; otherwise it
+//! waits in the daemon's bounded queue (capacity `queue_cap`, overflow
+//! rejected with a structured `queue_full` error, never silently
+//! dropped).
+//!
+//! ## Determinism
+//!
+//! Deadlines are counted in *decode steps*, not wall time, and faults
+//! come from the seeded [`FaultPlan`] — so a daemon fed the same script
+//! produces the same admissions, cancellations, and token streams at
+//! any rayon pool size.  Wall-clock only ever lands in latency metrics.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::serve::{Completion, Request, ServeConfig, ServeDriver, ServeReport};
+use super::session::InferModel;
+use crate::config::{presets, BlockConfig, Mode};
+use crate::memmodel;
+use crate::util::fault::{self, FaultPlan};
+use crate::util::json::Json;
+use crate::util::retry::{retry, Backoff};
+
+/// Daemon knobs on top of the driver's [`ServeConfig`].
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    pub serve: ServeConfig,
+    /// Capacity of the daemon's admission queue (requests accepted but
+    /// not yet fed to the driver).  Overflow is rejected, not dropped.
+    pub queue_cap: usize,
+    /// Upper bound on the summed target-length cache footprint of
+    /// requests fed to the driver.  `None` disables the budget.
+    pub mem_budget: Option<u64>,
+    /// Cancel a request once it has been in the driver this many decode
+    /// steps (a deterministic deadline).  `None` disables deadlines.
+    pub deadline_steps: Option<usize>,
+    /// Fault-injection plan (sites `queue_full`, `accept_err`).
+    pub fault: Option<Arc<FaultPlan>>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            serve: ServeConfig::default(),
+            queue_cap: 64,
+            mem_budget: None,
+            deadline_steps: None,
+            fault: None,
+        }
+    }
+}
+
+fn event(kind: &str, pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("event".to_string(), Json::Str(kind.to_string()));
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn error_event(reason: impl Into<String>) -> Json {
+    event("error", vec![("reason", Json::Str(reason.into()))])
+}
+
+/// The daemon: driver + admission queue + budget/deadline bookkeeping.
+pub struct Daemon<'m> {
+    driver: ServeDriver<'m>,
+    cfg: DaemonConfig,
+    block: BlockConfig,
+    mode: Mode,
+    n_layers: usize,
+    max_seq: usize,
+    /// Accepted requests not yet fed to the driver (budget backlog).
+    pending: VecDeque<Request>,
+    /// Charged bytes per live request id (pending or in driver).
+    cost: BTreeMap<usize, u64>,
+    /// Bytes charged for requests currently fed to the driver.
+    committed: u64,
+    /// Driver decode-step count at the moment each request was fed.
+    admitted_at: BTreeMap<usize, usize>,
+    /// Completions already streamed as `done` events, folded back into
+    /// the final report.
+    done: Vec<Completion>,
+    draining: bool,
+}
+
+impl<'m> Daemon<'m> {
+    pub fn new(model: &'m InferModel, cfg: DaemonConfig) -> Result<Self> {
+        let mc = presets::model(model.model_name())?;
+        Ok(Daemon {
+            driver: ServeDriver::new(model, cfg.serve.clone())?,
+            block: mc.block,
+            mode: model.mode(),
+            n_layers: mc.n_layers.max(1),
+            max_seq: model.max_seq(),
+            cfg,
+            pending: VecDeque::new(),
+            cost: BTreeMap::new(),
+            committed: 0,
+            admitted_at: BTreeMap::new(),
+            done: Vec::new(),
+            draining: false,
+        })
+    }
+
+    /// Stop admitting; already-accepted work still runs to completion.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Anything left to do (pending, queued in driver, or in flight)?
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.driver.queued() > 0 || self.driver.in_flight() > 0
+    }
+
+    /// Bytes currently charged against the memory budget.
+    pub fn committed_bytes(&self) -> u64 {
+        self.committed
+    }
+
+    /// Handle one protocol line; returns the events it produced.
+    /// Malformed input yields an `error` event — the daemon never dies
+    /// on bad bytes.
+    pub fn handle_line(&mut self, line: &str) -> Vec<Json> {
+        let line = line.trim();
+        if line.is_empty() {
+            return Vec::new();
+        }
+        let v = match crate::util::json::parse(line) {
+            Ok(v) => v,
+            Err(e) => return vec![error_event(format!("bad json: {e}"))],
+        };
+        match v.get("op").as_str() {
+            Some("submit") => self.op_submit(&v),
+            Some("status") => vec![self.status_event()],
+            Some("drain") => {
+                self.begin_drain();
+                vec![self.status_event()]
+            }
+            Some(other) => vec![error_event(format!("unknown op '{other}'"))],
+            None => vec![error_event("missing 'op' field")],
+        }
+    }
+
+    fn status_event(&self) -> Json {
+        event(
+            "status",
+            vec![
+                ("pending", Json::Num(self.pending.len() as f64)),
+                ("in_flight", Json::Num(self.driver.in_flight() as f64)),
+                ("driver_queued", Json::Num(self.driver.queued() as f64)),
+                ("committed_bytes", Json::Num(self.committed as f64)),
+                ("decode_steps", Json::Num(self.driver.decode_steps() as f64)),
+                ("draining", Json::Bool(self.draining)),
+            ],
+        )
+    }
+
+    fn rejected(id: Option<usize>, code: &str, reason: impl Into<String>) -> Json {
+        let mut pairs = vec![
+            ("code", Json::Str(code.to_string())),
+            ("reason", Json::Str(reason.into())),
+        ];
+        if let Some(id) = id {
+            pairs.insert(0, ("id", Json::Num(id as f64)));
+        }
+        event("rejected", pairs)
+    }
+
+    fn op_submit(&mut self, v: &Json) -> Vec<Json> {
+        let Some(id) = v.get("id").as_usize() else {
+            return vec![Self::rejected(None, "invalid", "missing or non-numeric 'id'")];
+        };
+        if self.draining {
+            return vec![Self::rejected(Some(id), "draining", "daemon is draining")];
+        }
+        if self.cost.contains_key(&id) {
+            return vec![Self::rejected(
+                Some(id),
+                "invalid",
+                format!("request id {id} is already live"),
+            )];
+        }
+        let Some(arr) = v.get("prompt").as_arr() else {
+            return vec![Self::rejected(Some(id), "invalid", "'prompt' must be a token array")];
+        };
+        let mut prompt = Vec::with_capacity(arr.len());
+        for t in arr {
+            match t.as_i64().and_then(|x| i32::try_from(x).ok()) {
+                Some(tok) => prompt.push(tok),
+                None => {
+                    return vec![Self::rejected(
+                        Some(id),
+                        "invalid",
+                        "prompt tokens must be i32 integers",
+                    )]
+                }
+            }
+        }
+        let Some(max_new) = v.get("max_new_tokens").as_usize() else {
+            return vec![Self::rejected(
+                Some(id),
+                "invalid",
+                "missing or non-numeric 'max_new_tokens'",
+            )];
+        };
+        // Mirror the driver's validation so a fed request cannot fail it.
+        if prompt.is_empty() {
+            return vec![Self::rejected(Some(id), "invalid", "empty prompt")];
+        }
+        if max_new == 0 {
+            return vec![Self::rejected(Some(id), "invalid", "max_new_tokens must be >= 1")];
+        }
+        let target = prompt.len() + max_new;
+        if target > self.max_seq {
+            return vec![Self::rejected(
+                Some(id),
+                "invalid",
+                format!(
+                    "prompt {} + max_new {} exceeds max_seq {}",
+                    prompt.len(),
+                    max_new,
+                    self.max_seq
+                ),
+            )];
+        }
+        if fault::fire(self.cfg.fault.as_deref(), "queue_full")
+            || self.pending.len() >= self.cfg.queue_cap
+        {
+            return vec![Self::rejected(
+                Some(id),
+                "queue_full",
+                format!("admission queue at capacity {}", self.cfg.queue_cap),
+            )];
+        }
+        let cost = memmodel::decode_request_bytes(&self.block, self.mode, target, self.n_layers);
+        if let Some(budget) = self.cfg.mem_budget {
+            if cost > budget {
+                return vec![Self::rejected(
+                    Some(id),
+                    "mem_budget",
+                    format!("request needs {cost} bytes, budget is {budget}"),
+                )];
+            }
+        }
+        let queued = self.pending.len() + 1;
+        self.cost.insert(id, cost);
+        self.pending.push_back(Request { id, prompt, max_new_tokens: max_new });
+        vec![event(
+            "accepted",
+            vec![
+                ("id", Json::Num(id as f64)),
+                ("cost_bytes", Json::Num(cost as f64)),
+                ("queued", Json::Num(queued as f64)),
+            ],
+        )]
+    }
+
+    /// Feed pending requests to the driver while the budget allows.
+    fn feed_driver(&mut self, events: &mut Vec<Json>) {
+        while let Some(front) = self.pending.front() {
+            let id = front.id;
+            let cost = self.cost.get(&id).copied().unwrap_or(0);
+            if let Some(budget) = self.cfg.mem_budget {
+                if self.committed + cost > budget {
+                    break;
+                }
+            }
+            let Some(req) = self.pending.pop_front() else { break };
+            match self.driver.submit(req) {
+                Ok(()) => {
+                    self.committed += cost;
+                    self.admitted_at.insert(id, self.driver.decode_steps());
+                }
+                Err(e) => {
+                    // Validation mirrored at submit should make this
+                    // unreachable; degrade the one request regardless.
+                    self.cost.remove(&id);
+                    let c = Completion {
+                        id,
+                        tokens: Vec::new(),
+                        latency_secs: 0.0,
+                        queue_wait_secs: 0.0,
+                        error: Some(format!("driver rejected request: {e:#}")),
+                    };
+                    events.push(Self::done_event(&c));
+                    self.done.push(c);
+                }
+            }
+        }
+    }
+
+    fn done_event(c: &Completion) -> Json {
+        let tokens = Json::Arr(c.tokens.iter().map(|&t| Json::Num(f64::from(t))).collect());
+        let mut pairs = vec![
+            ("id", Json::Num(c.id as f64)),
+            ("tokens", tokens),
+            ("latency_s", Json::Num(c.latency_secs)),
+            ("queue_wait_s", Json::Num(c.queue_wait_secs)),
+        ];
+        if let Some(err) = &c.error {
+            pairs.push(("error", Json::Str(err.clone())));
+        }
+        event("done", pairs)
+    }
+
+    /// One scheduler turn: feed the driver, run one batched step,
+    /// enforce deadlines, and emit `done` events for retirements.
+    pub fn pump(&mut self) -> Result<Vec<Json>> {
+        let mut events = Vec::new();
+        self.feed_driver(&mut events);
+        if self.driver.queued() > 0 || self.driver.in_flight() > 0 {
+            self.driver.step()?;
+            if let Some(limit) = self.cfg.deadline_steps {
+                let now = self.driver.decode_steps();
+                let overdue: Vec<usize> = self
+                    .driver
+                    .in_flight_ids()
+                    .into_iter()
+                    .filter(|id| {
+                        self.admitted_at
+                            .get(id)
+                            .is_some_and(|at| now.saturating_sub(*at) >= limit)
+                    })
+                    .collect();
+                for id in overdue {
+                    self.driver
+                        .cancel(id, &format!("deadline exceeded: {limit} decode steps"));
+                }
+            }
+        }
+        for c in self.driver.take_finished() {
+            if let Some(cost) = self.cost.remove(&c.id) {
+                self.committed = self.committed.saturating_sub(cost);
+            }
+            self.admitted_at.remove(&c.id);
+            events.push(Self::done_event(&c));
+            self.done.push(c);
+        }
+        Ok(events)
+    }
+
+    /// Drain to completion and build the final report (folds streamed
+    /// completions back in so the report covers the daemon's lifetime).
+    pub fn finish(&mut self) -> Result<(Vec<Json>, ServeReport)> {
+        self.begin_drain();
+        let mut events = Vec::new();
+        while self.has_work() {
+            events.extend(self.pump()?);
+        }
+        let drained = std::mem::take(&mut self.done);
+        let report = self.driver.report(drained);
+        let report_event = match report.to_json() {
+            Json::Obj(mut m) => {
+                m.insert("event".to_string(), Json::Str("report".to_string()));
+                Json::Obj(m)
+            }
+            other => other,
+        };
+        events.push(report_event);
+        Ok((events, report))
+    }
+
+    /// Serve one NDJSON stream.  Input lines are read on a helper
+    /// thread so in-flight decoding never stalls on a slow client.
+    /// Returns `Some(report)` when this stream drained the daemon
+    /// (explicit `drain` op, or EOF with `eof_drains`); `None` when the
+    /// stream ended but the daemon should keep serving (TCP client
+    /// disconnect — accepted work still runs to completion first).
+    pub fn serve_stream<R, W>(
+        &mut self,
+        reader: R,
+        mut writer: W,
+        eof_drains: bool,
+    ) -> Result<Option<ServeReport>>
+    where
+        R: Read + Send + 'static,
+        W: Write,
+    {
+        let (tx, rx) = mpsc::channel::<String>();
+        // Detached on purpose: over TCP the client may hold the socket
+        // open past drain, and the thread exits when its next send
+        // fails after `rx` drops.
+        std::thread::spawn(move || {
+            let mut br = BufReader::new(reader);
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match br.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {
+                        if tx.send(line.trim_end().to_string()).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+        });
+        let mut eof = false;
+        loop {
+            // Drain whatever input is ready without blocking.
+            loop {
+                match rx.try_recv() {
+                    Ok(line) => {
+                        let events = self.handle_line(&line);
+                        write_events(&mut writer, &events)?;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        eof = true;
+                        break;
+                    }
+                }
+            }
+            if eof && eof_drains {
+                self.begin_drain();
+            }
+            if self.draining && !self.has_work() {
+                break;
+            }
+            if self.has_work() {
+                let events = self.pump()?;
+                write_events(&mut writer, &events)?;
+            } else if eof {
+                // Stream over, nothing to do, not draining: hand the
+                // daemon back to the caller (next connection).
+                return Ok(None);
+            } else {
+                // Idle: block for the next request line.
+                match rx.recv() {
+                    Ok(line) => {
+                        let events = self.handle_line(&line);
+                        write_events(&mut writer, &events)?;
+                    }
+                    Err(_) => eof = true,
+                }
+            }
+        }
+        let (events, report) = self.finish()?;
+        write_events(&mut writer, &events)?;
+        Ok(Some(report))
+    }
+
+    /// Serve connections on `addr` until one requests a drain.  Accept
+    /// errors are retried with capped backoff (fault site `accept_err`
+    /// exercises that path deterministically).
+    pub fn serve_tcp(&mut self, addr: &str) -> Result<ServeReport> {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding daemon listener on {addr}"))?;
+        eprintln!(
+            "[spt] daemon listening on {}",
+            listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.to_string())
+        );
+        loop {
+            let plan = self.cfg.fault.clone();
+            let stream = retry(&Backoff::default(), "accepting daemon connection", |_| {
+                if fault::fire(plan.as_deref(), "accept_err") {
+                    return Err(std::io::Error::other("injected accept failure").into());
+                }
+                let (stream, peer) = listener.accept().context("accept")?;
+                eprintln!("[spt] connection from {peer}");
+                Ok(stream)
+            })?;
+            let reader = stream.try_clone().context("cloning daemon connection")?;
+            if let Some(report) = self.serve_stream(reader, stream, false)? {
+                return Ok(report);
+            }
+        }
+    }
+}
+
+fn write_events(writer: &mut impl Write, events: &[Json]) -> Result<()> {
+    for e in events {
+        writeln!(writer, "{e}").context("writing daemon event")?;
+    }
+    if !events.is_empty() {
+        writer.flush().context("flushing daemon events")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::{Backend, NativeBackend};
+
+    fn model() -> InferModel {
+        let rc = RunConfig {
+            model: "spt-nano".into(),
+            mode: Mode::Spt,
+            seed: 5,
+            ..RunConfig::default()
+        };
+        let backend = NativeBackend::new();
+        let state = backend.init_state(&rc).unwrap();
+        InferModel::new(&rc, state).unwrap()
+    }
+
+    fn submit_line(id: usize, prompt: &[i32], max_new: usize) -> String {
+        let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        format!(
+            r#"{{"op":"submit","id":{id},"prompt":[{}],"max_new_tokens":{max_new}}}"#,
+            toks.join(",")
+        )
+    }
+
+    fn kind(e: &Json) -> &str {
+        e.get("event").as_str().unwrap_or("?")
+    }
+
+    #[test]
+    fn lifecycle_submit_pump_drain() {
+        let m = model();
+        let mut d = Daemon::new(&m, DaemonConfig::default()).unwrap();
+        let ev = d.handle_line(&submit_line(1, &[1, 2, 3], 4));
+        assert_eq!(ev.len(), 1);
+        assert_eq!(kind(&ev[0]), "accepted");
+        assert!(d.has_work());
+        let mut done = Vec::new();
+        while d.has_work() {
+            done.extend(d.pump().unwrap());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(kind(&done[0]), "done");
+        assert_eq!(done[0].get("id").as_usize(), Some(1));
+        assert_eq!(done[0].get("tokens").as_arr().unwrap().len(), 4);
+        assert_eq!(done[0].get("error"), &Json::Null);
+        let (events, report) = d.finish().unwrap();
+        assert_eq!(kind(events.last().unwrap()), "report");
+        assert_eq!(report.completions.len(), 1);
+        assert_eq!(report.failed, 0);
+        assert_eq!(d.committed_bytes(), 0, "charge released on completion");
+    }
+
+    #[test]
+    fn malformed_lines_degrade_not_kill() {
+        let m = model();
+        let mut d = Daemon::new(&m, DaemonConfig::default()).unwrap();
+        for bad in [
+            "not json at all",
+            r#"{"op":"explode"}"#,
+            r#"{"no_op":1}"#,
+            r#"{"op":"submit"}"#,
+            r#"{"op":"submit","id":7,"prompt":"nope","max_new_tokens":2}"#,
+            r#"{"op":"submit","id":7,"prompt":[1],"max_new_tokens":0}"#,
+            r#"{"op":"submit","id":7,"prompt":[],"max_new_tokens":2}"#,
+        ] {
+            let ev = d.handle_line(bad);
+            assert_eq!(ev.len(), 1, "{bad}");
+            assert!(matches!(kind(&ev[0]), "error" | "rejected"), "{bad}");
+        }
+        // Daemon still serves after all that abuse.
+        let ev = d.handle_line(&submit_line(1, &[1, 2], 2));
+        assert_eq!(kind(&ev[0]), "accepted");
+    }
+
+    #[test]
+    fn queue_cap_and_draining_reject_structured() {
+        let m = model();
+        let cfg = DaemonConfig { queue_cap: 2, ..DaemonConfig::default() };
+        let mut d = Daemon::new(&m, cfg).unwrap();
+        for id in 0..2 {
+            assert_eq!(kind(&d.handle_line(&submit_line(id, &[1, 2], 2))[0]), "accepted");
+        }
+        let ev = d.handle_line(&submit_line(2, &[1, 2], 2));
+        assert_eq!(kind(&ev[0]), "rejected");
+        assert_eq!(ev[0].get("code").as_str(), Some("queue_full"));
+        d.begin_drain();
+        let ev = d.handle_line(&submit_line(3, &[1, 2], 2));
+        assert_eq!(ev[0].get("code").as_str(), Some("draining"));
+        // Duplicate live id.
+        let ev = d.handle_line(&submit_line(0, &[1, 2], 2));
+        assert_eq!(ev[0].get("code").as_str(), Some("draining"), "drain wins first");
+    }
+
+    #[test]
+    fn mem_budget_bounds_committed_bytes() {
+        let m = model();
+        let mc = presets::model("spt-nano").unwrap();
+        let one = memmodel::decode_request_bytes(&mc.block, Mode::Spt, 8, mc.n_layers.max(1));
+        // Budget fits exactly one target-length-8 request at a time.
+        let cfg = DaemonConfig {
+            mem_budget: Some(one + one / 2),
+            queue_cap: 16,
+            ..DaemonConfig::default()
+        };
+        let mut d = Daemon::new(&m, cfg).unwrap();
+        for id in 0..3 {
+            let ev = d.handle_line(&submit_line(id, &[1, 2, 3, 4], 4));
+            assert_eq!(kind(&ev[0]), "accepted", "budget queues, never rejects fits");
+        }
+        // A request that can never fit is rejected outright.
+        let ev = d.handle_line(&submit_line(9, &[1, 2, 3, 4], 12));
+        assert_eq!(ev[0].get("code").as_str(), Some("mem_budget"));
+        let budget = one + one / 2;
+        let mut max_committed = 0;
+        while d.has_work() {
+            d.pump().unwrap();
+            max_committed = max_committed.max(d.committed_bytes());
+            assert!(
+                d.committed_bytes() <= budget,
+                "committed {} exceeds budget {budget}",
+                d.committed_bytes()
+            );
+        }
+        assert_eq!(max_committed, one, "exactly one request in flight at a time");
+        let (_, report) = d.finish().unwrap();
+        assert_eq!(report.completions.len(), 3);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.peak_in_flight, 1, "budget serialized the requests");
+    }
+
+    #[test]
+    fn deadline_cancels_overdue_requests() {
+        let m = model();
+        let cfg = DaemonConfig { deadline_steps: Some(3), ..DaemonConfig::default() };
+        let mut d = Daemon::new(&m, cfg).unwrap();
+        // Wants 10 tokens but the deadline allows ~3 decode steps.
+        d.handle_line(&submit_line(1, &[1, 2], 10));
+        let mut done = Vec::new();
+        while d.has_work() {
+            done.extend(d.pump().unwrap());
+        }
+        assert_eq!(done.len(), 1);
+        let err = done[0].get("error").as_str().unwrap_or("");
+        assert!(err.contains("deadline"), "{err}");
+        let toks = done[0].get("tokens").as_arr().unwrap().len();
+        assert!(toks < 10 && toks >= 1, "partial tokens preserved, got {toks}");
+    }
+
+    #[test]
+    fn queue_full_fault_fires_deterministically() {
+        let m = model();
+        let plan = Arc::new(FaultPlan::new().with("queue_full", 2));
+        let cfg = DaemonConfig { fault: Some(plan.clone()), ..DaemonConfig::default() };
+        let mut d = Daemon::new(&m, cfg).unwrap();
+        assert_eq!(kind(&d.handle_line(&submit_line(0, &[1, 2], 2))[0]), "accepted");
+        let ev = d.handle_line(&submit_line(1, &[1, 2], 2));
+        assert_eq!(ev[0].get("code").as_str(), Some("queue_full"), "2nd probe fires");
+        assert_eq!(kind(&d.handle_line(&submit_line(2, &[1, 2], 2))[0]), "accepted");
+        assert_eq!(plan.probes("queue_full"), 3);
+    }
+
+    #[test]
+    fn scripted_stream_drains_with_report() {
+        let m = model();
+        let mut d = Daemon::new(&m, DaemonConfig::default()).unwrap();
+        let script = format!(
+            "{}\n{}\nnot json\n{{\"op\":\"status\"}}\n{{\"op\":\"drain\"}}\n",
+            submit_line(1, &[1, 2, 3], 3),
+            submit_line(2, &[4, 5], 2),
+        );
+        let mut out: Vec<u8> = Vec::new();
+        let report = d
+            .serve_stream(std::io::Cursor::new(script.into_bytes()), &mut out, true)
+            .unwrap()
+            .expect("drain op must produce a report");
+        assert_eq!(report.completions.len(), 2);
+        assert_eq!(report.failed, 0);
+        let text = String::from_utf8(out).unwrap();
+        let events: Vec<Json> = text
+            .lines()
+            .map(|l| crate::util::json::parse(l).expect("every output line is JSON"))
+            .collect();
+        let kinds: Vec<&str> = events.iter().map(kind).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == "accepted").count(), 2);
+        assert_eq!(kinds.iter().filter(|k| **k == "error").count(), 1);
+        assert_eq!(kinds.iter().filter(|k| **k == "done").count(), 2);
+        assert_eq!(*kinds.last().unwrap(), "report", "report is the final event");
+        let report_ev = events.last().unwrap();
+        assert_eq!(report_ev.get("completed").as_usize(), Some(2));
+        assert_eq!(report_ev.get("failed").as_usize(), Some(0));
+    }
+}

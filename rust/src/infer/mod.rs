@@ -28,15 +28,21 @@
 //!   batch-tokens-by-activated-block kernel is batch-shape agnostic, so
 //!   cross-request batching is free).  Per-request token streams are
 //!   bit-identical regardless of the batch composition.
+//! * [`daemon`] — the operational layer over the driver: an NDJSON
+//!   protocol with bounded admission, memory-budget accounting via
+//!   [`crate::memmodel::decode_request_bytes`], decode-step deadlines,
+//!   and graceful drain (`spt serve`).
 //! * [`sampler`] — greedy and temperature/top-k sampling off the
 //!   deterministic [`crate::util::rng::Rng`] stream.
 
 pub mod cache;
+pub mod daemon;
 pub mod sampler;
 pub mod serve;
 pub mod session;
 
 pub use cache::DecodeCache;
+pub use daemon::{Daemon, DaemonConfig};
 pub use sampler::Sampler;
 pub use serve::{Completion, Request, ServeConfig, ServeDriver, ServeReport};
 pub use session::{InferModel, Session};

@@ -16,6 +16,12 @@
 //! batch composition, `max_batch`, and the rayon pool size never change
 //! what any request generates (asserted by `serving_is_batch_invariant`
 //! below).
+//!
+//! Degradation contract: a malformed request or slot (prefill failure,
+//! out-of-range token) retires *that request* with
+//! [`Completion::error`] set — the driver keeps serving everything
+//! else.  [`ServeDriver::cancel`] retires an in-flight request at a
+//! step boundary the same way (the daemon's deadline enforcement).
 
 use std::collections::VecDeque;
 use std::time::Instant; // det: wall-clock (latency metrics only)
@@ -42,6 +48,12 @@ pub struct Completion {
     /// Seconds from the driver's first step to retirement (includes
     /// queueing — the client-visible latency under load).
     pub latency_secs: f64,
+    /// Seconds spent queued before a slot admitted this request.
+    pub queue_wait_secs: f64,
+    /// `Some(reason)` when the request was degraded (prefill failure,
+    /// malformed slot, cancellation) instead of completing; `tokens`
+    /// then holds whatever was generated before the failure.
+    pub error: Option<String>,
 }
 
 /// Driver knobs.
@@ -68,12 +80,14 @@ struct SlotMeta {
     out: Vec<i32>,
     max_new: usize,
     logits: Vec<f32>,
+    queue_wait_secs: f64,
 }
 
 /// Aggregate results of a drained driver.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
-    /// Completions sorted by request id.
+    /// Completions sorted by request id (degraded ones included, with
+    /// [`Completion::error`] set).
     pub completions: Vec<Completion>,
     pub wall_secs: f64,
     pub decode_steps: usize,
@@ -82,13 +96,25 @@ pub struct ServeReport {
     pub tokens_per_sec: f64,
     /// Peak in-flight sequences observed.
     pub peak_in_flight: usize,
+    /// Completions that ended with an error (degraded or cancelled).
+    pub failed: usize,
+}
+
+/// Percentile over a sample (p in [0, 100]); 0.0 on an empty sample.
+fn percentile(mut values: Vec<f64>, p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(f64::total_cmp);
+    let ix = ((p / 100.0) * (values.len() - 1) as f64).round() as usize;
+    values[ix.min(values.len() - 1)]
 }
 
 impl ServeReport {
     /// Machine-readable form — the shared schema of
-    /// `bench_out/BENCH_decode_native.json`, used by both `spt
-    /// serve-bench` and the `decode_throughput` bench so the two
-    /// producers cannot drift.
+    /// `bench_out/BENCH_decode_native.json`, used by `spt serve-bench`,
+    /// the `decode_throughput` bench, and the daemon's final report so
+    /// the producers cannot drift.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let mut m = std::collections::BTreeMap::new();
@@ -103,21 +129,32 @@ impl ServeReport {
             "peak_in_flight".into(),
             Json::Num(self.peak_in_flight as f64),
         );
+        m.insert("completed".into(), Json::Num(self.completions.len() as f64));
+        m.insert("failed".into(), Json::Num(self.failed as f64));
         m.insert("p50_latency_s".into(), Json::Num(self.latency_percentile(50.0)));
         m.insert("p90_latency_s".into(), Json::Num(self.latency_percentile(90.0)));
         m.insert("p99_latency_s".into(), Json::Num(self.latency_percentile(99.0)));
+        m.insert(
+            "queue_wait_p50_s".into(),
+            Json::Num(self.queue_wait_percentile(50.0)),
+        );
+        m.insert(
+            "queue_wait_p99_s".into(),
+            Json::Num(self.queue_wait_percentile(99.0)),
+        );
         Json::Obj(m)
     }
 
     /// Latency percentile over completions (p in [0, 100]).
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        let mut lat: Vec<f64> = self.completions.iter().map(|c| c.latency_secs).collect();
-        if lat.is_empty() {
-            return 0.0;
-        }
-        lat.sort_by(f64::total_cmp);
-        let ix = ((p / 100.0) * (lat.len() - 1) as f64).round() as usize;
-        lat[ix.min(lat.len() - 1)]
+        percentile(self.completions.iter().map(|c| c.latency_secs).collect(), p)
+    }
+
+    /// Queue-wait percentile over completions (p in [0, 100]) — how
+    /// long requests sat in the driver queue before admission, the
+    /// overload signal `serve-bench` records.
+    pub fn queue_wait_percentile(&self, p: f64) -> f64 {
+        percentile(self.completions.iter().map(|c| c.queue_wait_secs).collect(), p)
     }
 }
 
@@ -125,7 +162,8 @@ impl ServeReport {
 pub struct ServeDriver<'m> {
     model: &'m InferModel,
     cfg: ServeConfig,
-    queue: VecDeque<Request>,
+    /// Queued requests with their submit offset (seconds from epoch).
+    queue: VecDeque<(Request, f64)>,
     states: Vec<DecodeState>,
     meta: Vec<SlotMeta>,
     finished: Vec<Completion>,
@@ -158,6 +196,14 @@ impl<'m> ServeDriver<'m> {
         })
     }
 
+    /// Seconds since the driver's epoch (0.0 before the first step —
+    /// requests submitted before serving starts wait from the start).
+    fn now_secs(&self) -> f64 {
+        self.epoch
+            .map(|e| e.elapsed().as_secs_f64()) // det: wall-clock (metrics)
+            .unwrap_or(0.0)
+    }
+
     /// Enqueue a request (admitted in submission order).
     pub fn submit(&mut self, req: Request) -> Result<()> {
         if req.max_new_tokens == 0 {
@@ -175,7 +221,8 @@ impl<'m> ServeDriver<'m> {
                 self.model.max_seq()
             );
         }
-        self.queue.push_back(req);
+        let submitted = self.now_secs();
+        self.queue.push_back((req, submitted));
         Ok(())
     }
 
@@ -188,16 +235,69 @@ impl<'m> ServeDriver<'m> {
         self.queue.len()
     }
 
+    pub fn in_flight(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Batched decode steps executed so far (the daemon's deterministic
+    /// deadline clock).
+    pub fn decode_steps(&self) -> usize {
+        self.decode_steps
+    }
+
+    /// Retire request `id` at a step boundary with an error completion
+    /// carrying whatever it generated so far.  Returns `false` when the
+    /// id is not in flight.  This is how the daemon enforces
+    /// per-request deadlines without perturbing other streams.
+    pub fn cancel(&mut self, id: usize, reason: &str) -> bool {
+        let Some(si) = self.meta.iter().position(|m| m.id == id) else {
+            return false;
+        };
+        let now = self.now_secs();
+        let m = self.meta.remove(si);
+        self.states.remove(si);
+        self.finished.push(Completion {
+            id: m.id,
+            tokens: m.out,
+            latency_secs: now,
+            queue_wait_secs: m.queue_wait_secs,
+            error: Some(reason.to_string()),
+        });
+        true
+    }
+
+    /// Drain completions retired since the last call (the daemon's
+    /// streaming seam; [`Self::report`] folds drained completions back
+    /// in via its argument).
+    pub fn take_finished(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+
     /// One scheduler step: admit → batched decode → sample → retire.
     /// Returns `false` once the queue and all slots are drained.
     pub fn step(&mut self) -> Result<bool> {
         let epoch = *self.epoch.get_or_insert_with(Instant::now); // det: wall-clock (metrics)
         // Admit in submission order while capacity allows.  Prefill runs
-        // here; the first token is sampled straight from its logits.
+        // here; the first token is sampled straight from its logits.  A
+        // failed prefill degrades that request, not the driver.
         while self.states.len() < self.cfg.max_batch {
-            let Some(req) = self.queue.pop_front() else { break };
+            let Some((req, submitted)) = self.queue.pop_front() else { break };
+            let now = epoch.elapsed().as_secs_f64(); // det: wall-clock (metrics)
+            let queue_wait = (now - submitted).max(0.0);
             let target = req.prompt.len() + req.max_new_tokens;
-            let (state, logits) = prefill_state(self.model, &req.prompt, target)?;
+            let (state, logits) = match prefill_state(self.model, &req.prompt, target) {
+                Ok(pair) => pair,
+                Err(e) => {
+                    self.finished.push(Completion {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        latency_secs: now,
+                        queue_wait_secs: queue_wait,
+                        error: Some(format!("prefill failed: {e:#}")),
+                    });
+                    continue;
+                }
+            };
             let mut slot = SlotMeta {
                 id: req.id,
                 rng: Rng::new(
@@ -208,15 +308,28 @@ impl<'m> ServeDriver<'m> {
                 out: Vec::with_capacity(req.max_new_tokens),
                 max_new: req.max_new_tokens,
                 logits,
+                queue_wait_secs: queue_wait,
             };
             let first = self.cfg.sampler.sample(&slot.logits, &mut slot.rng);
-            slot.out.push(i32::try_from(first).expect("vocab fits i32"));
+            let Ok(first) = i32::try_from(first) else {
+                self.finished.push(Completion {
+                    id: slot.id,
+                    tokens: slot.out,
+                    latency_secs: now,
+                    queue_wait_secs: queue_wait,
+                    error: Some(format!("sampled token {first} exceeds i32 range")),
+                });
+                continue;
+            };
+            slot.out.push(first);
             self.generated_tokens += 1;
             if slot.out.len() >= slot.max_new {
                 self.finished.push(Completion {
                     id: slot.id,
                     tokens: slot.out,
-                    latency_secs: epoch.elapsed().as_secs_f64(),
+                    latency_secs: epoch.elapsed().as_secs_f64(), // det: wall-clock (metrics)
+                    queue_wait_secs: queue_wait,
+                    error: None,
                 });
                 continue;
             }
@@ -224,6 +337,24 @@ impl<'m> ServeDriver<'m> {
             self.meta.push(slot);
         }
         self.peak_in_flight = self.peak_in_flight.max(self.states.len());
+        // Defensive: a slot with no sampled token cannot join a batched
+        // decode — retire it as degraded instead of poisoning the step.
+        if self.meta.iter().any(|m| m.out.is_empty()) {
+            let now = epoch.elapsed().as_secs_f64(); // det: wall-clock (metrics)
+            for si in (0..self.meta.len()).rev() {
+                if self.meta[si].out.is_empty() {
+                    let m = self.meta.remove(si);
+                    self.states.remove(si);
+                    self.finished.push(Completion {
+                        id: m.id,
+                        tokens: m.out,
+                        latency_secs: now,
+                        queue_wait_secs: m.queue_wait_secs,
+                        error: Some("malformed slot: in flight with no sampled token".into()),
+                    });
+                }
+            }
+        }
         if self.states.is_empty() {
             return Ok(!self.queue.is_empty());
         }
@@ -231,57 +362,77 @@ impl<'m> ServeDriver<'m> {
         let tokens: Vec<i32> = self
             .meta
             .iter()
-            .map(|m| *m.out.last().expect("in-flight slot with no token"))
+            .filter_map(|m| m.out.last().copied())
             .collect();
         let logits = decode_batch(self.model, &mut self.states, &tokens, &mut self.scratch)?;
         self.decode_steps += 1;
         // Sample per slot (ascending slot order; each slot's own RNG).
-        let mut done: Vec<usize> = Vec::new();
+        // `retire` collects (slot, error) pairs in ascending slot order.
+        let mut retire: Vec<(usize, Option<String>)> = Vec::new();
         for (si, m) in self.meta.iter_mut().enumerate() {
             m.logits.clear();
             m.logits.extend_from_slice(logits.row(si));
             let t = self.cfg.sampler.sample(&m.logits, &mut m.rng);
-            m.out.push(i32::try_from(t).expect("vocab fits i32"));
-            self.generated_tokens += 1;
-            if m.out.len() >= m.max_new {
-                done.push(si);
+            match i32::try_from(t) {
+                Ok(tok) => {
+                    m.out.push(tok);
+                    self.generated_tokens += 1;
+                    if m.out.len() >= m.max_new {
+                        retire.push((si, None));
+                    }
+                }
+                Err(_) => {
+                    retire.push((si, Some(format!("sampled token {t} exceeds i32 range"))));
+                }
             }
         }
         // Retire in ascending slot order (completions keep a stable
         // order); remove descending so indices stay valid.
-        for &si in &done {
-            let m = &self.meta[si];
+        let now = epoch.elapsed().as_secs_f64(); // det: wall-clock (metrics)
+        for (si, error) in &retire {
+            let m = &self.meta[*si];
             self.finished.push(Completion {
                 id: m.id,
                 tokens: m.out.clone(),
-                latency_secs: epoch.elapsed().as_secs_f64(),
+                latency_secs: now,
+                queue_wait_secs: m.queue_wait_secs,
+                error: error.clone(),
             });
         }
-        for &si in done.iter().rev() {
-            self.meta.remove(si);
-            self.states.remove(si);
+        for (si, _) in retire.iter().rev() {
+            self.meta.remove(*si);
+            self.states.remove(*si);
         }
         Ok(!(self.queue.is_empty() && self.states.is_empty()))
     }
 
-    /// Drain queue and slots; returns the aggregate report.  All report
+    /// Aggregate report over `drained` (completions previously taken via
+    /// [`Self::take_finished`]) plus anything still in `finished`.  All
     /// counters and the wall clock are anchored to the driver's epoch
     /// (its first `step`), so the numbers stay consistent when manual
     /// `step()` calls preceded this.
-    pub fn run_to_completion(&mut self) -> Result<ServeReport> {
+    pub fn report(&mut self, drained: Vec<Completion>) -> ServeReport {
         let epoch = *self.epoch.get_or_insert_with(Instant::now); // det: wall-clock (metrics)
-        while self.step()? {}
         let wall = epoch.elapsed().as_secs_f64();
-        let mut completions = self.finished.clone();
+        let mut completions = drained;
+        completions.extend(self.finished.iter().cloned());
         completions.sort_by_key(|c| c.id);
-        Ok(ServeReport {
+        let failed = completions.iter().filter(|c| c.error.is_some()).count();
+        ServeReport {
             wall_secs: wall,
             decode_steps: self.decode_steps,
             generated_tokens: self.generated_tokens,
             tokens_per_sec: self.generated_tokens as f64 / wall.max(1e-9),
             peak_in_flight: self.peak_in_flight,
+            failed,
             completions,
-        })
+        }
+    }
+
+    /// Drain queue and slots; returns the aggregate report.
+    pub fn run_to_completion(&mut self) -> Result<ServeReport> {
+        while self.step()? {}
+        Ok(self.report(Vec::new()))
     }
 }
 
@@ -341,9 +492,16 @@ mod tests {
                 assert_eq!(b.id, s.id, "{mode:?}");
                 assert_eq!(b.tokens, s.tokens, "{mode:?} request {}", b.id);
                 assert_eq!(b.tokens.len(), 7, "{mode:?}");
+                assert!(b.error.is_none() && s.error.is_none(), "{mode:?}");
             }
             assert!(batched.peak_in_flight > 1, "{mode:?}: never batched");
             assert_eq!(serial.peak_in_flight, 1, "{mode:?}");
+            assert_eq!(batched.failed, 0, "{mode:?}");
+            // Queued requests wait longer when slots are scarcer.
+            assert!(
+                serial.queue_wait_percentile(99.0) >= batched.queue_wait_percentile(50.0),
+                "{mode:?}"
+            );
         }
     }
 
@@ -382,6 +540,7 @@ mod tests {
         assert_eq!(lens, vec![10, 3, 3]);
         assert_eq!(report.generated_tokens, 16);
         assert!(report.latency_percentile(50.0) <= report.latency_percentile(99.0));
+        assert!(report.queue_wait_percentile(50.0) <= report.queue_wait_percentile(99.0));
     }
 
     #[test]
@@ -413,5 +572,65 @@ mod tests {
         assert_eq!(report.completions.len(), 1);
         assert_eq!(report.completions[0].tokens.len(), 1);
         assert_eq!(report.decode_steps, 0);
+    }
+
+    #[test]
+    fn cancel_retires_one_request_without_perturbing_others() {
+        let m = model(Mode::Spt);
+        let reqs = requests(3, 8);
+        let mut driver =
+            ServeDriver::new(&m, ServeConfig { max_batch: 4, ..Default::default() }).unwrap();
+        for r in &reqs {
+            driver.submit(r.clone()).unwrap();
+        }
+        // Two steps in, cancel request 1 at the boundary.
+        driver.step().unwrap();
+        driver.step().unwrap();
+        assert!(driver.cancel(1, "deadline exceeded"));
+        assert!(!driver.cancel(1, "again"), "already retired");
+        assert!(!driver.cancel(99, "never existed"));
+        let report = driver.run_to_completion().unwrap();
+        assert_eq!(report.completions.len(), 3);
+        assert_eq!(report.failed, 1);
+        let cancelled = &report.completions[1];
+        assert_eq!(cancelled.id, 1);
+        assert_eq!(cancelled.error.as_deref(), Some("deadline exceeded"));
+        assert_eq!(cancelled.tokens.len(), 3, "1 admission + 2 decode tokens");
+        // Survivors are bit-identical to an undisturbed run with the
+        // same config (per-request RNG streams are independent).
+        let mut driver2 =
+            ServeDriver::new(&m, ServeConfig { max_batch: 4, ..Default::default() }).unwrap();
+        for r in &reqs {
+            driver2.submit(r.clone()).unwrap();
+        }
+        let undisturbed = driver2.run_to_completion().unwrap();
+        for (got, want) in report
+            .completions
+            .iter()
+            .zip(&undisturbed.completions)
+            .filter(|(g, _)| g.error.is_none())
+        {
+            assert_eq!(got.tokens, want.tokens, "request {}", got.id);
+        }
+    }
+
+    #[test]
+    fn take_finished_streams_and_report_folds_back() {
+        let m = model(Mode::Lora);
+        let mut driver = ServeDriver::new(&m, ServeConfig::default()).unwrap();
+        for r in requests(3, 2) {
+            driver.submit(r).unwrap();
+        }
+        let mut drained: Vec<Completion> = Vec::new();
+        while driver.step().unwrap() {
+            drained.extend(driver.take_finished());
+        }
+        drained.extend(driver.take_finished());
+        assert_eq!(drained.len(), 3);
+        let report = driver.report(drained);
+        assert_eq!(report.completions.len(), 3);
+        let ids: Vec<usize> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(report.failed, 0);
     }
 }

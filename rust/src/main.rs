@@ -28,9 +28,13 @@ use spt::coordinator::checkpoint::CkptMeta;
 use spt::coordinator::{checkpoint, trial, Backend, NativeBackend, Trainer, TrainerOptions};
 use spt::coordinator::trial::TrialManager;
 use spt::data::SyntheticCorpus;
-use spt::infer::{InferModel, Request, Sampler, ServeConfig, ServeDriver, Session};
+use spt::infer::{
+    Daemon, DaemonConfig, InferModel, Request, Sampler, ServeConfig, ServeDriver, Session,
+};
 use spt::infer::serve::ServeReport;
+use spt::util::fault::FaultPlan;
 use spt::util::json::Json;
+use spt::util::lock::PidLock;
 use spt::util::rng::Rng;
 #[cfg(feature = "xla")]
 use spt::coordinator::profile as prof;
@@ -147,6 +151,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train-qa" => dispatch_train(&args, true),
         "trial" => dispatch_trial(&args),
         "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
         #[cfg(feature = "xla")]
         "profile" => cmd_profile(&args),
@@ -181,6 +186,8 @@ COMMANDS
   train-qa    fine-tune + score the 4-choice QA task (MMLU surrogate)
   trial       short trials across full/lora/spt; recommends a mode
   generate    cached-decode generation from a checkpoint (deterministic)
+  serve       long-running NDJSON serving daemon over TCP (or --stdio):
+              bounded queue, memory-budget admission, graceful drain
   serve-bench continuous-batching decode throughput + latency percentiles
               vs the one-sequence-at-a-time baseline (JSON artifact)
   profile     time+memory for mha/ffn module artifacts (Tables 1/4)
@@ -203,6 +210,12 @@ COMMON FLAGS
                         generate/serve from (generate, serve-bench); v2
                         checkpoints verify their model/mode identity
   --save_ckpt FILE      write the final training state (train)
+  --ckpt_dir DIR        periodic-checkpoint directory (train; atomic v3
+                        writes with per-tensor CRCs)
+  --ckpt_every N        checkpoint every N steps into --ckpt_dir (train)
+  --auto_resume         resume from the newest valid checkpoint in
+                        --ckpt_dir, skipping corrupt files (train; place
+                        boolean flags last or use --flag=)
   --artifacts_dir DIR   (pjrt backend; default: artifacts)
 
 GENERATE / SERVE-BENCH FLAGS
@@ -212,6 +225,22 @@ GENERATE / SERVE-BENCH FLAGS
   --top_k K             restrict sampling to the K best logits
   --requests N          serve-bench: trace size (default 16)
   --max_batch B         serve-bench: in-flight capacity (default 8)
+
+SERVE FLAGS
+  --addr HOST:PORT      TCP listen address (default 127.0.0.1:7199)
+  --stdio               serve one NDJSON stream on stdin/stdout instead
+                        (stdout stays pure protocol; logs go to stderr)
+  --max_batch B         in-flight decode capacity (default 8)
+  --queue_cap N         admission-queue bound; overflow is rejected with
+                        a structured queue_full error (default 64)
+  --mem_budget_mb M     cap summed target-length cache bytes of in-flight
+                        requests (memmodel accounting; default unlimited)
+  --deadline_steps N    cancel a request after N decode steps in the
+                        driver (deterministic deadline; default off)
+  --pid_file PATH       pid/lock file (default <out_dir>/spt-serve.pid);
+                        a live holder blocks double-start
+  SPT_FAULT_PLAN        env: seeded fault plan, e.g. 'ckpt_write_err:1'
+                        or 'queue_full:2,accept_err:1' (see README)
 
 NOTE  the native backend trains the chosen preset's full n_layers-deep
       pre-norm stack end-to-end on the rust sparse substrate, and
@@ -252,7 +281,19 @@ fn engine_from(args: &Args) -> Result<Engine> {
 
 fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
     let rc = args.run_config()?;
-    let opts = TrainerOptions { chunked: args.has("chunked"), ..Default::default() };
+    let ckpt_dir = args.get("ckpt_dir").map(std::path::PathBuf::from);
+    let ckpt_every = args.usize_or("ckpt_every", 0)?;
+    let fault = FaultPlan::from_env()?.map(std::sync::Arc::new);
+    if fault.is_some() {
+        eprintln!("[spt] fault plan active (SPT_FAULT_PLAN)");
+    }
+    let opts = TrainerOptions {
+        chunked: args.has("chunked"),
+        ckpt_dir: ckpt_dir.clone(),
+        ckpt_every,
+        fault,
+        ..Default::default()
+    };
     println!(
         "[spt] {} fine-tuning: model={} mode={} steps={} (backend {}, {})",
         if qa { "QA" } else { "LM" },
@@ -264,8 +305,15 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
     );
     let out_dir = rc.out_dir.clone();
     let resume = args.get("resume").map(str::to_string);
-    if qa && resume.is_some() {
+    let auto_resume = args.has("auto_resume");
+    if qa && (resume.is_some() || auto_resume) {
         bail!("--resume is only supported for `train` (LM); `train-qa` always starts fresh");
+    }
+    if auto_resume && resume.is_some() {
+        bail!("--resume FILE and --auto_resume are mutually exclusive");
+    }
+    if auto_resume && ckpt_dir.is_none() {
+        bail!("--auto_resume needs --ckpt_dir DIR to scan");
     }
     let save_ckpt = args.get("save_ckpt").map(str::to_string);
     let mut trainer = Trainer::new(backend, rc, opts);
@@ -282,6 +330,30 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
             state.step.scalar()? as usize
         );
         trainer.train_from(state)?
+    } else if auto_resume {
+        let dir = ckpt_dir.clone().unwrap_or_default();
+        let latest = if dir.is_dir() { checkpoint::find_latest_valid(&dir)? } else { None };
+        match latest {
+            Some(latest) => {
+                if let Some(meta) = &latest.meta {
+                    let rc = trainer.run_config();
+                    meta.verify(&rc.model, rc.mode)?;
+                }
+                println!(
+                    "[spt] auto-resume: {} at step {}",
+                    latest.path.display(),
+                    latest.step
+                );
+                trainer.train_from(latest.state)?
+            }
+            None => {
+                println!(
+                    "[spt] auto-resume: no valid checkpoint under {}, starting fresh",
+                    dir.display()
+                );
+                trainer.train()?
+            }
+        }
     } else {
         trainer.train()?
     };
@@ -423,6 +495,83 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `spt serve` — the long-running daemon.  All human-facing logs go to
+/// stderr: in `--stdio` mode stdout carries only protocol NDJSON.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rc = args.run_config()?;
+    let max_batch = args.usize_or("max_batch", 8)?.max(1);
+    let queue_cap = args.usize_or("queue_cap", 64)?.max(1);
+    let mem_budget = match args.get("mem_budget_mb") {
+        Some(v) => Some(v.parse::<u64>().context("--mem_budget_mb")? * (1 << 20)),
+        None => None,
+    };
+    let deadline_steps = match args.get("deadline_steps") {
+        Some(v) => Some(v.parse::<usize>().context("--deadline_steps")?),
+        None => None,
+    };
+    let temperature = match args.get("temperature") {
+        Some(v) => Some(v.parse::<f32>().context("--temperature")?),
+        None => None,
+    };
+    let top_k = match args.get("top_k") {
+        Some(v) => Some(v.parse::<usize>().context("--top_k")?),
+        None => None,
+    };
+    let sampler = Sampler::from_flags(temperature, top_k)?;
+    let fault = FaultPlan::from_env()?.map(std::sync::Arc::new);
+    if fault.is_some() {
+        eprintln!("[spt] fault plan active (SPT_FAULT_PLAN)");
+    }
+    let model = match args.get("resume") {
+        Some(path) => {
+            let m = InferModel::from_checkpoint(&rc, path)?;
+            eprintln!(
+                "[spt] loaded checkpoint {path} (model={} mode={} layers={})",
+                rc.model,
+                rc.mode.as_str(),
+                m.n_layers()
+            );
+            m
+        }
+        None => {
+            eprintln!("[spt] no --resume: serving from a fresh (untrained) init");
+            let backend = NativeBackend::new();
+            let state = backend.init_state(&rc)?;
+            InferModel::new(&rc, state)?
+        }
+    };
+    let pid_path = match args.get("pid_file") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::Path::new(&rc.out_dir).join("spt-serve.pid"),
+    };
+    let lock = PidLock::acquire(&pid_path)?;
+    eprintln!("[spt] pid file {:?}", lock.path());
+    let cfg = DaemonConfig {
+        serve: ServeConfig { max_batch, sampler, seed: rc.seed },
+        queue_cap,
+        mem_budget,
+        deadline_steps,
+        fault,
+    };
+    let mut daemon = Daemon::new(&model, cfg)?;
+    let report = if args.has("stdio") {
+        daemon
+            .serve_stream(std::io::stdin(), std::io::stdout().lock(), true)?
+            .context("stdio stream ended without producing a report")?
+    } else {
+        let addr = args.get_or("addr", "127.0.0.1:7199");
+        daemon.serve_tcp(&addr)?
+    };
+    eprintln!(
+        "[spt] drained: {} completions ({} failed), {} decode steps, peak in-flight {}",
+        report.completions.len(),
+        report.failed,
+        report.decode_steps,
+        report.peak_in_flight
+    );
+    Ok(())
+}
+
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let rc = args.run_config()?;
     let n_requests = args.usize_or("requests", 16)?.max(1);
@@ -464,6 +613,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     );
     let batched = run(max_batch)?;
     let baseline = run(1)?;
+    // Overload probe: capacity 2 with the whole trace queued up front —
+    // the queue-wait percentiles quantify time spent waiting for a slot.
+    let overload = run(2.min(max_batch))?;
     // Continuous batching must not change what any request generates.
     for (b, s) in batched.completions.iter().zip(&baseline.completions) {
         if b.tokens != s.tokens {
@@ -473,10 +625,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let speedup = batched.tokens_per_sec / baseline.tokens_per_sec.max(1e-9);
     let mut table = spt::metrics::Table::new(
         "Continuous batching vs one-sequence-at-a-time (native decode)",
-        &["Config", "tok/s", "steps", "p50 lat", "p99 lat", "speedup"],
+        &["Config", "tok/s", "steps", "p50 lat", "p99 lat", "queue p50", "queue p99", "speedup"],
     );
     for (name, r, s) in [
         ("batched", &batched, format!("{speedup:.2}x")),
+        ("overload (batch=2)", &overload, String::new()),
         ("baseline (batch=1)", &baseline, "1.00x".into()),
     ] {
         table.row(&[
@@ -485,6 +638,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             r.decode_steps.to_string(),
             spt::util::fmt_duration(r.latency_percentile(50.0)),
             spt::util::fmt_duration(r.latency_percentile(99.0)),
+            spt::util::fmt_duration(r.queue_wait_percentile(50.0)),
+            spt::util::fmt_duration(r.queue_wait_percentile(99.0)),
             s,
         ]);
     }
@@ -498,6 +653,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     top.insert("max_new_tokens".into(), Json::Num(tokens as f64));
     top.insert("max_batch".into(), Json::Num(max_batch as f64));
     top.insert("batched".into(), batched.to_json());
+    top.insert("overload".into(), overload.to_json());
     top.insert("baseline".into(), baseline.to_json());
     top.insert("speedup".into(), Json::Num(speedup));
     let dir = std::path::Path::new("bench_out");

@@ -125,6 +125,22 @@ pub fn decode_step_state_bytes(cfg: &BlockConfig, mode: Mode, seq: usize) -> u64
     }
 }
 
+/// Admission cost of one serving request at its *target* length
+/// (prompt + max new tokens): the cache it will have filled by its last
+/// decode step plus its per-step attention state at that length.  This
+/// is what the daemon charges against `--mem-budget` before admitting,
+/// so the sum over in-flight requests is a provable upper bound on
+/// their cache footprint at any step.
+pub fn decode_request_bytes(
+    cfg: &BlockConfig,
+    mode: Mode,
+    target_len: usize,
+    n_layers: usize,
+) -> u64 {
+    decode_cache_bytes(cfg, mode, target_len, n_layers)
+        + decode_step_state_bytes(cfg, mode, target_len)
+}
+
 /// Peak decode-time memory for `batch` concurrent sequences at `seq`
 /// cached positions: effective weights (plus the pack-once GEMM panels
 /// of the forward projections), embeddings, every sequence's cache, the
@@ -254,6 +270,30 @@ mod tests {
             decode_peak(&cfg, Mode::Spt, 32, 512, 32, 50272) > serve
                 && decode_peak(&cfg, Mode::Spt, 16, 1024, 32, 50272) > serve
         );
+    }
+
+    #[test]
+    fn request_cost_bounds_cache_plus_step_state_and_is_monotone() {
+        let cfg = presets::block("opt-1024").unwrap();
+        for mode in Mode::ALL {
+            let cost = decode_request_bytes(&cfg, mode, 256, 8);
+            assert_eq!(
+                cost,
+                decode_cache_bytes(&cfg, mode, 256, 8)
+                    + decode_step_state_bytes(&cfg, mode, 256)
+            );
+            // The charged cost dominates the footprint at every shorter
+            // in-flight length (what makes the budget sum an upper bound).
+            for len in [1, 64, 255] {
+                assert!(
+                    decode_cache_bytes(&cfg, mode, len, 8)
+                        + decode_step_state_bytes(&cfg, mode, len)
+                        <= cost,
+                    "{mode:?} at len {len}"
+                );
+            }
+            assert!(decode_request_bytes(&cfg, mode, 512, 8) > cost, "{mode:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Deterministic fault injection for chaos tests.
+//!
+//! A [`FaultPlan`] is a site-keyed table of "fire on the N-th probe"
+//! triggers, parsed from a spec like `ckpt_write_err:1,queue_full:2`
+//! (comma-separated `site:arg` pairs — the `SPT_FAULT_PLAN` environment
+//! variable uses the same syntax).  Production code threads an
+//! `Option<&FaultPlan>` through its I/O seams and probes named sites;
+//! with no plan armed every probe is free and nothing changes.
+//!
+//! Determinism contract: a site fires on its N-th *probe*, and every
+//! probe site in this codebase sits on a sequential control path (a
+//! checkpoint save attempt, a daemon submission, a listener accept) —
+//! never inside a rayon-parallel region — so a given plan injects the
+//! same faults at the same points at any pool size.  Recoverable faults
+//! (transient write errors, queue-full rejections) must not perturb
+//! bit-identical train/decode outputs; `tests/crash_safety.rs` and
+//! `tests/daemon_lifecycle.rs` assert exactly that.
+//!
+//! Known sites (args in parentheses):
+//!
+//! * `ckpt_write_err` (N) — the N-th checkpoint save attempt fails with
+//!   a transient I/O error before writing; the retry layer recovers it.
+//! * `ckpt_crash` (N) — the N-th checkpoint save attempt stops mid-write
+//!   after [`Self::crash_bytes`] bytes and surfaces a [`Crash`] error:
+//!   the moral equivalent of `kill -9` between two `write(2)` calls.
+//!   The atomic-rename protocol must leave the previous checkpoint
+//!   intact (asserted by the crash-recovery test).
+//! * `ckpt_crash_bytes` (B) — parameter site (never fires): how many
+//!   bytes a `ckpt_crash` save writes before dying (default 256 —
+//!   past the header, mid-tensor for any real state).
+//! * `queue_full` (N) — the daemon reports its bounded queue full on the
+//!   N-th admission probe regardless of actual occupancy.
+//! * `accept_err` (N) — the daemon's N-th listener accept fails with a
+//!   transient error (exercises the accept retry/backoff path).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Marker error for injected crash faults: fatal by design — the retry
+/// layer refuses to retry across one (a real crash would not retry
+/// either), and test harnesses treat it as the process dying.
+#[derive(Debug)]
+pub struct Crash {
+    pub site: String,
+}
+
+impl std::fmt::Display for Crash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected crash at fault site '{}'", self.site)
+    }
+}
+
+impl std::error::Error for Crash {}
+
+/// Whether an error chain contains an injected [`Crash`] (fatal: do not
+/// retry, unwind as if the process died).
+pub fn is_crash(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<Crash>().is_some())
+}
+
+#[derive(Debug, Default)]
+struct SiteState {
+    /// Fire on this probe ordinal (1-based); 0 = parameter-only site.
+    arg: u64,
+    probes: u64,
+}
+
+/// A deterministic, site-keyed fault plan.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    sites: Mutex<BTreeMap<String, SiteState>>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no site ever fires).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `site:arg,site:arg` spec.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let plan = FaultPlan::new();
+        {
+            let mut sites = plan.sites.lock().expect("fault plan lock");
+            for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                let (site, arg) = part
+                    .split_once(':')
+                    .with_context(|| format!("fault plan entry '{part}': expected site:arg"))?;
+                let arg: u64 = arg
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("fault plan entry '{part}': arg"))?;
+                if site.trim().is_empty() {
+                    bail!("fault plan entry '{part}': empty site");
+                }
+                sites.insert(site.trim().to_string(), SiteState { arg, probes: 0 });
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Build the plan from `SPT_FAULT_PLAN`, if set (empty/unset = none).
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var("SPT_FAULT_PLAN") {
+            Ok(spec) if !spec.trim().is_empty() => {
+                Ok(Some(Self::parse(&spec).context("SPT_FAULT_PLAN")?))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Arm (or re-arm) a site programmatically: fire on the `on_probe`-th
+    /// [`Self::fire`] call for `site`.  Builder-style for tests.
+    pub fn with(self, site: &str, on_probe: u64) -> Self {
+        self.sites
+            .lock()
+            .expect("fault plan lock")
+            .insert(site.into(), SiteState { arg: on_probe, probes: 0 });
+        self
+    }
+
+    /// Probe `site`: record the probe and report whether the fault fires
+    /// (exactly once, on the armed ordinal).  Unknown sites never fire.
+    pub fn fire(&self, site: &str) -> bool {
+        let mut sites = self.sites.lock().expect("fault plan lock");
+        match sites.get_mut(site) {
+            Some(s) => {
+                s.probes += 1;
+                s.arg != 0 && s.probes == s.arg
+            }
+            None => false,
+        }
+    }
+
+    /// Read a parameter site's value without counting a probe.
+    pub fn arg(&self, site: &str) -> Option<u64> {
+        self.sites
+            .lock()
+            .expect("fault plan lock")
+            .get(site)
+            .map(|s| s.arg)
+    }
+
+    /// How many times `site` has been probed (test observability).
+    pub fn probes(&self, site: &str) -> u64 {
+        self.sites
+            .lock()
+            .expect("fault plan lock")
+            .get(site)
+            .map(|s| s.probes)
+            .unwrap_or(0)
+    }
+
+    /// Byte offset at which a `ckpt_crash` save dies (the
+    /// `ckpt_crash_bytes` parameter site; default 256).
+    pub fn crash_bytes(&self) -> u64 {
+        self.arg("ckpt_crash_bytes").unwrap_or(256)
+    }
+}
+
+/// Convenience for call sites holding an `Option<&FaultPlan>`.
+pub fn fire(plan: Option<&FaultPlan>, site: &str) -> bool {
+    plan.is_some_and(|p| p.fire(site))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_once_on_the_nth_probe() {
+        let plan = FaultPlan::parse("io_write:3,queue_full:1").unwrap();
+        assert!(!plan.fire("io_write"));
+        assert!(!plan.fire("io_write"));
+        assert!(plan.fire("io_write"), "third probe fires");
+        assert!(!plan.fire("io_write"), "fires once, then disarms");
+        assert!(plan.fire("queue_full"));
+        assert!(!plan.fire("queue_full"));
+        assert!(!plan.fire("unknown_site"));
+        assert_eq!(plan.probes("io_write"), 4);
+    }
+
+    #[test]
+    fn parameter_sites_and_builder() {
+        let plan = FaultPlan::new().with("ckpt_crash", 2).with("ckpt_crash_bytes", 100);
+        assert_eq!(plan.crash_bytes(), 100);
+        assert_eq!(FaultPlan::new().crash_bytes(), 256);
+        assert!(!plan.fire("ckpt_crash"));
+        assert!(plan.fire("ckpt_crash"));
+        // arg() reads do not consume probes.
+        assert_eq!(plan.arg("ckpt_crash"), Some(2));
+        assert_eq!(plan.probes("ckpt_crash_bytes"), 0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("no_colon").is_err());
+        assert!(FaultPlan::parse("site:notanumber").is_err());
+        assert!(FaultPlan::parse(":3").is_err());
+        // Empty spec parses to an inert plan.
+        let plan = FaultPlan::parse("").unwrap();
+        assert!(!plan.fire("anything"));
+    }
+
+    #[test]
+    fn crash_marker_is_detectable_through_anyhow_chains() {
+        let io = std::io::Error::other(Crash { site: "ckpt_crash".into() });
+        let err = anyhow::Error::from(io).context("saving checkpoint");
+        assert!(is_crash(&err));
+        let plain = anyhow::anyhow!("disk full");
+        assert!(!is_crash(&plain));
+    }
+}

@@ -1,0 +1,135 @@
+//! Pid-file locking for the serve daemon: prevent two daemons from
+//! binding the same working directory, and leave a breadcrumb (the pid)
+//! for operators.  `O_CREAT|O_EXCL` (`create_new`) makes acquisition
+//! atomic on every platform; stale files left by a killed process are
+//! reclaimed when their pid is provably gone (Linux `/proc` probe —
+//! elsewhere a stale file must be removed by hand, and the error says
+//! so).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A held pid lock; releases (removes the file) on drop.
+#[derive(Debug)]
+pub struct PidLock {
+    path: PathBuf,
+}
+
+impl PidLock {
+    /// Acquire the lock at `path`, writing this process's pid into it.
+    /// Fails with a clear double-start message when a live owner holds
+    /// it; reclaims files whose owner is gone or unreadable.
+    pub fn acquire(path: impl AsRef<Path>) -> Result<PidLock> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        }
+        // Two rounds: the second retries after reclaiming a stale file.
+        for round in 0..2 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(path) {
+                Ok(mut f) => {
+                    writeln!(f, "{}", std::process::id())
+                        .with_context(|| format!("writing pid to {path:?}"))?;
+                    return Ok(PidLock { path: path.to_path_buf() });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let owner = std::fs::read_to_string(path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    match owner {
+                        Some(pid) if pid_is_live(pid) => bail!(
+                            "another spt daemon (pid {pid}) holds {path:?} — \
+                             stop it first, or remove the file if that pid is not spt"
+                        ),
+                        Some(pid) if round == 0 => {
+                            eprintln!(
+                                "[spt] reclaiming stale pid file {path:?} (pid {pid} is gone)"
+                            );
+                            std::fs::remove_file(path).ok();
+                        }
+                        None if round == 0 => {
+                            eprintln!("[spt] reclaiming unreadable pid file {path:?}");
+                            std::fs::remove_file(path).ok();
+                        }
+                        _ => bail!("could not reclaim pid file {path:?}"),
+                    }
+                }
+                Err(e) => return Err(e).with_context(|| format!("creating pid file {path:?}")),
+            }
+        }
+        bail!("could not acquire pid file {path:?}")
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for PidLock {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+/// Whether `pid` names a live process.  On Linux this is a `/proc`
+/// probe; elsewhere we conservatively assume live (a stale file then
+/// needs manual removal — the acquire error explains that).
+fn pid_is_live(pid: u32) -> bool {
+    if cfg!(target_os = "linux") {
+        Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("spt_lock_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::remove_file(&path).ok();
+        path
+    }
+
+    #[test]
+    fn acquire_writes_pid_and_drop_releases() {
+        let path = tmp("basic.pid");
+        {
+            let lock = PidLock::acquire(&path).unwrap();
+            assert_eq!(lock.path(), path);
+            let body = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(body.trim(), std::process::id().to_string());
+        }
+        assert!(!path.exists(), "drop removes the pid file");
+    }
+
+    #[test]
+    fn second_acquire_fails_while_owner_lives() {
+        let path = tmp("double.pid");
+        let _held = PidLock::acquire(&path).unwrap();
+        // Our own pid is live, so a second acquire must refuse.
+        let err = PidLock::acquire(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("another spt daemon"), "{msg}");
+        assert!(msg.contains(&std::process::id().to_string()), "{msg}");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn stale_and_garbage_files_are_reclaimed() {
+        let path = tmp("stale.pid");
+        // Pid far above any real /proc entry on a test box.
+        std::fs::write(&path, "999999999\n").unwrap();
+        let _lock = PidLock::acquire(&path).unwrap();
+        drop(_lock);
+        std::fs::write(&path, "not a pid").unwrap();
+        let lock = PidLock::acquire(&path).unwrap();
+        drop(lock);
+        assert!(!path.exists());
+    }
+}

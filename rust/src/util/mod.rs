@@ -4,8 +4,12 @@
 //! its dependencies, so the usual ecosystem crates (serde, rand, proptest,
 //! clap, criterion) are reimplemented here at the scale this project needs.
 
+pub mod crc;
+pub mod fault;
 pub mod json;
+pub mod lock;
 pub mod proptest;
+pub mod retry;
 pub mod rng;
 
 /// Human-readable byte count (Table/figure reports).

@@ -1,0 +1,129 @@
+//! Deterministic capped exponential backoff for transient I/O errors.
+//!
+//! The delay schedule is a pure function of the attempt index —
+//! `min(cap, base << attempt)`, no jitter — because the callers are
+//! single-process local I/O (checkpoint writes, a loopback listener
+//! accept), not a distributed thundering herd, and this repo's signature
+//! property is that nothing observable depends on randomness or wall
+//! clocks.  Injected [`crate::util::fault::Crash`] errors are fatal by
+//! design: a retry loop that "survives" a crash would mask exactly the
+//! failure mode the chaos tests exist to exercise.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::fault;
+
+/// Retry policy: `attempts` total tries, sleeping
+/// `min(cap, base * 2^i)` after the i-th failure.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    pub attempts: u32,
+    pub base: Duration,
+    pub cap: Duration,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { attempts: 3, base: Duration::from_millis(5), cap: Duration::from_millis(50) }
+    }
+}
+
+impl Backoff {
+    /// A no-sleep policy for tests (still `attempts` tries).
+    pub fn immediate(attempts: u32) -> Self {
+        Backoff { attempts, base: Duration::ZERO, cap: Duration::ZERO }
+    }
+
+    /// Deterministic delay before retry `attempt` (0-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let factor = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        self.base.saturating_mul(factor).min(self.cap)
+    }
+}
+
+/// Run `op` under the policy.  `op` receives the 0-based attempt index.
+/// Crash-marked errors ([`fault::is_crash`]) abort immediately; other
+/// errors are retried until the attempt budget is spent.
+pub fn retry<T>(policy: &Backoff, label: &str, mut op: impl FnMut(u32) -> Result<T>) -> Result<T> {
+    let attempts = policy.attempts.max(1);
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) if fault::is_crash(&e) => return Err(e),
+            Err(e) => {
+                let delay = policy.delay(attempt);
+                if attempt + 1 < attempts && !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow::anyhow!("retry with zero attempts")))
+        .with_context(|| format!("{label}: failed after {attempts} attempts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn delay_schedule_is_capped_exponential() {
+        let b = Backoff {
+            attempts: 5,
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(32),
+        };
+        assert_eq!(b.delay(0), Duration::from_millis(5));
+        assert_eq!(b.delay(1), Duration::from_millis(10));
+        assert_eq!(b.delay(2), Duration::from_millis(20));
+        assert_eq!(b.delay(3), Duration::from_millis(32), "capped");
+        assert_eq!(b.delay(31), Duration::from_millis(32), "shift saturates");
+    }
+
+    #[test]
+    fn transient_errors_recover() {
+        let mut calls = 0;
+        let out = retry(&Backoff::immediate(3), "op", |attempt| {
+            calls += 1;
+            if attempt < 2 {
+                Err(anyhow!("transient"))
+            } else {
+                Ok(attempt)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 2);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_the_label() {
+        let err = retry(&Backoff::immediate(2), "writing ckpt", |_| {
+            Err::<(), _>(anyhow!("disk full"))
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("writing ckpt"), "{msg}");
+        assert!(msg.contains("2 attempts"), "{msg}");
+        assert!(msg.contains("disk full"), "{msg}");
+    }
+
+    #[test]
+    fn crashes_are_never_retried() {
+        let mut calls = 0;
+        let err = retry(&Backoff::immediate(5), "op", |_| {
+            calls += 1;
+            Err::<(), _>(anyhow::Error::from(std::io::Error::other(fault::Crash {
+                site: "ckpt_crash".into(),
+            })))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "crash aborts the loop");
+        assert!(fault::is_crash(&err));
+    }
+}

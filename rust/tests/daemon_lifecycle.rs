@@ -1,0 +1,232 @@
+//! Daemon lifecycle integration: overload behavior, drain completeness,
+//! and the bit-identical-under-load serving contract.
+//!
+//! The acceptance bar: under overload the daemon rejects with
+//! *structured* errors (never silent drops), every stream it does
+//! accept is bit-identical to what an unloaded [`ServeDriver`] would
+//! have generated for the same request, and a graceful drain produces a
+//! complete final report.
+
+use std::sync::Arc;
+
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::{Backend, NativeBackend};
+use spt::infer::{Daemon, DaemonConfig, InferModel, Request, ServeConfig, ServeDriver};
+use spt::util::fault::FaultPlan;
+use spt::util::json::{self, Json};
+
+const SEED: u64 = 42;
+
+fn model() -> InferModel {
+    let rc = RunConfig {
+        model: "spt-nano".into(),
+        mode: Mode::Spt,
+        seed: 7,
+        ..RunConfig::default()
+    };
+    let backend = NativeBackend::new();
+    let state = backend.init_state(&rc).unwrap();
+    InferModel::new(&rc, state).unwrap()
+}
+
+fn submit_line(id: usize, prompt: &[i32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        r#"{{"op":"submit","id":{id},"prompt":[{}],"max_new_tokens":{max_new}}}"#,
+        toks.join(",")
+    )
+}
+
+fn kind(e: &Json) -> &str {
+    e.get("event").as_str().unwrap_or("?")
+}
+
+fn prompt_for(id: usize) -> Vec<i32> {
+    vec![1 + id as i32, 2, 3, 4]
+}
+
+/// Unloaded reference: one request alone through a fresh driver with
+/// the same seed — the stream the daemon must reproduce under load.
+fn solo_tokens(m: &InferModel, id: usize, max_new: usize) -> Vec<i32> {
+    let cfg = ServeConfig { max_batch: 1, seed: SEED, ..ServeConfig::default() };
+    let mut driver = ServeDriver::new(m, cfg).unwrap();
+    driver
+        .submit(Request { id, prompt: prompt_for(id), max_new_tokens: max_new })
+        .unwrap();
+    let report = driver.run_to_completion().unwrap();
+    report.completions[0].tokens.clone()
+}
+
+#[test]
+fn overload_rejects_structured_and_served_streams_match_unloaded_driver() {
+    let m = model();
+    let cfg = DaemonConfig {
+        serve: ServeConfig { max_batch: 2, seed: SEED, ..ServeConfig::default() },
+        queue_cap: 3,
+        ..DaemonConfig::default()
+    };
+    let mut d = Daemon::new(&m, cfg).unwrap();
+    // Burst of 6 submissions against a queue of 3: the overflow must be
+    // rejected with a structured queue_full error, not dropped.
+    let mut accepted = Vec::new();
+    let mut rejected = Vec::new();
+    for id in 0..6 {
+        let ev = d.handle_line(&submit_line(id, &prompt_for(id), 5));
+        assert_eq!(ev.len(), 1);
+        match kind(&ev[0]) {
+            "accepted" => accepted.push(id),
+            "rejected" => {
+                assert_eq!(ev[0].get("code").as_str(), Some("queue_full"));
+                assert_eq!(ev[0].get("id").as_usize(), Some(id));
+                rejected.push(id);
+            }
+            other => panic!("unexpected event {other}"),
+        }
+    }
+    assert_eq!(accepted, vec![0, 1, 2], "queue admits in order to capacity");
+    assert_eq!(rejected, vec![3, 4, 5]);
+    // Drain and collect the done events.
+    let (events, report) = d.finish().unwrap();
+    let done: Vec<&Json> = events.iter().filter(|e| kind(e) == "done").collect();
+    assert_eq!(done.len(), 3, "every accepted request completes");
+    assert_eq!(report.completions.len(), 3);
+    assert_eq!(report.failed, 0);
+    // Each stream served under load is bit-identical to the same
+    // request alone on an unloaded driver (per-request RNG streams).
+    for c in &report.completions {
+        assert_eq!(
+            c.tokens,
+            solo_tokens(&m, c.id, 5),
+            "request {} diverged under load",
+            c.id
+        );
+    }
+}
+
+#[test]
+fn drain_finishes_in_flight_work_and_reports_completely() {
+    let m = model();
+    let mut d = Daemon::new(&m, DaemonConfig::default()).unwrap();
+    for id in 0..4 {
+        assert_eq!(kind(&d.handle_line(&submit_line(id, &prompt_for(id), 6))[0]), "accepted");
+    }
+    // Get some work in flight before draining.
+    d.pump().unwrap();
+    d.begin_drain();
+    // New work is refused once draining...
+    let ev = d.handle_line(&submit_line(99, &prompt_for(99), 2));
+    assert_eq!(ev[0].get("code").as_str(), Some("draining"));
+    // ...but everything already accepted runs to completion.
+    let (events, report) = d.finish().unwrap();
+    assert_eq!(report.completions.len(), 4);
+    assert_eq!(report.failed, 0);
+    for c in &report.completions {
+        assert_eq!(c.tokens.len(), 6, "request {} truncated by drain", c.id);
+    }
+    let report_ev = events.last().unwrap();
+    assert_eq!(kind(report_ev), "report");
+    assert_eq!(report_ev.get("completed").as_usize(), Some(4));
+    assert_eq!(report_ev.get("failed").as_usize(), Some(0));
+    assert_eq!(
+        report_ev.get("generated_tokens").as_usize(),
+        Some(24),
+        "4 requests x 6 tokens, all accounted for in the final report"
+    );
+}
+
+#[test]
+fn stdio_script_runs_the_full_lifecycle_with_clean_ndjson_output() {
+    let m = model();
+    let mut d = Daemon::new(
+        &m,
+        DaemonConfig {
+            serve: ServeConfig { max_batch: 2, seed: SEED, ..ServeConfig::default() },
+            queue_cap: 2,
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let script = format!(
+        "{}\n{}\n{}\ngarbage line\n{{\"op\":\"status\"}}\n{{\"op\":\"drain\"}}\n",
+        submit_line(0, &prompt_for(0), 4),
+        submit_line(1, &prompt_for(1), 4),
+        submit_line(2, &prompt_for(2), 4), // queue_cap 2: rejected
+    );
+    let mut out: Vec<u8> = Vec::new();
+    let report = d
+        .serve_stream(std::io::Cursor::new(script.into_bytes()), &mut out, true)
+        .unwrap()
+        .expect("drain produces a report");
+    assert_eq!(report.failed, 0);
+    let text = String::from_utf8(out).unwrap();
+    let events: Vec<Json> = text
+        .lines()
+        .map(|l| json::parse(l).unwrap_or_else(|e| panic!("non-JSON output line {l:?}: {e}")))
+        .collect();
+    let kinds: Vec<&str> = events.iter().map(kind).collect();
+    assert_eq!(kinds.iter().filter(|k| **k == "accepted").count(), 2);
+    assert_eq!(kinds.iter().filter(|k| **k == "rejected").count(), 1);
+    assert_eq!(kinds.iter().filter(|k| **k == "error").count(), 1, "garbage degraded");
+    assert_eq!(kinds.iter().filter(|k| **k == "done").count(), 2);
+    assert_eq!(*kinds.last().unwrap(), "report");
+    // Accepted streams match the unloaded driver even in stream mode.
+    for ev in events.iter().filter(|e| kind(e) == "done") {
+        let id = ev.get("id").as_usize().unwrap();
+        let tokens: Vec<i32> = ev
+            .get("tokens")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| i32::try_from(t.as_i64().unwrap()).unwrap())
+            .collect();
+        assert_eq!(tokens, solo_tokens(&m, id, 4), "request {id}");
+    }
+}
+
+#[test]
+fn deadline_cancellation_does_not_perturb_surviving_streams() {
+    let m = model();
+    let cfg = DaemonConfig {
+        serve: ServeConfig { max_batch: 4, seed: SEED, ..ServeConfig::default() },
+        deadline_steps: Some(4),
+        ..DaemonConfig::default()
+    };
+    let mut d = Daemon::new(&m, cfg).unwrap();
+    // Request 0 wants more decode steps than the deadline allows; 1 and
+    // 2 fit comfortably.
+    d.handle_line(&submit_line(0, &prompt_for(0), 10));
+    d.handle_line(&submit_line(1, &prompt_for(1), 3));
+    d.handle_line(&submit_line(2, &prompt_for(2), 3));
+    let (_, report) = d.finish().unwrap();
+    assert_eq!(report.completions.len(), 3);
+    assert_eq!(report.failed, 1);
+    let cancelled = &report.completions[0];
+    assert!(cancelled.error.as_deref().unwrap_or("").contains("deadline"));
+    assert!(!cancelled.tokens.is_empty(), "partial output preserved");
+    for c in report.completions.iter().filter(|c| c.error.is_none()) {
+        assert_eq!(c.tokens, solo_tokens(&m, c.id, 3), "survivor {} diverged", c.id);
+    }
+}
+
+#[test]
+fn fault_plan_rejections_are_deterministic_across_runs() {
+    let m = model();
+    let run = || -> Vec<String> {
+        let plan = Arc::new(FaultPlan::new().with("queue_full", 3));
+        let cfg = DaemonConfig { fault: Some(plan), ..DaemonConfig::default() };
+        let mut d = Daemon::new(&m, cfg).unwrap();
+        let mut outcomes = Vec::new();
+        for id in 0..5 {
+            let ev = d.handle_line(&submit_line(id, &prompt_for(id), 2));
+            outcomes.push(format!("{}:{}", id, kind(&ev[0])));
+        }
+        let (_, report) = d.finish().unwrap();
+        outcomes.push(format!("completed:{}", report.completions.len()));
+        outcomes
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "seeded fault plan must reproduce exactly");
+    assert_eq!(a[2], "2:rejected", "3rd probe fires the injected queue_full");
+    assert_eq!(a.last().unwrap(), "completed:4");
+}
