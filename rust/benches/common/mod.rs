@@ -179,11 +179,22 @@ pub fn emit(name: &str, table: &Table) {
 }
 
 /// Write a machine-readable result to bench_out/<name>.json, so perf
-/// trajectories can be tracked across PRs.
+/// trajectories can be tracked across PRs.  Top-level objects are
+/// stamped with host/build provenance (git sha, rayon threads, CPU
+/// model) so `cargo xtask benchdiff` can tell regressions from host
+/// changes.
 pub fn emit_json(name: &str, value: &spt::util::json::Json) {
+    use spt::util::json::Json;
+    let stamped = match value.clone() {
+        Json::Obj(mut m) => {
+            m.insert("provenance".to_string(), spt::util::provenance::provenance());
+            Json::Obj(m)
+        }
+        other => other,
+    };
     let dir = Path::new("bench_out");
     std::fs::create_dir_all(dir).ok();
-    std::fs::write(dir.join(format!("{name}.json")), format!("{value}\n")).ok();
+    std::fs::write(dir.join(format!("{name}.json")), format!("{stamped}\n")).ok();
     println!("[bench] wrote bench_out/{name}.json\n");
 }
 

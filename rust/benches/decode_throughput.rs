@@ -1,5 +1,5 @@
 //! Decode-throughput bench: continuous batching vs one-sequence-at-a-time
-//! on the native cached-decode path.
+//! on the native cached-decode path, plus a paged-KV capacity probe.
 //!
 //! Runs a synthetic request trace through [`spt::infer::ServeDriver`]
 //! twice — once with the in-flight capacity at `SPT_DECODE_MAX_BATCH`
@@ -9,6 +9,13 @@
 //! perf trajectory is tracked across PRs alongside the table3 train-step
 //! record.  Model via `SPT_DECODE_BENCH_MODEL` (default `spt-mini-64`,
 //! the GEMM-bound bench block); mode via `SPT_DECODE_BENCH_MODE`.
+//!
+//! The capacity probe replays a shared-prefix trace (every request
+//! carries the same prompt) against a fixed page pool twice — prefix
+//! sharing on vs off — and records how many concurrent streams the same
+//! memory sustains each way.  Sharing stores the common prompt's full
+//! pages once, so the shared run must sustain >= 2x the dense-slot
+//! stream count at identical per-request token output.
 
 mod common;
 
@@ -66,7 +73,12 @@ fn main() {
         })
         .collect();
     let run = |mb: usize| -> ServeReport {
-        let cfg = ServeConfig { max_batch: mb, sampler: Sampler::Greedy, seed: rc.seed };
+        let cfg = ServeConfig {
+            max_batch: mb,
+            sampler: Sampler::Greedy,
+            seed: rc.seed,
+            ..ServeConfig::default()
+        };
         let mut driver = ServeDriver::new(&model, cfg).expect("driver");
         for r in &reqs {
             driver.submit(r.clone()).expect("submit");
@@ -114,6 +126,78 @@ fn main() {
     }
     common::emit("decode_throughput", &table);
 
+    // ---- Paged-KV capacity probe: shared-prefix trace, fixed pool ----
+    //
+    // Geometry chosen so a full-length request needs 7 pages of which 5
+    // hold reusable full prompt pages, and the pool holds exactly two
+    // dense requests' worth of pages.  Dense slots then sustain 2
+    // concurrent streams; prefix sharing sustains 4 on the same pool.
+    let (page_tokens, cap_prompt_len, cap_new) =
+        if model.max_seq() >= 112 { (16usize, 96usize, 16usize) } else { (8, 48, 8) };
+    assert!(cap_prompt_len + cap_new <= model.max_seq());
+    let need_pages = (cap_prompt_len + cap_new).div_ceil(page_tokens);
+    let pool_pages = 2 * need_pages;
+    let prefill_chunk = 2 * page_tokens;
+    let shared_prompt: Vec<i32> =
+        corpus.sequence(cap_prompt_len).iter().map(|&t| t as i32).collect();
+    let cap_reqs: Vec<Request> = (0..8)
+        .map(|id| Request { id, prompt: shared_prompt.clone(), max_new_tokens: cap_new })
+        .collect();
+    // Steps for request 0's prefill to finish (registering its prefix
+    // pages in the share trie) plus one decode step.
+    let warm_steps = cap_prompt_len.div_ceil(prefill_chunk) + 1;
+    let capacity_run = |sharing: bool| -> ServeReport {
+        let cfg = ServeConfig {
+            max_batch: 8,
+            sampler: Sampler::Greedy,
+            seed: rc.seed,
+            page_tokens,
+            prefill_chunk,
+            prefix_sharing: sharing,
+            pool_pages: Some(pool_pages),
+            ..ServeConfig::default()
+        };
+        let mut driver = ServeDriver::new(&model, cfg).expect("capacity driver");
+        driver.submit(cap_reqs[0].clone()).expect("submit");
+        for _ in 0..warm_steps {
+            driver.step().expect("warm step");
+        }
+        for r in &cap_reqs[1..] {
+            driver.submit(r.clone()).expect("submit");
+        }
+        driver.run_to_completion().expect("capacity serve")
+    };
+    let shared = capacity_run(true);
+    let dense = capacity_run(false);
+    for (a, b) in shared.completions.iter().zip(&dense.completions) {
+        assert_eq!(a.tokens, b.tokens, "request {}: prefix sharing changed the tokens", a.id);
+    }
+    assert!(shared.prefix_hit_rate > 0.0, "shared run must hit the prefix trie");
+    assert_eq!(dense.prefix_hit_rate, 0.0, "dense run must not share");
+    let streams_ratio = shared.peak_in_flight as f64 / dense.peak_in_flight.max(1) as f64;
+    assert!(
+        streams_ratio >= 2.0,
+        "prefix sharing sustained {}x streams (shared {} vs dense {}), want >= 2x",
+        streams_ratio,
+        shared.peak_in_flight,
+        dense.peak_in_flight
+    );
+    println!(
+        "[decode_throughput] capacity: {} pages sustain {} shared-prefix streams vs {} \
+         dense ({}x), prefix hit rate {:.2}",
+        pool_pages, shared.peak_in_flight, dense.peak_in_flight, streams_ratio,
+        shared.prefix_hit_rate
+    );
+
+    let mut cap = BTreeMap::new();
+    cap.insert("page_tokens".into(), Json::Num(page_tokens as f64));
+    cap.insert("pool_pages".into(), Json::Num(pool_pages as f64));
+    cap.insert("prompt_len".into(), Json::Num(cap_prompt_len as f64));
+    cap.insert("max_new_tokens".into(), Json::Num(cap_new as f64));
+    cap.insert("shared".into(), shared.to_json());
+    cap.insert("dense".into(), dense.to_json());
+    cap.insert("streams_ratio".into(), Json::Num(streams_ratio));
+
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Json::Str("decode_native".into()));
     top.insert("model".into(), Json::Str(model_name));
@@ -126,6 +210,7 @@ fn main() {
     top.insert("overload".into(), overload.to_json());
     top.insert("baseline".into(), baseline.to_json());
     top.insert("speedup".into(), Json::Num(speedup));
+    top.insert("capacity".into(), Json::Obj(cap));
     common::emit_json("BENCH_decode_native", &Json::Obj(top));
     println!("[decode_throughput] continuous batching speedup: {speedup:.2}x");
 }

@@ -1,10 +1,28 @@
-//! The decode cache: per-layer, per-head K/V matrices plus (spt mode)
-//! the PQ codes of every cached key.
+//! Decode caches: the dense per-sequence [`DecodeCache`] (the solo
+//! [`super::Session`] reference layout) and the paged [`PagePool`] that
+//! backs the multi-tenant serve driver.
 //!
-//! Keys and values append row by row as decode advances; codes append
-//! through [`pq::quantize_append`], so the cached code matrix is always
-//! bit-identical to a fresh quantization of the cached keys — which is
-//! exactly what the training forward's top-L selection consumes.
+//! **Dense cache.** Keys and values append row by row as decode
+//! advances; codes append through [`pq::quantize_append`], so the
+//! cached code matrix is always bit-identical to a fresh quantization
+//! of the cached keys — which is exactly what the training forward's
+//! top-L selection consumes.
+//!
+//! **Paged pool.** Fixed-size pages of `page_tokens` positions hold the
+//! K/V rows and PQ codes of *all* layers and heads for those positions,
+//! carved out of three pre-allocated slabs.  A request owns a
+//! [`PageTable`] (page ids in position order); pages are refcounted so
+//! requests with a common prompt prefix can map the same physical
+//! pages.  Prefix sharing is keyed on `(l_sess, parent_page,
+//! token_chunk)` in a chunk trie: a page is only ever reused when the
+//! session L *and* every prompt token it covers match, which (with the
+//! per-row `l_eff = min(l, pos+1)` clamp inside the decode kernel)
+//! makes shared bytes bit-identical to privately recomputed ones.
+//! Writes require `refcount == 1`; [`PagePool::cow`] detaches a shared
+//! page first.  All bookkeeping uses `BTreeMap`/`BTreeSet` and
+//! smallest-id-first allocation, so page placement is deterministic.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
@@ -108,6 +126,330 @@ impl DecodeCache {
     }
 }
 
+/// A request's view into the pool: physical page ids in position order.
+/// Position `p` lives in `pages[p / page_tokens]` at slot
+/// `p % page_tokens`.
+#[derive(Default)]
+pub struct PageTable {
+    pub pages: Vec<usize>,
+}
+
+/// Sentinel parent for the first page of a prefix chain.
+const NO_PARENT: usize = usize::MAX;
+
+/// Prefix-trie key: a page is shareable only between requests whose
+/// session L matches, whose earlier prompt pages are the *same physical
+/// pages*, and whose tokens over this page's span are identical.
+type ShareKey = (usize, usize, Vec<i32>);
+
+/// Fixed-size paged KV+code storage shared by every slot of one serve
+/// driver.  See the module docs for the layout and sharing contract.
+pub struct PagePool {
+    page_tokens: usize,
+    n_layers: usize,
+    heads: usize,
+    d_head: usize,
+    pq_m: Option<usize>,
+    /// K slab: page-major, then `[layer][head][slot][d_head]`.
+    k: Vec<f32>,
+    /// V slab, same layout as `k`.
+    v: Vec<f32>,
+    /// Code slab (empty unless `pq_m`): page-major, then
+    /// `[layer][head][slot][m]`.
+    codes: Vec<u8>,
+    refcount: Vec<usize>,
+    /// Free page ids; smallest-first pop keeps placement deterministic.
+    free: BTreeSet<usize>,
+    sharing: bool,
+    share_index: BTreeMap<ShareKey, usize>,
+    /// Reverse map for unregistration when a page's refcount hits 0.
+    share_key: Vec<Option<ShareKey>>,
+    shared_page_hits: usize,
+    cow_copies: usize,
+}
+
+impl PagePool {
+    pub fn new(
+        pages: usize,
+        page_tokens: usize,
+        n_layers: usize,
+        heads: usize,
+        d_head: usize,
+        pq_m: Option<usize>,
+        sharing: bool,
+    ) -> Result<Self> {
+        if pages == 0 || page_tokens == 0 {
+            bail!("page pool needs >= 1 page of >= 1 token (got {pages} x {page_tokens})");
+        }
+        if n_layers == 0 || heads == 0 || d_head == 0 {
+            bail!("degenerate pool shape: {n_layers} layers x {heads} heads x {d_head}");
+        }
+        let kv_len = pages * n_layers * heads * page_tokens * d_head;
+        let code_len = pq_m.map_or(0, |m| pages * n_layers * heads * page_tokens * m);
+        Ok(PagePool {
+            page_tokens,
+            n_layers,
+            heads,
+            d_head,
+            pq_m,
+            k: vec![0.0; kv_len],
+            v: vec![0.0; kv_len],
+            codes: vec![0; code_len],
+            refcount: vec![0; pages],
+            free: (0..pages).collect(),
+            sharing,
+            share_index: BTreeMap::new(),
+            share_key: (0..pages).map(|_| None).collect(),
+            shared_page_hits: 0,
+            cow_copies: 0,
+        })
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Total pages in the pool.
+    pub fn pages(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.pages() - self.free_pages()
+    }
+
+    /// Distinct prefix-trie hits so far (each one is `page_tokens`
+    /// prompt positions some request did not have to recompute).
+    pub fn shared_page_hits(&self) -> usize {
+        self.shared_page_hits
+    }
+
+    pub fn cow_copies(&self) -> usize {
+        self.cow_copies
+    }
+
+    /// Bytes of one page across all layers/heads: K + V floats plus
+    /// code bytes.  The allocation granule `memmodel::decode_page_bytes`
+    /// models analytically.
+    pub fn bytes_per_page(&self) -> usize {
+        let rows = self.n_layers * self.heads * self.page_tokens;
+        rows * self.d_head * 2 * 4 + rows * self.pq_m.unwrap_or(0)
+    }
+
+    fn kv_offset(&self, page: usize, li: usize, h: usize) -> usize {
+        (((page * self.n_layers) + li) * self.heads + h) * self.page_tokens * self.d_head
+    }
+
+    fn code_offset(&self, page: usize, li: usize, h: usize, m: usize) -> usize {
+        (((page * self.n_layers) + li) * self.heads + h) * self.page_tokens * m
+    }
+
+    /// Allocate a fresh page (refcount 1), smallest free id first.
+    /// `None` when the pool is exhausted — the caller's admission
+    /// accounting is supposed to make that unreachable mid-flight.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let page = self.free.pop_first()?;
+        self.refcount[page] = 1;
+        page.into()
+    }
+
+    /// Take one more reference on an already-live page.
+    pub fn retain(&mut self, page: usize) {
+        debug_assert!(self.refcount[page] > 0, "retain of a free page");
+        self.refcount[page] += 1;
+    }
+
+    /// Drop one reference; at zero the page leaves the prefix trie and
+    /// returns to the free list.
+    pub fn release(&mut self, page: usize) {
+        debug_assert!(self.refcount[page] > 0, "release of a free page");
+        self.refcount[page] -= 1;
+        if self.refcount[page] == 0 {
+            if let Some(key) = self.share_key[page].take() {
+                self.share_index.remove(&key);
+            }
+            self.free.insert(page);
+        }
+    }
+
+    pub fn refcount(&self, page: usize) -> usize {
+        self.refcount[page]
+    }
+
+    /// Write position `pos`'s K/V rows (`[heads * d_head]` head-major,
+    /// the projection row layout) for layer `li` through `table`,
+    /// quantizing the key when the pool carries codes.  The page must
+    /// be privately owned — shared pages take [`PagePool::cow`] first.
+    pub fn write_row(
+        &mut self,
+        table: &PageTable,
+        pos: usize,
+        li: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        cbs: Option<&[Codebooks]>,
+    ) -> Result<()> {
+        let (heads, dh) = (self.heads, self.d_head);
+        if k_row.len() != heads * dh || v_row.len() != heads * dh {
+            bail!("write row has {} values, pool wants {heads} heads x {dh}", k_row.len());
+        }
+        if self.pq_m.is_some() && cbs.is_none() {
+            bail!("pool carries PQ codes but no codebooks were supplied");
+        }
+        let Some(&page) = table.pages.get(pos / self.page_tokens) else {
+            bail!("position {pos} beyond the page table ({} pages mapped)", table.pages.len());
+        };
+        if self.refcount[page] != 1 {
+            bail!(
+                "write to page {page} with refcount {} (copy-on-write must detach it first)",
+                self.refcount[page]
+            );
+        }
+        let slot = pos % self.page_tokens;
+        for h in 0..heads {
+            let seg = h * dh..(h + 1) * dh;
+            let base = self.kv_offset(page, li, h) + slot * dh;
+            self.k[base..base + dh].copy_from_slice(&k_row[seg.clone()]);
+            self.v[base..base + dh].copy_from_slice(&v_row[seg.clone()]);
+            if let (Some(m), Some(cbs)) = (self.pq_m, cbs) {
+                let cb = self.code_offset(page, li, h, m) + slot * m;
+                pq::quantize_row(&k_row[seg], &cbs[h], &mut self.codes[cb..cb + m]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Detach `page` for writing: shared pages are byte-copied into a
+    /// fresh page (old reference dropped), private pages pass through.
+    /// The copy is never trie-registered — the original stays canonical.
+    pub fn cow(&mut self, page: usize) -> Result<usize> {
+        if self.refcount[page] <= 1 {
+            return Ok(page);
+        }
+        let Some(fresh) = self.alloc() else {
+            bail!("page pool exhausted during copy-on-write of page {page}");
+        };
+        let kv = self.n_layers * self.heads * self.page_tokens * self.d_head;
+        self.k.copy_within(page * kv..(page + 1) * kv, fresh * kv);
+        self.v.copy_within(page * kv..(page + 1) * kv, fresh * kv);
+        if let Some(m) = self.pq_m {
+            let cl = self.n_layers * self.heads * self.page_tokens * m;
+            self.codes.copy_within(page * cl..(page + 1) * cl, fresh * cl);
+        }
+        self.cow_copies += 1;
+        self.release(page);
+        Ok(fresh)
+    }
+
+    /// How many leading prompt pages of `prompt` are reusable at all:
+    /// fully covered by the prompt *and* strictly before the page
+    /// holding the last prompt position (that page is always computed
+    /// fresh, so its logits — and a write target — exist; this also
+    /// keeps every shared page read-only by construction).
+    pub fn reusable_prompt_pages(&self, prompt_len: usize) -> usize {
+        (prompt_len / self.page_tokens).min(prompt_len.saturating_sub(1) / self.page_tokens)
+    }
+
+    /// Walk the prefix trie for `(l_sess, prompt)` and retain every
+    /// page hit.  Returns the matched chain (a prefix of the prompt's
+    /// reusable pages); the caller owns one reference on each.
+    pub fn acquire_chain(&mut self, l_sess: usize, prompt: &[i32]) -> Vec<usize> {
+        let mut pages = Vec::new();
+        if !self.sharing {
+            return pages;
+        }
+        let pt = self.page_tokens;
+        let mut parent = NO_PARENT;
+        for kx in 0..self.reusable_prompt_pages(prompt.len()) {
+            let key = (l_sess, parent, prompt[kx * pt..(kx + 1) * pt].to_vec());
+            match self.share_index.get(&key) {
+                Some(&pg) => {
+                    self.refcount[pg] += 1;
+                    self.shared_page_hits += 1;
+                    parent = pg;
+                    pages.push(pg);
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    /// Register this request's computed prompt pages (the first
+    /// `covered` positions are valid) into the prefix trie.  First
+    /// registration wins; later walkers follow the canonical chain, so
+    /// calling this after every prefill chunk is idempotent.
+    pub fn register_chain(&mut self, l_sess: usize, prompt: &[i32], table: &PageTable, covered: usize) {
+        if !self.sharing {
+            return;
+        }
+        let pt = self.page_tokens;
+        let limit = self.reusable_prompt_pages(prompt.len()).min(covered / pt);
+        let mut parent = NO_PARENT;
+        for kx in 0..limit.min(table.pages.len()) {
+            let key = (l_sess, parent, prompt[kx * pt..(kx + 1) * pt].to_vec());
+            match self.share_index.get(&key) {
+                Some(&pg) => parent = pg,
+                None => {
+                    let page = table.pages[kx];
+                    self.share_index.insert(key.clone(), page);
+                    self.share_key[page] = Some(key);
+                    parent = page;
+                }
+            }
+        }
+    }
+
+    /// Gather the first `n_rows` cached positions of `(li, h)` into
+    /// contiguous per-row scratch (`[n_rows, d_head]` K/V and, when
+    /// requested, `[n_rows, m]` codes), page-sized block copies at a
+    /// time.  The scratch buffers are fully overwritten, so the decode
+    /// kernels see exactly the dense cache layout.
+    pub fn gather(
+        &self,
+        table: &PageTable,
+        li: usize,
+        h: usize,
+        n_rows: usize,
+        gk: &mut Matrix,
+        gv: &mut Matrix,
+        gc: Option<&mut Codes>,
+    ) {
+        let (pt, dh) = (self.page_tokens, self.d_head);
+        gk.rows = n_rows;
+        gk.cols = dh;
+        gk.data.clear();
+        gv.rows = n_rows;
+        gv.cols = dh;
+        gv.data.clear();
+        let mut done = 0;
+        while done < n_rows {
+            let take = (n_rows - done).min(pt);
+            let base = self.kv_offset(table.pages[done / pt], li, h);
+            gk.data.extend_from_slice(&self.k[base..base + take * dh]);
+            gv.data.extend_from_slice(&self.v[base..base + take * dh]);
+            done += take;
+        }
+        if let Some(gc) = gc {
+            let m = self.pq_m.expect("code gather on a codeless pool");
+            gc.n = n_rows;
+            gc.m = m;
+            gc.data.clear();
+            let mut done = 0;
+            while done < n_rows {
+                let take = (n_rows - done).min(pt);
+                let base = self.code_offset(table.pages[done / pt], li, h, m);
+                gc.data.extend_from_slice(&self.codes[base..base + take * m]);
+                done += take;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +490,159 @@ mod tests {
         dense.append(0, &[0.0; 8], &[0.0; 8], None).unwrap();
         assert_eq!(dense.len(), 1);
         assert!(dense.layers[0].codes.is_none());
+    }
+
+    fn pool_rows(pool: &PagePool, table: &PageTable, li: usize, h: usize, n: usize) -> Vec<f32> {
+        let (mut gk, mut gv) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+        pool.gather(table, li, h, n, &mut gk, &mut gv, None);
+        assert_eq!(gv.rows, n);
+        gk.data
+    }
+
+    #[test]
+    fn paged_writes_gather_back_identical_to_a_dense_cache() {
+        let (layers, heads, dh, m) = (2usize, 3usize, 4usize, 2usize);
+        let mut rng = Rng::new(9);
+        let cbs: Vec<Codebooks> =
+            (0..heads).map(|_| Codebooks::random(m, 16, dh / m, &mut rng)).collect();
+        let mut dense = DecodeCache::new(layers, heads, dh, Some(m));
+        let mut pool = PagePool::new(4, 3, layers, heads, dh, Some(m), true).unwrap();
+        let mut table = PageTable::default();
+        // 7 positions span 3 pages of 3 tokens.
+        for pos in 0..7 {
+            while table.pages.len() * 3 < pos + 1 {
+                table.pages.push(pool.alloc().unwrap());
+            }
+            for li in 0..layers {
+                let k: Vec<f32> = rng.normal_vec(heads * dh);
+                let v: Vec<f32> = rng.normal_vec(heads * dh);
+                dense.append(li, &k, &v, Some(&cbs)).unwrap();
+                pool.write_row(&table, pos, li, &k, &v, Some(&cbs)).unwrap();
+            }
+        }
+        assert_eq!(pool.pages_in_use(), 3);
+        let (mut gk, mut gv) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+        let mut gc = Codes::zeros(0, 0);
+        for li in 0..layers {
+            for h in 0..heads {
+                for n in [1usize, 3, 5, 7] {
+                    pool.gather(&table, li, h, n, &mut gk, &mut gv, Some(&mut gc));
+                    let lc = &dense.layers[li];
+                    assert_eq!(gk.data, lc.k[h].data[..n * dh]);
+                    assert_eq!(gv.data, lc.v[h].data[..n * dh]);
+                    assert_eq!(gc.data, lc.codes.as_ref().unwrap()[h].data[..n * m]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alloc_release_recycles_smallest_first_and_tracks_refcounts() {
+        let mut pool = PagePool::new(3, 2, 1, 1, 2, None, true).unwrap();
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_eq!((a, b), (0, 1), "smallest free id first");
+        assert_eq!(pool.free_pages(), 1);
+        pool.retain(a);
+        pool.release(a);
+        assert_eq!(pool.refcount(a), 1, "retained page survives one release");
+        assert_eq!(pool.free_pages(), 1);
+        pool.release(a);
+        assert_eq!(pool.free_pages(), 2);
+        assert_eq!(pool.alloc().unwrap(), 0, "freed page is recycled first");
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, 2);
+        assert!(pool.alloc().is_none(), "exhaustion is an Option, not a panic");
+        pool.release(b);
+        pool.release(c);
+        pool.release(0);
+        assert_eq!(pool.free_pages(), 3);
+    }
+
+    #[test]
+    fn prefix_chain_shares_only_aligned_matching_prefixes() {
+        let mut pool = PagePool::new(8, 2, 1, 1, 2, None, true).unwrap();
+        let prompt: Vec<i32> = vec![1, 2, 3, 4, 5];
+        // 5 tokens at 2/page: pages 0..1 fully covered AND before the
+        // last position's page -> 2 reusable pages.
+        assert_eq!(pool.reusable_prompt_pages(prompt.len()), 2);
+        // A 4-token prompt's last position lands in page 1, so only
+        // page 0 is reusable even though page 1 is fully covered.
+        assert_eq!(pool.reusable_prompt_pages(4), 1);
+
+        let mut table = PageTable::default();
+        for _ in 0..3 {
+            table.pages.push(pool.alloc().unwrap());
+        }
+        pool.register_chain(7, &prompt, &table, 5);
+        // Same L, same prompt: both reusable pages hit and are retained.
+        let chain = pool.acquire_chain(7, &prompt);
+        assert_eq!(chain, table.pages[..2]);
+        assert_eq!(pool.refcount(chain[0]), 2);
+        assert_eq!(pool.shared_page_hits(), 2);
+        // Different session L: no hit (selection widths differ).
+        assert!(pool.acquire_chain(9, &prompt).is_empty());
+        // Diverging second page: only the first page is shared.
+        assert_eq!(pool.acquire_chain(7, &[1, 2, 9, 9, 5]), table.pages[..1]);
+        // Diverging first token: nothing shared (chain is rooted).
+        assert!(pool.acquire_chain(7, &[9, 2, 3, 4, 5]).is_empty());
+        // Releasing the original owner keeps shared pages alive for the
+        // borrowers (page 0: the full chain + the diverging-prefix walk).
+        for &p in &table.pages {
+            pool.release(p);
+        }
+        assert_eq!(pool.refcount(chain[0]), 2, "borrowers still hold the prefix");
+        assert_eq!(pool.refcount(chain[1]), 1, "only the chain holds page 1");
+        // A trie entry dies with its page's last reference: drop page 1
+        // and the walk stops after page 0.
+        pool.release(chain[1]);
+        let tail = pool.acquire_chain(7, &prompt);
+        assert_eq!(tail, vec![chain[0]], "page 1 left the trie");
+        for _ in 0..3 {
+            pool.release(chain[0]);
+        }
+        assert!(pool.acquire_chain(7, &prompt).is_empty(), "fully released chain left the trie");
+        assert_eq!(pool.free_pages(), 3);
+    }
+
+    #[test]
+    fn cow_detaches_shared_pages_bytewise_and_blocks_shared_writes() {
+        let mut rng = Rng::new(4);
+        let mut pool = PagePool::new(3, 2, 1, 2, 4, None, true).unwrap();
+        let mut table = PageTable { pages: vec![pool.alloc().unwrap()] };
+        let k: Vec<f32> = rng.normal_vec(8);
+        let v: Vec<f32> = rng.normal_vec(8);
+        pool.write_row(&table, 0, 0, &k, &v, None).unwrap();
+        pool.retain(table.pages[0]);
+        // Writing through a shared page is a hard error…
+        let err = pool.write_row(&table, 1, 0, &k, &v, None).unwrap_err();
+        assert!(err.to_string().contains("copy-on-write"), "{err:#}");
+        // …until COW detaches it; the copy carries identical bytes.
+        let before = pool_rows(&pool, &table, 0, 1, 1);
+        let fresh = pool.cow(table.pages[0]).unwrap();
+        assert_ne!(fresh, table.pages[0]);
+        assert_eq!(pool.refcount(table.pages[0]), 1, "old reference dropped");
+        table.pages[0] = fresh;
+        assert_eq!(pool_rows(&pool, &table, 0, 1, 1), before, "COW copied the bytes");
+        assert_eq!(pool.cow_copies(), 1);
+        pool.write_row(&table, 1, 0, &k, &v, None).unwrap();
+        // A private page passes through COW untouched.
+        assert_eq!(pool.cow(fresh).unwrap(), fresh);
+    }
+
+    #[test]
+    fn pool_validates_shapes_and_write_bounds() {
+        assert!(PagePool::new(0, 16, 1, 1, 4, None, true).is_err());
+        assert!(PagePool::new(4, 0, 1, 1, 4, None, true).is_err());
+        let mut pool = PagePool::new(2, 2, 1, 1, 4, Some(2), true).unwrap();
+        let table = PageTable { pages: vec![pool.alloc().unwrap()] };
+        let err = pool.write_row(&table, 2, 0, &[0.0; 4], &[0.0; 4], None).unwrap_err();
+        assert!(err.to_string().contains("beyond the page table"), "{err:#}");
+        assert!(pool.write_row(&table, 0, 0, &[0.0; 3], &[0.0; 4], None).is_err());
+        // Codes demand codebooks, exactly like the dense cache.
+        assert!(pool.write_row(&table, 0, 0, &[0.0; 4], &[0.0; 4], None).is_err());
+        // 2-token page over 1 layer x 1 head: 2 slots x d_head 4 x
+        // (K+V) floats + 2 slots x m 2 code bytes.
+        assert_eq!(pool.bytes_per_page(), 2 * 2 * 4 * 4 + 2 * 2);
     }
 }

@@ -20,14 +20,17 @@
 //!
 //! ## Admission control
 //!
-//! Every request is charged its *target-length* footprint up front —
-//! [`crate::memmodel::decode_request_bytes`] at `prompt + max_new`
-//! tokens — so the sum of charges over in-flight requests is a provable
-//! upper bound on their cache bytes at any step.  A request is fed to
-//! the driver only while `committed + cost <= mem_budget`; otherwise it
-//! waits in the daemon's bounded queue (capacity `queue_cap`, overflow
-//! rejected with a structured `queue_full` error, never silently
-//! dropped).
+//! Budgeting is page-granular and live: the driver's KV storage is a
+//! fixed page pool sized from `--mem_budget` (budget /
+//! [`crate::memmodel::decode_page_bytes`] pages), and the driver
+//! charges every request its full target-length page demand at
+//! admission, crediting pages back on retirement — so committed bytes
+//! (pages in use × page bytes) provably never exceed the budget.  The
+//! daemon rejects outright (structured `mem_budget` event) only a
+//! request whose page demand exceeds the *whole* pool; anything that
+//! fits eventually waits in the bounded queue (capacity `queue_cap`,
+//! overflow rejected with a structured `queue_full` error, never
+//! silently dropped).
 //!
 //! ## Determinism
 //!
@@ -36,16 +39,16 @@
 //! produces the same admissions, cancellations, and token streams at
 //! any rayon pool size.  Wall-clock only ever lands in latency metrics.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::serve::{Completion, Request, ServeConfig, ServeDriver, ServeReport};
 use super::session::InferModel;
-use crate::config::{presets, BlockConfig, Mode};
+use crate::config::{presets, Mode};
 use crate::memmodel;
 use crate::util::fault::{self, FaultPlan};
 use crate::util::json::Json;
@@ -58,13 +61,18 @@ pub struct DaemonConfig {
     /// Capacity of the daemon's admission queue (requests accepted but
     /// not yet fed to the driver).  Overflow is rejected, not dropped.
     pub queue_cap: usize,
-    /// Upper bound on the summed target-length cache footprint of
-    /// requests fed to the driver.  `None` disables the budget.
+    /// Byte budget for the KV page pool: the pool is sized to
+    /// `budget / page_bytes` pages (unless `serve.pool_pages` already
+    /// overrides it), so committed cache bytes can never exceed it.
+    /// `None` keeps the driver's default pool (max_batch full-length
+    /// sequences).
     pub mem_budget: Option<u64>,
     /// Cancel a request once it has been in the driver this many decode
     /// steps (a deterministic deadline).  `None` disables deadlines.
     pub deadline_steps: Option<usize>,
-    /// Fault-injection plan (sites `queue_full`, `accept_err`).
+    /// Fault-injection plan (sites `queue_full`, `accept_err`; shared
+    /// into the driver for `page_pool_exhausted` unless the serve
+    /// config already carries its own plan).
     pub fault: Option<Arc<FaultPlan>>,
 }
 
@@ -97,18 +105,14 @@ fn error_event(reason: impl Into<String>) -> Json {
 pub struct Daemon<'m> {
     driver: ServeDriver<'m>,
     cfg: DaemonConfig,
-    block: BlockConfig,
-    mode: Mode,
-    n_layers: usize,
     max_seq: usize,
-    /// Accepted requests not yet fed to the driver (budget backlog).
+    /// Bytes of one pool page — the admission/budget granule
+    /// ([`memmodel::decode_page_bytes`]).
+    page_bytes: u64,
+    /// Live request ids (accepted, not yet done) — duplicate detection.
+    live: BTreeSet<usize>,
+    /// Accepted requests not yet fed to the driver.
     pending: VecDeque<Request>,
-    /// Charged bytes per live request id (pending or in driver).
-    cost: BTreeMap<usize, u64>,
-    /// Bytes charged for requests currently fed to the driver.
-    committed: u64,
-    /// Driver decode-step count at the moment each request was fed.
-    admitted_at: BTreeMap<usize, usize>,
     /// Completions already streamed as `done` events, folded back into
     /// the final report.
     done: Vec<Completion>,
@@ -116,19 +120,36 @@ pub struct Daemon<'m> {
 }
 
 impl<'m> Daemon<'m> {
-    pub fn new(model: &'m InferModel, cfg: DaemonConfig) -> Result<Self> {
+    pub fn new(model: &'m InferModel, mut cfg: DaemonConfig) -> Result<Self> {
         let mc = presets::model(model.model_name())?;
+        // The driver probes `page_pool_exhausted`; share the daemon's
+        // plan down unless the serve config carries its own.
+        if cfg.serve.fault.is_none() {
+            cfg.serve.fault = cfg.fault.clone();
+        }
+        let page_bytes = memmodel::decode_page_bytes(
+            &mc.block,
+            model.mode(),
+            cfg.serve.page_tokens,
+            mc.n_layers.max(1),
+        );
+        if let (Some(budget), None) = (cfg.mem_budget, cfg.serve.pool_pages) {
+            let pages = memmodel::pool_pages_for_budget(budget, page_bytes);
+            if pages == 0 {
+                bail!(
+                    "mem_budget {budget} bytes cannot hold even one \
+                     {page_bytes}-byte KV page"
+                );
+            }
+            cfg.serve.pool_pages = Some(pages);
+        }
         Ok(Daemon {
             driver: ServeDriver::new(model, cfg.serve.clone())?,
-            block: mc.block,
-            mode: model.mode(),
-            n_layers: mc.n_layers.max(1),
             max_seq: model.max_seq(),
+            page_bytes,
             cfg,
+            live: BTreeSet::new(),
             pending: VecDeque::new(),
-            cost: BTreeMap::new(),
-            committed: 0,
-            admitted_at: BTreeMap::new(),
             done: Vec::new(),
             draining: false,
         })
@@ -148,9 +169,10 @@ impl<'m> Daemon<'m> {
         !self.pending.is_empty() || self.driver.queued() > 0 || self.driver.in_flight() > 0
     }
 
-    /// Bytes currently charged against the memory budget.
+    /// Bytes of KV cache currently committed (live pool pages × page
+    /// bytes) — bounded by the pool size, hence by `mem_budget`.
     pub fn committed_bytes(&self) -> u64 {
-        self.committed
+        self.driver.pool_pages_in_use() as u64 * self.page_bytes
     }
 
     /// Handle one protocol line; returns the events it produced.
@@ -184,7 +206,12 @@ impl<'m> Daemon<'m> {
                 ("pending", Json::Num(self.pending.len() as f64)),
                 ("in_flight", Json::Num(self.driver.in_flight() as f64)),
                 ("driver_queued", Json::Num(self.driver.queued() as f64)),
-                ("committed_bytes", Json::Num(self.committed as f64)),
+                ("committed_bytes", Json::Num(self.committed_bytes() as f64)),
+                ("pool_pages", Json::Num(self.driver.pool_pages() as f64)),
+                (
+                    "pool_free_pages",
+                    Json::Num(self.driver.pool_free_pages() as f64),
+                ),
                 ("decode_steps", Json::Num(self.driver.decode_steps() as f64)),
                 ("draining", Json::Bool(self.draining)),
             ],
@@ -209,7 +236,7 @@ impl<'m> Daemon<'m> {
         if self.draining {
             return vec![Self::rejected(Some(id), "draining", "daemon is draining")];
         }
-        if self.cost.contains_key(&id) {
+        if self.live.contains(&id) {
             return vec![Self::rejected(
                 Some(id),
                 "invalid",
@@ -268,18 +295,20 @@ impl<'m> Daemon<'m> {
                 format!("admission queue at capacity {}", self.cfg.queue_cap),
             )];
         }
-        let cost = memmodel::decode_request_bytes(&self.block, self.mode, target, self.n_layers);
-        if let Some(budget) = self.cfg.mem_budget {
-            if cost > budget {
-                return vec![Self::rejected(
-                    Some(id),
-                    "mem_budget",
-                    format!("request needs {cost} bytes, budget is {budget}"),
-                )];
-            }
+        let pages = memmodel::decode_request_pages(target, self.cfg.serve.page_tokens);
+        let cost = pages as u64 * self.page_bytes;
+        if pages > self.driver.pool_pages() {
+            return vec![Self::rejected(
+                Some(id),
+                "mem_budget",
+                format!(
+                    "request needs {pages} KV pages, pool holds {}",
+                    self.driver.pool_pages()
+                ),
+            )];
         }
         let queued = self.pending.len() + 1;
-        self.cost.insert(id, cost);
+        self.live.insert(id);
         self.pending.push_back(Request { id, prompt, max_new_tokens: max_new });
         vec![event(
             "accepted",
@@ -291,26 +320,19 @@ impl<'m> Daemon<'m> {
         )]
     }
 
-    /// Feed pending requests to the driver while the budget allows.
+    /// Feed pending requests to the driver.  Page-granular budgeting
+    /// lives in the driver's own admission loop (charge at admit,
+    /// credit at retire), so the daemon hands everything over and lets
+    /// requests wait in the driver's queue until pages free up.
     fn feed_driver(&mut self, events: &mut Vec<Json>) {
-        while let Some(front) = self.pending.front() {
-            let id = front.id;
-            let cost = self.cost.get(&id).copied().unwrap_or(0);
-            if let Some(budget) = self.cfg.mem_budget {
-                if self.committed + cost > budget {
-                    break;
-                }
-            }
-            let Some(req) = self.pending.pop_front() else { break };
+        while let Some(req) = self.pending.pop_front() {
+            let id = req.id;
             match self.driver.submit(req) {
-                Ok(()) => {
-                    self.committed += cost;
-                    self.admitted_at.insert(id, self.driver.decode_steps());
-                }
+                Ok(()) => {}
                 Err(e) => {
                     // Validation mirrored at submit should make this
                     // unreachable; degrade the one request regardless.
-                    self.cost.remove(&id);
+                    self.live.remove(&id);
                     let c = Completion {
                         id,
                         tokens: Vec::new(),
@@ -353,9 +375,9 @@ impl<'m> Daemon<'m> {
                     .in_flight_ids()
                     .into_iter()
                     .filter(|id| {
-                        self.admitted_at
-                            .get(id)
-                            .is_some_and(|at| now.saturating_sub(*at) >= limit)
+                        self.driver
+                            .admitted_step(*id)
+                            .is_some_and(|at| now.saturating_sub(at) >= limit)
                     })
                     .collect();
                 for id in overdue {
@@ -365,10 +387,7 @@ impl<'m> Daemon<'m> {
             }
         }
         for c in self.driver.take_finished() {
-            if let Some(cost) = self.cost.remove(&c.id) {
-                self.committed = self.committed.saturating_sub(cost);
-            }
-            self.admitted_at.remove(&c.id);
+            self.live.remove(&c.id);
             events.push(Self::done_event(&c));
             self.done.push(c);
         }
@@ -613,22 +632,29 @@ mod tests {
     fn mem_budget_bounds_committed_bytes() {
         let m = model();
         let mc = presets::model("spt-nano").unwrap();
-        let one = memmodel::decode_request_bytes(&mc.block, Mode::Spt, 8, mc.n_layers.max(1));
-        // Budget fits exactly one target-length-8 request at a time.
+        let page = memmodel::decode_page_bytes(
+            &mc.block,
+            Mode::Spt,
+            ServeConfig::default().page_tokens,
+            mc.n_layers.max(1),
+        );
+        // Budget fits exactly one KV page: the pool serializes requests.
+        let budget = page + page / 2;
         let cfg = DaemonConfig {
-            mem_budget: Some(one + one / 2),
+            mem_budget: Some(budget),
             queue_cap: 16,
             ..DaemonConfig::default()
         };
         let mut d = Daemon::new(&m, cfg).unwrap();
+        assert_eq!(d.driver.pool_pages(), 1, "budget buys exactly one page");
         for id in 0..3 {
+            // target 8 tokens = one 16-token page: fits, so it queues.
             let ev = d.handle_line(&submit_line(id, &[1, 2, 3, 4], 4));
             assert_eq!(kind(&ev[0]), "accepted", "budget queues, never rejects fits");
         }
-        // A request that can never fit is rejected outright.
-        let ev = d.handle_line(&submit_line(9, &[1, 2, 3, 4], 12));
+        // Target 34 tokens = 3 pages > the whole 1-page pool: rejected.
+        let ev = d.handle_line(&submit_line(9, &[1, 2, 3, 4], 30));
         assert_eq!(ev[0].get("code").as_str(), Some("mem_budget"));
-        let budget = one + one / 2;
         let mut max_committed = 0;
         while d.has_work() {
             d.pump().unwrap();
@@ -639,7 +665,7 @@ mod tests {
                 d.committed_bytes()
             );
         }
-        assert_eq!(max_committed, one, "exactly one request in flight at a time");
+        assert_eq!(max_committed, page, "exactly one page live at a time");
         let (_, report) = d.finish().unwrap();
         assert_eq!(report.completions.len(), 3);
         assert_eq!(report.failed, 0);

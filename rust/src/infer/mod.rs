@@ -5,13 +5,17 @@
 //! Three parts, mirroring the paper's two modules at decode time plus a
 //! serving layer above them:
 //!
-//! * [`cache`] — the per-layer [`DecodeCache`]: per-head K/V matrices
-//!   plus (spt mode) the PQ codes of the cached keys, so each decode
-//!   step re-quantizes nothing and selects top-L straight from integer
-//!   codes.  This is the paper's Fig. 9 memory argument applied to a
-//!   KV cache: sparse MHA bounds per-token attention *state* at O(L)
-//!   values + indices instead of O(n) probabilities, and the cache
-//!   itself is O(n·d + n·M) per layer.
+//! * [`cache`] — decode-time KV storage in two shapes.  The per-layer
+//!   [`DecodeCache`] holds per-head K/V matrices plus (spt mode) the PQ
+//!   codes of the cached keys, so each decode step re-quantizes nothing
+//!   and selects top-L straight from integer codes.  This is the
+//!   paper's Fig. 9 memory argument applied to a KV cache: sparse MHA
+//!   bounds per-token attention *state* at O(L) values + indices
+//!   instead of O(n) probabilities, and the cache itself is
+//!   O(n·d + n·M) per layer.  The serving layer stores the same rows in
+//!   a [`PagePool`]: fixed-size refcounted pages indexed by per-request
+//!   [`PageTable`]s, with copy-on-write prefix sharing so N requests
+//!   with a common prompt prefix store its full pages once.
 //! * [`session`] — [`InferModel`] (a loaded checkpoint materialized
 //!   through the trainer's own `Weights` path, packed-B panels cached
 //!   once for the session) and [`Session`] (prefill + one-token decode).
@@ -29,9 +33,10 @@
 //!   cross-request batching is free).  Per-request token streams are
 //!   bit-identical regardless of the batch composition.
 //! * [`daemon`] — the operational layer over the driver: an NDJSON
-//!   protocol with bounded admission, memory-budget accounting via
-//!   [`crate::memmodel::decode_request_bytes`], decode-step deadlines,
-//!   and graceful drain (`spt serve`).
+//!   protocol with bounded admission, page-granular memory budgeting
+//!   via [`crate::memmodel::decode_page_bytes`] (the pool is sized from
+//!   `--mem_budget`, so committed cache bytes provably never exceed
+//!   it), decode-step deadlines, and graceful drain (`spt serve`).
 //! * [`sampler`] — greedy and temperature/top-k sampling off the
 //!   deterministic [`crate::util::rng::Rng`] stream.
 
@@ -41,7 +46,7 @@ pub mod sampler;
 pub mod serve;
 pub mod session;
 
-pub use cache::DecodeCache;
+pub use cache::{DecodeCache, PagePool, PageTable};
 pub use daemon::{Daemon, DaemonConfig};
 pub use sampler::Sampler;
 pub use serve::{Completion, Request, ServeConfig, ServeDriver, ServeReport};

@@ -1,35 +1,51 @@
 //! Continuous-batching serve driver: a step-loop scheduler over the
-//! cached-decode path.
+//! cached-decode path, with paged KV storage.
 //!
 //! Each step (1) **admits** queued requests in submission order while a
-//! slot is free (prefill runs on admission, and the first token is
-//! sampled immediately from the prefill logits), (2) runs **one batched
-//! decode** over every in-flight sequence — one GEMM per projection and
-//! one routed-FFN call per layer across all their new tokens — and
-//! (3) **retires** finished sequences in ascending slot order, freeing
-//! capacity for the next admissions.
+//! slot is free *and* the page pool can cover the request's whole
+//! target length (pages are charged at admission and credited on
+//! retirement, so the driver provably never overcommits its pool),
+//! (2) runs **one batched step** over every in-flight sequence — a
+//! `--prefill_chunk`-token slice of the prompt for sequences still
+//! prefilling, the last sampled token for the rest, all through one
+//! GEMM per projection and one routed-FFN call per layer — and (3)
+//! **retires** finished sequences in ascending slot order, freeing
+//! slots and pages for the next admissions.
+//!
+//! Paged KV: sequences store K/V (and PQ codes) in fixed-size pages of
+//! a driver-owned [`PagePool`] instead of per-slot dense matrices, so
+//! memory scales with *live tokens*, not slots × max_len.  With
+//! `prefix_sharing` on, page-aligned prompt prefixes are shared across
+//! requests via a refcounted prefix trie — the same-prompt fan-out
+//! stores its common prefix once and skips recomputing it
+//! ([`ServeReport::shared_prefill_tokens`] counts the skipped work).
 //!
 //! Determinism: per-request token streams depend only on the model, the
 //! request (prompt, `max_new_tokens`) and the per-request RNG stream
 //! (derived from the driver seed and the request id) — every batched op
 //! is row-local and bit-identical to a single-sequence decode, so the
-//! batch composition, `max_batch`, and the rayon pool size never change
-//! what any request generates (asserted by `serving_is_batch_invariant`
-//! below).
+//! batch composition, `max_batch`, page size, pool size, prefill
+//! chunking, and prefix sharing never change what any request generates
+//! (asserted by `serving_is_batch_invariant` below and
+//! `tests/infer_parity.rs` against a solo unpaged [`super::Session`]).
 //!
-//! Degradation contract: a malformed request or slot (prefill failure,
-//! out-of-range token) retires *that request* with
+//! Degradation contract: a malformed request or slot (impossible page
+//! demand, out-of-range token) retires *that request* with
 //! [`Completion::error`] set — the driver keeps serving everything
 //! else.  [`ServeDriver::cancel`] retires an in-flight request at a
 //! step boundary the same way (the daemon's deadline enforcement).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant; // det: wall-clock (latency metrics only)
 
 use anyhow::{bail, Result};
 
+use super::cache::{PagePool, PageTable};
 use super::sampler::Sampler;
-use super::session::{decode_batch, prefill_state, DecodeState, InferModel, StepScratch};
+use super::session::{decode_runs, DecodeState, InferModel, KvCache, StepScratch};
+use crate::config::Mode;
+use crate::util::fault::{self, FaultPlan};
 use crate::util::rng::Rng;
 
 /// One generation request.
@@ -50,9 +66,9 @@ pub struct Completion {
     pub latency_secs: f64,
     /// Seconds spent queued before a slot admitted this request.
     pub queue_wait_secs: f64,
-    /// `Some(reason)` when the request was degraded (prefill failure,
-    /// malformed slot, cancellation) instead of completing; `tokens`
-    /// then holds whatever was generated before the failure.
+    /// `Some(reason)` when the request was degraded (impossible
+    /// demand, malformed slot, cancellation) instead of completing;
+    /// `tokens` then holds whatever was generated before the failure.
     pub error: Option<String>,
 }
 
@@ -64,23 +80,54 @@ pub struct ServeConfig {
     pub sampler: Sampler,
     /// Base seed; request `id` forks a decorrelated per-request stream.
     pub seed: u64,
+    /// Tokens per KV page (the pool's allocation granule).
+    pub page_tokens: usize,
+    /// Max prompt tokens prefilled per step per request — bounds how
+    /// long one long prompt can stall the decode batch.
+    pub prefill_chunk: usize,
+    /// Share page-aligned common prompt prefixes across requests
+    /// (refcounted; never changes any stream's bits).
+    pub prefix_sharing: bool,
+    /// Pool size override; `None` sizes the pool for `max_batch`
+    /// full-length sequences (the dense-equivalent capacity).
+    pub pool_pages: Option<usize>,
+    /// Deterministic chaos hooks (`page_pool_exhausted` site).
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, sampler: Sampler::Greedy, seed: 0 }
+        ServeConfig {
+            max_batch: 8,
+            sampler: Sampler::Greedy,
+            seed: 0,
+            page_tokens: 16,
+            prefill_chunk: 32,
+            prefix_sharing: true,
+            pool_pages: None,
+            fault: None,
+        }
     }
 }
 
 /// Bookkeeping for one in-flight sequence (parallel to the driver's
-/// `states` vector, which `decode_batch` consumes directly).
+/// `states` vector, which `decode_runs` consumes directly).
 struct SlotMeta {
     id: usize,
     rng: Rng,
+    /// The full prompt (chunked prefill consumes it across steps; the
+    /// prefix trie is keyed on it).
+    prompt: Vec<i32>,
     out: Vec<i32>,
     max_new: usize,
     logits: Vec<f32>,
     queue_wait_secs: f64,
+    /// Pages charged at admission but not yet allocated (credited back
+    /// on retirement if the sequence ends early).
+    reserved_left: usize,
+    /// `decode_steps` at admission — the daemon's deterministic
+    /// per-request deadline anchor.
+    admitted_step: usize,
 }
 
 /// Aggregate results of a drained driver.
@@ -98,6 +145,17 @@ pub struct ServeReport {
     pub peak_in_flight: usize,
     /// Completions that ended with an error (degraded or cancelled).
     pub failed: usize,
+    /// Prompt tokens actually prefilled (computed) across all requests.
+    pub prefill_tokens: usize,
+    /// Prompt tokens skipped via shared prefix pages.
+    pub shared_prefill_tokens: usize,
+    /// `shared / (shared + computed)` prefill tokens — the prefix-share
+    /// hit rate on this trace (0.0 with sharing off or no overlap).
+    pub prefix_hit_rate: f64,
+    /// The pool's total page count.
+    pub pool_pages: usize,
+    /// Peak pages simultaneously live (the true memory high-water mark).
+    pub peak_pages_in_use: usize,
 }
 
 /// Percentile over a sample (p in [0, 100]); 0.0 on an empty sample.
@@ -131,6 +189,20 @@ impl ServeReport {
         );
         m.insert("completed".into(), Json::Num(self.completions.len() as f64));
         m.insert("failed".into(), Json::Num(self.failed as f64));
+        m.insert(
+            "prefill_tokens".into(),
+            Json::Num(self.prefill_tokens as f64),
+        );
+        m.insert(
+            "shared_prefill_tokens".into(),
+            Json::Num(self.shared_prefill_tokens as f64),
+        );
+        m.insert("prefix_hit_rate".into(), Json::Num(self.prefix_hit_rate));
+        m.insert("pool_pages".into(), Json::Num(self.pool_pages as f64));
+        m.insert(
+            "peak_pages_in_use".into(),
+            Json::Num(self.peak_pages_in_use as f64),
+        );
         m.insert("p50_latency_s".into(), Json::Num(self.latency_percentile(50.0)));
         m.insert("p90_latency_s".into(), Json::Num(self.latency_percentile(90.0)));
         m.insert("p99_latency_s".into(), Json::Num(self.latency_percentile(99.0)));
@@ -170,10 +242,19 @@ pub struct ServeDriver<'m> {
     /// Cross-step decode scratch (GEMM workspace + routing buffers),
     /// reused for the driver's whole lifetime.
     scratch: StepScratch,
+    /// Every in-flight sequence's KV pages live here.
+    pool: PagePool,
+    /// Pages charged to admitted sequences but not yet allocated.  The
+    /// admission invariant `reserved_pages + charge <= free_pages`
+    /// guarantees in-step allocation never fails.
+    reserved_pages: usize,
     epoch: Option<Instant>, // det: wall-clock (latency metrics only)
     decode_steps: usize,
     generated_tokens: usize,
+    prefill_tokens: usize,
+    shared_prefill_tokens: usize,
     peak_in_flight: usize,
+    peak_pages_in_use: usize,
 }
 
 impl<'m> ServeDriver<'m> {
@@ -181,6 +262,26 @@ impl<'m> ServeDriver<'m> {
         if cfg.max_batch == 0 {
             bail!("max_batch must be >= 1");
         }
+        if cfg.page_tokens == 0 {
+            bail!("page_tokens must be >= 1");
+        }
+        if cfg.prefill_chunk == 0 {
+            bail!("prefill_chunk must be >= 1");
+        }
+        let layout = &*model.layout;
+        let pages = cfg
+            .pool_pages
+            .unwrap_or(cfg.max_batch * layout.max_seq.div_ceil(cfg.page_tokens));
+        let pq = (model.mode() == Mode::Spt).then_some(layout.pq_m);
+        let pool = PagePool::new(
+            pages,
+            cfg.page_tokens,
+            layout.layers.len(),
+            layout.heads,
+            layout.d_head,
+            pq,
+            cfg.prefix_sharing,
+        )?;
         Ok(ServeDriver {
             model,
             cfg,
@@ -189,10 +290,15 @@ impl<'m> ServeDriver<'m> {
             meta: Vec::new(),
             finished: Vec::new(),
             scratch: StepScratch::default(),
+            pool,
+            reserved_pages: 0,
             epoch: None,
             decode_steps: 0,
             generated_tokens: 0,
+            prefill_tokens: 0,
+            shared_prefill_tokens: 0,
             peak_in_flight: 0,
+            peak_pages_in_use: 0,
         })
     }
 
@@ -245,6 +351,32 @@ impl<'m> ServeDriver<'m> {
         self.decode_steps
     }
 
+    /// Total pages in the pool.
+    pub fn pool_pages(&self) -> usize {
+        self.pool.pages()
+    }
+
+    pub fn pool_free_pages(&self) -> usize {
+        self.pool.free_pages()
+    }
+
+    /// Pages currently holding live KV data (the committed footprint,
+    /// in pages — multiply by [`Self::page_bytes`] for bytes).
+    pub fn pool_pages_in_use(&self) -> usize {
+        self.pool.pages_in_use()
+    }
+
+    /// Bytes per page (the admission-accounting granule).
+    pub fn page_bytes(&self) -> usize {
+        self.pool.bytes_per_page()
+    }
+
+    /// The `decode_steps` value when request `id` was admitted, if it
+    /// is in flight — the daemon's per-request deadline anchor.
+    pub fn admitted_step(&self, id: usize) -> Option<usize> {
+        self.meta.iter().find(|m| m.id == id).map(|m| m.admitted_step)
+    }
+
     /// Retire request `id` at a step boundary with an error completion
     /// carrying whatever it generated so far.  Returns `false` when the
     /// id is not in flight.  This is how the daemon enforces
@@ -255,7 +387,8 @@ impl<'m> ServeDriver<'m> {
         };
         let now = self.now_secs();
         let m = self.meta.remove(si);
-        self.states.remove(si);
+        let st = self.states.remove(si);
+        self.release_slot(&m, &st);
         self.finished.push(Completion {
             id: m.id,
             tokens: m.out,
@@ -273,105 +406,179 @@ impl<'m> ServeDriver<'m> {
         std::mem::take(&mut self.finished)
     }
 
-    /// One scheduler step: admit → batched decode → sample → retire.
-    /// Returns `false` once the queue and all slots are drained.
+    /// Return a retired sequence's pages to the pool and credit any
+    /// part of its admission reservation that was never allocated.
+    fn release_slot(&mut self, m: &SlotMeta, st: &DecodeState) {
+        if let KvCache::Paged(table) = &st.cache {
+            for &pg in &table.pages {
+                self.pool.release(pg);
+            }
+        }
+        self.reserved_pages = self.reserved_pages.saturating_sub(m.reserved_left);
+    }
+
+    /// One scheduler step: admit → batched prefill/decode → sample →
+    /// retire.  Returns `false` once the queue and all slots drain.
     pub fn step(&mut self) -> Result<bool> {
         let epoch = *self.epoch.get_or_insert_with(Instant::now); // det: wall-clock (metrics)
-        // Admit in submission order while capacity allows.  Prefill runs
-        // here; the first token is sampled straight from its logits.  A
-        // failed prefill degrades that request, not the driver.
+        let page_tokens = self.pool.page_tokens();
+        // Admit in submission order while a slot is free AND the pool
+        // can cover the request's whole target length.  Charging the
+        // full page demand here (minus shared prefix pages) is what
+        // makes in-step allocation infallible: `reserved_pages` tracks
+        // charged-but-unallocated pages, and admission requires
+        // `reserved + charge <= free`.
         while self.states.len() < self.cfg.max_batch {
             let Some((req, submitted)) = self.queue.pop_front() else { break };
             let now = epoch.elapsed().as_secs_f64(); // det: wall-clock (metrics)
             let queue_wait = (now - submitted).max(0.0);
             let target = req.prompt.len() + req.max_new_tokens;
-            let (state, logits) = match prefill_state(self.model, &req.prompt, target) {
-                Ok(pair) => pair,
-                Err(e) => {
-                    self.finished.push(Completion {
-                        id: req.id,
-                        tokens: Vec::new(),
-                        latency_secs: now,
-                        queue_wait_secs: queue_wait,
-                        error: Some(format!("prefill failed: {e:#}")),
-                    });
-                    continue;
-                }
+            let need_pages = target.div_ceil(page_tokens);
+            if need_pages > self.pool.pages() {
+                // Can never fit this pool: degrade instead of wedging
+                // the queue forever.
+                self.finished.push(Completion {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    latency_secs: now,
+                    queue_wait_secs: queue_wait,
+                    error: Some(format!(
+                        "request needs {need_pages} pages but the pool holds {}",
+                        self.pool.pages()
+                    )),
+                });
+                continue;
+            }
+            // Chaos hook: a starved pool at admission.  Transient — the
+            // request waits for a later step, nothing degrades.
+            if fault::fire(self.cfg.fault.as_deref(), "page_pool_exhausted") {
+                self.queue.push_front((req, submitted));
+                break;
+            }
+            let l_sess = {
+                let layout = &*self.model.layout;
+                layout.sparsity.topl(target).min(target)
             };
-            let mut slot = SlotMeta {
+            // Reuse page-aligned shared prompt-prefix pages; each hit
+            // is `page_tokens` of prefill this request skips.
+            let chain = self.pool.acquire_chain(l_sess, &req.prompt);
+            let charge = need_pages - chain.len();
+            if self.reserved_pages + charge > self.pool.free_pages() {
+                // Not enough headroom yet: un-reserve the walked
+                // prefix, requeue, and wait for retirements (admission
+                // stays in submission order).
+                for &pg in chain.iter().rev() {
+                    self.pool.release(pg);
+                }
+                self.queue.push_front((req, submitted));
+                break;
+            }
+            self.reserved_pages += charge;
+            let reused_tokens = chain.len() * page_tokens;
+            self.shared_prefill_tokens += reused_tokens;
+            self.states.push(DecodeState {
+                cache: KvCache::Paged(PageTable { pages: chain }),
+                pos: reused_tokens,
+                l_sess,
+                target_len: target,
+            });
+            self.meta.push(SlotMeta {
                 id: req.id,
                 rng: Rng::new(
                     self.cfg
                         .seed
                         .wrapping_add((req.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
                 ),
+                prompt: req.prompt,
                 out: Vec::with_capacity(req.max_new_tokens),
                 max_new: req.max_new_tokens,
-                logits,
+                logits: Vec::new(),
                 queue_wait_secs: queue_wait,
-            };
-            let first = self.cfg.sampler.sample(&slot.logits, &mut slot.rng);
-            let Ok(first) = i32::try_from(first) else {
-                self.finished.push(Completion {
-                    id: slot.id,
-                    tokens: slot.out,
-                    latency_secs: now,
-                    queue_wait_secs: queue_wait,
-                    error: Some(format!("sampled token {first} exceeds i32 range")),
-                });
-                continue;
-            };
-            slot.out.push(first);
-            self.generated_tokens += 1;
-            if slot.out.len() >= slot.max_new {
-                self.finished.push(Completion {
-                    id: slot.id,
-                    tokens: slot.out,
-                    latency_secs: epoch.elapsed().as_secs_f64(), // det: wall-clock (metrics)
-                    queue_wait_secs: queue_wait,
-                    error: None,
-                });
-                continue;
-            }
-            self.states.push(state);
-            self.meta.push(slot);
+                reserved_left: charge,
+                admitted_step: self.decode_steps,
+            });
         }
         self.peak_in_flight = self.peak_in_flight.max(self.states.len());
-        // Defensive: a slot with no sampled token cannot join a batched
-        // decode — retire it as degraded instead of poisoning the step.
-        if self.meta.iter().any(|m| m.out.is_empty()) {
-            let now = epoch.elapsed().as_secs_f64(); // det: wall-clock (metrics)
-            for si in (0..self.meta.len()).rev() {
-                if self.meta[si].out.is_empty() {
-                    let m = self.meta.remove(si);
-                    self.states.remove(si);
-                    self.finished.push(Completion {
-                        id: m.id,
-                        tokens: m.out,
-                        latency_secs: now,
-                        queue_wait_secs: m.queue_wait_secs,
-                        error: Some("malformed slot: in flight with no sampled token".into()),
-                    });
-                }
-            }
-        }
         if self.states.is_empty() {
             return Ok(!self.queue.is_empty());
         }
-        // One batched decode over every in-flight sequence's last token.
-        let tokens: Vec<i32> = self
-            .meta
-            .iter()
-            .filter_map(|m| m.out.last().copied())
-            .collect();
-        let logits = decode_batch(self.model, &mut self.states, &tokens, &mut self.scratch)?;
+        // Build this step's run per slot: the next prefill chunk while
+        // the prompt is being consumed, else the last sampled token.
+        let mut runs: Vec<Vec<i32>> = Vec::with_capacity(self.meta.len());
+        for (m, st) in self.meta.iter().zip(&self.states) {
+            if st.pos < m.prompt.len() {
+                let end = (st.pos + self.cfg.prefill_chunk).min(m.prompt.len());
+                runs.push(m.prompt[st.pos..end].to_vec());
+            } else {
+                let Some(&last) = m.out.last() else {
+                    bail!("request {}: slot decoding with no sampled token", m.id);
+                };
+                runs.push(vec![last]);
+            }
+        }
+        // Flat row offsets (decode_runs groups rows per slot, in order).
+        let mut row_off = Vec::with_capacity(runs.len());
+        let mut acc = 0;
+        for run in &runs {
+            row_off.push(acc);
+            acc += run.len();
+        }
+        // Make every position the runs will write addressable: extend
+        // page tables from the admission reservation (so `alloc` cannot
+        // fail), and defensively detach any shared page before writing
+        // (unreachable with page-aligned prefix reuse, but cheap).
+        for (si, run) in runs.iter().enumerate() {
+            let st = &mut self.states[si];
+            let KvCache::Paged(table) = &mut st.cache else {
+                bail!("serve slot without a paged cache");
+            };
+            for p in st.pos..st.pos + run.len() {
+                let ix = p / page_tokens;
+                if ix == table.pages.len() {
+                    let Some(pg) = self.pool.alloc() else {
+                        bail!("page pool overcommitted: admission accounting bug");
+                    };
+                    table.pages.push(pg);
+                    let m = &mut self.meta[si];
+                    debug_assert!(m.reserved_left > 0, "alloc past reservation");
+                    m.reserved_left = m.reserved_left.saturating_sub(1);
+                    self.reserved_pages = self.reserved_pages.saturating_sub(1);
+                } else if self.pool.refcount(table.pages[ix]) > 1 {
+                    table.pages[ix] = self.pool.cow(table.pages[ix])?;
+                }
+            }
+        }
+        self.peak_pages_in_use = self.peak_pages_in_use.max(self.pool.pages_in_use());
+        // One batched step over every in-flight sequence.
+        let logits = decode_runs(
+            self.model,
+            &mut self.states,
+            &runs,
+            &mut self.scratch,
+            Some(&mut self.pool),
+        )?;
         self.decode_steps += 1;
-        // Sample per slot (ascending slot order; each slot's own RNG).
-        // `retire` collects (slot, error) pairs in ascending slot order.
+        // Post-step, ascending slot order: register freshly prefilled
+        // prefix pages in the trie, then sample wherever a row produced
+        // next-token logits (a finished prefill's last row, or the
+        // decode row).  `retire` collects (slot, error) pairs.
         let mut retire: Vec<(usize, Option<String>)> = Vec::new();
         for (si, m) in self.meta.iter_mut().enumerate() {
+            let st = &self.states[si];
+            let run_len = runs[si].len();
+            let pre_pos = st.pos - run_len;
+            if pre_pos < m.prompt.len() {
+                self.prefill_tokens += run_len;
+                if let KvCache::Paged(table) = &st.cache {
+                    self.pool.register_chain(st.l_sess, &m.prompt, table, st.pos);
+                }
+                if st.pos < m.prompt.len() {
+                    continue; // still prefilling; no logits consumed yet
+                }
+            }
+            let last_row = row_off[si] + run_len - 1;
             m.logits.clear();
-            m.logits.extend_from_slice(logits.row(si));
+            m.logits.extend_from_slice(logits.row(last_row));
             let t = self.cfg.sampler.sample(&m.logits, &mut m.rng);
             match i32::try_from(t) {
                 Ok(tok) => {
@@ -387,7 +594,8 @@ impl<'m> ServeDriver<'m> {
             }
         }
         // Retire in ascending slot order (completions keep a stable
-        // order); remove descending so indices stay valid.
+        // order); remove descending so indices stay valid, releasing
+        // each retired sequence's pages back to the pool.
         let now = epoch.elapsed().as_secs_f64(); // det: wall-clock (metrics)
         for (si, error) in &retire {
             let m = &self.meta[*si];
@@ -400,8 +608,9 @@ impl<'m> ServeDriver<'m> {
             });
         }
         for (si, _) in retire.iter().rev() {
-            self.meta.remove(*si);
-            self.states.remove(*si);
+            let m = self.meta.remove(*si);
+            let st = self.states.remove(*si);
+            self.release_slot(&m, &st);
         }
         Ok(!(self.queue.is_empty() && self.states.is_empty()))
     }
@@ -418,6 +627,12 @@ impl<'m> ServeDriver<'m> {
         completions.extend(self.finished.iter().cloned());
         completions.sort_by_key(|c| c.id);
         let failed = completions.iter().filter(|c| c.error.is_some()).count();
+        let total_prefill = self.prefill_tokens + self.shared_prefill_tokens;
+        let prefix_hit_rate = if total_prefill == 0 {
+            0.0
+        } else {
+            self.shared_prefill_tokens as f64 / total_prefill as f64
+        };
         ServeReport {
             wall_secs: wall,
             decode_steps: self.decode_steps,
@@ -425,6 +640,11 @@ impl<'m> ServeDriver<'m> {
             tokens_per_sec: self.generated_tokens as f64 / wall.max(1e-9),
             peak_in_flight: self.peak_in_flight,
             failed,
+            prefill_tokens: self.prefill_tokens,
+            shared_prefill_tokens: self.shared_prefill_tokens,
+            prefix_hit_rate,
+            pool_pages: self.pool.pages(),
+            peak_pages_in_use: self.peak_pages_in_use,
             completions,
         }
     }
@@ -469,6 +689,7 @@ mod tests {
             max_batch,
             sampler: Sampler::TopK { k: 8, temperature: 0.9 },
             seed: 77,
+            ..Default::default()
         };
         let mut driver = ServeDriver::new(model, cfg).unwrap();
         for r in reqs {
@@ -520,16 +741,19 @@ mod tests {
         for r in &reqs {
             driver.submit(r.clone()).unwrap();
         }
-        // Step 1: 0 and 1 admitted (submission order), 2 queued.
+        // Step 1: 0 and 1 admitted (submission order) and prefilled —
+        // each samples its first token from the prefill logits.
         assert!(driver.step().unwrap());
         assert_eq!(driver.in_flight_ids(), vec![0, 1], "admission order");
         assert_eq!(driver.queued(), 1);
-        // Step 2: request 1 reaches 3 tokens (1 at admission + 2 decode
-        // steps) and retires.
+        // Steps 2–3: request 1 reaches 3 tokens (1 at prefill + 2
+        // decode steps) and retires.
+        assert!(driver.step().unwrap());
+        assert_eq!(driver.in_flight_ids(), vec![0, 1]);
         assert!(driver.step().unwrap());
         assert_eq!(driver.in_flight_ids(), vec![0], "short request retired");
         assert_eq!(driver.queued(), 1);
-        // Step 3: the freed slot goes to request 2.
+        // Step 4: the freed slot goes to request 2.
         assert!(driver.step().unwrap());
         assert_eq!(driver.in_flight_ids(), vec![0, 2], "freed slot refilled");
         let report = driver.run_to_completion().unwrap();
@@ -559,10 +783,16 @@ mod tests {
             .is_err());
         assert!(ServeDriver::new(&m, ServeConfig { max_batch: 0, ..Default::default() })
             .is_err());
+        assert!(ServeDriver::new(&m, ServeConfig { page_tokens: 0, ..Default::default() })
+            .is_err());
+        assert!(
+            ServeDriver::new(&m, ServeConfig { prefill_chunk: 0, ..Default::default() })
+                .is_err()
+        );
     }
 
     #[test]
-    fn max_new_one_completes_without_a_decode_step() {
+    fn max_new_one_completes_after_its_prefill_step() {
         let m = model(Mode::Lora);
         let mut driver = ServeDriver::new(&m, ServeConfig::default()).unwrap();
         driver
@@ -571,7 +801,10 @@ mod tests {
         let report = driver.run_to_completion().unwrap();
         assert_eq!(report.completions.len(), 1);
         assert_eq!(report.completions[0].tokens.len(), 1);
-        assert_eq!(report.decode_steps, 0);
+        // The prefill chunk is one batched step; the first token comes
+        // from its logits, so max_new = 1 needs no decode-only step.
+        assert_eq!(report.decode_steps, 1);
+        assert_eq!(report.prefill_tokens, 2);
     }
 
     #[test]
@@ -595,9 +828,12 @@ mod tests {
         let cancelled = &report.completions[1];
         assert_eq!(cancelled.id, 1);
         assert_eq!(cancelled.error.as_deref(), Some("deadline exceeded"));
-        assert_eq!(cancelled.tokens.len(), 3, "1 admission + 2 decode tokens");
+        assert_eq!(cancelled.tokens.len(), 2, "prefill + 1 decode token");
         // Survivors are bit-identical to an undisturbed run with the
-        // same config (per-request RNG streams are independent).
+        // same config (per-request RNG streams are independent), and
+        // the cancelled request's pages went back to the pool.
+        assert_eq!(driver.pool.pages_in_use(), 0);
+        assert_eq!(driver.reserved_pages, 0);
         let mut driver2 =
             ServeDriver::new(&m, ServeConfig { max_batch: 4, ..Default::default() }).unwrap();
         for r in &reqs {
@@ -632,5 +868,98 @@ mod tests {
         let ids: Vec<usize> = report.completions.iter().map(|c| c.id).collect();
         assert_eq!(ids, vec![0, 1, 2]);
         assert_eq!(report.failed, 0);
+    }
+
+    #[test]
+    fn report_percentiles_on_empty_and_single_sample_and_json_roundtrip() {
+        let m = model(Mode::Lora);
+        // Empty report: every percentile is 0.0, not a panic.
+        let mut driver = ServeDriver::new(&m, ServeConfig::default()).unwrap();
+        let empty = driver.report(Vec::new());
+        assert!(empty.completions.is_empty());
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(empty.latency_percentile(p), 0.0, "p{p}");
+            assert_eq!(empty.queue_wait_percentile(p), 0.0, "p{p}");
+        }
+        // Single sample: every percentile is that sample.
+        let mut driver = ServeDriver::new(&m, ServeConfig::default()).unwrap();
+        driver
+            .submit(Request { id: 3, prompt: vec![1, 2], max_new_tokens: 2 })
+            .unwrap();
+        let report = driver.run_to_completion().unwrap();
+        assert_eq!(report.completions.len(), 1);
+        let lat = report.completions[0].latency_secs;
+        let wait = report.completions[0].queue_wait_secs;
+        for p in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(report.latency_percentile(p), lat, "p{p}");
+            assert_eq!(report.queue_wait_percentile(p), wait, "p{p}");
+        }
+        // to_json carries the same numbers through the parser.
+        let parsed = crate::util::json::parse(&report.to_json().to_string()).unwrap();
+        let get = |k: &str| parsed.get(k).as_f64().unwrap_or_else(|| panic!("{k}"));
+        assert_eq!(get("completed"), 1.0);
+        assert_eq!(get("failed"), 0.0);
+        assert_eq!(get("generated_tokens"), report.generated_tokens as f64);
+        assert_eq!(get("decode_steps"), report.decode_steps as f64);
+        assert_eq!(get("p50_latency_s"), report.latency_percentile(50.0));
+        assert_eq!(get("queue_wait_p99_s"), report.queue_wait_percentile(99.0));
+        assert_eq!(get("prefix_hit_rate"), report.prefix_hit_rate);
+        assert_eq!(get("pool_pages"), report.pool_pages as f64);
+        assert_eq!(get("peak_pages_in_use"), report.peak_pages_in_use as f64);
+    }
+
+    #[test]
+    fn prefix_sharing_reuses_pages_and_never_changes_streams() {
+        let m = model(Mode::Spt);
+        let mk_cfg = |sharing: bool| ServeConfig {
+            max_batch: 4,
+            sampler: Sampler::TopK { k: 8, temperature: 0.9 },
+            seed: 77,
+            page_tokens: 4,
+            prefill_chunk: 4,
+            prefix_sharing: sharing,
+            ..Default::default()
+        };
+        // Two full pages of prompt; one page (positions 0..4) is
+        // reusable — the page holding the last prompt position is
+        // always computed fresh.
+        let prompt: Vec<i32> = vec![5, 6, 7, 8, 9, 10, 11, 12];
+        let run = |sharing: bool| {
+            let mut driver = ServeDriver::new(&m, mk_cfg(sharing)).unwrap();
+            driver
+                .submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: 6 })
+                .unwrap();
+            // Let request 0 finish prefilling (registering its prefix
+            // pages in the trie) before the same-prompt fan-out
+            // arrives — the warm-cache traffic shape.
+            driver.step().unwrap();
+            driver.step().unwrap();
+            for id in 1..4 {
+                driver
+                    .submit(Request { id, prompt: prompt.clone(), max_new_tokens: 6 })
+                    .unwrap();
+            }
+            let hits_before = driver.pool.shared_page_hits();
+            let report = driver.run_to_completion().unwrap();
+            let hits = driver.pool.shared_page_hits() - hits_before;
+            assert_eq!(driver.pool.pages_in_use(), 0, "pages leaked");
+            assert_eq!(driver.reserved_pages, 0, "reservation leaked");
+            (report, hits)
+        };
+        let (shared, hits) = run(true);
+        let (dense, no_hits) = run(false);
+        assert_eq!(hits, 3, "3 followers x 1 reusable prefix page");
+        assert_eq!(no_hits, 0);
+        assert_eq!(shared.completions.len(), 4);
+        assert_eq!(shared.failed, 0);
+        assert_eq!(shared.shared_prefill_tokens, 12, "3 followers x 4 tokens");
+        assert!(shared.prefix_hit_rate > 0.0);
+        assert_eq!(dense.prefix_hit_rate, 0.0);
+        assert_eq!(dense.shared_prefill_tokens, 0);
+        // Sharing changes where bytes live, never what streams say.
+        for (a, b) in shared.completions.iter().zip(&dense.completions) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+            assert!(a.error.is_none());
+        }
     }
 }

@@ -27,6 +27,23 @@
 //!   selection exactly (future keys only ever occupy the sentinel
 //!   bucket and zero-probability padding slots; see
 //!   [`crate::sparse::mha::decode_attend_row`]).
+//!
+//! ## The paged path
+//!
+//! The serve driver's sequences keep their caches in a shared
+//! [`PagePool`] instead of per-slot dense matrices.  [`decode_runs`]
+//! generalizes the batched step to a *run* of consecutive tokens per
+//! sequence (chunked prefill is just a multi-token run): each run's
+//! K/V rows are appended for the whole chunk first, then every row
+//! attends at its own absolute position `p` against a contiguous
+//! gather of cached rows `0..=p` — bit-identical to the dense cache
+//! layout the kernels were proven on, so paging/gathering changes
+//! *where* bytes live, never their values.  Row `p`'s output is a pure
+//! function of `(tokens[0..=p], l_sess)`: position 0 through the
+//! decode row kernel equals forward row 0 exactly (softmax over one
+//! element is 1.0), and induction over positions does the rest — which
+//! is also why prefix pages can be shared across requests keyed only
+//! on `(l_sess, token prefix)`.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -38,10 +55,10 @@ use crate::config::{Mode, RunConfig};
 use crate::coordinator::checkpoint;
 use crate::coordinator::native::{ItemTrace, Layout, NativeBackend, Weights};
 use crate::coordinator::TrainState;
-use crate::infer::cache::{DecodeCache, LayerCache};
+use crate::infer::cache::{DecodeCache, LayerCache, PagePool, PageTable};
 use crate::sparse::bspmv::{self, Routing};
 use crate::sparse::{attention, grad, mha, pq};
-use crate::sparse::{Matrix, Workspace};
+use crate::sparse::{Codes, Matrix, Workspace};
 
 /// A checkpoint materialized for inference: the trainer's own layout and
 /// effective-weight materialization (LoRA deltas folded in, PQ codebooks
@@ -110,22 +127,47 @@ impl InferModel {
     }
 }
 
+/// Where a sequence's cached K/V (and codes) live: a private dense
+/// cache (the solo [`Session`] reference) or a page table into a
+/// driver-owned [`PagePool`].
+pub(crate) enum KvCache {
+    Dense(DecodeCache),
+    Paged(PageTable),
+}
+
 /// One sequence's incremental decode state: the cache, the absolute
 /// position (tokens consumed so far), the session-pinned sparse L, and
 /// the target length that L was pinned to (decoding past it would
-/// silently void the parity contract, so [`decode_batch`] refuses).
+/// silently void the parity contract, so [`decode_runs`] refuses).
 pub(crate) struct DecodeState {
-    pub(crate) cache: DecodeCache,
+    pub(crate) cache: KvCache,
     pub(crate) pos: usize,
     pub(crate) l_sess: usize,
     pub(crate) target_len: usize,
 }
 
-/// Per-worker scratch for the (sequence × head) attention fan-out.
-#[derive(Default, Clone)]
+/// Per-worker scratch for the (row × head) attention fan-out.  The
+/// gather buffers hold a paged sequence's cached rows contiguously for
+/// the row kernels (contents never affect results — they are fully
+/// overwritten per row).
 struct RowScratch {
     sparse: mha::DecodeScratch,
     dense_logits: Vec<f32>,
+    gk: Matrix,
+    gv: Matrix,
+    gcodes: Codes,
+}
+
+impl Default for RowScratch {
+    fn default() -> Self {
+        RowScratch {
+            sparse: mha::DecodeScratch::default(),
+            dense_logits: Vec::new(),
+            gk: Matrix::zeros(0, 0),
+            gv: Matrix::zeros(0, 0),
+            gcodes: Codes::zeros(0, 0),
+        }
+    }
 }
 
 /// Cross-step scratch for [`decode_batch`]: the GEMM workspace and the
@@ -209,52 +251,108 @@ pub(crate) fn prefill_state(
     last.row_mut(0).copy_from_slice(xf.row(prompt.len() - 1));
     let logits = grad::matmul_dx(&last, &model.weights.tok).data;
     Ok((
-        DecodeState { cache, pos: prompt.len(), l_sess, target_len },
+        DecodeState {
+            cache: KvCache::Dense(cache),
+            pos: prompt.len(),
+            l_sess,
+            target_len,
+        },
         logits,
     ))
 }
 
-/// One decode step for a batch of independent sequences: embed each new
-/// token at its sequence's position, run the layer stack with one GEMM
-/// per projection and one routed-FFN call per layer across all in-flight
-/// tokens, attend per (sequence × head) against each sequence's cache,
-/// append the new K/V (and key codes) to every cache, and return the
-/// `[S, vocab]` logits.
-///
-/// Every op is row-local in the training kernels' per-row operation
-/// order, so each sequence's row is bit-identical to a single-sequence
-/// decode — batching (and the rayon fan-out) never changes results.
+/// One decode step for a batch of independent sequences, one token
+/// each: the single-token special case of [`decode_runs`] (no pool, so
+/// every state must hold a dense cache — the solo [`Session`] path).
 pub(crate) fn decode_batch(
     model: &InferModel,
     states: &mut [DecodeState],
     tokens: &[i32],
     scratch: &mut StepScratch,
 ) -> Result<Matrix> {
+    assert_eq!(tokens.len(), states.len(), "one token per in-flight sequence");
+    let runs: Vec<Vec<i32>> = tokens.iter().map(|&t| vec![t]).collect();
+    decode_runs(model, states, &runs, scratch, None)
+}
+
+/// One step over a batch of independent sequences, a *run* of
+/// consecutive tokens per sequence: embed every token at its sequence's
+/// absolute position, run the layer stack with one GEMM per projection
+/// and one routed-FFN call per layer across all in-flight rows, append
+/// each run's K/V (and key codes), attend per (row × head) against each
+/// sequence's cache, and return the `[total_rows, vocab]` logits with
+/// each sequence's rows grouped contiguously in batch order.
+///
+/// Multi-token runs are chunked prefill: the whole chunk's K/V rows are
+/// appended per layer *before* attention, and each row then attends at
+/// its own position `p` over cached rows `0..=p` — exactly the causal
+/// selection the training forward makes (see the module docs for the
+/// induction).  Every op is row-local in the training kernels' per-row
+/// operation order, so each sequence's rows are bit-identical to a solo
+/// prefill+decode — batching, chunking, paging, and the rayon fan-out
+/// never change results.
+///
+/// Multi-token runs require a paged cache (the dense append path holds
+/// the `rows == pos+1` kernel contract only for single-token steps),
+/// and paged states require `pool`.  Page tables must already map every
+/// position the runs will write — the serve driver's admission
+/// accounting reserves capacity up front, so allocation never happens
+/// mid-step.
+pub(crate) fn decode_runs(
+    model: &InferModel,
+    states: &mut [DecodeState],
+    runs: &[Vec<i32>],
+    scratch: &mut StepScratch,
+    mut pool: Option<&mut PagePool>,
+) -> Result<Matrix> {
     let layout = &*model.layout;
     let s_count = states.len();
-    assert_eq!(tokens.len(), s_count, "one token per in-flight sequence");
+    assert_eq!(runs.len(), s_count, "one run per in-flight sequence");
     assert!(s_count > 0, "empty decode batch");
     let (heads, dh, d) = (layout.heads, layout.d_head, layout.d);
-    // Embed each token at its own absolute position.  Refuse to decode
-    // past a sequence's pinned target length: its L was derived from
-    // that total, so further steps would silently match no full-sequence
-    // forward.
-    let mut x = Matrix::zeros(s_count, d);
-    for (si, st) in states.iter().enumerate() {
-        if st.pos >= st.target_len {
+    // Map flat row index -> (sequence, offset within its run), and
+    // validate: runs are non-empty, stay within each sequence's pinned
+    // target length (L was derived from that total, so further steps
+    // would silently match no full-sequence forward), and match the
+    // cache kind.
+    let mut row_seq = Vec::new();
+    for (si, run) in runs.iter().enumerate() {
+        let st = &states[si];
+        if run.is_empty() {
+            bail!("empty token run for sequence {si}");
+        }
+        if st.pos + run.len() > st.target_len {
             bail!(
                 "sequence already holds its target length {} (L was pinned \
                  to it); start a new session with a longer target",
                 st.target_len
             );
         }
+        match &st.cache {
+            KvCache::Dense(_) if run.len() > 1 => {
+                bail!("multi-token runs need a paged cache (dense appends are per-step)")
+            }
+            KvCache::Paged(_) if pool.is_none() => {
+                bail!("paged sequence {si} decoded without its page pool")
+            }
+            _ => {}
+        }
+        for j in 0..run.len() {
+            row_seq.push((si, j));
+        }
+    }
+    let total = row_seq.len();
+    // Embed each token at its own absolute position.
+    let mut x = Matrix::zeros(total, d);
+    for (r, &(si, j)) in row_seq.iter().enumerate() {
+        let st = &states[si];
         let row = model.backend.embed_at(
             layout,
             &model.state,
-            &tokens[si..si + 1],
-            st.pos,
+            &runs[si][j..j + 1],
+            st.pos + j,
         )?;
-        x.row_mut(si).copy_from_slice(row.row(0));
+        x.row_mut(r).copy_from_slice(row.row(0));
     }
     let StepScratch { ws, routing } = scratch;
     for (li, lw) in model.weights.layers.iter().enumerate() {
@@ -262,45 +360,116 @@ pub(crate) fn decode_batch(
         let q = a_in.matmul_packed(&lw.wq_p);
         let k = a_in.matmul_packed(&lw.wk_p);
         let v = a_in.matmul_packed(&lw.wv_p);
-        // Append the new K/V (and key codes) before attending: the new
-        // token attends to itself.
-        for (si, st) in states.iter_mut().enumerate() {
-            st.cache
-                .append(li, k.row(si), v.row(si), lw.codebooks.as_deref())?;
+        // Append every new K/V row (and key codes) before attending:
+        // each row attends to itself, and later rows of a run see the
+        // earlier ones (each row's own position bound keeps causality).
+        for (r, &(si, j)) in row_seq.iter().enumerate() {
+            let st = &mut states[si];
+            match &mut st.cache {
+                KvCache::Dense(cache) => {
+                    cache.append(li, k.row(r), v.row(r), lw.codebooks.as_deref())?;
+                }
+                KvCache::Paged(table) => {
+                    let pool = pool.as_deref_mut().expect("validated above");
+                    pool.write_row(
+                        table,
+                        st.pos + j,
+                        li,
+                        k.row(r),
+                        v.row(r),
+                        lw.codebooks.as_deref(),
+                    )?;
+                }
+            }
         }
-        // Cached attention, parallel over (sequence × head) into
-        // disjoint `dh`-wide slices of the concatenated output.
-        let mut attn_out = Matrix::zeros(s_count, d);
+        // Cached attention, parallel over (row × head) into disjoint
+        // `dh`-wide slices of the concatenated output.  Paged rows
+        // first gather their cached prefix into contiguous per-worker
+        // scratch, so both arms run the same proven row kernels.
+        let mut attn_out = Matrix::zeros(total, d);
         let states_ro: &[DecodeState] = states;
         let q_ref = &q;
+        let row_seq_ref = &row_seq;
+        let pool_ro = pool.as_deref();
         attn_out
             .data
             .par_chunks_mut(dh)
             .enumerate()
             .for_each_init(RowScratch::default, |scratch, (ci, out)| {
-                let (si, h) = (ci / heads, ci % heads);
+                let (row, h) = (ci / heads, ci % heads);
+                let (si, j) = row_seq_ref[row];
                 let st = &states_ro[si];
-                let lc = &st.cache.layers[li];
-                let q_row = &q_ref.row(si)[h * dh..(h + 1) * dh];
-                match (&lc.codes, &lw.codebooks) {
-                    (Some(codes), Some(cbs)) => mha::decode_attend_row(
-                        &cbs[h],
-                        q_row,
-                        &lc.k[h],
-                        &lc.v[h],
-                        &codes[h],
-                        st.pos,
-                        st.l_sess,
-                        out,
-                        &mut scratch.sparse,
-                    ),
-                    _ => attention::dense_attend_row(
-                        q_row,
-                        &lc.k[h],
-                        &lc.v[h],
-                        &mut scratch.dense_logits,
-                        out,
-                    ),
+                let p = st.pos + j;
+                let q_row = &q_ref.row(row)[h * dh..(h + 1) * dh];
+                match &st.cache {
+                    KvCache::Dense(cache) => {
+                        let lc = &cache.layers[li];
+                        match (&lc.codes, &lw.codebooks) {
+                            (Some(codes), Some(cbs)) => mha::decode_attend_row(
+                                &cbs[h],
+                                q_row,
+                                &lc.k[h],
+                                &lc.v[h],
+                                &codes[h],
+                                p,
+                                st.l_sess,
+                                out,
+                                &mut scratch.sparse,
+                            ),
+                            _ => attention::dense_attend_row(
+                                q_row,
+                                &lc.k[h],
+                                &lc.v[h],
+                                &mut scratch.dense_logits,
+                                out,
+                            ),
+                        }
+                    }
+                    KvCache::Paged(table) => {
+                        let pool = pool_ro.expect("validated above");
+                        match &lw.codebooks {
+                            Some(cbs) => {
+                                pool.gather(
+                                    table,
+                                    li,
+                                    h,
+                                    p + 1,
+                                    &mut scratch.gk,
+                                    &mut scratch.gv,
+                                    Some(&mut scratch.gcodes),
+                                );
+                                mha::decode_attend_row(
+                                    &cbs[h],
+                                    q_row,
+                                    &scratch.gk,
+                                    &scratch.gv,
+                                    &scratch.gcodes,
+                                    p,
+                                    st.l_sess,
+                                    out,
+                                    &mut scratch.sparse,
+                                )
+                            }
+                            None => {
+                                pool.gather(
+                                    table,
+                                    li,
+                                    h,
+                                    p + 1,
+                                    &mut scratch.gk,
+                                    &mut scratch.gv,
+                                    None,
+                                );
+                                attention::dense_attend_row(
+                                    q_row,
+                                    &scratch.gk,
+                                    &scratch.gv,
+                                    &mut scratch.dense_logits,
+                                    out,
+                                )
+                            }
+                        }
+                    }
                 }
             });
         let x_mid = x.add(&attn_out.matmul_packed(&lw.wo_p));
@@ -320,8 +489,8 @@ pub(crate) fn decode_batch(
         x = x_mid.add(&f);
     }
     let xf = grad::layer_norm(&x, &model.weights.lnf_scale, &model.weights.lnf_bias);
-    for st in states.iter_mut() {
-        st.pos += 1;
+    for (si, st) in states.iter_mut().enumerate() {
+        st.pos += runs[si].len();
     }
     // Tied readout for every in-flight row (NT kernel, row-local).
     Ok(grad::matmul_dx_ws(&xf, &model.weights.tok, ws))
@@ -360,9 +529,14 @@ impl<'m> Session<'m> {
         self.state.pos
     }
 
-    /// Measured decode-cache footprint in bytes.
+    /// Measured decode-cache footprint in bytes.  A solo session always
+    /// owns a private dense cache (paged storage is accounted by the
+    /// serve driver's pool, not per sequence).
     pub fn cache_bytes(&self) -> usize {
-        self.state.cache.bytes()
+        match &self.state.cache {
+            KvCache::Dense(cache) => cache.bytes(),
+            KvCache::Paged(_) => 0,
+        }
     }
 
     /// Consume one token and return the logits it produces.  Fails once

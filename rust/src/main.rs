@@ -225,6 +225,8 @@ GENERATE / SERVE-BENCH FLAGS
   --top_k K             restrict sampling to the K best logits
   --requests N          serve-bench: trace size (default 16)
   --max_batch B         serve-bench: in-flight capacity (default 8)
+  --page_tokens N       serve-bench: KV pool page size in tokens (default 16)
+  --prefill_chunk N     serve-bench: prompt tokens prefilled per step (default 32)
 
 SERVE FLAGS
   --addr HOST:PORT      TCP listen address (default 127.0.0.1:7199)
@@ -233,14 +235,22 @@ SERVE FLAGS
   --max_batch B         in-flight decode capacity (default 8)
   --queue_cap N         admission-queue bound; overflow is rejected with
                         a structured queue_full error (default 64)
-  --mem_budget_mb M     cap summed target-length cache bytes of in-flight
-                        requests (memmodel accounting; default unlimited)
+  --mem_budget_mb M     size the paged KV pool to fit this budget: pages
+                        are charged at admission and credited at retire,
+                        so committed cache bytes never exceed it
+                        (default: max_batch full-length sequences)
+  --page_tokens N       tokens per KV pool page (default 16)
+  --prefill_chunk N     prompt tokens prefilled per driver step, so long
+                        prompts never stall in-flight decodes (default 32)
+  --no_prefix_sharing   disable copy-on-write prompt-prefix page sharing
+                        (shared full prompt pages are stored once)
   --deadline_steps N    cancel a request after N decode steps in the
                         driver (deterministic deadline; default off)
   --pid_file PATH       pid/lock file (default <out_dir>/spt-serve.pid);
                         a live holder blocks double-start
-  SPT_FAULT_PLAN        env: seeded fault plan, e.g. 'ckpt_write_err:1'
-                        or 'queue_full:2,accept_err:1' (see README)
+  SPT_FAULT_PLAN        env: seeded fault plan, e.g. 'ckpt_write_err:1',
+                        'queue_full:2,accept_err:1', or
+                        'page_pool_exhausted:1' (see README)
 
 NOTE  the native backend trains the chosen preset's full n_layers-deep
       pre-norm stack end-to-end on the rust sparse substrate, and
@@ -501,6 +511,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rc = args.run_config()?;
     let max_batch = args.usize_or("max_batch", 8)?.max(1);
     let queue_cap = args.usize_or("queue_cap", 64)?.max(1);
+    let page_tokens = args.usize_or("page_tokens", 16)?.max(1);
+    let prefill_chunk = args.usize_or("prefill_chunk", 32)?.max(1);
+    let prefix_sharing = !args.has("no_prefix_sharing");
     let mem_budget = match args.get("mem_budget_mb") {
         Some(v) => Some(v.parse::<u64>().context("--mem_budget_mb")? * (1 << 20)),
         None => None,
@@ -547,7 +560,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let lock = PidLock::acquire(&pid_path)?;
     eprintln!("[spt] pid file {:?}", lock.path());
     let cfg = DaemonConfig {
-        serve: ServeConfig { max_batch, sampler, seed: rc.seed },
+        serve: ServeConfig {
+            max_batch,
+            sampler,
+            seed: rc.seed,
+            page_tokens,
+            prefill_chunk,
+            prefix_sharing,
+            ..ServeConfig::default()
+        },
         queue_cap,
         mem_budget,
         deadline_steps,
@@ -578,6 +599,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let prompt_len = args.usize_or("prompt_len", 16)?.max(1);
     let tokens = args.usize_or("tokens", 32)?.max(1);
     let max_batch = args.usize_or("max_batch", 8)?.max(1);
+    let page_tokens = args.usize_or("page_tokens", 16)?.max(1);
+    let prefill_chunk = args.usize_or("prefill_chunk", 32)?.max(1);
     let model = infer_model(args, &rc)?;
     if prompt_len + tokens > model.max_seq() {
         bail!(
@@ -595,7 +618,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         })
         .collect();
     let run = |mb: usize| -> Result<ServeReport> {
-        let cfg = ServeConfig { max_batch: mb, sampler: Sampler::Greedy, seed: rc.seed };
+        let cfg = ServeConfig {
+            max_batch: mb,
+            sampler: Sampler::Greedy,
+            seed: rc.seed,
+            page_tokens,
+            prefill_chunk,
+            ..ServeConfig::default()
+        };
         let mut driver = ServeDriver::new(&model, cfg)?;
         for r in &reqs {
             driver.submit(r.clone())?;
@@ -644,6 +674,90 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", table.render());
+
+    // Shared-prefix capacity probe: every request carries the same
+    // prompt, the pool is fixed (from --mem_budget_mb when given, else
+    // two dense requests' worth of pages), and the trace runs twice —
+    // prefix sharing on vs off.  Sharing stores the common prompt's
+    // full pages once, so the same memory sustains more concurrent
+    // streams at bit-identical output.
+    let (cap_pt, cap_prompt, cap_new) =
+        if model.max_seq() >= 112 { (16usize, 96usize, 16usize) } else { (8, 48, 8) };
+    let need_pages = (cap_prompt + cap_new).div_ceil(cap_pt);
+    let pool_pages = match args.get("mem_budget_mb") {
+        Some(v) => {
+            let budget = v.parse::<u64>().context("--mem_budget_mb")? * (1 << 20);
+            let mc = spt::config::presets::model(&rc.model)?;
+            let pb = spt::memmodel::decode_page_bytes(
+                &mc.block,
+                rc.mode,
+                cap_pt,
+                mc.n_layers.max(1),
+            );
+            let pages = spt::memmodel::pool_pages_for_budget(budget, pb);
+            if pages < need_pages {
+                bail!(
+                    "--mem_budget_mb {v} holds {pages} pages; the capacity probe \
+                     needs at least {need_pages}"
+                );
+            }
+            pages
+        }
+        None => 2 * need_pages,
+    };
+    let shared_prompt: Vec<i32> =
+        corpus.sequence(cap_prompt).iter().map(|&t| t as i32).collect();
+    let cap_reqs: Vec<Request> = (0..8)
+        .map(|id| Request { id, prompt: shared_prompt.clone(), max_new_tokens: cap_new })
+        .collect();
+    let warm_steps = cap_prompt.div_ceil(2 * cap_pt) + 1;
+    let capacity_run = |sharing: bool| -> Result<ServeReport> {
+        let cfg = ServeConfig {
+            max_batch: 8,
+            sampler: Sampler::Greedy,
+            seed: rc.seed,
+            page_tokens: cap_pt,
+            prefill_chunk: 2 * cap_pt,
+            prefix_sharing: sharing,
+            pool_pages: Some(pool_pages),
+            ..ServeConfig::default()
+        };
+        let mut driver = ServeDriver::new(&model, cfg)?;
+        driver.submit(cap_reqs[0].clone())?;
+        for _ in 0..warm_steps {
+            driver.step()?;
+        }
+        for r in &cap_reqs[1..] {
+            driver.submit(r.clone())?;
+        }
+        driver.run_to_completion()
+    };
+    let shared = capacity_run(true)?;
+    let dense = capacity_run(false)?;
+    for (a, b) in shared.completions.iter().zip(&dense.completions) {
+        if a.tokens != b.tokens {
+            bail!("request {}: prefix sharing changed the tokens", a.id);
+        }
+    }
+    let streams_ratio = shared.peak_in_flight as f64 / dense.peak_in_flight.max(1) as f64;
+    println!(
+        "[spt] capacity: {pool_pages} pages sustain {} shared-prefix streams vs {} dense \
+         ({streams_ratio:.2}x), prefix hit rate {:.2}, queue-wait p50/p99 {}/{}",
+        shared.peak_in_flight,
+        dense.peak_in_flight,
+        shared.prefix_hit_rate,
+        spt::util::fmt_duration(shared.queue_wait_percentile(50.0)),
+        spt::util::fmt_duration(shared.queue_wait_percentile(99.0)),
+    );
+    let mut cap = BTreeMap::new();
+    cap.insert("page_tokens".into(), Json::Num(cap_pt as f64));
+    cap.insert("pool_pages".into(), Json::Num(pool_pages as f64));
+    cap.insert("prompt_len".into(), Json::Num(cap_prompt as f64));
+    cap.insert("max_new_tokens".into(), Json::Num(cap_new as f64));
+    cap.insert("shared".into(), shared.to_json());
+    cap.insert("dense".into(), dense.to_json());
+    cap.insert("streams_ratio".into(), Json::Num(streams_ratio));
+
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Json::Str("decode_native".into()));
     top.insert("model".into(), Json::Str(rc.model.clone()));
@@ -656,6 +770,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     top.insert("overload".into(), overload.to_json());
     top.insert("baseline".into(), baseline.to_json());
     top.insert("speedup".into(), Json::Num(speedup));
+    top.insert("capacity".into(), Json::Obj(cap));
+    top.insert("provenance".into(), spt::util::provenance::provenance());
     let dir = std::path::Path::new("bench_out");
     std::fs::create_dir_all(dir).ok();
     let path = dir.join("BENCH_decode_native.json");
@@ -814,6 +930,41 @@ fn cmd_memplan(args: &Args) -> Result<()> {
             ]);
         }
         println!("{}", t3.render());
+
+        // Paged-pool capacity planning: the serving pool's page granule
+        // (16-token pages), pages per request at target length, and how
+        // many full-length streams a given --mem_budget_mb sustains —
+        // the arithmetic `spt serve` runs at startup to size its pool.
+        let page_tokens = 16usize;
+        let page = memmodel::decode_page_bytes(&cfg, Mode::Spt, page_tokens, layers);
+        let mut t4 = Table::new(
+            &format!(
+                "Paged KV pool — {cfg_name}, {layers} layers, {page_tokens}-token pages \
+                 ({}/page, spt mode)",
+                fmt_bytes(page)
+            ),
+            &["Target len", "Pages/request", "Bytes/request", "Streams @ 256 MB", "Streams @ 1 GB"],
+        );
+        for target in [128usize, 256, 512, 1024, 2048] {
+            let pages = memmodel::decode_request_pages(target, page_tokens);
+            let per_req = pages as u64 * page;
+            let streams = |budget: u64| {
+                (memmodel::pool_pages_for_budget(budget, page) / pages.max(1)).to_string()
+            };
+            t4.row(&[
+                target.to_string(),
+                pages.to_string(),
+                fmt_bytes(per_req),
+                streams(256 << 20),
+                streams(1 << 30),
+            ]);
+        }
+        println!("{}", t4.render());
+        println!(
+            "[spt] serve sizes its pool as --mem_budget_mb / page bytes; prefix sharing \
+             stores common full prompt pages once, so shared-prompt streams cost only \
+             their unshared tail pages (see ServeReport's prefix_hit_rate)."
+        );
     }
     Ok(())
 }

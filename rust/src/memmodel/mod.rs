@@ -127,10 +127,10 @@ pub fn decode_step_state_bytes(cfg: &BlockConfig, mode: Mode, seq: usize) -> u64
 
 /// Admission cost of one serving request at its *target* length
 /// (prompt + max new tokens): the cache it will have filled by its last
-/// decode step plus its per-step attention state at that length.  This
-/// is what the daemon charges against `--mem-budget` before admitting,
-/// so the sum over in-flight requests is a provable upper bound on
-/// their cache footprint at any step.
+/// decode step plus its per-step attention state at that length.  The
+/// dense-slot analytic cost; the serve daemon's live budget is now
+/// page-granular ([`decode_page_bytes`] × [`decode_request_pages`]),
+/// which upper-bounds this cache term by construction.
 pub fn decode_request_bytes(
     cfg: &BlockConfig,
     mode: Mode,
@@ -139,6 +139,31 @@ pub fn decode_request_bytes(
 ) -> u64 {
     decode_cache_bytes(cfg, mode, target_len, n_layers)
         + decode_step_state_bytes(cfg, mode, target_len)
+}
+
+/// Bytes of one KV page (`page_tokens` cached positions across all
+/// layers/heads): the page pool's allocation granule.  Identical math
+/// to [`decode_cache_bytes`] at `page_tokens` positions — the analytic
+/// twin of `PagePool::bytes_per_page`, used to size a pool from
+/// `--mem_budget_mb`.
+pub fn decode_page_bytes(
+    cfg: &BlockConfig,
+    mode: Mode,
+    page_tokens: usize,
+    n_layers: usize,
+) -> u64 {
+    decode_cache_bytes(cfg, mode, page_tokens, n_layers)
+}
+
+/// Pages one request occupies at its target length (prompt + max new
+/// tokens) — what the serve driver charges at admission.
+pub fn decode_request_pages(target_len: usize, page_tokens: usize) -> usize {
+    target_len.div_ceil(page_tokens.max(1))
+}
+
+/// Largest page pool a byte budget affords (0 = budget below one page).
+pub fn pool_pages_for_budget(budget: u64, page_bytes: u64) -> usize {
+    usize::try_from(budget / page_bytes.max(1)).unwrap_or(usize::MAX)
 }
 
 /// Peak decode-time memory for `batch` concurrent sequences at `seq`
@@ -294,6 +319,27 @@ mod tests {
             }
             assert!(decode_request_bytes(&cfg, mode, 512, 8) > cost, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn page_accounting_covers_the_cache_it_pays_for() {
+        let cfg = presets::block("opt-1024").unwrap();
+        for mode in Mode::ALL {
+            let pb = decode_page_bytes(&cfg, mode, 16, 8);
+            assert_eq!(pb, decode_cache_bytes(&cfg, mode, 16, 8));
+            for target in [1, 15, 16, 17, 100, 256] {
+                let bytes = decode_request_pages(target, 16) as u64 * pb;
+                let cache = decode_cache_bytes(&cfg, mode, target, 8);
+                // Charged pages cover the cache at the target length,
+                // with less than one page of rounding slack.
+                assert!(bytes >= cache, "{mode:?} target {target}");
+                assert!(bytes < cache + pb, "{mode:?} target {target}");
+            }
+            assert_eq!(pool_pages_for_budget(10 * pb + pb / 2, pb), 10);
+            assert_eq!(pool_pages_for_budget(pb - 1, pb), 0);
+        }
+        assert_eq!(decode_request_pages(33, 16), 3);
+        assert_eq!(decode_request_pages(32, 16), 2);
     }
 
     #[test]

@@ -32,6 +32,9 @@
 //!   N-th admission probe regardless of actual occupancy.
 //! * `accept_err` (N) — the daemon's N-th listener accept fails with a
 //!   transient error (exercises the accept retry/backoff path).
+//! * `page_pool_exhausted` (N) — the serve driver's N-th admission probe
+//!   reports the KV page pool starved: the request stays queued and is
+//!   admitted on a later step (transient; no stream may be perturbed).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -9,6 +9,7 @@ pub mod fault;
 pub mod json;
 pub mod lock;
 pub mod proptest;
+pub mod provenance;
 pub mod retry;
 pub mod rng;
 

@@ -1,0 +1,75 @@
+//! Host/build provenance stamped into every BENCH JSON artifact.
+//!
+//! Benchmark numbers are only comparable when they come from the same
+//! code on the same class of machine.  [`provenance`] captures the three
+//! facts `cargo xtask benchdiff` needs to decide whether a regression is
+//! real or a host change: the git commit, the rayon pool width, and the
+//! CPU model string.  Every probe degrades to `"unknown"` instead of
+//! failing — a bench run must never die because `git` is missing or
+//! `/proc/cpuinfo` is not Linux-shaped.
+
+use std::collections::BTreeMap;
+use std::process::Command;
+
+use crate::util::json::Json;
+
+/// Short git commit hash of the working tree, or `"unknown"`.
+pub fn git_sha() -> String {
+    Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// CPU model string from `/proc/cpuinfo`, or `"unknown"`.
+pub fn cpu_model() -> String {
+    std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split_once(':').map(|(_, v)| v.trim().to_string()))
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The provenance object stamped into BENCH JSONs:
+/// `{"git_sha":..,"rayon_threads":..,"cpu_model":..}`.
+pub fn provenance() -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("git_sha".to_string(), Json::Str(git_sha()));
+    m.insert(
+        "rayon_threads".to_string(),
+        Json::Num(rayon::current_num_threads() as f64),
+    );
+    m.insert("cpu_model".to_string(), Json::Str(cpu_model()));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provenance_has_all_keys_and_never_fails() {
+        let p = provenance();
+        assert!(!p.get("git_sha").as_str().unwrap_or("").is_empty());
+        assert!(!p.get("cpu_model").as_str().unwrap_or("").is_empty());
+        let threads = p.get("rayon_threads").as_usize().unwrap();
+        assert!(threads >= 1, "rayon pool is at least one thread");
+    }
+
+    #[test]
+    fn probes_degrade_to_unknown_not_empty() {
+        // Direct probes never return the empty string: any failure path
+        // lands on the literal "unknown" the differ treats as warn-only.
+        assert!(!git_sha().is_empty());
+        assert!(!cpu_model().is_empty());
+    }
+}

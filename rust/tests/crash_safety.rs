@@ -156,6 +156,90 @@ fn transient_write_fault_is_retried_and_does_not_perturb_training() {
 }
 
 #[test]
+fn page_pool_starvation_rejects_structurally_and_never_perturbs_survivors() {
+    use spt::config::presets;
+    use spt::coordinator::Backend;
+    use spt::infer::{Daemon, DaemonConfig, InferModel};
+    use spt::memmodel;
+    use spt::util::json::Json;
+
+    let backend = NativeBackend::new();
+    let run_cfg = RunConfig { model: "spt-nano".into(), mode: Mode::Spt, seed: 11, ..RunConfig::default() };
+    let state = backend.init_state(&run_cfg).unwrap();
+    let model = InferModel::new(&run_cfg, state).unwrap();
+
+    // A budget of 1.5 pages buys a one-page pool: requests with a
+    // <= page_tokens target fit (and serialize); anything larger can
+    // never fit and must be rejected with a structured mem_budget
+    // event — not a panic, not a silent drop.
+    let mc = presets::model("spt-nano").unwrap();
+    let page = memmodel::decode_page_bytes(
+        &mc.block,
+        Mode::Spt,
+        spt::infer::ServeConfig::default().page_tokens,
+        mc.n_layers.max(1),
+    );
+    let submit = |id: usize, prompt: &[i32], max_new: usize| {
+        let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        format!(
+            r#"{{"op":"submit","id":{id},"prompt":[{}],"max_new_tokens":{max_new}}}"#,
+            toks.join(",")
+        )
+    };
+    let run = |fault: Option<Arc<FaultPlan>>| -> (Vec<(usize, Vec<i64>)>, Vec<String>) {
+        let cfg = DaemonConfig {
+            mem_budget: Some(page + page / 2),
+            fault,
+            ..DaemonConfig::default()
+        };
+        let mut d = Daemon::new(&model, cfg).unwrap();
+        let mut rejected_codes = Vec::new();
+        for line in [
+            submit(1, &[1, 2, 3], 5),           // target 8  = 1 page: fits
+            submit(2, &[1, 2, 3, 4], 30),       // target 34 = 3 pages: never fits
+            submit(3, &[2, 3, 4], 5),           // target 8  = 1 page: fits
+        ] {
+            for ev in d.handle_line(&line) {
+                if ev.get("event").as_str() == Some("rejected") {
+                    rejected_codes.push(ev.get("code").as_str().unwrap_or("?").to_string());
+                }
+            }
+        }
+        let mut streams = Vec::new();
+        let (events, report) = d.finish().unwrap();
+        for ev in &events {
+            if ev.get("event").as_str() == Some("done") {
+                assert_eq!(ev.get("error"), &Json::Null, "survivor degraded: {ev}");
+                let toks: Vec<i64> =
+                    ev.get("tokens").as_arr().unwrap().iter().filter_map(Json::as_i64).collect();
+                streams.push((ev.get("id").as_usize().unwrap(), toks));
+            }
+        }
+        streams.sort();
+        assert_eq!(report.completions.len(), 2, "both fitting requests completed");
+        assert_eq!(report.failed, 0);
+        (streams, rejected_codes)
+    };
+
+    let (clean_streams, clean_rejects) = run(None);
+    assert_eq!(clean_rejects, vec!["mem_budget".to_string()], "oversized request rejected");
+    assert_eq!(clean_streams.len(), 2);
+    assert_eq!(clean_streams[0].1.len(), 5);
+
+    // Same trace with the pool-starved fault armed at the driver's
+    // first admission probe: the request stays queued one extra step,
+    // then admits — streams bit-identical, nothing panics or degrades.
+    let plan = Arc::new(FaultPlan::new().with("page_pool_exhausted", 1));
+    let (faulted_streams, faulted_rejects) = run(Some(plan.clone()));
+    assert!(plan.probes("page_pool_exhausted") >= 1, "the fault site was probed");
+    assert_eq!(faulted_rejects, clean_rejects);
+    assert_eq!(
+        faulted_streams, clean_streams,
+        "a transient pool-starvation fault must not perturb any token stream"
+    );
+}
+
+#[test]
 fn zero_step_runs_error_clearly_instead_of_panicking() {
     let backend = NativeBackend::new();
     let mut t = Trainer::new(&backend, rc(0), TrainerOptions::default());

@@ -14,7 +14,7 @@ use spt::config::{Mode, RunConfig};
 use spt::coordinator::checkpoint::{self, CkptMeta};
 use spt::coordinator::{Backend, NativeBackend, Trainer, TrainerOptions};
 use spt::data::SyntheticCorpus;
-use spt::infer::{InferModel, Sampler, Session};
+use spt::infer::{InferModel, Request, Sampler, ServeConfig, ServeDriver, Session};
 use spt::util::proptest::{check, prop_assert};
 use spt::util::rng::Rng;
 
@@ -136,6 +136,154 @@ fn parity_holds_at_pools_1_2_8() {
             assert_parity("spt-nano", mode, 31, 24, 6).unwrap();
         }
     });
+}
+
+/// The paged-serving parity reference: each request decoded by its own
+/// unpaged [`Session`], with the driver's per-request RNG fork.
+fn solo_streams(model: &InferModel, reqs: &[Request], sampler: &Sampler, seed: u64) -> Vec<Vec<i32>> {
+    reqs.iter()
+        .map(|r| {
+            let mut sess =
+                Session::new(model, &r.prompt, r.prompt.len() + r.max_new_tokens).expect("prefill");
+            let mut rng = Rng::new(
+                seed.wrapping_add((r.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            );
+            sess.generate(sampler, &mut rng, r.max_new_tokens).expect("generate")
+        })
+        .collect()
+}
+
+/// Drive a shared-prefix trace through the paged driver with staged
+/// submission (request 0 first, so its prefix pages are registered for
+/// reuse before the rest arrive), returning streams indexed by id.
+fn paged_streams(model: &InferModel, reqs: &[Request], cfg: ServeConfig) -> Vec<Vec<i32>> {
+    let mut driver = ServeDriver::new(model, cfg).expect("driver");
+    driver.submit(reqs[0].clone()).expect("submit");
+    for _ in 0..3 {
+        driver.step().expect("warm step");
+    }
+    for r in &reqs[1..] {
+        driver.submit(r.clone()).expect("submit");
+    }
+    let report = driver.run_to_completion().expect("serve");
+    assert_eq!(report.failed, 0, "no request may degrade");
+    let mut streams = vec![Vec::new(); reqs.len()];
+    for c in &report.completions {
+        assert!(c.error.is_none(), "request {}: {:?}", c.id, c.error);
+        streams[c.id] = c.tokens.clone();
+    }
+    streams
+}
+
+#[test]
+fn paged_driver_matches_solo_unpaged_sessions() {
+    // The tentpole invariant: per-request token streams out of the
+    // paged, chunk-prefilled, prefix-shared driver are bit-identical to
+    // a solo unpaged Session — at any page size, pool size, max_batch,
+    // and with sharing on or off.
+    let sampler = Sampler::TopK { k: 16, temperature: 0.8 };
+    let seed = 0xD0_5EEDu64;
+    for mode in Mode::ALL {
+        let cfg = rc("spt-nano", mode, 91);
+        let backend = NativeBackend::new();
+        let state = backend.init_state(&cfg).unwrap();
+        let model = InferModel::new(&cfg, state).unwrap();
+        let mut corpus = SyntheticCorpus::new(model.vocab(), 4, 0.85, 0xA11);
+        let prefix: Vec<i32> = corpus.sequence(10).iter().map(|&t| t as i32).collect();
+        // Three requests share the 10-token prefix with distinct tails;
+        // the fourth is unrelated (no reuse possible).
+        let mut reqs: Vec<Request> = (0..3)
+            .map(|id| {
+                let mut prompt = prefix.clone();
+                prompt.push(i32::try_from(40 + id).unwrap());
+                prompt.push(i32::try_from(7 * (id + 1)).unwrap());
+                Request { id, prompt, max_new_tokens: 6 }
+            })
+            .collect();
+        reqs.push(Request {
+            id: 3,
+            prompt: corpus.sequence(7).iter().map(|&t| t as i32).collect(),
+            max_new_tokens: 5,
+        });
+        let want = solo_streams(&model, &reqs, &sampler, seed);
+        // Tight pool: the largest single request's page demand.
+        let tight = |pt: usize| {
+            reqs.iter()
+                .map(|r| (r.prompt.len() + r.max_new_tokens).div_ceil(pt))
+                .max()
+                .unwrap()
+        };
+        for page_tokens in [4usize, 16] {
+            for sharing in [true, false] {
+                for pool_pages in [None, Some(tight(page_tokens))] {
+                    for max_batch in [1usize, 3] {
+                        let got = paged_streams(
+                            &model,
+                            &reqs,
+                            ServeConfig {
+                                max_batch,
+                                sampler: sampler.clone(),
+                                seed,
+                                page_tokens,
+                                prefill_chunk: 5,
+                                prefix_sharing: sharing,
+                                pool_pages,
+                                ..ServeConfig::default()
+                            },
+                        );
+                        assert_eq!(
+                            got, want,
+                            "{mode:?} page_tokens {page_tokens} sharing {sharing} \
+                             pool {pool_pages:?} max_batch {max_batch}: \
+                             paged streams diverge from solo sessions"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_driver_parity_holds_at_pools_1_2_8() {
+    // The same invariant under dedicated rayon pools of 1, 2, and 8
+    // threads: paged batched decoding must not let pool size reach the
+    // token streams.
+    let sampler = Sampler::TopK { k: 16, temperature: 0.8 };
+    let seed = 0xBEE5u64;
+    let cfg = rc("spt-nano", Mode::Spt, 92);
+    let backend = NativeBackend::new();
+    let state = backend.init_state(&cfg).unwrap();
+    let model = InferModel::new(&cfg, state).unwrap();
+    let mut corpus = SyntheticCorpus::new(model.vocab(), 4, 0.85, 0xA12);
+    let prefix: Vec<i32> = corpus.sequence(9).iter().map(|&t| t as i32).collect();
+    let reqs: Vec<Request> = (0..4)
+        .map(|id| {
+            let mut prompt = prefix.clone();
+            prompt.push(i32::try_from(11 + id).unwrap());
+            Request { id, prompt, max_new_tokens: 6 }
+        })
+        .collect();
+    let want = solo_streams(&model, &reqs, &sampler, seed);
+    for threads in [1usize, 2, 8] {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        let got = pool.install(|| {
+            paged_streams(
+                &model,
+                &reqs,
+                ServeConfig {
+                    max_batch: 3,
+                    sampler: sampler.clone(),
+                    seed,
+                    page_tokens: 4,
+                    prefill_chunk: 5,
+                    prefix_sharing: true,
+                    ..ServeConfig::default()
+                },
+            )
+        });
+        assert_eq!(got, want, "pool of {threads}: paged streams diverge from solo sessions");
+    }
 }
 
 #[test]

@@ -1,0 +1,376 @@
+//! `cargo xtask benchdiff <baseline.json> <current.json>` — the perf
+//! regression gate.
+//!
+//! Both files are BENCH JSON artifacts (`bench_out/BENCH_*.json`); the
+//! baseline copies live under `bench_out/baselines/` in the repo.  The
+//! differ dispatches on the top-level `"bench"` field to extract the
+//! comparable metrics of each artifact shape:
+//!
+//! * `decode_native` — `tokens_per_sec` of the `batched` / `baseline` /
+//!   `overload` sections (higher is better).
+//! * `table3_native_step` — `ms_per_step` per `entries[]` element,
+//!   keyed `{mode},t{threads}` (lower is better).
+//! * `kernel_bench` — `ms_median` per `kernels[]` element, keyed
+//!   `{kernel}[{m}x{k}x{n}]` (lower is better).
+//!
+//! A metric that moved more than [`THRESHOLD`] in the bad direction is
+//! a regression and the task exits non-zero — unless the two files'
+//! `provenance` stamps disagree on CPU model or rayon thread count (or
+//! either is `"unknown"`), in which case the numbers are not
+//! host-comparable and every regression is downgraded to a warning.
+//! Metrics present in the baseline but missing from the current run
+//! always fail: a silently vanished benchmark is not a pass.
+
+use std::process::ExitCode;
+
+use spt::util::json::{self, Json};
+
+/// Relative change beyond which a metric counts as regressed (25%).
+pub const THRESHOLD: f64 = 0.25;
+
+/// One comparable metric extracted from a BENCH JSON.
+#[derive(Debug, PartialEq)]
+struct Metric {
+    key: String,
+    value: f64,
+    higher_is_better: bool,
+}
+
+/// A baseline/current metric pair with its verdict.
+#[derive(Debug)]
+pub struct Delta {
+    pub key: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed relative change, positive = worse (normalized so the
+    /// threshold applies uniformly to both metric directions).
+    pub worse_by: f64,
+    pub regressed: bool,
+}
+
+/// The full comparison of two BENCH JSON artifacts.
+#[derive(Debug)]
+pub struct Diff {
+    pub bench: String,
+    pub deltas: Vec<Delta>,
+    /// Baseline metrics absent from the current run (always a failure).
+    pub missing: Vec<String>,
+    /// Why the hosts are not comparable (downgrades regressions to
+    /// warnings), if they are not.
+    pub host_mismatch: Option<String>,
+}
+
+impl Diff {
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// Whether this diff should fail the build.
+    pub fn failed(&self) -> bool {
+        !self.missing.is_empty()
+            || (self.host_mismatch.is_none() && !self.regressions().is_empty())
+    }
+}
+
+fn num(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .as_f64()
+        .ok_or_else(|| format!("missing numeric field '{key}'"))
+}
+
+fn extract(v: &Json) -> Result<Vec<Metric>, String> {
+    let bench = v
+        .get("bench")
+        .as_str()
+        .ok_or("missing top-level 'bench' field")?;
+    let mut metrics = Vec::new();
+    match bench {
+        "decode_native" => {
+            for section in ["batched", "baseline", "overload"] {
+                let s = v.get(section);
+                if matches!(s, Json::Null) {
+                    continue;
+                }
+                metrics.push(Metric {
+                    key: format!("{section}.tokens_per_sec"),
+                    value: num(s, "tokens_per_sec")?,
+                    higher_is_better: true,
+                });
+            }
+        }
+        "table3_native_step" => {
+            let entries = v
+                .get("entries")
+                .as_arr()
+                .ok_or("table3_native_step: missing 'entries' array")?;
+            for e in entries {
+                let mode = e.get("mode").as_str().unwrap_or("?");
+                let threads = e.get("threads").as_usize().unwrap_or(0);
+                metrics.push(Metric {
+                    key: format!("{mode},t{threads}.ms_per_step"),
+                    value: num(e, "ms_per_step")?,
+                    higher_is_better: false,
+                });
+            }
+        }
+        "kernel_bench" => {
+            let kernels = v
+                .get("kernels")
+                .as_arr()
+                .ok_or("kernel_bench: missing 'kernels' array")?;
+            for k in kernels {
+                let name = k.get("kernel").as_str().unwrap_or("?");
+                let (m, kk, n) = (
+                    k.get("m").as_usize().unwrap_or(0),
+                    k.get("k").as_usize().unwrap_or(0),
+                    k.get("n").as_usize().unwrap_or(0),
+                );
+                metrics.push(Metric {
+                    key: format!("{name}[{m}x{kk}x{n}].ms_median"),
+                    value: num(k, "ms_median")?,
+                    higher_is_better: false,
+                });
+            }
+        }
+        other => return Err(format!("unknown bench kind '{other}'")),
+    }
+    if metrics.is_empty() {
+        return Err(format!("bench '{bench}': no metrics extracted"));
+    }
+    Ok(metrics)
+}
+
+/// Compare the provenance stamps; `Some(reason)` when the numbers are
+/// not host-comparable.  Git SHAs are *expected* to differ and are not
+/// compared.
+fn host_mismatch(baseline: &Json, current: &Json) -> Option<String> {
+    let (bp, cp) = (baseline.get("provenance"), current.get("provenance"));
+    if matches!(bp, Json::Null) || matches!(cp, Json::Null) {
+        return Some("one side has no provenance stamp".into());
+    }
+    let (bc, cc) = (
+        bp.get("cpu_model").as_str().unwrap_or("unknown"),
+        cp.get("cpu_model").as_str().unwrap_or("unknown"),
+    );
+    if bc == "unknown" || cc == "unknown" {
+        return Some("cpu_model unknown on at least one side".into());
+    }
+    if bc != cc {
+        return Some(format!("cpu_model differs: '{bc}' vs '{cc}'"));
+    }
+    let (bt, ct) = (
+        bp.get("rayon_threads").as_usize(),
+        cp.get("rayon_threads").as_usize(),
+    );
+    if bt != ct {
+        return Some(format!("rayon_threads differs: {bt:?} vs {ct:?}"));
+    }
+    None
+}
+
+/// Pure comparison of two parsed BENCH JSON values.
+pub fn diff(baseline: &Json, current: &Json) -> Result<Diff, String> {
+    let base_metrics = extract(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let cur_metrics = extract(current).map_err(|e| format!("current: {e}"))?;
+    let bench = baseline.get("bench").as_str().unwrap_or("?").to_string();
+    if current.get("bench").as_str() != Some(bench.as_str()) {
+        return Err(format!(
+            "bench kind mismatch: baseline '{bench}' vs current '{}'",
+            current.get("bench").as_str().unwrap_or("?")
+        ));
+    }
+    let mut deltas = Vec::new();
+    let mut missing = Vec::new();
+    for b in &base_metrics {
+        let Some(c) = cur_metrics.iter().find(|c| c.key == b.key) else {
+            missing.push(b.key.clone());
+            continue;
+        };
+        // Normalize: worse_by > 0 means the metric moved the bad way.
+        let worse_by = if b.value.abs() < 1e-12 {
+            0.0
+        } else if b.higher_is_better {
+            (b.value - c.value) / b.value
+        } else {
+            (c.value - b.value) / b.value
+        };
+        deltas.push(Delta {
+            key: b.key.clone(),
+            baseline: b.value,
+            current: c.value,
+            worse_by,
+            regressed: worse_by > THRESHOLD,
+        });
+    }
+    Ok(Diff {
+        bench,
+        deltas,
+        missing,
+        host_mismatch: host_mismatch(baseline, current),
+    })
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+pub fn run(args: &[String]) -> ExitCode {
+    let [baseline_path, current_path] = args else {
+        eprintln!("usage: cargo xtask benchdiff <baseline.json> <current.json>");
+        return ExitCode::FAILURE;
+    };
+    let result = (|| -> Result<Diff, String> {
+        diff(&load(baseline_path)?, &load(current_path)?)
+    })();
+    let d = match result {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("[benchdiff] error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "[benchdiff] {}: {} metrics vs {}",
+        d.bench,
+        d.deltas.len(),
+        baseline_path
+    );
+    for delta in &d.deltas {
+        let tag = if delta.regressed { "REGRESSED" } else { "ok" };
+        println!(
+            "  {:9} {}  baseline {:.3}  current {:.3}  ({:+.1}% worse)",
+            tag,
+            delta.key,
+            delta.baseline,
+            delta.current,
+            delta.worse_by * 100.0
+        );
+    }
+    for key in &d.missing {
+        eprintln!("  MISSING   {key} (present in baseline, absent in current)");
+    }
+    if let Some(reason) = &d.host_mismatch {
+        eprintln!(
+            "[benchdiff] warning: hosts not comparable ({reason}); regressions \
+             downgraded to warnings"
+        );
+    }
+    if d.failed() {
+        eprintln!(
+            "[benchdiff] FAIL: {} regression(s) beyond {:.0}%, {} missing metric(s)",
+            d.regressions().len(),
+            THRESHOLD * 100.0,
+            d.missing.len()
+        );
+        ExitCode::FAILURE
+    } else {
+        println!("[benchdiff] ok");
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode_json(tps: f64, cpu: &str) -> Json {
+        json::parse(&format!(
+            r#"{{"bench":"decode_native",
+                 "batched":{{"tokens_per_sec":{tps}}},
+                 "baseline":{{"tokens_per_sec":100.0}},
+                 "overload":{{"tokens_per_sec":90.0}},
+                 "provenance":{{"git_sha":"abc","rayon_threads":8,"cpu_model":"{cpu}"}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn seeded_regression_beyond_threshold_fails() {
+        // Throughput drops 30% on the same host: must fail.
+        let base = decode_json(1000.0, "TestCPU");
+        let cur = decode_json(700.0, "TestCPU");
+        let d = diff(&base, &cur).unwrap();
+        assert_eq!(d.host_mismatch, None);
+        assert_eq!(d.regressions().len(), 1);
+        assert_eq!(d.regressions()[0].key, "batched.tokens_per_sec");
+        assert!(d.failed());
+        // A 20% drop stays under the 25% threshold.
+        let d = diff(&base, &decode_json(800.0, "TestCPU")).unwrap();
+        assert!(!d.failed(), "20% drop is within threshold");
+        // Improvements never fail.
+        let d = diff(&base, &decode_json(2000.0, "TestCPU")).unwrap();
+        assert!(!d.failed());
+    }
+
+    #[test]
+    fn host_mismatch_downgrades_regressions_to_warnings() {
+        let base = decode_json(1000.0, "CPU-A");
+        let d = diff(&base, &decode_json(700.0, "CPU-B")).unwrap();
+        assert!(d.host_mismatch.is_some());
+        assert_eq!(d.regressions().len(), 1, "regression still reported");
+        assert!(!d.failed(), "but does not fail across hosts");
+        // "unknown" on either side is also not comparable.
+        let d = diff(&decode_json(1000.0, "unknown"), &decode_json(700.0, "CPU-B")).unwrap();
+        assert!(d.host_mismatch.is_some());
+        assert!(!d.failed());
+    }
+
+    #[test]
+    fn lower_is_better_metrics_regress_upward() {
+        let base = json::parse(
+            r#"{"bench":"table3_native_step",
+                "entries":[{"mode":"spt","threads":4,"ms_per_step":10.0},
+                           {"mode":"full","threads":4,"ms_per_step":20.0}],
+                "provenance":{"git_sha":"a","rayon_threads":8,"cpu_model":"X"}}"#,
+        )
+        .unwrap();
+        let cur = json::parse(
+            r#"{"bench":"table3_native_step",
+                "entries":[{"mode":"spt","threads":4,"ms_per_step":13.0},
+                           {"mode":"full","threads":4,"ms_per_step":19.0}],
+                "provenance":{"git_sha":"b","rayon_threads":8,"cpu_model":"X"}}"#,
+        )
+        .unwrap();
+        let d = diff(&base, &cur).unwrap();
+        // 10 -> 13 ms is +30% worse; 20 -> 19 is an improvement.
+        assert_eq!(d.regressions().len(), 1);
+        assert_eq!(d.regressions()[0].key, "spt,t4.ms_per_step");
+        assert!(d.failed());
+    }
+
+    #[test]
+    fn kernel_metrics_key_on_shape_and_missing_entries_fail() {
+        let base = json::parse(
+            r#"{"bench":"kernel_bench",
+                "kernels":[{"kernel":"gemm","m":64,"k":64,"n":64,"ms_median":1.0},
+                           {"kernel":"bspmv","m":64,"k":64,"n":256,"ms_median":2.0}],
+                "provenance":{"git_sha":"a","rayon_threads":1,"cpu_model":"X"}}"#,
+        )
+        .unwrap();
+        let cur = json::parse(
+            r#"{"bench":"kernel_bench",
+                "kernels":[{"kernel":"gemm","m":64,"k":64,"n":64,"ms_median":1.1}],
+                "provenance":{"git_sha":"b","rayon_threads":1,"cpu_model":"X"}}"#,
+        )
+        .unwrap();
+        let d = diff(&base, &cur).unwrap();
+        assert_eq!(d.missing, vec!["bspmv[64x64x256].ms_median".to_string()]);
+        assert!(d.failed(), "a vanished kernel metric always fails");
+        assert!(d.regressions().is_empty(), "1.0 -> 1.1 ms is within threshold");
+    }
+
+    #[test]
+    fn mismatched_or_unknown_bench_kinds_error() {
+        let a = json::parse(r#"{"bench":"decode_native","batched":{"tokens_per_sec":1}}"#)
+            .unwrap();
+        let b = json::parse(
+            r#"{"bench":"kernel_bench","kernels":[{"kernel":"g","m":1,"k":1,"n":1,"ms_median":1}]}"#,
+        )
+        .unwrap();
+        assert!(diff(&a, &b).is_err());
+        let odd = json::parse(r#"{"bench":"nope"}"#).unwrap();
+        assert!(diff(&odd, &odd).is_err());
+    }
+}

@@ -1,26 +1,34 @@
 //! `cargo xtask` — workspace automation, wired up through the alias in
 //! `rust/.cargo/config.toml`.
 //!
-//! One task so far: `detlint`, the determinism lint pass described in
-//! `detlint.rs` and in README's "Determinism contract" section.  Run it
-//! as `cargo xtask detlint` (defaults to the spt crate's `src/`) or
-//! `cargo xtask detlint path/to/file.rs dir/` to lint specific paths.
+//! Tasks:
+//!
+//! * `detlint` — the determinism lint pass described in `detlint.rs`
+//!   and in README's "Determinism contract" section.  Run it as
+//!   `cargo xtask detlint` (defaults to the spt crate's `src/`) or
+//!   `cargo xtask detlint path/to/file.rs dir/` to lint specific paths.
+//! * `benchdiff` — the perf regression gate described in
+//!   `benchdiff.rs`: `cargo xtask benchdiff <baseline.json>
+//!   <current.json>` fails on >25% same-host regressions against the
+//!   committed baselines in `bench_out/baselines/`.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+mod benchdiff;
 mod detlint;
 
 fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     let Some(cmd) = args.next() else {
-        eprintln!("usage: cargo xtask detlint [paths...]");
+        eprintln!("usage: cargo xtask <detlint|benchdiff> [args...]");
         return ExitCode::FAILURE;
     };
     match cmd.as_str() {
         "detlint" => detlint::run(&args.map(PathBuf::from).collect::<Vec<_>>()),
+        "benchdiff" => benchdiff::run(&args.collect::<Vec<_>>()),
         other => {
-            eprintln!("unknown xtask '{other}' (available: detlint)");
+            eprintln!("unknown xtask '{other}' (available: detlint, benchdiff)");
             ExitCode::FAILURE
         }
     }
