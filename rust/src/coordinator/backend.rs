@@ -59,6 +59,25 @@ pub trait Backend {
         targets: &[i32],
     ) -> Result<f32>;
 
+    /// [`Backend::train_step`] plus observability: the backend fills
+    /// `obs` with phase timings and value telemetry for the step.  The
+    /// zero-perturbation contract binds every implementation — the
+    /// returned loss and the resulting `state` must be bit-identical to
+    /// a plain `train_step` with the same inputs (`tests/obs_parity.rs`
+    /// proves it for the native backend).  The default ignores `obs`,
+    /// which satisfies the contract trivially.
+    fn train_step_obs(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+        obs: &mut crate::obs::StepObs,
+    ) -> Result<f32> {
+        let _ = obs;
+        self.train_step(rc, state, tokens, targets)
+    }
+
     /// Whether the scan-of-8 chunked dispatch is available.
     fn supports_chunked(&self, _rc: &RunConfig) -> bool {
         false

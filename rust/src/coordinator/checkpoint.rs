@@ -499,14 +499,14 @@ pub fn find_latest_valid(dir: impl AsRef<Path>) -> Result<Option<LatestCkpt>> {
         let (state, meta) = match load_tagged(&path) {
             Ok(loaded) => loaded,
             Err(e) => {
-                eprintln!("[spt] skipping corrupt checkpoint {path:?}: {e:#}");
+                crate::log_warn!("skipping corrupt checkpoint path={path:?} err={e:#}");
                 continue;
             }
         };
         let step = match state.step.scalar() {
             Ok(s) if s >= 0 => s as usize,
             _ => {
-                eprintln!("[spt] skipping checkpoint {path:?}: unreadable step counter");
+                crate::log_warn!("skipping checkpoint path={path:?} err=unreadable step counter");
                 continue;
             }
         };

@@ -60,6 +60,7 @@ use rayon::prelude::*;
 use super::backend::Backend;
 use super::state::{adamw_update, AdamW, TrainState};
 use crate::config::{presets, Mode, ModelConfig, RunConfig, Sparsity};
+use crate::obs::{time_opt, PhaseTimes, StepObs};
 use crate::runtime::HostTensor;
 use crate::sparse::attention;
 use crate::sparse::bspmv::{self, Routing};
@@ -774,6 +775,74 @@ fn ce_loss(logits: &Matrix, targets: &[i32], vocab: usize) -> Result<f32> {
     Ok(loss as f32)
 }
 
+/// Per-layer mean attention density (nnz ratio of the post-softmax
+/// top-L CSRs, averaged over heads) from a probe trace.  Empty outside
+/// spt mode.  Pure read of caches the forward materialized anyway.
+fn attn_density(trace: &ItemTrace) -> Vec<f64> {
+    trace
+        .layers
+        .iter()
+        .filter_map(|lt| lt.attn.as_ref())
+        .map(|csrs| {
+            let sum: f64 = csrs
+                .iter()
+                .map(|c| c.nnz() as f64 / (c.rows * c.cols).max(1) as f64)
+                .sum();
+            sum / csrs.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Per-layer routed-FFN expert load (tokens routed to each group) from
+/// a probe trace.  Empty outside spt mode.
+fn expert_load(trace: &ItemTrace) -> Vec<Vec<u64>> {
+    trace
+        .layers
+        .iter()
+        .filter_map(|lt| lt.routing.as_ref())
+        .map(|r| {
+            let mut loads = vec![0u64; r.g];
+            for mrow in &r.mask {
+                for (g, &on) in mrow.iter().enumerate() {
+                    if on {
+                        loads[g] += 1;
+                    }
+                }
+            }
+            loads
+        })
+        .collect()
+}
+
+/// Bytes of one item's saved activations (the backward's working set
+/// per item) — the f32 matrices, attention CSRs, and routing buffers a
+/// probe trace holds.
+fn trace_bytes(trace: &ItemTrace) -> u64 {
+    let mat = |m: &Matrix| (m.data.len() * 4) as u64;
+    let mut total = mat(&trace.x_out) + mat(&trace.xf);
+    for lt in &trace.layers {
+        total += mat(&lt.x_in)
+            + mat(&lt.a_in)
+            + mat(&lt.attn_out)
+            + mat(&lt.x_mid)
+            + mat(&lt.f_in);
+        for m in lt.q.iter().chain(&lt.k).chain(&lt.v) {
+            total += mat(m);
+        }
+        if let Some(csrs) = &lt.attn {
+            total += csrs.iter().map(|c| c.bytes() as u64).sum::<u64>();
+        }
+        if let Some(h1) = &lt.h1 {
+            total += mat(h1);
+        }
+        if let Some(r) = &lt.routing {
+            total += r.mask.iter().map(|m| m.len() as u64).sum::<u64>()
+                + r.gate.iter().map(|g| (g.len() * 4) as u64).sum::<u64>();
+        }
+    }
+    total
+}
+
 impl NativeBackend {
     fn model_config(&self, rc: &RunConfig) -> Result<Arc<ModelConfig>> {
         Ok(self.cached(rc)?.0)
@@ -879,43 +948,81 @@ impl NativeBackend {
         sparse: Option<&[MultiHeadSparseAttention]>,
         ws: &mut Workspace,
     ) -> Result<ItemTrace> {
-        let mut x = self.embed(layout, state, tok)?;
+        self.forward_model_inner(layout, w, state, tok, sparse, ws, None)
+    }
+
+    /// [`Self::forward_model`] with optional per-phase timing (the obs
+    /// probe forward).  With `pt = None` — every pre-existing caller —
+    /// each closure runs directly and no clock exists anywhere on the
+    /// path; with `Some`, [`time_opt`] reads the clock around each phase
+    /// at this sequential boundary.  Either way the closures compute the
+    /// exact expressions of the untimed forward, in the same order, so
+    /// the trace is bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_model_inner(
+        &self,
+        layout: &Layout,
+        w: &Weights,
+        state: &TrainState,
+        tok: &[i32],
+        sparse: Option<&[MultiHeadSparseAttention]>,
+        ws: &mut Workspace,
+        mut pt: Option<&mut PhaseTimes>,
+    ) -> Result<ItemTrace> {
+        let mut x = time_opt(&mut pt, "embed", || self.embed(layout, state, tok))?;
         let mut layers = Vec::with_capacity(w.layers.len());
         for (li, lw) in w.layers.iter().enumerate() {
-            let a_in = grad::layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
-            let q = split_heads(&a_in.matmul_packed(&lw.wq_p), layout.heads, layout.d_head);
-            let k = split_heads(&a_in.matmul_packed(&lw.wk_p), layout.heads, layout.d_head);
-            let v = split_heads(&a_in.matmul_packed(&lw.wv_p), layout.heads, layout.d_head);
-            let (ys, attn) = if layout.mode == Mode::Spt {
-                let layer = &sparse.context("spt mode without sparse layers")?[li];
-                let (ys, csrs) = layer.forward_cached(&q, &k, &v);
-                (ys, Some(csrs))
-            } else {
-                let ys: Vec<Matrix> = (0..layout.heads)
-                    .into_par_iter()
-                    .map_init(Workspace::default, |hws, h| {
-                        attention::dense_attention_ws(&q[h], &k[h], &v[h], true, hws)
-                    })
-                    .collect();
-                (ys, None)
-            };
-            let attn_out = concat_heads(&ys);
-            let x_mid = x.add(&attn_out.matmul_packed(&lw.wo_p));
-            let f_in = grad::layer_norm(&x_mid, &lw.ln2_scale, &lw.ln2_bias);
-            let (f, h1, routing) = if layout.mode == Mode::Spt {
-                let router = lw.router.as_ref().context("spt mode without router")?;
-                let scores = f_in.matmul_ws(router, ws);
-                let g_active = layout.sparsity.active_groups(layout.groups).min(layout.groups);
-                let routing = bspmv::route(&scores, g_active);
-                let f = mha::routed_ffn_par(&f_in, &lw.wi, &lw.wo2, &routing);
-                (f, None, Some(routing))
-            } else {
-                let wi_p = lw.wi_p.as_ref().context("dense mode without packed W_I")?;
-                let wo2_p = lw.wo2_p.as_ref().context("dense mode without packed W_O")?;
-                let h1 = f_in.matmul_packed(wi_p).relu();
-                let f = h1.matmul_packed(wo2_p);
-                (f, Some(h1), None)
-            };
+            let a_in = time_opt(&mut pt, "ln", || {
+                grad::layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias)
+            });
+            let (q, k, v, ys, attn) = time_opt(&mut pt, "mha", || -> Result<_> {
+                let q =
+                    split_heads(&a_in.matmul_packed(&lw.wq_p), layout.heads, layout.d_head);
+                let k =
+                    split_heads(&a_in.matmul_packed(&lw.wk_p), layout.heads, layout.d_head);
+                let v =
+                    split_heads(&a_in.matmul_packed(&lw.wv_p), layout.heads, layout.d_head);
+                let (ys, attn) = if layout.mode == Mode::Spt {
+                    let layer = &sparse.context("spt mode without sparse layers")?[li];
+                    let (ys, csrs) = layer.forward_cached(&q, &k, &v);
+                    (ys, Some(csrs))
+                } else {
+                    let ys: Vec<Matrix> = (0..layout.heads)
+                        .into_par_iter()
+                        .map_init(Workspace::default, |hws, h| {
+                            attention::dense_attention_ws(&q[h], &k[h], &v[h], true, hws)
+                        })
+                        .collect();
+                    (ys, None)
+                };
+                Ok((q, k, v, ys, attn))
+            })?;
+            let (attn_out, x_mid) = time_opt(&mut pt, "mha", || {
+                let attn_out = concat_heads(&ys);
+                let x_mid = x.add(&attn_out.matmul_packed(&lw.wo_p));
+                (attn_out, x_mid)
+            });
+            let f_in = time_opt(&mut pt, "ln", || {
+                grad::layer_norm(&x_mid, &lw.ln2_scale, &lw.ln2_bias)
+            });
+            let (f, h1, routing) = time_opt(&mut pt, "ffn", || -> Result<_> {
+                if layout.mode == Mode::Spt {
+                    let router = lw.router.as_ref().context("spt mode without router")?;
+                    let scores = f_in.matmul_ws(router, ws);
+                    let g_active =
+                        layout.sparsity.active_groups(layout.groups).min(layout.groups);
+                    let routing = bspmv::route(&scores, g_active);
+                    let f = mha::routed_ffn_par(&f_in, &lw.wi, &lw.wo2, &routing);
+                    Ok((f, None, Some(routing)))
+                } else {
+                    let wi_p = lw.wi_p.as_ref().context("dense mode without packed W_I")?;
+                    let wo2_p =
+                        lw.wo2_p.as_ref().context("dense mode without packed W_O")?;
+                    let h1 = f_in.matmul_packed(wi_p).relu();
+                    let f = h1.matmul_packed(wo2_p);
+                    Ok((f, Some(h1), None))
+                }
+            })?;
             let x_next = x_mid.add(&f);
             layers.push(LayerTrace {
                 x_in: x,
@@ -932,7 +1039,7 @@ impl NativeBackend {
             });
             x = x_next;
         }
-        let xf = grad::layer_norm(&x, &w.lnf_scale, &w.lnf_bias);
+        let xf = time_opt(&mut pt, "ln", || grad::layer_norm(&x, &w.lnf_scale, &w.lnf_bias));
         Ok(ItemTrace { layers, x_out: x, xf })
     }
 
@@ -1074,15 +1181,17 @@ impl NativeBackend {
     }
 
     /// Forward + backward over the whole mini-batch with the chunked
-    /// item fan-out (no optimizer update).  Returns the mean loss and
-    /// the merged gradient accumulator.
+    /// item fan-out (no optimizer update).  Returns the mean loss, the
+    /// merged gradient accumulator, and the largest per-worker GEMM
+    /// workspace high-water observed (bytes) — a pure read of buffer
+    /// capacities for the obs memory-truth channel.
     fn grad_step(
         &self,
         rc: &RunConfig,
         state: &TrainState,
         tokens: &[i32],
         targets: &[i32],
-    ) -> Result<(f32, GradAcc)> {
+    ) -> Result<(f32, GradAcc, u64)> {
         let (batch, seq) = self.check_batch(rc, tokens, Some(targets))?;
         let layout = self.layout(rc)?;
         let w = Weights::materialize(&layout, state)?;
@@ -1097,7 +1206,7 @@ impl NativeBackend {
         let w_ref = &w;
         let sparse_ref = sparse.as_deref();
         let n_chunks = batch.div_ceil(GRAD_CHUNK);
-        let per_chunk: Result<Vec<(f64, GradAcc)>> = (0..n_chunks)
+        let per_chunk: Result<Vec<(f64, GradAcc, u64)>> = (0..n_chunks)
             .into_par_iter()
             .map_init(Workspace::default, |ws, ci| {
                 let mut acc = GradAcc::new(layout_ref);
@@ -1114,18 +1223,80 @@ impl NativeBackend {
                         layout_ref, w_ref, &trace, tok, &dlogits, sparse_ref, &mut acc, ws,
                     )?;
                 }
-                Ok((lsum, acc))
+                Ok((lsum, acc, ws.bytes()))
             })
             .collect();
         // Reduce in ascending chunk order: the loss sum and every leaf
-        // gradient see one fixed operation order at any pool size.
+        // gradient see one fixed operation order at any pool size.  The
+        // workspace high-water merges by max — observability only, and
+        // never fed back into any computation.
         let mut acc = GradAcc::new(&layout);
         let mut loss_sum = 0.0f64;
-        for (lsum, chunk_acc) in per_chunk? {
+        let mut ws_peak = 0u64;
+        for (lsum, chunk_acc, wsb) in per_chunk? {
             loss_sum += lsum;
             acc.merge(&chunk_acc);
+            ws_peak = ws_peak.max(wsb);
         }
-        Ok((loss_sum as f32 * inv_count, acc))
+        Ok((loss_sum as f32 * inv_count, acc, ws_peak))
+    }
+
+    /// One AdamW update from merged mini-batch gradients (host side),
+    /// bumping the step counter.  The sequential tail of `train_step`,
+    /// shared with the obs-instrumented variant so both apply the exact
+    /// same update.
+    fn apply_adamw(&self, rc: &RunConfig, state: &mut TrainState, acc: &GradAcc) -> Result<()> {
+        // det: cast-bounded (step count, far below i32::MAX)
+        let t = state.step.scalar()? as i32 + 1;
+        state.step = HostTensor::scalar_i32(t);
+        let hyper = AdamW { lr: rc.lr as f32, ..AdamW::default() };
+        let TrainState { params, m, v, .. } = state;
+        for (ix, g) in acc.g.iter().enumerate() {
+            if let Some(g) = g {
+                adamw_update(
+                    params[ix].as_f32_mut()?,
+                    g,
+                    m[ix].as_f32_mut()?,
+                    v[ix].as_f32_mut()?,
+                    t,
+                    &hyper,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Read-only phase-timed probe forward of the batch's first item
+    /// (obs only): its own materialized weights and a fresh workspace,
+    /// no RNG draws, no state mutation — so running it cannot move any
+    /// bit of the training computation.  Fills the per-layer attention
+    /// density, expert loads, and trace-size telemetry from the caches
+    /// the forward materialized anyway.
+    fn probe_forward(
+        &self,
+        rc: &RunConfig,
+        state: &TrainState,
+        tokens: &[i32],
+        obs: &mut StepObs,
+    ) -> Result<()> {
+        let (_batch, seq) = self.check_batch(rc, tokens, None)?;
+        let layout = self.layout(rc)?;
+        let w = Weights::materialize(&layout, state)?;
+        let sparse = self.sparse_layers(&layout, &w, seq)?;
+        let mut ws = Workspace::default();
+        let trace = self.forward_model_inner(
+            &layout,
+            &w,
+            state,
+            &tokens[..seq],
+            sparse.as_deref(),
+            &mut ws,
+            Some(&mut obs.phases),
+        )?;
+        obs.attn_density = attn_density(&trace);
+        obs.expert_load = expert_load(&trace);
+        obs.trace_bytes = trace_bytes(&trace);
+        Ok(())
     }
 
     /// Forward + backward for one batch without touching the optimizer:
@@ -1141,7 +1312,7 @@ impl NativeBackend {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<(f32, Vec<Option<Vec<f32>>>)> {
-        let (loss, acc) = self.grad_step(rc, state, tokens, targets)?;
+        let (loss, acc, _ws_peak) = self.grad_step(rc, state, tokens, targets)?;
         Ok((loss, acc.g))
     }
 
@@ -1216,25 +1387,29 @@ impl Backend for NativeBackend {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<f32> {
-        let (loss, acc) = self.grad_step(rc, state, tokens, targets)?;
-        // AdamW update, host side.
-        // det: cast-bounded (step count, far below i32::MAX)
-        let t = state.step.scalar()? as i32 + 1;
-        state.step = HostTensor::scalar_i32(t);
-        let hyper = AdamW { lr: rc.lr as f32, ..AdamW::default() };
-        let TrainState { params, m, v, .. } = state;
-        for (ix, g) in acc.g.iter().enumerate() {
-            if let Some(g) = g {
-                adamw_update(
-                    params[ix].as_f32_mut()?,
-                    g,
-                    m[ix].as_f32_mut()?,
-                    v[ix].as_f32_mut()?,
-                    t,
-                    &hyper,
-                );
-            }
-        }
+        let (loss, acc, _ws_peak) = self.grad_step(rc, state, tokens, targets)?;
+        self.apply_adamw(rc, state, &acc)?;
+        Ok(loss)
+    }
+
+    fn train_step_obs(
+        &self,
+        rc: &RunConfig,
+        state: &mut TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+        obs: &mut StepObs,
+    ) -> Result<f32> {
+        // Probe first (read-only), then the exact train_step sequence —
+        // grad_step and apply_adamw — with the clock read around each at
+        // this sequential boundary.  Same calls, same order, same bits;
+        // `tests/obs_parity.rs` holds this against plain `train_step`.
+        self.probe_forward(rc, state, tokens, obs)?;
+        let (loss, acc, ws_peak) = obs
+            .phases
+            .time("fwd_bwd", || self.grad_step(rc, state, tokens, targets))?;
+        obs.ws_bytes = ws_peak;
+        obs.phases.time("optimizer", || self.apply_adamw(rc, state, &acc))?;
         Ok(loss)
     }
 

@@ -31,8 +31,12 @@ use super::checkpoint::{self, CkptMeta};
 use super::state::TrainState;
 use crate::config::{presets, Mode, RunConfig};
 use crate::data::{Batcher, QaTaskGen, SyntheticCorpus};
+use crate::memmodel;
 use crate::metrics::Counters;
+use crate::obs::{ObsLog, StepObs};
+use crate::runtime::HostTensor;
 use crate::util::fault::{self, FaultPlan};
+use crate::util::json::Json;
 
 /// Trainer options beyond the run config.
 #[derive(Debug, Clone)]
@@ -121,11 +125,21 @@ pub struct Trainer<'b, B: Backend> {
     pub counters: Counters,
     /// Final state of the last `train`/`train_qa` call (checkpointing).
     pub last_state: Option<TrainState>,
+    /// Structured obs JSONL sink (`--obs-log`); disabled by default, and
+    /// write-only either way — nothing the trainer computes reads it.
+    pub obs: ObsLog,
 }
 
 impl<'b, B: Backend> Trainer<'b, B> {
     pub fn new(backend: &'b B, rc: RunConfig, opts: TrainerOptions) -> Self {
-        Trainer { backend, rc, opts, counters: Counters::new(), last_state: None }
+        Trainer {
+            backend,
+            rc,
+            opts,
+            counters: Counters::new(),
+            last_state: None,
+            obs: ObsLog::disabled(),
+        }
     }
 
     pub fn run_config(&self) -> &RunConfig {
@@ -186,6 +200,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
         let mut losses = Vec::with_capacity(stop_at.saturating_sub(start));
         let mut evals = Vec::new();
         let mut refreshes = 0usize;
+        let mut ws_peak = 0u64;
         let t0 = Instant::now(); // det: wall-clock (metrics)
         let mut step_i = start;
         while step_i < stop_at {
@@ -205,9 +220,19 @@ impl<'b, B: Backend> Trainer<'b, B> {
             } else {
                 // ---- per-step dispatch ----
                 let b = batcher.next();
-                let loss = self
-                    .backend
-                    .train_step(&self.rc, &mut state, &b.tokens, &b.targets)?;
+                let loss = if self.obs.enabled() {
+                    let ts = Instant::now(); // det: wall-clock (obs step timing)
+                    let mut sobs = StepObs::default();
+                    let loss = self.backend.train_step_obs(
+                        &self.rc, &mut state, &b.tokens, &b.targets, &mut sobs,
+                    )?;
+                    ws_peak = ws_peak.max(sobs.ws_bytes);
+                    self.log_step(step_i + 1, loss, ts.elapsed().as_secs_f64(), &sobs)?;
+                    loss
+                } else {
+                    self.backend
+                        .train_step(&self.rc, &mut state, &b.tokens, &b.targets)?
+                };
                 losses.push(loss);
                 step_i += 1;
             }
@@ -217,11 +242,24 @@ impl<'b, B: Backend> Trainer<'b, B> {
             // DKM codebook refresh (paper §5.1), spt only.
             if self.refresh_due(step_i) {
                 let b = batcher.next();
+                // Pre-refresh params are cloned for the drift metric
+                // only when obs is on — a pure read either way.
+                let before = self.obs.enabled().then(|| state.params.clone());
                 if self
                     .backend
                     .refresh_codebooks(&self.rc, &mut state, &b.tokens)?
                 {
                     refreshes += 1;
+                    if let Some(before) = &before {
+                        let drift = param_drift(before, &state.params)?;
+                        self.obs.event(
+                            "refresh",
+                            vec![
+                                ("step", Json::Num(step_i as f64)),
+                                ("codebook_drift", Json::Num(drift)),
+                            ],
+                        )?;
+                    }
                 }
             }
 
@@ -241,6 +279,14 @@ impl<'b, B: Backend> Trainer<'b, B> {
                     ppl: eval_loss.exp(),
                     elapsed_secs: t0.elapsed().as_secs_f64(),
                 });
+                self.obs.event(
+                    "eval",
+                    vec![
+                        ("step", Json::Num(step_i as f64)),
+                        ("loss", Json::Num(eval_loss as f64)),
+                        ("ppl", Json::Num(eval_loss.exp() as f64)),
+                    ],
+                )?;
             }
 
             // Periodic crash-safe checkpoint (after refresh/eval, so a
@@ -252,6 +298,25 @@ impl<'b, B: Backend> Trainer<'b, B> {
             }
         }
         let total = t0.elapsed().as_secs_f64();
+        // Memory-truth join: the observed GEMM-workspace high-water
+        // against memmodel's analytic per-item transient prediction —
+        // the analytic model validated against a live run.
+        if self.obs.enabled() && ws_peak > 0 {
+            let cfg = presets::model(&self.rc.model)?;
+            let wl = memmodel::BlockWorkload { batch: 1, seq };
+            let predicted =
+                memmodel::block_peak(&cfg.block, self.rc.mode, &wl).transient_bytes();
+            self.obs.event(
+                "memory",
+                vec![
+                    ("channel", Json::Str("train_workspace".to_string())),
+                    ("observed_bytes", Json::Num(ws_peak as f64)),
+                    ("predicted_bytes", Json::Num(predicted as f64)),
+                    ("model_err", Json::Num(crate::obs::model_err(ws_peak, predicted))),
+                ],
+            )?;
+        }
+        self.obs.flush()?;
         let report = TrainReport {
             model: self.rc.model.clone(),
             mode: self.rc.mode,
@@ -265,6 +330,38 @@ impl<'b, B: Backend> Trainer<'b, B> {
         };
         self.last_state = Some(state);
         Ok(report)
+    }
+
+    /// Emit one obs `step` event (no-op when the sink is disabled).
+    fn log_step(&mut self, step: usize, loss: f32, step_s: f64, sobs: &StepObs) -> Result<()> {
+        self.obs.event(
+            "step",
+            vec![
+                ("step", Json::Num(step as f64)),
+                ("loss", Json::Num(loss as f64)),
+                ("step_s", Json::Num(step_s)),
+                ("phases", sobs.phases.to_json()),
+                (
+                    "attn_density",
+                    Json::Arr(sobs.attn_density.iter().map(|&d| Json::Num(d)).collect()),
+                ),
+                (
+                    "expert_load",
+                    Json::Arr(
+                        sobs.expert_load
+                            .iter()
+                            .map(|loads| {
+                                Json::Arr(
+                                    loads.iter().map(|&n| Json::Num(n as f64)).collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("ws_bytes", Json::Num(sobs.ws_bytes as f64)),
+                ("trace_bytes", Json::Num(sobs.trace_bytes as f64)),
+            ],
+        )
     }
 
     /// Identity stamped into checkpoints this trainer writes.
@@ -297,7 +394,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
             Ok(()) => Ok(()),
             Err(e) if fault::is_crash(&e) => Err(e),
             Err(e) => {
-                eprintln!("[spt] warning: periodic checkpoint failed, continuing: {e:#}");
+                crate::log_warn!("periodic checkpoint failed, continuing err={e:#}");
                 Ok(())
             }
         }
@@ -434,4 +531,22 @@ impl<'b, B: Backend> Trainer<'b, B> {
         self.last_state = Some(state);
         Ok(report)
     }
+}
+
+/// Mean absolute per-element movement across the leaves a refresh
+/// changed (the PQ codebook drift metric): total |after - before| over
+/// the number of changed elements, 0.0 when nothing moved.
+fn param_drift(before: &[HostTensor], after: &[HostTensor]) -> Result<f64> {
+    let mut total = 0.0f64;
+    let mut changed = 0u64;
+    for (b, a) in before.iter().zip(after) {
+        let (b, a) = (b.as_f32()?, a.as_f32()?);
+        for (&x, &y) in b.iter().zip(a) {
+            if x.to_bits() != y.to_bits() {
+                total += (y as f64 - x as f64).abs();
+                changed += 1;
+            }
+        }
+    }
+    Ok(if changed == 0 { 0.0 } else { total / changed as f64 })
 }

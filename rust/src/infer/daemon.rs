@@ -7,6 +7,8 @@
 //! Requests:
 //! - `{"op":"submit","id":N,"prompt":[t,...],"max_new_tokens":M}`
 //! - `{"op":"status"}`
+//! - `{"op":"metrics"}` — Prometheus-text snapshot of pool/queue/latency
+//!   telemetry (pure read of already-tracked values).
 //! - `{"op":"drain"}` — stop admitting, finish in-flight work, emit the
 //!   final `{"event":"report",...}` and exit.
 //!
@@ -14,9 +16,11 @@
 //! - `{"event":"accepted","id":N,"cost_bytes":C,"queued":Q}`
 //! - `{"event":"rejected","id":N,"code":"queue_full|mem_budget|invalid|draining","reason":..}`
 //! - `{"event":"done","id":N,"tokens":[..],"latency_s":..,"queue_wait_s":..[,"error":..]}`
+//! - `{"event":"metrics","content_type":"text/plain; version=0.0.4","text":..}`
 //! - `{"event":"status",...}` / `{"event":"report",...}` /
 //!   `{"event":"error","reason":..}` (malformed input degrades that
-//!   line, never the daemon).
+//!   line, never the daemon).  `status` and `report` carry the run's
+//!   build/host provenance (git sha, rayon threads, CPU model).
 //!
 //! ## Admission control
 //!
@@ -50,8 +54,10 @@ use super::serve::{Completion, Request, ServeConfig, ServeDriver, ServeReport};
 use super::session::InferModel;
 use crate::config::{presets, Mode};
 use crate::memmodel;
+use crate::metrics::{Counters, Gauge, Histogram};
 use crate::util::fault::{self, FaultPlan};
 use crate::util::json::Json;
+use crate::util::provenance;
 use crate::util::retry::{retry, Backoff};
 
 /// Daemon knobs on top of the driver's [`ServeConfig`].
@@ -117,6 +123,10 @@ pub struct Daemon<'m> {
     /// the final report.
     done: Vec<Completion>,
     draining: bool,
+    /// Build/host provenance, probed once at construction (the git
+    /// subprocess must not run per status line) and stamped into
+    /// `status` and `report` events.
+    provenance: Json,
 }
 
 impl<'m> Daemon<'m> {
@@ -152,6 +162,7 @@ impl<'m> Daemon<'m> {
             pending: VecDeque::new(),
             done: Vec::new(),
             draining: false,
+            provenance: provenance::provenance(),
         })
     }
 
@@ -175,6 +186,18 @@ impl<'m> Daemon<'m> {
         self.driver.pool_pages_in_use() as u64 * self.page_bytes
     }
 
+    /// Actual bytes one pool page occupies in the driver's KV storage —
+    /// the observed side of the obs memory-truth join.
+    pub fn observed_page_bytes(&self) -> u64 {
+        self.driver.page_bytes() as u64
+    }
+
+    /// Analytic page size ([`memmodel::decode_page_bytes`]) the budget
+    /// was planned with — the predicted side of that join.
+    pub fn planned_page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
     /// Handle one protocol line; returns the events it produced.
     /// Malformed input yields an `error` event — the daemon never dies
     /// on bad bytes.
@@ -190,6 +213,7 @@ impl<'m> Daemon<'m> {
         match v.get("op").as_str() {
             Some("submit") => self.op_submit(&v),
             Some("status") => vec![self.status_event()],
+            Some("metrics") => vec![self.metrics_event()],
             Some("drain") => {
                 self.begin_drain();
                 vec![self.status_event()]
@@ -214,6 +238,50 @@ impl<'m> Daemon<'m> {
                 ),
                 ("decode_steps", Json::Num(self.driver.decode_steps() as f64)),
                 ("draining", Json::Bool(self.draining)),
+                ("provenance", self.provenance.clone()),
+            ],
+        )
+    }
+
+    /// The `metrics` op: a Prometheus text-format snapshot of the
+    /// daemon's queue, the driver's page pool, and completion latency.
+    /// Every value is already tracked for scheduling or the final
+    /// report — the snapshot reads no clocks and mutates nothing, so
+    /// interleaving `metrics` lines cannot change any token stream.
+    fn metrics_event(&self) -> Json {
+        let mut counters = Counters::new();
+        counters.add("spt_decode_steps_total", self.driver.decode_steps() as u64);
+        counters.add("spt_completions_total", self.done.len() as u64);
+        counters.add(
+            "spt_failures_total",
+            self.done.iter().filter(|c| c.error.is_some()).count() as u64,
+        );
+        let gauges = [
+            Gauge::new("spt_pending_requests", self.pending.len() as f64),
+            Gauge::new("spt_driver_queued_requests", self.driver.queued() as f64),
+            Gauge::new("spt_in_flight_requests", self.driver.in_flight() as f64),
+            Gauge::new("spt_pool_pages", self.driver.pool_pages() as f64),
+            Gauge::new("spt_pool_pages_in_use", self.driver.pool_pages_in_use() as f64),
+            Gauge::new("spt_pool_free_pages", self.driver.pool_free_pages() as f64),
+            Gauge::new("spt_page_bytes", self.driver.page_bytes() as f64),
+            Gauge::new("spt_committed_bytes", self.committed_bytes() as f64),
+        ];
+        let mut latency =
+            Histogram::new("spt_request_latency_seconds", &[0.001, 0.01, 0.1, 1.0, 10.0]);
+        for c in &self.done {
+            latency.observe(c.latency_secs);
+        }
+        event(
+            "metrics",
+            vec![
+                (
+                    "content_type",
+                    Json::Str("text/plain; version=0.0.4".to_string()),
+                ),
+                (
+                    "text",
+                    Json::Str(crate::obs::prometheus_text(&counters, &gauges, &[latency])),
+                ),
             ],
         )
     }
@@ -407,6 +475,7 @@ impl<'m> Daemon<'m> {
         let report_event = match report.to_json() {
             Json::Obj(mut m) => {
                 m.insert("event".to_string(), Json::Str("report".to_string()));
+                m.insert("provenance".to_string(), self.provenance.clone());
                 Json::Obj(m)
             }
             other => other,
@@ -501,8 +570,8 @@ impl<'m> Daemon<'m> {
     pub fn serve_tcp(&mut self, addr: &str) -> Result<ServeReport> {
         let listener = std::net::TcpListener::bind(addr)
             .with_context(|| format!("binding daemon listener on {addr}"))?;
-        eprintln!(
-            "[spt] daemon listening on {}",
+        crate::log_info!(
+            "daemon listening addr={}",
             listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.to_string())
         );
         loop {
@@ -512,7 +581,7 @@ impl<'m> Daemon<'m> {
                     return Err(std::io::Error::other("injected accept failure").into());
                 }
                 let (stream, peer) = listener.accept().context("accept")?;
-                eprintln!("[spt] connection from {peer}");
+                crate::log_info!("connection accepted peer={peer}");
                 Ok(stream)
             })?;
             let reader = stream.try_clone().context("cloning daemon connection")?;
@@ -732,5 +801,56 @@ mod tests {
         let report_ev = events.last().unwrap();
         assert_eq!(report_ev.get("completed").as_usize(), Some(2));
         assert_eq!(report_ev.get("failed").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn metrics_op_renders_prometheus_snapshot() {
+        let m = model();
+        let mut d = Daemon::new(&m, DaemonConfig::default()).unwrap();
+        d.handle_line(&submit_line(1, &[1, 2, 3], 2));
+        while d.has_work() {
+            d.pump().unwrap();
+        }
+        let ev = d.handle_line(r#"{"op":"metrics"}"#);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(kind(&ev[0]), "metrics");
+        assert_eq!(
+            ev[0].get("content_type").as_str(),
+            Some("text/plain; version=0.0.4")
+        );
+        let text = ev[0].get("text").as_str().unwrap();
+        assert!(text.contains("# TYPE spt_completions_total counter"), "{text}");
+        assert!(text.contains("spt_completions_total 1"), "{text}");
+        assert!(text.contains("# TYPE spt_pool_pages gauge"), "{text}");
+        assert!(text.contains("spt_failures_total 0"), "{text}");
+        assert!(
+            text.contains("# TYPE spt_request_latency_seconds histogram"),
+            "{text}"
+        );
+        assert!(text.contains("spt_request_latency_seconds_count 1"), "{text}");
+        assert!(
+            text.contains("spt_request_latency_seconds_bucket{le=\"+Inf\"} 1"),
+            "{text}"
+        );
+        // The snapshot is a pure read: asking again changes nothing but
+        // the text it reports, and the daemon still serves.
+        let again = d.handle_line(r#"{"op":"metrics"}"#);
+        assert_eq!(again[0].get("text"), ev[0].get("text"));
+        assert_eq!(kind(&d.handle_line(&submit_line(2, &[1, 2], 2))[0]), "accepted");
+    }
+
+    #[test]
+    fn status_and_report_carry_provenance() {
+        let m = model();
+        let mut d = Daemon::new(&m, DaemonConfig::default()).unwrap();
+        let status = &d.handle_line(r#"{"op":"status"}"#)[0];
+        let prov = status.get("provenance");
+        assert!(!prov.get("git_sha").as_str().unwrap_or("").is_empty());
+        assert!(!prov.get("cpu_model").as_str().unwrap_or("").is_empty());
+        assert!(prov.get("rayon_threads").as_usize().unwrap() >= 1);
+        let (events, _) = d.finish().unwrap();
+        let report_ev = events.last().unwrap();
+        assert_eq!(kind(report_ev), "report");
+        assert_eq!(report_ev.get("provenance"), prov, "same probe, stamped once");
     }
 }

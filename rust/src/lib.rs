@@ -47,6 +47,7 @@ pub mod data;
 pub mod infer;
 pub mod memmodel;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sparse;
 pub mod util;

@@ -10,6 +10,8 @@
 //!   blocks      per-block throughput/memory across configs (Fig. 8)
 //!   memplan     memory model: max-length search + seq sweeps (Table 3/Fig. 9)
 //!               (--decode adds the KV/code-cache serving tables)
+//!   obs-report  render an `--obs-log` JSONL into phase/sparsity/memory tables
+//!   version     print build/host provenance (git sha, threads, CPU)
 //!   goldens     numeric round-trip validation vs python outputs
 //!   artifacts   list the AOT manifest
 //!
@@ -32,6 +34,7 @@ use spt::infer::{
     Daemon, DaemonConfig, InferModel, Request, Sampler, ServeConfig, ServeDriver, Session,
 };
 use spt::infer::serve::ServeReport;
+use spt::obs::ObsLog;
 use spt::util::fault::FaultPlan;
 use spt::util::json::Json;
 use spt::util::lock::PidLock;
@@ -47,11 +50,14 @@ use spt::runtime::Engine;
 use spt::util::fmt_bytes;
 use spt::util::fmt_duration;
 
-/// Minimal `--key value` / `--flag` argument parser.
+/// Minimal `--key value` / `--flag` argument parser.  Positionals are
+/// collected for the commands that take one (`obs-report <run.jsonl>`);
+/// every other command rejects them in [`run`].
 struct Args {
     cmd: String,
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
+    pos: Vec<String>,
 }
 
 impl Args {
@@ -59,11 +65,14 @@ impl Args {
         let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
         let mut kv = BTreeMap::new();
         let mut flags = Vec::new();
+        let mut pos = Vec::new();
         let mut i = 1;
         while i < argv.len() {
             let a = &argv[i];
             let Some(key) = a.strip_prefix("--") else {
-                bail!("unexpected positional argument '{a}'");
+                pos.push(a.clone());
+                i += 1;
+                continue;
             };
             if let Some((k, v)) = key.split_once('=') {
                 kv.insert(k.to_string(), v.to_string());
@@ -75,7 +84,7 @@ impl Args {
             }
             i += 1;
         }
-        Ok(Args { cmd, kv, flags })
+        Ok(Args { cmd, kv, flags, pos })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -146,6 +155,11 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    if args.cmd != "obs-report" {
+        if let Some(p) = args.pos.first() {
+            bail!("unexpected positional argument '{p}'");
+        }
+    }
     match args.cmd.as_str() {
         "train" => dispatch_train(&args, false),
         "train-qa" => dispatch_train(&args, true),
@@ -153,6 +167,8 @@ fn run(argv: &[String]) -> Result<()> {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "obs-report" => cmd_obs_report(&args),
+        "version" | "--version" | "-V" => cmd_version(),
         #[cfg(feature = "xla")]
         "profile" => cmd_profile(&args),
         #[cfg(feature = "xla")]
@@ -194,6 +210,9 @@ COMMANDS
   blocks      throughput + peak memory per Table-2 block (Fig. 8)
   memplan     analytic memory: max-seq search (Table 3), seq sweep (Fig. 9);
               --decode adds KV/code-cache + per-step serving tables
+  obs-report  render an --obs-log JSONL into phase-breakdown, sparsity,
+              and memory-truth tables; writes BENCH_obs_native.json
+  version     print build/host provenance (git sha, rayon threads, CPU)
   goldens     validate artifacts against python-computed goldens
   artifacts   list the AOT manifest
 
@@ -216,7 +235,14 @@ COMMON FLAGS
   --auto_resume         resume from the newest valid checkpoint in
                         --ckpt_dir, skipping corrupt files (train; place
                         boolean flags last or use --flag=)
+  --obs-log PATH        write a structured observability JSONL (train,
+                        generate, serve): per-step phase timings,
+                        attention density, expert load, memory truth.
+                        Telemetry only reads values already computed, so
+                        results are bit-identical with it on or off
   --artifacts_dir DIR   (pjrt backend; default: artifacts)
+  SPT_LOG               env: stderr log level (error|warn|info|debug;
+                        default info)
 
 GENERATE / SERVE-BENCH FLAGS
   --tokens N            new tokens per sequence (default 32)
@@ -295,7 +321,7 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
     let ckpt_every = args.usize_or("ckpt_every", 0)?;
     let fault = FaultPlan::from_env()?.map(std::sync::Arc::new);
     if fault.is_some() {
-        eprintln!("[spt] fault plan active (SPT_FAULT_PLAN)");
+        spt::log_info!("fault plan active (SPT_FAULT_PLAN)");
     }
     let opts = TrainerOptions {
         chunked: args.has("chunked"),
@@ -327,6 +353,10 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
     }
     let save_ckpt = args.get("save_ckpt").map(str::to_string);
     let mut trainer = Trainer::new(backend, rc, opts);
+    if let Some(path) = args.get("obs-log") {
+        trainer.obs = ObsLog::create(path, if qa { "train-qa" } else { "train" })?;
+        spt::log_info!("obs log path={path}");
+    }
     let report = if qa {
         trainer.train_qa()?
     } else if let Some(path) = resume {
@@ -335,10 +365,7 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
             let rc = trainer.run_config();
             meta.verify(&rc.model, rc.mode)?;
         }
-        println!(
-            "[spt] resumed from {path} at step {}",
-            state.step.scalar()? as usize
-        );
+        spt::log_info!("resumed path={path} step={}", state.step.scalar()? as usize);
         trainer.train_from(state)?
     } else if auto_resume {
         let dir = ckpt_dir.clone().unwrap_or_default();
@@ -349,16 +376,16 @@ fn cmd_train<B: Backend>(backend: &B, args: &Args, qa: bool) -> Result<()> {
                     let rc = trainer.run_config();
                     meta.verify(&rc.model, rc.mode)?;
                 }
-                println!(
-                    "[spt] auto-resume: {} at step {}",
+                spt::log_info!(
+                    "auto-resume path={} step={}",
                     latest.path.display(),
                     latest.step
                 );
                 trainer.train_from(latest.state)?
             }
             None => {
-                println!(
-                    "[spt] auto-resume: no valid checkpoint under {}, starting fresh",
+                spt::log_info!(
+                    "auto-resume: no valid checkpoint under {}, starting fresh",
                     dir.display()
                 );
                 trainer.train()?
@@ -437,8 +464,8 @@ fn infer_model(args: &Args, rc: &RunConfig) -> Result<InferModel> {
     match args.get("resume") {
         Some(path) => {
             let m = InferModel::from_checkpoint(rc, path)?;
-            println!(
-                "[spt] loaded checkpoint {path} (model={} mode={} layers={})",
+            spt::log_info!(
+                "loaded checkpoint path={path} model={} mode={} layers={}",
                 rc.model,
                 rc.mode.as_str(),
                 m.n_layers()
@@ -446,7 +473,7 @@ fn infer_model(args: &Args, rc: &RunConfig) -> Result<InferModel> {
             Ok(m)
         }
         None => {
-            println!("[spt] no --resume: decoding from a fresh (untrained) init");
+            spt::log_info!("no --resume: decoding from a fresh (untrained) init");
             let backend = NativeBackend::new();
             let state = backend.init_state(rc)?;
             InferModel::new(rc, state)
@@ -485,7 +512,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let budget = model.max_seq() - prompt.len();
     let n = tokens.min(budget);
     if n < tokens {
-        println!("[spt] clamping --tokens {tokens} -> {n} (max_seq {})", model.max_seq());
+        spt::log_warn!("clamping --tokens {tokens} -> {n} (max_seq {})", model.max_seq());
     }
     let target = prompt.len() + n;
     let mut sess = Session::new(&model, &prompt, target)?;
@@ -502,6 +529,35 @@ fn cmd_generate(args: &Args) -> Result<()> {
     );
     println!("[spt] prompt:  {prompt:?}");
     println!("[spt] output:  {out:?}");
+    if let Some(path) = args.get("obs-log") {
+        let mut olog = ObsLog::create(path, "generate")?;
+        olog.event(
+            "gen",
+            vec![
+                ("prompt_len", Json::Num(prompt.len() as f64)),
+                ("new_tokens", Json::Num(out.len() as f64)),
+                ("secs", Json::Num(secs)),
+                ("tok_s", Json::Num(out.len() as f64 / secs.max(1e-9))),
+            ],
+        )?;
+        // Memory truth: the session's live KV/code cache vs memmodel's
+        // analytic prediction at the final sequence length.
+        let mc = presets::model(&rc.model)?;
+        let observed = sess.cache_bytes() as u64;
+        let predicted =
+            memmodel::decode_cache_bytes(&mc.block, rc.mode, target, model.n_layers().max(1));
+        olog.event(
+            "memory",
+            vec![
+                ("channel", Json::Str("decode_cache".into())),
+                ("observed_bytes", Json::Num(observed as f64)),
+                ("predicted_bytes", Json::Num(predicted as f64)),
+                ("model_err", Json::Num(spt::obs::model_err(observed, predicted))),
+            ],
+        )?;
+        olog.flush()?;
+        spt::log_info!("obs log path={path}");
+    }
     Ok(())
 }
 
@@ -533,13 +589,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sampler = Sampler::from_flags(temperature, top_k)?;
     let fault = FaultPlan::from_env()?.map(std::sync::Arc::new);
     if fault.is_some() {
-        eprintln!("[spt] fault plan active (SPT_FAULT_PLAN)");
+        spt::log_info!("fault plan active (SPT_FAULT_PLAN)");
     }
     let model = match args.get("resume") {
         Some(path) => {
             let m = InferModel::from_checkpoint(&rc, path)?;
-            eprintln!(
-                "[spt] loaded checkpoint {path} (model={} mode={} layers={})",
+            spt::log_info!(
+                "loaded checkpoint path={path} model={} mode={} layers={}",
                 rc.model,
                 rc.mode.as_str(),
                 m.n_layers()
@@ -547,7 +603,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m
         }
         None => {
-            eprintln!("[spt] no --resume: serving from a fresh (untrained) init");
+            spt::log_info!("no --resume: serving from a fresh (untrained) init");
             let backend = NativeBackend::new();
             let state = backend.init_state(&rc)?;
             InferModel::new(&rc, state)?
@@ -558,7 +614,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => std::path::Path::new(&rc.out_dir).join("spt-serve.pid"),
     };
     let lock = PidLock::acquire(&pid_path)?;
-    eprintln!("[spt] pid file {:?}", lock.path());
+    spt::log_info!("pid file path={:?}", lock.path());
     let cfg = DaemonConfig {
         serve: ServeConfig {
             max_batch,
@@ -583,13 +639,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let addr = args.get_or("addr", "127.0.0.1:7199");
         daemon.serve_tcp(&addr)?
     };
-    eprintln!(
-        "[spt] drained: {} completions ({} failed), {} decode steps, peak in-flight {}",
+    spt::log_info!(
+        "drained completions={} failed={} decode_steps={} peak_in_flight={}",
         report.completions.len(),
         report.failed,
         report.decode_steps,
         report.peak_in_flight
     );
+    if let Some(path) = args.get("obs-log") {
+        let mut olog = ObsLog::create(path, "serve")?;
+        if let Json::Obj(m) = report.to_json() {
+            let fields: Vec<(&str, Json)> =
+                m.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+            olog.event("serve_report", fields)?;
+        }
+        // Memory truth: peak pool pages at the pool's actual per-page
+        // allocation vs the analytic page size the budget was planned
+        // with ([`memmodel::decode_page_bytes`]).
+        let observed = report.peak_pages_in_use as u64 * daemon.observed_page_bytes();
+        let predicted = report.peak_pages_in_use as u64 * daemon.planned_page_bytes();
+        olog.event(
+            "memory",
+            vec![
+                ("channel", Json::Str("serve_kv_pool".into())),
+                ("observed_bytes", Json::Num(observed as f64)),
+                ("predicted_bytes", Json::Num(predicted as f64)),
+                ("model_err", Json::Num(spt::obs::model_err(observed, predicted))),
+            ],
+        )?;
+        olog.flush()?;
+        spt::log_info!("obs log path={path}");
+    }
     Ok(())
 }
 
@@ -777,6 +857,42 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let path = dir.join("BENCH_decode_native.json");
     std::fs::write(&path, format!("{}\n", Json::Obj(top)))?;
     println!("[spt] continuous batching speedup: {speedup:.2}x -> {}", path.display());
+    Ok(())
+}
+
+/// `spt obs-report <run.jsonl>` — render an `--obs-log` capture as the
+/// phase/sparsity/memory tables and emit the benchdiff artifact.
+fn cmd_obs_report(args: &Args) -> Result<()> {
+    let path = args
+        .pos
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("log"))
+        .context("usage: spt obs-report <run.jsonl>")?;
+    if let Some(extra) = args.pos.get(1) {
+        bail!("unexpected extra argument '{extra}' (one log per report)");
+    }
+    let summary = spt::obs::report::summarize(path)?;
+    print!("{}", spt::obs::report::render(&summary));
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir).ok();
+    let out = dir.join("BENCH_obs_native.json");
+    std::fs::write(&out, format!("{}\n", spt::obs::report::bench_json(&summary)))?;
+    println!("[spt] obs bench -> {}", out.display());
+    Ok(())
+}
+
+/// `spt version` — the provenance stamp as one line (what `status` and
+/// BENCH artifacts carry).
+fn cmd_version() -> Result<()> {
+    let p = spt::util::provenance::provenance();
+    println!(
+        "spt {} git_sha={} rayon_threads={} cpu={}",
+        env!("CARGO_PKG_VERSION"),
+        p.get("git_sha").as_str().unwrap_or("unknown"),
+        p.get("rayon_threads").as_usize().unwrap_or(0),
+        p.get("cpu_model").as_str().unwrap_or("unknown"),
+    );
     Ok(())
 }
 

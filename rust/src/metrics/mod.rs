@@ -1,6 +1,7 @@
-//! Metrics: wall-clock timers with robust statistics, counters, and the
-//! table renderer used by every bench target (no `criterion` offline —
-//! this module is the measurement harness).
+//! Metrics: wall-clock timers with robust statistics, counters, gauges,
+//! fixed-bucket histograms, and the table renderer used by every bench
+//! target (no `criterion` offline — this module is the measurement
+//! harness and the value-telemetry substrate of [`crate::obs`]).
 
 pub mod table;
 pub mod timer;
@@ -32,6 +33,101 @@ impl Counters {
     }
 }
 
+/// A single instantaneous value (pool occupancy, imbalance ratio, …).
+#[derive(Debug, Clone)]
+pub struct Gauge {
+    pub name: String,
+    pub value: f64,
+}
+
+impl Gauge {
+    pub fn new(name: &str, value: f64) -> Self {
+        Gauge { name: name.to_string(), value }
+    }
+}
+
+/// Fixed-bucket histogram with deterministic bucketing: the bucket
+/// boundaries are chosen at construction (ascending upper edges, with
+/// an implicit `+Inf` overflow bucket), so two runs observing the same
+/// values in any order produce bit-identical counts.  Observation is
+/// pure integer bookkeeping — no clocks, no allocation after
+/// construction — which is what lets the observability layer aggregate
+/// value telemetry without perturbing anything.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub name: String,
+    /// Ascending upper bucket edges; a value `v` lands in the first
+    /// bucket with `v <= edge`, or the overflow bucket past the last.
+    bounds: Vec<f64>,
+    /// Per-bucket counts, `bounds.len() + 1` long (last = `+Inf`).
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// `bounds` must be finite and strictly ascending.
+    pub fn new(name: &str, bounds: &[f64]) -> Self {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        assert!(bounds.iter().all(|b| b.is_finite()), "histogram bounds must be finite");
+        Histogram {
+            name: name.to_string(),
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let ix = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[ix] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Cumulative counts per bucket (Prometheus `le` semantics): entry
+    /// `i` counts observations `<= bounds[i]`; the final entry (`+Inf`)
+    /// equals `count()`.
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0;
+        self.counts
+            .iter()
+            .map(|&c| {
+                acc += c;
+                acc
+            })
+            .collect()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -46,5 +142,53 @@ mod tests {
         assert_eq!(c.get("tokens"), 512);
         assert_eq!(c.get("missing"), 0);
         assert_eq!(c.iter().count(), 2);
+    }
+
+    #[test]
+    fn histogram_bucketing_is_deterministic_and_order_free() {
+        let values = [0.05, 0.1, 0.11, 0.49, 0.5, 0.51, 2.0, -1.0];
+        let mut a = Histogram::new("h", &[0.1, 0.5, 1.0]);
+        for v in values {
+            a.observe(v);
+        }
+        // Same values, reversed order: identical buckets.
+        let mut b = Histogram::new("h", &[0.1, 0.5, 1.0]);
+        for v in values.iter().rev() {
+            b.observe(*v);
+        }
+        assert_eq!(a.counts(), b.counts());
+        // `le` semantics: boundary values land in their own bucket.
+        assert_eq!(a.counts(), &[3, 3, 1, 1]);
+        assert_eq!(a.cumulative(), vec![3, 6, 7, 8]);
+        assert_eq!(a.count(), 8);
+        assert_eq!(*a.cumulative().last().unwrap(), a.count());
+        let expected_sum: f64 = values.iter().sum();
+        assert!((a.sum() - expected_sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_empty_and_mean() {
+        let h = Histogram::new("h", &[1.0]);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.cumulative(), vec![0, 0]);
+        let mut h = Histogram::new("h", &[1.0]);
+        h.observe(0.5);
+        h.observe(1.5);
+        assert_eq!(h.mean(), 1.0);
+        assert_eq!(h.counts(), &[1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn histogram_rejects_unsorted_bounds() {
+        Histogram::new("h", &[1.0, 0.5]);
+    }
+
+    #[test]
+    fn gauge_holds_value() {
+        let g = Gauge::new("occupancy", 0.75);
+        assert_eq!(g.name, "occupancy");
+        assert_eq!(g.value, 0.75);
     }
 }

@@ -1,0 +1,368 @@
+//! Zero-perturbation observability: structured tracing, phase timing,
+//! deterministic value telemetry, and metric rendering.
+//!
+//! ## The invariant
+//!
+//! A run with observability fully enabled produces **bit-identical**
+//! losses, parameters, optimizer moments, and served token streams to
+//! the same run with it disabled.  The design holds that structurally:
+//!
+//! * **Clocks only at sequential boundaries.**  Every wall-clock read
+//!   lives in this module ([`PhaseTimes`]), which kernel code drives
+//!   through closures at sequential control-path boundaries (the probe
+//!   forward, the grad-step join, the optimizer loop).  `obs` is not a
+//!   detlint kernel dir, so the clock ban on `sparse/`, `infer/`, and
+//!   `coordinator/` still holds lexically at every call site — and a
+//!   dedicated detlint rule additionally bans obs timing symbols from
+//!   `sparse/` kernel code outright.
+//! * **Value telemetry reads data already in hand.**  Attention density
+//!   comes from the CSRs a probe forward materialized anyway, expert
+//!   loads from its routing masks, memory high-water from workspace
+//!   capacities — pure reads, no RNG draws, no mutation of anything the
+//!   computation consumes.
+//! * **The sink is write-only.**  [`ObsLog`] appends JSONL events; no
+//!   code path reads them back during a run.
+//!
+//! The invariant is proven end to end by `tests/obs_parity.rs` (train
+//! at rayon pools 1/2/8 in every mode, and served streams, obs-on vs
+//! obs-off) and at the CLI level by CI's chaos job, which `cmp`s
+//! checkpoints from an obs-logged run against a clean run's.
+//!
+//! ## Event schema (JSONL, one object per line)
+//!
+//! * `{"event":"header","schema":1,"cmd":…,"provenance":{…}}` — first
+//!   line of every log; provenance is [`crate::util::provenance`]'s
+//!   git SHA + rayon threads + CPU model stamp.
+//! * `{"event":"step","step":N,"loss":…,"phases":{"mha":{"calls":C,
+//!   "secs":S},…},"attn_density":[…],"expert_load":[[…]],
+//!   "ws_bytes":…,"trace_bytes":…}` — one per train step.
+//! * `{"event":"eval","step":N,"loss":…}` — held-out eval points.
+//! * `{"event":"refresh","step":N,"codebook_drift":…}` — PQ codebook
+//!   refresh, with the mean absolute parameter movement it caused.
+//! * `{"event":"memory","observed_bytes":…,"predicted_bytes":…,
+//!   "model_err":…}` — the memory-truth channel: observed allocation
+//!   high-water joined against `memmodel`'s analytic prediction.
+//! * `{"event":"serve_report",…}` / `{"event":"gen",…}` — the serve
+//!   daemon's final report and `spt generate`'s span.
+//!
+//! `spt obs-report <run.jsonl>` ([`report`]) aggregates a log into the
+//! paper's Fig. 2-style phase breakdown plus sparsity/memory tables and
+//! emits `bench_out/BENCH_obs_native.json` for the benchdiff gate.
+
+pub mod report;
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{Counters, Gauge, Histogram};
+use crate::util::json::Json;
+
+/// Obs JSONL schema version, stamped into every header event.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Wall-time accumulator keyed by phase name (`"mha"`, `"ffn"`, `"ln"`,
+/// `"optimizer"`, …).  All clock reads happen inside this struct — in a
+/// non-kernel module — so instrumented kernel call sites carry no clock
+/// tokens and stay on sequential control paths by construction.
+#[derive(Debug, Default)]
+pub struct PhaseTimes {
+    /// phase -> (calls, accumulated seconds), deterministic key order.
+    acc: BTreeMap<&'static str, (u64, f64)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, charging its wall time to `phase`.  The closure's value
+    /// passes through untouched — timing can reorder or change nothing.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Charge `secs` to `phase` without running anything.
+    pub fn add(&mut self, phase: &'static str, secs: f64) {
+        let e = self.acc.entry(phase).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+
+    /// Total seconds across all phases.
+    pub fn total_secs(&self) -> f64 {
+        self.acc.values().map(|&(_, s)| s).sum()
+    }
+
+    /// `(phase, calls, secs)` in deterministic (alphabetical) order.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64, f64)> + '_ {
+        self.acc.iter().map(|(&k, &(c, s))| (k, c, s))
+    }
+
+    /// `{"mha":{"calls":C,"secs":S},…}` for the step event.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        for (phase, calls, secs) in self.iter() {
+            let mut p = BTreeMap::new();
+            p.insert("calls".to_string(), Json::Num(calls as f64));
+            p.insert("secs".to_string(), Json::Num(secs));
+            m.insert(phase.to_string(), Json::Obj(p));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Time `f` under `phase` when a sink is present, or run it untimed.
+/// The seam instrumented kernels use: with `None` (obs off, and every
+/// pre-existing caller) the closure runs directly and no clock exists
+/// anywhere on the path.
+pub fn time_opt<T>(
+    pt: &mut Option<&mut PhaseTimes>,
+    phase: &'static str,
+    f: impl FnOnce() -> T,
+) -> T {
+    match pt {
+        Some(p) => p.time(phase, f),
+        None => f(),
+    }
+}
+
+/// Per-step observation bundle a backend fills during
+/// [`crate::coordinator::Backend::train_step_obs`].  Everything here is
+/// *output only*: the training computation never reads it.
+#[derive(Debug, Default)]
+pub struct StepObs {
+    /// Phase wall times (probe forward: mha/ffn/ln/embed; step: fwd_bwd
+    /// and optimizer at their sequential boundaries).
+    pub phases: PhaseTimes,
+    /// Mean top-L nnz ratio per layer (mean over heads) from the probe
+    /// forward's attention CSRs.  Empty outside spt mode.
+    pub attn_density: Vec<f64>,
+    /// Routed-FFN expert load per layer: tokens routed to each of the G
+    /// groups.  Empty outside spt mode.
+    pub expert_load: Vec<Vec<u64>>,
+    /// Observed per-worker GEMM-workspace high-water (bytes), maxed
+    /// across the step's gradient chunks.  Telemetry only: `Vec` growth
+    /// amortization makes the exact value scheduling-dependent, which
+    /// is one more reason it feeds the obs log and never any
+    /// computation.
+    pub ws_bytes: u64,
+    /// Observed bytes of one item's saved activations (the probe trace).
+    pub trace_bytes: u64,
+}
+
+/// Structured JSONL event sink.  Disabled, every call is a no-op with
+/// zero allocation — the hot path pays one branch.
+#[derive(Debug, Default)]
+pub struct ObsLog {
+    inner: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl ObsLog {
+    /// The no-op sink (obs off).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Create `path` and write the header event (schema version, the
+    /// command being traced, and the build/run provenance stamp).
+    pub fn create(path: impl AsRef<Path>, cmd: &str) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating obs log dir {dir:?}"))?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating obs log {path:?}"))?;
+        let mut log = ObsLog { inner: Some(std::io::BufWriter::new(file)) };
+        log.event(
+            "header",
+            vec![
+                ("schema", Json::Num(SCHEMA_VERSION as f64)),
+                ("cmd", Json::Str(cmd.to_string())),
+                ("provenance", crate::util::provenance::provenance()),
+            ],
+        )?;
+        Ok(log)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Append one event line (`{"event":kind, …fields}`), keys in
+    /// deterministic order.  No-op when disabled.
+    pub fn event(&mut self, kind: &str, fields: Vec<(&str, Json)>) -> Result<()> {
+        let Some(w) = &mut self.inner else {
+            return Ok(());
+        };
+        let mut m = BTreeMap::new();
+        m.insert("event".to_string(), Json::Str(kind.to_string()));
+        for (k, v) in fields {
+            m.insert(k.to_string(), v);
+        }
+        writeln!(w, "{}", Json::Obj(m)).context("writing obs event")?;
+        Ok(())
+    }
+
+    /// Flush buffered events to disk (end of a command, drain, …).
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(w) = &mut self.inner {
+            w.flush().context("flushing obs log")?;
+        }
+        Ok(())
+    }
+}
+
+/// `|observed - predicted| / predicted` — the memmodel validation
+/// metric (0 = the analytic model matched the observed allocation).
+pub fn model_err(observed: u64, predicted: u64) -> f64 {
+    let p = predicted.max(1) as f64;
+    (observed as f64 - p).abs() / p
+}
+
+/// Render counters, gauges, and histograms in the Prometheus text
+/// exposition format (one snapshot, `# TYPE`-annotated, cumulative
+/// `le` buckets).  Purely formatting of already-computed values.
+pub fn prometheus_text(
+    counters: &Counters,
+    gauges: &[Gauge],
+    histograms: &[Histogram],
+) -> String {
+    let mut out = String::new();
+    for (name, v) in counters.iter() {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for g in gauges {
+        out.push_str(&format!("# TYPE {} gauge\n{} {}\n", g.name, g.name, g.value));
+    }
+    for h in histograms {
+        out.push_str(&format!("# TYPE {} histogram\n", h.name));
+        let cum = h.cumulative();
+        for (i, bound) in h.bounds().iter().enumerate() {
+            out.push_str(&format!("{}_bucket{{le=\"{}\"}} {}\n", h.name, bound, cum[i]));
+        }
+        out.push_str(&format!(
+            "{}_bucket{{le=\"+Inf\"}} {}\n{}_sum {}\n{}_count {}\n",
+            h.name,
+            h.count(),
+            h.name,
+            h.sum(),
+            h.name,
+            h.count()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_accumulate_in_deterministic_order() {
+        let mut pt = PhaseTimes::new();
+        pt.add("mha", 0.25);
+        pt.add("ffn", 0.5);
+        pt.add("mha", 0.25);
+        let got: Vec<_> = pt.iter().collect();
+        assert_eq!(got, vec![("ffn", 1, 0.5), ("mha", 2, 0.5)]);
+        assert!((pt.total_secs() - 1.0).abs() < 1e-12);
+        let j = pt.to_json();
+        assert_eq!(j.get("mha").get("calls").as_usize(), Some(2));
+        assert_eq!(j.get("ffn").get("secs"), &Json::Num(0.5));
+    }
+
+    #[test]
+    fn time_and_time_opt_pass_values_through() {
+        let mut pt = PhaseTimes::new();
+        assert_eq!(pt.time("x", || 41 + 1), 42);
+        let mut none: Option<&mut PhaseTimes> = None;
+        assert_eq!(time_opt(&mut none, "x", || 7), 7);
+        let mut some = Some(&mut pt);
+        assert_eq!(time_opt(&mut some, "x", || 8), 8);
+        let (_, calls, _) = pt.iter().next().unwrap();
+        assert_eq!(calls, 2, "only the sinks that exist record calls");
+    }
+
+    #[test]
+    fn disabled_log_is_a_no_op() {
+        let mut log = ObsLog::disabled();
+        assert!(!log.enabled());
+        log.event("step", vec![("step", Json::Num(1.0))]).unwrap();
+        log.flush().unwrap();
+    }
+
+    #[test]
+    fn log_writes_header_then_events() {
+        let dir = std::env::temp_dir().join("spt_obs_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.jsonl");
+        let mut log = ObsLog::create(&path, "train").unwrap();
+        assert!(log.enabled());
+        log.event("step", vec![("step", Json::Num(0.0)), ("loss", Json::Num(2.5))]).unwrap();
+        log.flush().unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Json> =
+            text.lines().map(|l| crate::util::json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].get("event").as_str(), Some("header"));
+        assert_eq!(lines[0].get("schema").as_usize(), Some(1));
+        assert_eq!(lines[0].get("cmd").as_str(), Some("train"));
+        assert!(!lines[0]
+            .get("provenance")
+            .get("git_sha")
+            .as_str()
+            .unwrap_or("")
+            .is_empty());
+        assert_eq!(lines[1].get("event").as_str(), Some("step"));
+        assert_eq!(lines[1].get("loss"), &Json::Num(2.5));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn model_err_is_relative_and_zero_on_match() {
+        assert_eq!(model_err(100, 100), 0.0);
+        assert!((model_err(150, 100) - 0.5).abs() < 1e-12);
+        assert!((model_err(50, 100) - 0.5).abs() < 1e-12);
+        // Degenerate prediction never divides by zero.
+        assert!(model_err(5, 0).is_finite());
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let mut c = Counters::new();
+        c.add("spt_decode_steps_total", 12);
+        let g = [Gauge::new("spt_pool_occupancy", 0.5)];
+        let mut h = Histogram::new("spt_latency_seconds", &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = prometheus_text(&c, &g, &[h]);
+        assert!(text.contains("# TYPE spt_decode_steps_total counter\n"));
+        assert!(text.contains("spt_decode_steps_total 12\n"));
+        assert!(text.contains("# TYPE spt_pool_occupancy gauge\n"));
+        assert!(text.contains("spt_pool_occupancy 0.5\n"));
+        assert!(text.contains("# TYPE spt_latency_seconds histogram\n"));
+        assert!(text.contains("spt_latency_seconds_bucket{le=\"0.1\"} 1\n"));
+        assert!(text.contains("spt_latency_seconds_bucket{le=\"1\"} 2\n"));
+        assert!(text.contains("spt_latency_seconds_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("spt_latency_seconds_sum 5.55\n"));
+        assert!(text.contains("spt_latency_seconds_count 3\n"));
+        // Every line is either a comment or `name{labels} value`.
+        for line in text.lines() {
+            assert!(line.starts_with('#') || line.split(' ').count() == 2, "{line}");
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! `spt obs-report` — aggregate an obs JSONL log into the paper's
+//! Fig. 2-style phase breakdown plus sparsity and memory-truth tables,
+//! and emit `BENCH_obs_native.json` for the benchdiff gate.
+//!
+//! The report is a pure fold over the event stream: it reads the log,
+//! never the run, so it can be re-rendered offline at any time.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::Table;
+use crate::util::json::{parse, Json};
+
+/// Aggregated view of one obs JSONL run log.
+#[derive(Debug, Default)]
+pub struct RunSummary {
+    /// Command recorded in the header (`train`, `serve`, `generate`).
+    pub cmd: String,
+    /// Provenance stamp from the header (git SHA, threads, CPU model).
+    pub provenance: Json,
+    /// Number of `step` events.
+    pub steps: u64,
+    /// Wall seconds summed over `step` events.
+    pub total_step_secs: f64,
+    /// Final training loss seen, if any.
+    pub last_loss: Option<f64>,
+    /// phase -> (calls, secs) summed over all step events.
+    pub phases: BTreeMap<String, (u64, f64)>,
+    /// Per-layer (density sum, sample count) for mean attention density.
+    pub attn_density: Vec<(f64, u64)>,
+    /// Per-layer tokens routed to each FFN group, summed over steps.
+    pub expert_load: Vec<Vec<u64>>,
+    /// Observed workspace high-water (bytes), max over steps.
+    pub ws_bytes_peak: u64,
+    /// Mean absolute parameter movement per codebook refresh event.
+    pub codebook_drift: Vec<f64>,
+    /// `(step, loss)` eval points.
+    pub evals: Vec<(u64, f64)>,
+    /// Memory-truth join: (observed, predicted, model_err), last event.
+    pub memory: Option<(u64, u64, f64)>,
+    /// The serve daemon's final report event, when present.
+    pub serve: Option<Json>,
+}
+
+impl RunSummary {
+    /// Mean attention density across layers and steps (0 when the run
+    /// recorded none — dense modes).
+    pub fn attn_density_mean(&self) -> f64 {
+        let (sum, n) = self
+            .attn_density
+            .iter()
+            .fold((0.0, 0u64), |(s, n), &(ls, ln)| (s + ls, n + ln));
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Worst per-layer expert imbalance: `max_load / mean_load` over
+    /// groups, maxed across layers.  1.0 = perfectly balanced routing.
+    pub fn expert_imbalance(&self) -> f64 {
+        self.expert_load
+            .iter()
+            .filter_map(|loads| {
+                let total: u64 = loads.iter().sum();
+                if total == 0 || loads.is_empty() {
+                    return None;
+                }
+                let mean = total as f64 / loads.len() as f64;
+                let max = *loads.iter().max().unwrap() as f64;
+                Some(max / mean)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.total_step_secs <= 0.0 {
+            0.0
+        } else {
+            self.steps as f64 / self.total_step_secs
+        }
+    }
+
+    /// Memmodel validation error (`|observed-predicted|/predicted`), or
+    /// 0 when the run emitted no memory event.
+    pub fn mem_model_err(&self) -> f64 {
+        self.memory.map(|(_, _, e)| e).unwrap_or(0.0)
+    }
+}
+
+fn arr_f64(v: &Json) -> Vec<f64> {
+    v.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default()
+}
+
+/// Fold an obs JSONL log into a [`RunSummary`].
+pub fn summarize(path: impl AsRef<Path>) -> Result<RunSummary> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading obs log {path:?}"))?;
+    let mut s = RunSummary::default();
+    let mut saw_header = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse(line)
+            .map_err(|e| anyhow::anyhow!("{path:?} line {}: {e}", i + 1))?;
+        match v.get("event").as_str() {
+            Some("header") => {
+                saw_header = true;
+                s.cmd = v.get("cmd").as_str().unwrap_or("").to_string();
+                s.provenance = v.get("provenance").clone();
+            }
+            Some("step") => {
+                s.steps += 1;
+                s.total_step_secs += v.get("step_s").as_f64().unwrap_or(0.0);
+                if let Some(l) = v.get("loss").as_f64() {
+                    s.last_loss = Some(l);
+                }
+                if let Some(m) = v.get("phases").as_obj() {
+                    for (phase, pv) in m {
+                        let e = s.phases.entry(phase.clone()).or_insert((0, 0.0));
+                        e.0 += pv.get("calls").as_f64().unwrap_or(0.0) as u64;
+                        e.1 += pv.get("secs").as_f64().unwrap_or(0.0);
+                    }
+                }
+                for (layer, d) in arr_f64(v.get("attn_density")).into_iter().enumerate() {
+                    if s.attn_density.len() <= layer {
+                        s.attn_density.resize(layer + 1, (0.0, 0));
+                    }
+                    s.attn_density[layer].0 += d;
+                    s.attn_density[layer].1 += 1;
+                }
+                if let Some(layers) = v.get("expert_load").as_arr() {
+                    for (layer, loads) in layers.iter().enumerate() {
+                        let loads: Vec<u64> =
+                            arr_f64(loads).into_iter().map(|x| x as u64).collect();
+                        if s.expert_load.len() <= layer {
+                            s.expert_load.resize(layer + 1, Vec::new());
+                        }
+                        let acc = &mut s.expert_load[layer];
+                        if acc.len() < loads.len() {
+                            acc.resize(loads.len(), 0);
+                        }
+                        for (g, n) in loads.into_iter().enumerate() {
+                            acc[g] += n;
+                        }
+                    }
+                }
+                let ws = v.get("ws_bytes").as_f64().unwrap_or(0.0) as u64;
+                s.ws_bytes_peak = s.ws_bytes_peak.max(ws);
+            }
+            Some("eval") => {
+                if let (Some(step), Some(loss)) =
+                    (v.get("step").as_f64(), v.get("loss").as_f64())
+                {
+                    s.evals.push((step as u64, loss));
+                }
+            }
+            Some("refresh") => {
+                if let Some(d) = v.get("codebook_drift").as_f64() {
+                    s.codebook_drift.push(d);
+                }
+            }
+            Some("memory") => {
+                let obs = v.get("observed_bytes").as_f64().unwrap_or(0.0) as u64;
+                let pred = v.get("predicted_bytes").as_f64().unwrap_or(0.0) as u64;
+                let err = v.get("model_err").as_f64().unwrap_or(0.0);
+                s.memory = Some((obs, pred, err));
+            }
+            Some("serve_report") => s.serve = Some(v),
+            _ => {}
+        }
+    }
+    if !saw_header {
+        bail!("{path:?}: not an obs log (no header event)");
+    }
+    Ok(s)
+}
+
+/// Render the summary as markdown tables (phase breakdown, attention
+/// density, expert load, memory truth) via [`metrics::Table`].
+/// Sections the run never recorded are skipped, so serve-only and
+/// dense-mode logs render cleanly.
+pub fn render(s: &RunSummary) -> String {
+    let mut out = String::new();
+    let prov = &s.provenance;
+    out.push_str(&format!(
+        "obs-report: cmd={} steps={} git_sha={} threads={} cpu={}\n",
+        if s.cmd.is_empty() { "?" } else { &s.cmd },
+        s.steps,
+        prov.get("git_sha").as_str().unwrap_or("unknown"),
+        prov.get("rayon_threads").as_usize().unwrap_or(0),
+        prov.get("cpu_model").as_str().unwrap_or("unknown"),
+    ));
+
+    if !s.phases.is_empty() {
+        let total = s.phases.values().map(|&(_, secs)| secs).sum::<f64>().max(1e-12);
+        let mut t = Table::new(
+            "Phase breakdown (probe forward + step boundaries)",
+            &["phase", "calls", "secs", "share"],
+        );
+        for (phase, &(calls, secs)) in &s.phases {
+            t.row(&[
+                phase.clone(),
+                calls.to_string(),
+                format!("{secs:.4}"),
+                format!("{:.1}%", 100.0 * secs / total),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+
+    if !s.attn_density.is_empty() {
+        let mut t = Table::new(
+            "Attention density (mean top-L nnz ratio)",
+            &["layer", "density"],
+        );
+        for (layer, &(sum, n)) in s.attn_density.iter().enumerate() {
+            let mean = if n == 0 { 0.0 } else { sum / n as f64 };
+            t.row(&[layer.to_string(), format!("{mean:.4}")]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+
+    if !s.expert_load.is_empty() {
+        let mut t = Table::new(
+            "Routed-FFN expert load (tokens per group)",
+            &["layer", "load per group", "imbalance"],
+        );
+        for (layer, loads) in s.expert_load.iter().enumerate() {
+            let total: u64 = loads.iter().sum();
+            let imb = if total == 0 || loads.is_empty() {
+                0.0
+            } else {
+                *loads.iter().max().unwrap() as f64
+                    / (total as f64 / loads.len() as f64)
+            };
+            let joined =
+                loads.iter().map(u64::to_string).collect::<Vec<_>>().join(" ");
+            t.row(&[layer.to_string(), joined, format!("{imb:.2}")]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+
+    if s.memory.is_some() || s.ws_bytes_peak > 0 {
+        let mut t = Table::new(
+            "Memory truth (observed vs memmodel)",
+            &["channel", "observed", "predicted", "model err"],
+        );
+        if let Some((obs, pred, err)) = s.memory {
+            t.row(&[
+                "peak".to_string(),
+                crate::util::fmt_bytes(obs),
+                crate::util::fmt_bytes(pred),
+                format!("{:.1}%", 100.0 * err),
+            ]);
+        }
+        if s.ws_bytes_peak > 0 {
+            t.row(&[
+                "gemm workspace".to_string(),
+                crate::util::fmt_bytes(s.ws_bytes_peak),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+
+    if !s.codebook_drift.is_empty() || !s.evals.is_empty() {
+        let mut t = Table::new("Training signals", &["signal", "value"]);
+        if let Some(loss) = s.last_loss {
+            t.row(&["final step loss".to_string(), format!("{loss:.6}")]);
+        }
+        for &(step, loss) in &s.evals {
+            t.row(&[format!("eval@{step}"), format!("{loss:.6}")]);
+        }
+        for (i, d) in s.codebook_drift.iter().enumerate() {
+            t.row(&[format!("codebook drift #{i}"), format!("{d:.6}")]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+
+    if let Some(serve) = &s.serve {
+        let mut t = Table::new("Serve report", &["field", "value"]);
+        for key in [
+            "completions",
+            "decode_steps",
+            "prefill_tokens",
+            "shared_prefill_tokens",
+            "prefix_hit_rate",
+            "peak_pages_in_use",
+            "pool_pages",
+        ] {
+            let v = serve.get(key);
+            if !matches!(v, Json::Null) {
+                t.row(&[key.to_string(), v.to_string()]);
+            }
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+
+    if s.steps > 0 {
+        out.push_str(&format!(
+            "\nthroughput: {:.2} steps/s over {} steps ({:.3} s)\n",
+            s.steps_per_sec(),
+            s.steps,
+            s.total_step_secs
+        ));
+    }
+    out
+}
+
+/// The `BENCH_obs_native.json` payload consumed by `cargo xtask
+/// benchdiff` (lower is better for density, imbalance, and model error;
+/// higher for throughput).
+pub fn bench_json(s: &RunSummary) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("obs_native".to_string()));
+    top.insert("steps_per_sec".to_string(), Json::Num(s.steps_per_sec()));
+    top.insert("attn_density_mean".to_string(), Json::Num(s.attn_density_mean()));
+    top.insert("expert_imbalance".to_string(), Json::Num(s.expert_imbalance()));
+    top.insert("mem_model_err".to_string(), Json::Num(s.mem_model_err()));
+    let prov = if matches!(s.provenance, Json::Obj(_)) {
+        s.provenance.clone()
+    } else {
+        crate::util::provenance::provenance()
+    };
+    top.insert("provenance".to_string(), prov);
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsLog;
+
+    fn fixture_log(dir: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.jsonl");
+        let mut log = ObsLog::create(&path, "train").unwrap();
+        for step in 0..2u64 {
+            let mut phases = BTreeMap::new();
+            for (name, secs) in [("mha", 0.2), ("ffn", 0.6), ("ln", 0.1), ("optimizer", 0.1)]
+            {
+                let mut p = BTreeMap::new();
+                p.insert("calls".to_string(), Json::Num(1.0));
+                p.insert("secs".to_string(), Json::Num(secs));
+                phases.insert(name.to_string(), Json::Obj(p));
+            }
+            log.event(
+                "step",
+                vec![
+                    ("step", Json::Num(step as f64)),
+                    ("loss", Json::Num(3.0 - step as f64)),
+                    ("step_s", Json::Num(1.0)),
+                    ("phases", Json::Obj(phases)),
+                    (
+                        "attn_density",
+                        Json::Arr(vec![Json::Num(0.125), Json::Num(0.25)]),
+                    ),
+                    (
+                        "expert_load",
+                        Json::Arr(vec![Json::Arr(vec![
+                            Json::Num(30.0),
+                            Json::Num(10.0),
+                        ])]),
+                    ),
+                    ("ws_bytes", Json::Num(4096.0)),
+                ],
+            )
+            .unwrap();
+        }
+        log.event(
+            "memory",
+            vec![
+                ("observed_bytes", Json::Num(900.0)),
+                ("predicted_bytes", Json::Num(1000.0)),
+                ("model_err", Json::Num(0.1)),
+            ],
+        )
+        .unwrap();
+        log.flush().unwrap();
+        path
+    }
+
+    #[test]
+    fn summarize_folds_the_event_stream() {
+        let path = fixture_log("spt_obs_report_sum_test");
+        let s = summarize(&path).unwrap();
+        assert_eq!(s.cmd, "train");
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.last_loss, Some(2.0));
+        assert_eq!(s.phases.len(), 4);
+        assert_eq!(s.phases["ffn"], (2, 1.2));
+        // Per-layer density means: layer 0 = 0.125, layer 1 = 0.25.
+        assert!((s.attn_density_mean() - 0.1875).abs() < 1e-12);
+        // One layer, loads [60, 20]: imbalance = 60 / 40 = 1.5.
+        assert_eq!(s.expert_load, vec![vec![60, 20]]);
+        assert!((s.expert_imbalance() - 1.5).abs() < 1e-12);
+        assert_eq!(s.memory, Some((900, 1000, 0.1)));
+        assert!((s.mem_model_err() - 0.1).abs() < 1e-12);
+        assert!((s.steps_per_sec() - 1.0).abs() < 1e-12);
+        assert_eq!(s.ws_bytes_peak, 4096);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn render_emits_all_sections() {
+        let path = fixture_log("spt_obs_report_render_test");
+        let s = summarize(&path).unwrap();
+        let text = render(&s);
+        assert!(text.contains("Phase breakdown"));
+        assert!(text.contains("| mha"));
+        assert!(text.contains("| optimizer"));
+        assert!(text.contains("Attention density"));
+        assert!(text.contains("Routed-FFN expert load"));
+        assert!(text.contains("30 10") || text.contains("60 20"));
+        assert!(text.contains("Memory truth"));
+        assert!(text.contains("10.0%"), "model err rendered: {text}");
+        assert!(text.contains("throughput"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_json_has_gate_metrics() {
+        let path = fixture_log("spt_obs_report_bench_test");
+        let s = summarize(&path).unwrap();
+        let j = bench_json(&s);
+        assert_eq!(j.get("bench").as_str(), Some("obs_native"));
+        assert!((j.get("steps_per_sec").as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert!(j.get("attn_density_mean").as_f64().is_some());
+        assert!(j.get("expert_imbalance").as_f64().is_some());
+        assert_eq!(j.get("mem_model_err"), &Json::Num(0.1));
+        assert!(j.get("provenance").get("git_sha").as_str().is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn summarize_rejects_non_obs_files() {
+        let dir = std::env::temp_dir().join("spt_obs_report_reject_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.jsonl");
+        std::fs::write(&path, "{\"event\":\"step\"}\n").unwrap();
+        assert!(summarize(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -84,6 +84,20 @@ pub struct Workspace {
     pub(crate) attn2: Matrix,
 }
 
+impl Workspace {
+    /// Bytes this workspace has grown to (capacity high-water across all
+    /// buffers).  A pure read for the observability memory-truth channel:
+    /// capacities only ever grow, so the value is the allocation
+    /// high-water of every GEMM this workspace has served.
+    pub fn bytes(&self) -> u64 {
+        ((self.packb.capacity()
+            + self.tmp.capacity()
+            + self.attn.data.capacity()
+            + self.attn2.data.capacity())
+            * 4) as u64
+    }
+}
+
 /// A B operand packed once into the microkernel's column-panel layout
 /// (the output of [`pack_b`] over the whole matrix), so repeated
 /// `A @ B` products against the same B — every decode step's projection,

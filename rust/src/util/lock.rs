@@ -44,13 +44,13 @@ impl PidLock {
                              stop it first, or remove the file if that pid is not spt"
                         ),
                         Some(pid) if round == 0 => {
-                            eprintln!(
-                                "[spt] reclaiming stale pid file {path:?} (pid {pid} is gone)"
+                            crate::log_warn!(
+                                "reclaiming stale pid file path={path:?} gone_pid={pid}"
                             );
                             std::fs::remove_file(path).ok();
                         }
                         None if round == 0 => {
-                            eprintln!("[spt] reclaiming unreadable pid file {path:?}");
+                            crate::log_warn!("reclaiming unreadable pid file path={path:?}");
                             std::fs::remove_file(path).ok();
                         }
                         _ => bail!("could not reclaim pid file {path:?}"),

@@ -1,0 +1,142 @@
+//! Leveled stderr logger — the single diagnostics channel.
+//!
+//! Every diagnostic the CLI, trainer, daemon, checkpoint scanner, or
+//! pid-lock emits goes through the `log_error!` / `log_warn!` /
+//! `log_info!` / `log_debug!` macros, which write one line to **stderr**
+//! in the form
+//!
+//! ```text
+//! [spt][info] daemon listening addr=127.0.0.1:7199
+//! ```
+//!
+//! so stdout stays reserved for *data* output: result tables, the
+//! daemon's NDJSON protocol lines, generated text, bench JSON paths,
+//! and loss curves.  By convention messages end with a space-separated
+//! `key=value` tail carrying the structured fields.
+//!
+//! The threshold comes from `SPT_LOG` (`error|warn|info|debug`), read
+//! once per process; unset or unrecognized values mean `info`.  Logging
+//! formats already-computed values on sequential control paths only —
+//! it can never feed back into computed results.
+
+use std::sync::OnceLock;
+
+/// Severity levels, most severe first (`Error < Warn < Info < Debug`
+/// in the derived order, so `l <= threshold` is the emit test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse an `SPT_LOG` value; `None` for anything unrecognized.
+    pub fn parse(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            _ => return None,
+        })
+    }
+}
+
+static THRESHOLD: OnceLock<Level> = OnceLock::new();
+
+/// The process-wide threshold (`SPT_LOG`, default `info`), read once.
+pub fn threshold() -> Level {
+    *THRESHOLD.get_or_init(|| {
+        std::env::var("SPT_LOG").ok().as_deref().and_then(Level::parse).unwrap_or(Level::Info)
+    })
+}
+
+/// Would a message at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    level <= threshold()
+}
+
+/// Emit one diagnostic line on stderr (no-op above the threshold).
+/// Callers use the `log_*!` macros rather than calling this directly.
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[spt][{}] {}", level.as_str(), args);
+    }
+}
+
+/// `log_error!("message key={value}")` — always emitted.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// `log_warn!("message key={value}")` — degraded-but-continuing paths.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// `log_info!("message key={value}")` — normal operational diagnostics.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// `log_debug!("message key={value}")` — verbose tracing, off by default.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_accepts_known_names_case_insensitively() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("Info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn threshold_gates_by_severity() {
+        // Whatever SPT_LOG says, errors are always emitted and the
+        // enabled set is a severity-prefix of the level order.
+        assert!(enabled(Level::Error));
+        let t = threshold();
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(enabled(l), l <= t);
+        }
+    }
+}

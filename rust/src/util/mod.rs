@@ -8,6 +8,7 @@ pub mod crc;
 pub mod fault;
 pub mod json;
 pub mod lock;
+pub mod log;
 pub mod proptest;
 pub mod provenance;
 pub mod retry;

@@ -1,0 +1,290 @@
+//! Zero-perturbation proof for the observability layer.
+//!
+//! The obs contract is that telemetry only *reads* values the run
+//! already computed: turning `--obs-log` on must leave every computed
+//! result — losses, parameters, optimizer moments, served token
+//! streams — bit-identical, at any rayon pool size.  These tests run
+//! the same workloads with observability on and off under dedicated
+//! pools of 1, 2, and 8 threads and compare to the bit.  (The obs
+//! *logs* themselves are not expected identical across runs — they
+//! carry wall-clock timings — only the computation is.)
+
+use spt::config::{Mode, RunConfig};
+use spt::coordinator::{Backend, NativeBackend, TrainState, Trainer, TrainerOptions};
+use spt::data::SyntheticCorpus;
+use spt::infer::{Daemon, DaemonConfig, InferModel};
+use spt::metrics::{Counters, Gauge, Histogram};
+use spt::obs::{ObsLog, StepObs};
+use spt::util::json::Json;
+
+const STEPS: usize = 3;
+
+fn rc(mode: Mode) -> RunConfig {
+    RunConfig {
+        model: "spt-nano".into(),
+        mode,
+        batch: 8,
+        seq: 32,
+        seed: 123,
+        lr: 5e-3,
+        eval_every: 0,
+        codebook_refresh_every: 0,
+        ..RunConfig::default()
+    }
+}
+
+fn lm_batch(rc: &RunConfig, backend: &NativeBackend) -> (Vec<i32>, Vec<i32>) {
+    let (batch, seq) = backend.workload(rc).unwrap();
+    let vocab = backend.vocab(rc).unwrap();
+    let mut corpus = SyntheticCorpus::new(vocab, 4, 0.85, rc.seed);
+    let mut tokens = Vec::new();
+    let mut targets = Vec::new();
+    for _ in 0..batch {
+        let (x, y) = corpus.lm_pair(seq);
+        tokens.extend(x.iter().map(|&t| t as i32));
+        targets.extend(y.iter().map(|&t| t as i32));
+    }
+    (tokens, targets)
+}
+
+/// Run `STEPS` steps under a dedicated pool, with or without the
+/// instrumented step; returns loss bits, the final state, and the last
+/// step's telemetry when instrumented.
+fn run_under_pool(
+    threads: usize,
+    mode: Mode,
+    instrumented: bool,
+) -> (Vec<u32>, TrainState, Option<StepObs>) {
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("pool");
+    pool.install(|| {
+        let backend = NativeBackend::new();
+        let cfg = rc(mode);
+        let (tokens, targets) = lm_batch(&cfg, &backend);
+        let mut state = backend.init_state(&cfg).unwrap();
+        let mut bits = Vec::with_capacity(STEPS);
+        let mut last_obs = None;
+        for _ in 0..STEPS {
+            let loss = if instrumented {
+                let mut sobs = StepObs::default();
+                let loss = backend
+                    .train_step_obs(&cfg, &mut state, &tokens, &targets, &mut sobs)
+                    .unwrap();
+                last_obs = Some(sobs);
+                loss
+            } else {
+                backend.train_step(&cfg, &mut state, &tokens, &targets).unwrap()
+            };
+            assert!(loss.is_finite(), "{mode:?}: non-finite loss");
+            bits.push(loss.to_bits());
+        }
+        (bits, state, last_obs)
+    })
+}
+
+/// Instrumented and plain training must agree to the bit — per mode,
+/// at every pool size, against the plain 1-thread reference.
+#[test]
+fn train_bit_identical_with_obs_on_and_off_across_pools() {
+    for mode in Mode::ALL {
+        let (ref_bits, ref_state, _) = run_under_pool(1, mode, false);
+        for threads in [1usize, 2, 8] {
+            let (bits, state, sobs) = run_under_pool(threads, mode, true);
+            assert_eq!(
+                ref_bits, bits,
+                "{mode:?}: obs-on losses diverge at {threads} threads"
+            );
+            assert_eq!(
+                ref_state.params, state.params,
+                "{mode:?}: obs-on params diverge at {threads} threads"
+            );
+            assert_eq!(
+                ref_state.m, state.m,
+                "{mode:?}: obs-on AdamW m diverges at {threads} threads"
+            );
+            assert_eq!(
+                ref_state.v, state.v,
+                "{mode:?}: obs-on AdamW v diverges at {threads} threads"
+            );
+            // The probe actually observed the run it rode along with.
+            let sobs = sobs.expect("instrumented run records telemetry");
+            assert!(!sobs.phases.is_empty(), "{mode:?}: no phase timings");
+            if mode == Mode::Spt {
+                assert!(!sobs.attn_density.is_empty(), "spt records attn density");
+                assert!(
+                    sobs.attn_density.iter().all(|&d| d > 0.0 && d <= 1.0),
+                    "densities are ratios: {:?}",
+                    sobs.attn_density
+                );
+                assert!(!sobs.expert_load.is_empty(), "spt records expert load");
+            }
+        }
+    }
+}
+
+/// The telemetry values themselves (not timings) are deterministic:
+/// the same step observes the same densities and expert loads at any
+/// pool size.
+#[test]
+fn value_telemetry_is_pool_invariant() {
+    let (_, _, ref_obs) = run_under_pool(1, Mode::Spt, true);
+    let ref_obs = ref_obs.unwrap();
+    for threads in [2usize, 8] {
+        let (_, _, sobs) = run_under_pool(threads, Mode::Spt, true);
+        let sobs = sobs.unwrap();
+        assert_eq!(ref_obs.attn_density, sobs.attn_density, "{threads} threads");
+        assert_eq!(ref_obs.expert_load, sobs.expert_load, "{threads} threads");
+        assert_eq!(ref_obs.trace_bytes, sobs.trace_bytes, "{threads} threads");
+    }
+}
+
+/// End-to-end through the Trainer: a run writing an `--obs-log` JSONL
+/// produces the same losses and final parameters as one that does not,
+/// and the log itself is a well-formed obs stream.
+#[test]
+fn trainer_obs_log_does_not_change_results() {
+    let dir = std::env::temp_dir().join("spt_obs_parity_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let log_path = dir.join("train.jsonl");
+    std::fs::remove_file(&log_path).ok();
+
+    let mk_rc = || RunConfig {
+        steps: 2,
+        eval_every: 2,
+        ..rc(Mode::Spt)
+    };
+    let backend = NativeBackend::new();
+    let mut plain = Trainer::new(&backend, mk_rc(), TrainerOptions::default());
+    let plain_report = plain.train().unwrap();
+
+    let mut logged = Trainer::new(&backend, mk_rc(), TrainerOptions::default());
+    logged.obs = ObsLog::create(&log_path, "train").unwrap();
+    let logged_report = logged.train().unwrap();
+
+    let bits = |ls: &[f32]| ls.iter().map(|l| l.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&plain_report.losses), bits(&logged_report.losses));
+    assert_eq!(
+        plain.last_state.as_ref().unwrap().params,
+        logged.last_state.as_ref().unwrap().params,
+        "obs log changed the trained parameters"
+    );
+
+    let summary = spt::obs::report::summarize(&log_path).unwrap();
+    assert_eq!(summary.cmd, "train");
+    assert_eq!(summary.steps, 2);
+    assert!(summary.phases.contains_key("fwd_bwd"), "{:?}", summary.phases);
+    assert!(summary.phases.contains_key("optimizer"), "{:?}", summary.phases);
+    assert!(summary.phases.contains_key("mha"), "{:?}", summary.phases);
+    assert!(summary.phases.contains_key("ffn"), "{:?}", summary.phases);
+    assert!(summary.phases.contains_key("ln"), "{:?}", summary.phases);
+    assert!(summary.attn_density_mean() > 0.0, "spt run records density");
+    assert_eq!(summary.evals.len(), 1, "eval event captured");
+    assert!(summary.memory.is_some(), "memory-truth join emitted");
+    let (observed, predicted, _) = summary.memory.unwrap();
+    assert!(observed > 0 && predicted > 0);
+    let rendered = spt::obs::report::render(&summary);
+    assert!(rendered.contains("Phase breakdown"));
+    assert!(rendered.contains("Memory truth"));
+    std::fs::remove_file(&log_path).ok();
+}
+
+fn infer_fixture() -> InferModel {
+    let cfg = RunConfig {
+        model: "spt-nano".into(),
+        mode: Mode::Spt,
+        seed: 5,
+        ..RunConfig::default()
+    };
+    let backend = NativeBackend::new();
+    let state = backend.init_state(&cfg).unwrap();
+    InferModel::new(&cfg, state).unwrap()
+}
+
+fn submit_line(id: usize, prompt: &[i32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        r#"{{"op":"submit","id":{id},"prompt":[{}],"max_new_tokens":{max_new}}}"#,
+        toks.join(",")
+    )
+}
+
+/// Run the daemon over a fixed request set; when `nosy` is set, pepper
+/// every scheduler turn with `status` and `metrics` ops.  Returns each
+/// request's token stream.
+fn serve_tokens(model: &InferModel, nosy: bool) -> Vec<(usize, Vec<i64>)> {
+    let mut d = Daemon::new(model, DaemonConfig::default()).unwrap();
+    for (id, len) in [(1usize, 3usize), (2, 5), (3, 2)] {
+        let prompt: Vec<i32> = (1..=len as i32).collect();
+        let ev = d.handle_line(&submit_line(id, &prompt, 4));
+        assert_eq!(ev[0].get("event").as_str(), Some("accepted"));
+        if nosy {
+            d.handle_line(r#"{"op":"status"}"#);
+        }
+    }
+    let mut out = Vec::new();
+    while d.has_work() {
+        if nosy {
+            let ev = d.handle_line(r#"{"op":"metrics"}"#);
+            assert_eq!(ev[0].get("event").as_str(), Some("metrics"));
+        }
+        for e in d.pump().unwrap() {
+            if e.get("event").as_str() == Some("done") {
+                let id = e.get("id").as_usize().unwrap();
+                let toks: Vec<i64> = e
+                    .get("tokens")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .filter_map(Json::as_i64)
+                    .collect();
+                out.push((id, toks));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Interleaving `status` and `metrics` reads must not change a single
+/// served token.
+#[test]
+fn served_streams_identical_with_metrics_interleaved() {
+    let model = infer_fixture();
+    let quiet = serve_tokens(&model, false);
+    let nosy = serve_tokens(&model, true);
+    assert_eq!(quiet, nosy, "observability ops changed the served tokens");
+    assert_eq!(quiet.len(), 3);
+    assert!(quiet.iter().all(|(_, t)| t.len() == 4));
+}
+
+/// Histogram bucketing is fixed at construction and insensitive to
+/// observation order — two permutations of the same values render the
+/// same Prometheus text.
+#[test]
+fn histogram_and_prometheus_rendering_are_deterministic() {
+    let values = [0.002, 0.03, 0.03, 0.4, 7.0, 0.0005];
+    let bounds = [0.001, 0.01, 0.1, 1.0, 10.0];
+    let mut fwd = Histogram::new("spt_request_latency_seconds", &bounds);
+    let mut rev = Histogram::new("spt_request_latency_seconds", &bounds);
+    for v in values {
+        fwd.observe(v);
+    }
+    for v in values.iter().rev() {
+        rev.observe(*v);
+    }
+    let mut counters = Counters::new();
+    counters.add("spt_completions_total", 6);
+    let gauges = [Gauge::new("spt_pool_pages", 8.0)];
+    let a = spt::obs::prometheus_text(&counters, &gauges, &[fwd]);
+    let b = spt::obs::prometheus_text(&counters, &gauges, &[rev]);
+    assert_eq!(a, b, "observation order leaked into the rendering");
+    assert!(a.contains("# TYPE spt_request_latency_seconds histogram"));
+    assert!(a.contains("spt_request_latency_seconds_bucket{le=\"0.001\"} 1\n"));
+    assert!(a.contains("spt_request_latency_seconds_bucket{le=\"+Inf\"} 6\n"));
+    assert!(a.contains("spt_request_latency_seconds_count 6\n"));
+    assert!(a.contains("# TYPE spt_completions_total counter"));
+    assert!(a.contains("spt_completions_total 6\n"));
+    assert!(a.contains("spt_pool_pages 8\n"));
+}

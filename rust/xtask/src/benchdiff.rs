@@ -12,6 +12,10 @@
 //!   keyed `{mode},t{threads}` (lower is better).
 //! * `kernel_bench` — `ms_median` per `kernels[]` element, keyed
 //!   `{kernel}[{m}x{k}x{n}]` (lower is better).
+//! * `obs_native` — the obs-report rollup: `steps_per_sec` (higher is
+//!   better) plus `attn_density_mean`, `expert_imbalance`, and
+//!   `mem_model_err` (lower is better — sparsity decaying, routing
+//!   collapsing, or the memory model drifting are all regressions).
 //!
 //! A metric that moved more than [`THRESHOLD`] in the bad direction is
 //! a regression and the task exits non-zero — unless the two files'
@@ -128,6 +132,20 @@ fn extract(v: &Json) -> Result<Vec<Metric>, String> {
                 metrics.push(Metric {
                     key: format!("{name}[{m}x{kk}x{n}].ms_median"),
                     value: num(k, "ms_median")?,
+                    higher_is_better: false,
+                });
+            }
+        }
+        "obs_native" => {
+            metrics.push(Metric {
+                key: "steps_per_sec".into(),
+                value: num(v, "steps_per_sec")?,
+                higher_is_better: true,
+            });
+            for key in ["attn_density_mean", "expert_imbalance", "mem_model_err"] {
+                metrics.push(Metric {
+                    key: key.into(),
+                    value: num(v, key)?,
                     higher_is_better: false,
                 });
             }
@@ -359,6 +377,43 @@ mod tests {
         assert_eq!(d.missing, vec!["bspmv[64x64x256].ms_median".to_string()]);
         assert!(d.failed(), "a vanished kernel metric always fails");
         assert!(d.regressions().is_empty(), "1.0 -> 1.1 ms is within threshold");
+    }
+
+    fn obs_json(sps: f64, density: f64, imb: f64, err: f64) -> Json {
+        json::parse(&format!(
+            r#"{{"bench":"obs_native",
+                 "steps_per_sec":{sps},
+                 "attn_density_mean":{density},
+                 "expert_imbalance":{imb},
+                 "mem_model_err":{err},
+                 "provenance":{{"git_sha":"abc","rayon_threads":8,"cpu_model":"X"}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn obs_native_gates_throughput_and_telemetry_drift() {
+        let base = obs_json(2.0, 0.125, 1.5, 0.1);
+        // Unchanged telemetry: clean.
+        let d = diff(&base, &obs_json(2.0, 0.125, 1.5, 0.1)).unwrap();
+        assert!(!d.failed());
+        assert_eq!(d.deltas.len(), 4);
+        // Throughput halved: regression on the higher-is-better metric.
+        let d = diff(&base, &obs_json(1.0, 0.125, 1.5, 0.1)).unwrap();
+        assert_eq!(d.regressions().len(), 1);
+        assert_eq!(d.regressions()[0].key, "steps_per_sec");
+        assert!(d.failed());
+        // Attention density doubling (sparsity decaying) regresses too.
+        let d = diff(&base, &obs_json(2.0, 0.25, 1.5, 0.1)).unwrap();
+        assert_eq!(d.regressions().len(), 1);
+        assert_eq!(d.regressions()[0].key, "attn_density_mean");
+        // Memory-model error growing 3x is a regression.
+        let d = diff(&base, &obs_json(2.0, 0.125, 1.5, 0.3)).unwrap();
+        assert_eq!(d.regressions().len(), 1);
+        assert_eq!(d.regressions()[0].key, "mem_model_err");
+        // Denser-than-baseline improvements never fail.
+        let d = diff(&base, &obs_json(3.0, 0.06, 1.1, 0.01)).unwrap();
+        assert!(!d.failed());
     }
 
     #[test]

@@ -26,6 +26,12 @@
 //!   three kernels away from the cause.  Prefer `try_from`; justify a
 //!   provably bounded cast with `// det: cast-bounded`.  Casts of plain
 //!   identifiers and all widening/float casts are exempt.
+//! * `obs-placement` — observability hooks (`obs::`, `ObsLog`,
+//!   `PhaseTimes`, `StepObs`) inside `sparse/` kernel code: timing and
+//!   telemetry belong at the sequential step boundaries in
+//!   `coordinator/` and `infer/`, never in the parallel inner loops,
+//!   where a probe could perturb scheduling or tempt a clock read.
+//!   Justify a genuinely inert use with `// det: obs-ok`.
 //!
 //! A marker counts on the offending line or on either of the two lines
 //! above it.  The rules are lexical by design — no syn, no build, runs
@@ -63,10 +69,15 @@ const HASH_TOKENS: [&str; 2] = ["HashMap", "HashSet"];
 /// arithmetic this rule is after.
 const CAST_TARGETS: [&str; 6] = [" as u8", " as u16", " as u32", " as i8", " as i16", " as i32"];
 
+/// Observability hooks (flagged in `sparse/` kernel code only — timing
+/// belongs at the sequential step boundaries in `coordinator/`/`infer/`).
+const OBS_TOKENS: [&str; 4] = ["obs::", "ObsLog", "PhaseTimes", "StepObs"];
+
 pub const MARKER_HASH: &str = "det: hash-ok";
 pub const MARKER_MERGE: &str = "det: merge-order";
 pub const MARKER_CLOCK: &str = "det: wall-clock";
 pub const MARKER_CAST: &str = "det: cast-bounded";
+pub const MARKER_OBS: &str = "det: obs-ok";
 
 /// How many lines above a violation its `// det:` marker may sit.
 const MARKER_WINDOW: usize = 2;
@@ -77,6 +88,7 @@ pub enum Rule {
     ParMergeOrder,
     WallClock,
     TruncCast,
+    ObsPlacement,
 }
 
 impl Rule {
@@ -86,6 +98,7 @@ impl Rule {
             Rule::ParMergeOrder => "par-merge-order",
             Rule::WallClock => "wall-clock",
             Rule::TruncCast => "trunc-cast",
+            Rule::ObsPlacement => "obs-placement",
         }
     }
 }
@@ -123,7 +136,7 @@ pub fn run(paths: &[PathBuf]) -> ExitCode {
                 return ExitCode::FAILURE;
             }
         };
-        for v in lint_source(&src, is_kernel_path(file)) {
+        for v in lint_source(&src, is_kernel_path(file), is_sparse_path(file)) {
             println!("{}:{}: [{}] {}", file.display(), v.line, v.rule.name(), v.excerpt);
             total += 1;
         }
@@ -141,6 +154,12 @@ pub fn run(paths: &[PathBuf]) -> ExitCode {
 fn is_kernel_path(path: &Path) -> bool {
     path.components()
         .any(|c| KERNEL_DIRS.iter().any(|d| c.as_os_str() == *d))
+}
+
+/// Whether `path` is sparse-kernel code, where the obs-placement rule
+/// bans observability hooks outright.
+fn is_sparse_path(path: &Path) -> bool {
+    path.components().any(|c| c.as_os_str() == "sparse")
 }
 
 /// Recursively collect `.rs` files, visiting entries in sorted order so
@@ -162,8 +181,9 @@ fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
-/// Lint one source file.  `kernel` enables the wall-clock rule.
-pub fn lint_source(src: &str, kernel: bool) -> Vec<Violation> {
+/// Lint one source file.  `kernel` enables the wall-clock rule;
+/// `sparse` additionally enables the obs-placement rule.
+pub fn lint_source(src: &str, kernel: bool, sparse: bool) -> Vec<Violation> {
     let lines: Vec<&str> = src.lines().collect();
     let mut out = Vec::new();
     // True while inside the statement that started a parallel chain;
@@ -179,6 +199,12 @@ pub fn lint_source(src: &str, kernel: bool) -> Vec<Violation> {
             && !marked(&lines, ix, MARKER_CLOCK)
         {
             out.push(violation(ix, raw, Rule::WallClock));
+        }
+        if sparse
+            && OBS_TOKENS.iter().any(|t| code.contains(t))
+            && !marked(&lines, ix, MARKER_OBS)
+        {
+            out.push(violation(ix, raw, Rule::ObsPlacement));
         }
         // par-merge-order: a reduce/fold anywhere between a parallel
         // trigger and the end of that statement.  On the trigger line
@@ -264,7 +290,12 @@ mod tests {
     use super::*;
 
     fn rules(src: &str, kernel: bool) -> Vec<Rule> {
-        lint_source(src, kernel).into_iter().map(|v| v.rule).collect()
+        lint_source(src, kernel, false).into_iter().map(|v| v.rule).collect()
+    }
+
+    /// Lint as sparse-kernel code (kernel + obs-placement rules on).
+    fn sparse_rules(src: &str) -> Vec<Rule> {
+        lint_source(src, true, true).into_iter().map(|v| v.rule).collect()
     }
 
     #[test]
@@ -387,7 +418,7 @@ mod tests {
     #[test]
     fn violation_reports_line_and_excerpt() {
         let src = "let ok = 1;\nlet bad = items.len() as u32;\n";
-        let vs = lint_source(src, false);
+        let vs = lint_source(src, false, false);
         assert_eq!(vs.len(), 1);
         assert_eq!(vs[0].line, 2);
         assert_eq!(vs[0].excerpt, "let bad = items.len() as u32;");
@@ -432,6 +463,54 @@ mod tests {
     }
 
     #[test]
+    fn sparse_path_detection() {
+        assert!(is_sparse_path(Path::new("src/sparse/kernel.rs")));
+        assert!(is_sparse_path(Path::new("/abs/src/sparse/bspmv.rs")));
+        assert!(!is_sparse_path(Path::new("src/coordinator/native.rs")));
+        assert!(!is_sparse_path(Path::new("src/infer/serve.rs")));
+        assert!(!is_sparse_path(Path::new("src/obs/mod.rs")));
+    }
+
+    #[test]
+    fn obs_hooks_flagged_in_sparse_code_only() {
+        // Seeded violations: each obs token fires in sparse code.
+        for line in [
+            "let d = crate::obs::model_err(a, b);",
+            "let mut log = ObsLog::disabled();",
+            "let mut pt = PhaseTimes::new();",
+            "let mut sobs = StepObs::default();",
+        ] {
+            assert_eq!(sparse_rules(line), vec![Rule::ObsPlacement], "{line}");
+            // The same line is legal at the coordinator/infer step
+            // boundaries (kernel dirs, but not sparse/).
+            assert!(rules(line, true).is_empty(), "{line}");
+        }
+    }
+
+    #[test]
+    fn obs_marker_suppresses_and_window_holds() {
+        let marked = "// det: obs-ok (constant lookup, no timing)\nlet d = obs::SCHEMA_VERSION;\n";
+        assert!(sparse_rules(marked).is_empty());
+        let too_far = "// det: obs-ok\n//\n//\nlet d = obs::SCHEMA_VERSION;\n";
+        assert_eq!(sparse_rules(too_far), vec![Rule::ObsPlacement]);
+    }
+
+    #[test]
+    fn obs_in_string_or_comment_is_ignored_in_sparse_code() {
+        let src = "// a PhaseTimes here would be a bug\nlet s = \"obs::ObsLog\";\n";
+        assert!(sparse_rules(src).is_empty());
+    }
+
+    #[test]
+    fn obs_timing_in_sparse_inner_loop_fixture_is_flagged() {
+        // The shape this rule exists to catch: a probe inside the
+        // register-blocked GEMM loop.  Both the clock read and the obs
+        // hook fire.
+        let src = "for kk in kb..kend {\n    pt.time(\"tile\", || run_tile(kk));\n    let t = PhaseTimes::new();\n}\n";
+        assert_eq!(sparse_rules(src), vec![Rule::ObsPlacement]);
+    }
+
+    #[test]
     fn repo_sources_are_clean() {
         // The real tree must hold the contract the fixtures above pin
         // down: run the production path over `../src`.
@@ -445,7 +524,7 @@ mod tests {
         let mut bad = Vec::new();
         for f in files {
             let src = std::fs::read_to_string(&f).expect("readable source");
-            for v in lint_source(&src, is_kernel_path(&f)) {
+            for v in lint_source(&src, is_kernel_path(&f), is_sparse_path(&f)) {
                 bad.push(format!("{}:{}: [{}] {}", f.display(), v.line, v.rule.name(), v.excerpt));
             }
         }
